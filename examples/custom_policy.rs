@@ -1,0 +1,114 @@
+//! Writing a custom policy against the policy API (paper §4.3).
+//!
+//! This reimplements the paper's example — the application-aware
+//! next-page prefetcher — from *outside* the library, in ~40 lines, and
+//! races it against the naive physical-neighbour version on an aged VM
+//! to show why introspection matters (§6.6).
+//!
+//! Run: `cargo run --release --example custom_policy`
+
+use flexswap::config::{HostConfig, MmConfig, VmConfig};
+use flexswap::coordinator::{Machine, Mechanism, VmSetup};
+use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
+use flexswap::policies::LruReclaimer;
+use flexswap::types::{PageSize, MS};
+use flexswap::workloads::SeqScan;
+
+/// The paper's §4.3 example policy, written verbatim against the API.
+struct AppAwareNextPagePf {
+    issued: u64,
+}
+
+impl Policy for AppAwareNextPagePf {
+    fn name(&self) -> &'static str {
+        "app-aware-next-page"
+    }
+
+    fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
+        let PolicyEvent::PageFault { ctx, .. } = ev else { return };
+        // if (!cr3 || !gva) return;  -- fault has no context: skip
+        let Some(ctx) = ctx else { return };
+        // next_gva = gva + page.size();
+        let next_gva_page = ctx.gva / 4096 + api.vm.unit_frames();
+        // next_hva = SYS.gva_to_hva(next_gva, cr3);  (may fail: skip)
+        let Some(next_hva) = api.gva_to_hva(next_gva_page, ctx.cr3) else {
+            return;
+        };
+        // SYS.prefetch(next_hva);
+        api.prefetch(api.unit_of_frame(next_hva));
+        self.issued += 1;
+    }
+}
+
+/// Naive contrast: prefetch the physically next page.
+struct PhysNextPagePf;
+
+impl Policy for PhysNextPagePf {
+    fn name(&self) -> &'static str {
+        "phys-next-page"
+    }
+    fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
+        if let PolicyEvent::PageFault { unit, .. } = ev {
+            if unit + 1 < api.units() {
+                api.prefetch(unit + 1);
+            }
+        }
+    }
+}
+
+fn run(policy: Option<Box<dyn Policy>>) -> (f64, f64) {
+    let pages = 16_000u64;
+    let mut m = Machine::new(HostConfig::default());
+    let vm_cfg = VmConfig {
+        frames: pages + 2048,
+        vcpus: 1,
+        page_size: PageSize::Small,
+        scramble: 1.0, // aged guest: GVA->GPA fully scrambled
+        guest_thp_coverage: 1.0,
+    };
+    let mm_cfg = MmConfig {
+        scan_interval: 500 * MS,
+        memory_limit: Some(pages * 4096 * 3 / 4),
+        ..Default::default()
+    };
+    let mut mm = Mm::new(
+        &mm_cfg,
+        vm_cfg.units(),
+        vm_cfg.page_size.unit_bytes(),
+        &m.host.sw,
+        m.host.hw.zero_2m_ns,
+    );
+    if let Some(p) = policy {
+        mm.add_policy(p);
+    }
+    mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
+    m.add_vm(VmSetup {
+        vm_cfg,
+        mech: Mechanism::Sys(Box::new(mm)),
+        workloads: vec![Box::new(SeqScan::new(pages, 5, 300_000))],
+        scan_interval: Some(500 * MS),
+    });
+    let res = m.run();
+    let r = &res[0];
+    let timely = r.counters.prefetch_timely as f64
+        / (r.counters.prefetch_timely + r.counters.faults_major).max(1) as f64;
+    (r.runtime as f64 / 1e6, timely * 100.0)
+}
+
+fn main() {
+    println!("== custom policy: the paper's §4.3 example, via the public API ==");
+    let (base, _) = run(None);
+    let (gva, gva_t) = run(Some(Box::new(AppAwareNextPagePf { issued: 0 })));
+    let (hva, hva_t) = run(Some(Box::new(PhysNextPagePf)));
+    println!("no prefetcher        : {base:8.1} ms");
+    println!(
+        "app-aware (GVA)      : {gva:8.1} ms  ({:+.0}% vs base, {gva_t:.0}% timely)",
+        (1.0 - gva / base) * 100.0
+    );
+    println!(
+        "physical-next (HVA)  : {hva:8.1} ms  ({:+.0}% vs base, {hva_t:.0}% timely)",
+        (1.0 - hva / base) * 100.0
+    );
+    println!("\nThe aged guest scrambles GVA->GPA, so only the introspecting");
+    println!("policy predicts the next page correctly (paper §3.2 / §6.6).");
+}

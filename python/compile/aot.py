@@ -1,0 +1,89 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+pinned xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs only here, at build time; the Rust binary is self-contained
+once ``artifacts/`` is populated.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_dt_reclaim(h: int, n: int) -> str:
+    import functools
+    import math
+
+    from compile.kernels.coldstats import DEFAULT_BLOCK_N
+
+    block_n = math.gcd(n, DEFAULT_BLOCK_N)
+    fn = functools.partial(model.dt_reclaim, block_n=block_n)
+    hist = jax.ShapeDtypeStruct((h, n), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(hist, scalar, scalar))
+
+
+def lower_ert_victim(m: int) -> str:
+    ert = jax.ShapeDtypeStruct((m,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(model.ert_victim).lower(ert, ert, scalar))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--history", type=int, default=model.DEFAULT_H)
+    ap.add_argument("--pages", type=int, default=model.DEFAULT_N)
+    ap.add_argument("--ert", type=int, default=model.DEFAULT_ERT_N)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    artifacts = {
+        "dt_reclaim.hlo.txt": lower_dt_reclaim(args.history, args.pages),
+        "ert_victim.hlo.txt": lower_ert_victim(args.ert),
+    }
+    for name, text in artifacts.items():
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars -> {path}")
+
+    # Shape manifest the Rust runtime validates against at load time.
+    manifest = {
+        "dt_reclaim": {"history": args.history, "pages": args.pages},
+        "ert_victim": {"entries": args.ert},
+        "smoothing": model.SMOOTHING,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

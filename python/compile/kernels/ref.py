@@ -1,0 +1,106 @@
+"""Pure-numpy oracle for the Pallas kernels and the L2 pipeline.
+
+Everything here is written in the most obvious way possible (python loops
+where that is clearest) — this file is the correctness ground truth that
+``pytest`` checks ``kernels.coldstats`` and ``compile.model`` against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "coldstats_ref",
+    "distance_histogram_ref",
+    "proposed_threshold_ref",
+    "dt_reclaim_ref",
+    "ert_victim_ref",
+]
+
+
+def coldstats_ref(hist: np.ndarray):
+    """Reference (age, count, distance) over a [H, N] 0/1 history matrix."""
+    hist = np.asarray(hist, dtype=np.float64)
+    h, n = hist.shape
+    age = np.full(n, float(h))
+    cnt = hist.sum(axis=0)
+    dist = np.full(n, float(h))
+    for p in range(n):
+        rows = np.flatnonzero(hist[:, p] > 0.0)
+        if rows.size >= 1:
+            age[p] = (h - 1) - rows[-1]
+        if rows.size >= 2:
+            dist[p] = rows[-1] - rows[-2]
+    return (
+        age.astype(np.float32),
+        cnt.astype(np.float32),
+        dist.astype(np.float32),
+    )
+
+
+def distance_histogram_ref(dist: np.ndarray, cnt: np.ndarray, h: int):
+    """Histogram of access distances over pages seen in the window.
+
+    Bucket ``d`` (1..H-1) counts pages whose most recent access distance is
+    ``d``; bucket ``H`` aggregates pages without a measurable distance (seen
+    < 2 times in the window).  Bucket 0 is always empty (distance >= 1).
+    """
+    out = np.zeros(h + 1, dtype=np.float64)
+    for d, c in zip(np.asarray(dist), np.asarray(cnt)):
+        if c >= 1.0:  # page present in the window at all
+            out[int(round(float(d)))] += 1.0
+    return out.astype(np.float32)
+
+
+def proposed_threshold_ref(histogram: np.ndarray, target_rate: float) -> float:
+    """Smallest threshold t so that the predicted promotion rate <= target.
+
+    A page reclaimed at age threshold ``t`` is predicted to fault again next
+    interval iff its access distance is ``>= t``.  The predicted promotion
+    rate for threshold ``t`` is therefore ``tail(t) / total`` over pages
+    with a *measured* distance (bucket ``H`` — seen fewer than two times —
+    is excluded; their distance is unknown).
+    """
+    histogram = np.asarray(histogram, dtype=np.float64)
+    h = histogram.shape[0] - 1
+    measured = histogram.copy()
+    measured[h] = 0.0  # unknown-distance pages excluded (see model.py)
+    measured[0] = 0.0
+    total = measured.sum()
+    if total <= 0.0:
+        return float(h)
+    tail = np.cumsum(measured[::-1])[::-1]  # tail[t] = sum_{d>=t}
+    for t in range(1, h + 1):
+        if tail[t] / total <= target_rate:
+            return float(t)
+    return float(h)
+
+
+def dt_reclaim_ref(
+    hist: np.ndarray,
+    target_rate: float,
+    prev_threshold: float,
+    smoothing: float = 0.5,
+):
+    """Reference for the full L2 dt-reclaim analytics pipeline."""
+    h = hist.shape[0]
+    age, cnt, dist = coldstats_ref(hist)
+    histogram = distance_histogram_ref(dist, cnt, h)
+    proposed = proposed_threshold_ref(histogram, target_rate)
+    smoothed = smoothing * prev_threshold + (1.0 - smoothing) * proposed
+    return age, cnt, histogram, np.float32(proposed), np.float32(smoothed)
+
+
+def ert_victim_ref(ert: np.ndarray, valid: np.ndarray, dt: float):
+    """Reference for the SYS-R victim scorer.
+
+    Returns (victim_index, victim_score, updated_ert).  The victim is the
+    valid entry with the largest *absolute* estimated-reuse-time after the
+    countdown by ``dt`` (paper §6.5); invalid entries can never win.
+    """
+    ert = np.asarray(ert, dtype=np.float32)
+    valid = np.asarray(valid, dtype=np.float32)
+    new = (ert - np.float32(dt) * valid).astype(np.float32)
+    score = np.where(valid > 0.0, np.abs(new), -np.inf)
+    idx = int(np.argmax(score))
+    return idx, np.float32(score[idx]), new

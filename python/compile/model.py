@@ -1,0 +1,121 @@
+"""L2 compute graphs for the flexswap Memory Manager, built on the L1 kernel.
+
+Two graphs are AOT-lowered to HLO text (see ``aot.py``) and executed from
+the Rust coordinator via PJRT, always *off* the page-fault critical path:
+
+* ``dt_reclaim``  — the dt-reclaimer analytics (paper §5.4): per-page
+  age/count/distance (L1 Pallas kernel), the access-distance histogram,
+  and the proposed + smoothed reclamation threshold for a target promotion
+  rate.
+* ``ert_victim``  — the SYS-R reuse-distance reclaimer's victim scorer
+  (paper §6.5): count down the Estimated-Reuse-Time table and pick the
+  valid entry with the largest absolute ERT.
+
+All shapes are static (PJRT artifacts are monomorphic); the Rust side tiles
+larger VMs over multiple invocations and merges the histograms.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.coldstats import (
+    DEFAULT_BLOCK_N,
+    DEFAULT_H,
+    DEFAULT_N,
+    coldstats,
+)
+
+__all__ = [
+    "dt_reclaim",
+    "ert_victim",
+    "DEFAULT_H",
+    "DEFAULT_N",
+    "DEFAULT_ERT_N",
+    "SMOOTHING",
+]
+
+DEFAULT_ERT_N = 65536
+# Threshold smoothing factor (paper: "the final threshold is smoothed out
+# from the current and past proposed thresholds").
+SMOOTHING = 0.5
+
+
+def distance_histogram(dist: jax.Array, cnt: jax.Array, h: int) -> jax.Array:
+    """[H+1] histogram of access distances over pages seen in the window.
+
+    Implemented as a one-hot matmul-style reduction so XLA lowers it to a
+    single fused pass; bucket H collects pages seen fewer than two times.
+    """
+    seen = (cnt >= 1.0).astype(jnp.float32)  # [N]
+    buckets = jnp.arange(h + 1, dtype=jnp.float32)  # [H+1]
+    onehot = (dist[:, None] == buckets[None, :]).astype(jnp.float32)  # [N,H+1]
+    return jnp.sum(onehot * seen[:, None], axis=0)
+
+
+def proposed_threshold(histogram: jax.Array, target_rate: jax.Array) -> jax.Array:
+    """Smallest t in 1..H-1 with tail-rate(t) <= target; H when none.
+
+    Bucket H holds pages seen fewer than two times — their reuse
+    distance is *unknown*, so they are excluded from the rate (counting
+    them as distance-H would pin the threshold at H whenever cold pages
+    exist, which is exactly backwards).
+    """
+    h = histogram.shape[0] - 1
+    measured = histogram.at[h].set(0.0).at[0].set(0.0)
+    total = jnp.sum(measured)
+    # tail[t] = sum_{d >= t} measured[d]
+    tail = jnp.cumsum(measured[::-1])[::-1]
+    rate = tail / jnp.maximum(total, 1.0)
+    t = jnp.arange(h + 1, dtype=jnp.float32)
+    ok = (rate <= target_rate) & (t >= 1.0)
+    candidate = jnp.where(ok, t, jnp.float32(h))
+    proposed = jnp.min(candidate)
+    return jnp.where(total > 0.0, proposed, jnp.float32(h))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def dt_reclaim(
+    hist: jax.Array,
+    target_rate: jax.Array,
+    prev_threshold: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+):
+    """Full dt-reclaimer analytics pipeline.
+
+    Args:
+      hist: ``[H, N]`` float32 access-bitmap history (row ``H-1`` newest).
+      target_rate: scalar float32, target promotion rate (paper default 2%).
+      prev_threshold: scalar float32, previous smoothed threshold.
+
+    Returns:
+      ``(age[N], count[N], histogram[H+1], proposed, smoothed)``.
+    """
+    h = hist.shape[0]
+    age, cnt, dist = coldstats(hist, block_n=block_n)
+    histogram = distance_histogram(dist, cnt, h)
+    proposed = proposed_threshold(histogram, target_rate)
+    smoothed = SMOOTHING * prev_threshold + (1.0 - SMOOTHING) * proposed
+    return age, cnt, histogram, proposed, smoothed
+
+
+@jax.jit
+def ert_victim(ert: jax.Array, valid: jax.Array, dt: jax.Array):
+    """SYS-R victim scan: countdown + argmax |ERT| over valid entries.
+
+    Args:
+      ert: ``[M]`` float32 estimated-reuse-time table (signed; counts down).
+      valid: ``[M]`` float32 0/1 mask of live entries.
+      dt: scalar float32 countdown to apply to live entries.
+
+    Returns:
+      ``(victim_index_f32, victim_score, updated_ert[M])``.
+    """
+    new = ert - dt * valid
+    score = jnp.where(valid > 0.0, jnp.abs(new), -jnp.inf)
+    idx = jnp.argmax(score)
+    return idx.astype(jnp.float32), score[idx], new

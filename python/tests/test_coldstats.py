@@ -1,0 +1,94 @@
+"""L1 Pallas kernel vs pure-numpy oracle (the core correctness signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.coldstats import coldstats
+from compile.kernels.ref import coldstats_ref
+
+
+def random_hist(rng, h, n, p):
+    return (rng.random((h, n)) < p).astype(np.float32)
+
+
+@pytest.mark.parametrize("h", [1, 2, 3, 8, 32])
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_matches_ref_shapes(h, n):
+    rng = np.random.default_rng(h * 1000 + n)
+    hist = random_hist(rng, h, n, 0.3)
+    age, cnt, dist = coldstats(hist, block_n=n)
+    rage, rcnt, rdist = coldstats_ref(hist)
+    np.testing.assert_allclose(age, rage)
+    np.testing.assert_allclose(cnt, rcnt)
+    np.testing.assert_allclose(dist, rdist)
+
+
+@pytest.mark.parametrize("blocks", [1, 2, 4, 8])
+def test_tiling_invariance(blocks):
+    """Block size must not change results (pure data-parallel kernel)."""
+    rng = np.random.default_rng(7)
+    hist = random_hist(rng, 16, 128, 0.4)
+    base = coldstats(hist, block_n=128)
+    tiled = coldstats(hist, block_n=128 // blocks)
+    for a, b in zip(base, tiled):
+        np.testing.assert_allclose(a, b)
+
+
+def test_never_accessed_page():
+    hist = np.zeros((8, 16), dtype=np.float32)
+    age, cnt, dist = coldstats(hist, block_n=16)
+    assert (np.asarray(age) == 8.0).all()
+    assert (np.asarray(cnt) == 0.0).all()
+    assert (np.asarray(dist) == 8.0).all()
+
+
+def test_accessed_every_scan():
+    hist = np.ones((8, 16), dtype=np.float32)
+    age, cnt, dist = coldstats(hist, block_n=16)
+    assert (np.asarray(age) == 0.0).all()
+    assert (np.asarray(cnt) == 8.0).all()
+    assert (np.asarray(dist) == 1.0).all()
+
+
+def test_single_access_has_no_distance():
+    hist = np.zeros((8, 4), dtype=np.float32)
+    hist[3, 1] = 1.0
+    age, cnt, dist = coldstats(hist, block_n=4)
+    assert np.asarray(age)[1] == 4.0  # rows 4..7 after the access
+    assert np.asarray(cnt)[1] == 1.0
+    assert np.asarray(dist)[1] == 8.0  # H sentinel: seen < 2 times
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.integers(min_value=1, max_value=24),
+    nblocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([4, 16, 32]),
+    p=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_sweep(h, nblocks, block, p, seed):
+    rng = np.random.default_rng(seed)
+    hist = random_hist(rng, h, nblocks * block, p)
+    age, cnt, dist = coldstats(hist, block_n=block)
+    rage, rcnt, rdist = coldstats_ref(hist)
+    np.testing.assert_allclose(age, rage)
+    np.testing.assert_allclose(cnt, rcnt)
+    np.testing.assert_allclose(dist, rdist)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_dtype_robustness(seed):
+    """Kernel accepts float32 histories produced from any integer bitmap."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(8, 32), dtype=np.int64)
+    for dtype in (np.float32, np.int32, np.uint8, np.bool_):
+        hist = bits.astype(dtype).astype(np.float32)
+        age, cnt, dist = coldstats(hist, block_n=32)
+        rage, rcnt, rdist = coldstats_ref(hist)
+        np.testing.assert_allclose(age, rage)
+        np.testing.assert_allclose(cnt, rcnt)
+        np.testing.assert_allclose(dist, rdist)

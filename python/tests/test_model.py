@@ -1,0 +1,152 @@
+"""L2 pipeline (dt_reclaim, ert_victim) vs numpy oracle + invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.ref import (
+    dt_reclaim_ref,
+    ert_victim_ref,
+    proposed_threshold_ref,
+)
+
+
+def run_dt(hist, target, prev, block_n):
+    age, cnt, histogram, proposed, smoothed = model.dt_reclaim(
+        np.asarray(hist, dtype=np.float32),
+        np.float32(target),
+        np.float32(prev),
+        block_n=block_n,
+    )
+    return (
+        np.asarray(age),
+        np.asarray(cnt),
+        np.asarray(histogram),
+        float(proposed),
+        float(smoothed),
+    )
+
+
+@pytest.mark.parametrize("target", [0.0, 0.02, 0.3, 1.0])
+def test_dt_reclaim_matches_ref(target):
+    rng = np.random.default_rng(42)
+    hist = (rng.random((16, 64)) < 0.35).astype(np.float32)
+    age, cnt, histogram, proposed, smoothed = run_dt(hist, target, 5.0, 64)
+    rage, rcnt, rhist, rprop, rsmooth = dt_reclaim_ref(hist, target, 5.0)
+    np.testing.assert_allclose(age, rage)
+    np.testing.assert_allclose(cnt, rcnt)
+    np.testing.assert_allclose(histogram, rhist)
+    assert proposed == pytest.approx(float(rprop))
+    assert smoothed == pytest.approx(float(rsmooth))
+
+
+def test_threshold_monotonic_in_target():
+    """Higher tolerated promotion rate => lower (more aggressive) threshold."""
+    rng = np.random.default_rng(3)
+    hist = (rng.random((24, 128)) < 0.25).astype(np.float32)
+    thresholds = [
+        run_dt(hist, t, 10.0, 128)[3] for t in (0.0, 0.01, 0.05, 0.2, 1.0)
+    ]
+    assert thresholds == sorted(thresholds, reverse=True)
+
+
+def test_threshold_empty_history_is_max():
+    hist = np.zeros((8, 32), dtype=np.float32)
+    _, _, histogram, proposed, _ = run_dt(hist, 0.02, 2.0, 32)
+    assert histogram.sum() == 0.0
+    assert proposed == 8.0
+
+
+def test_histogram_counts_pages_seen():
+    """Histogram mass equals the number of pages seen in the window."""
+    rng = np.random.default_rng(11)
+    hist = (rng.random((16, 96)) < 0.4).astype(np.float32)
+    _, cnt, histogram, _, _ = run_dt(hist, 0.02, 1.0, 96)
+    assert histogram.sum() == pytest.approx(float((cnt >= 1).sum()))
+
+
+def test_target_rate_semantics():
+    """Tail rate at the proposed threshold does not exceed the target."""
+    rng = np.random.default_rng(5)
+    hist = (rng.random((32, 256)) < 0.3).astype(np.float32)
+    target = 0.1
+    _, _, histogram, proposed, _ = run_dt(hist, target, 4.0, 256)
+    h = histogram.shape[0] - 1
+    t = int(proposed)
+    if t < h:
+        tail = histogram[t:].sum()
+        assert tail / histogram.sum() <= target + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    h=st.integers(min_value=2, max_value=16),
+    n=st.sampled_from([16, 32, 64]),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    target=st.floats(min_value=0.0, max_value=1.0),
+    prev=st.floats(min_value=0.0, max_value=32.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dt_hypothesis(h, n, p, target, prev, seed):
+    rng = np.random.default_rng(seed)
+    hist = (rng.random((h, n)) < p).astype(np.float32)
+    age, cnt, histogram, proposed, smoothed = run_dt(hist, target, prev, n)
+    rage, rcnt, rhist, rprop, rsmooth = dt_reclaim_ref(hist, target, prev)
+    np.testing.assert_allclose(age, rage)
+    np.testing.assert_allclose(cnt, rcnt)
+    np.testing.assert_allclose(histogram, rhist)
+    assert proposed == pytest.approx(float(rprop))
+    assert smoothed == pytest.approx(float(rsmooth), abs=1e-5)
+
+
+def run_ert(ert, valid, dt):
+    idx, score, new = model.ert_victim(
+        np.asarray(ert, np.float32), np.asarray(valid, np.float32), np.float32(dt)
+    )
+    return int(idx), float(score), np.asarray(new)
+
+
+def test_ert_victim_basic():
+    ert = np.array([3.0, -10.0, 5.0, 1.0], dtype=np.float32)
+    valid = np.array([1.0, 1.0, 1.0, 1.0], dtype=np.float32)
+    idx, score, new = run_ert(ert, valid, 0.0)
+    assert idx == 1 and score == 10.0
+    np.testing.assert_allclose(new, ert)
+
+
+def test_ert_victim_skips_invalid():
+    ert = np.array([3.0, -100.0, 5.0], dtype=np.float32)
+    valid = np.array([1.0, 0.0, 1.0], dtype=np.float32)
+    idx, _, new = run_ert(ert, valid, 2.0)
+    assert idx == 2
+    np.testing.assert_allclose(new, [1.0, -100.0, 3.0])  # countdown only live
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    dt=st.floats(min_value=0.0, max_value=100.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ert_hypothesis(m, dt, seed):
+    rng = np.random.default_rng(seed)
+    ert = rng.normal(0, 50, m).astype(np.float32)
+    valid = (rng.random(m) < 0.7).astype(np.float32)
+    idx, score, new = run_ert(ert, valid, dt)
+    ridx, rscore, rnew = ert_victim_ref(ert, valid, dt)
+    np.testing.assert_allclose(new, rnew, rtol=1e-6)
+    if valid.sum() > 0:
+        # Argmax ties may differ; scores must match.
+        assert score == pytest.approx(float(rscore), rel=1e-6)
+        assert valid[idx] == 1.0
+
+
+def test_proposed_threshold_ref_selfcheck():
+    hist = np.array([0, 5, 3, 2, 0], dtype=np.float32)  # H = 4
+    # total 10; tail(1)=10(1.0) tail(2)=5(0.5) tail(3)=2(0.2) tail(4)=0
+    assert proposed_threshold_ref(hist, 1.0) == 1.0
+    assert proposed_threshold_ref(hist, 0.5) == 2.0
+    assert proposed_threshold_ref(hist, 0.3) == 3.0
+    assert proposed_threshold_ref(hist, 0.0) == 4.0

@@ -1,0 +1,48 @@
+//! Minimal bench harness (criterion is not in the offline crate set):
+//! warms up, runs timed iterations, reports mean / p50 / p99 and
+//! throughput. Deterministic iteration counts for comparable runs.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchResult {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).min(100) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: samples[samples.len() / 2],
+        p99_ns: samples[samples.len() * 99 / 100],
+    };
+    println!(
+        "{:<44} {:>9.0} ns/iter  p50 {:>9} ns  p99 {:>9} ns  ({} iters)",
+        r.name, r.mean_ns, r.p50_ns, r.p99_ns, r.iters
+    );
+    r
+}
+
+/// One-shot timing for end-to-end experiment runs.
+pub fn bench_once<F: FnOnce() -> u64>(name: &str, f: F) {
+    let t0 = Instant::now();
+    let rows = f();
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{:<12} wall {:>8.2}s   ({} result rows)", name, wall, rows);
+}

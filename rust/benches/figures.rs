@@ -1,0 +1,29 @@
+//! End-to-end figure benchmarks: run each paper experiment at quick
+//! scale and report wall time — one bench per table and figure (the
+//! `flexswap <id>` CLI prints the actual rows).
+//!
+//! Run: `cargo bench --bench figures [fig-id ...]`
+
+mod common;
+
+use common::bench_once;
+use flexswap::harness::{registry, Scale};
+
+fn main() {
+    // cargo bench passes flags like --bench; only bare ids filter.
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    println!("== flexswap figure benchmarks (quick scale) ==\n");
+    for exp in registry() {
+        if !filter.is_empty() && !filter.iter().any(|f| f == exp.id) {
+            continue;
+        }
+        bench_once(exp.id, || {
+            let tables = (exp.run)(Scale::Quick);
+            tables.iter().map(|t| t.rows.len() as u64).sum::<u64>()
+        });
+    }
+    println!("\n(rows regenerating each figure: `cargo run --release -- <fig-id>`)");
+}

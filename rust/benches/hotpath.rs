@@ -1,0 +1,142 @@
+//! Hot-path microbenchmarks: the components on (or near) the page-fault
+//! path, plus the analytics backends (native vs XLA artifact ablation).
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use common::bench;
+use flexswap::config::{HwConfig, MmConfig, SwCost};
+use flexswap::mm::queues::QueueClass;
+use flexswap::mm::Mm;
+use flexswap::policies::analytics::{ColdAnalytics, NativeAnalytics};
+use flexswap::sim::Rng;
+use flexswap::types::Bitmap;
+use flexswap::uffd::UffdEvent;
+use flexswap::vm::FaultInfo;
+
+fn fault_ev(unit: u64) -> UffdEvent {
+    UffdEvent {
+        fault: FaultInfo {
+            unit,
+            gpa_frame: unit,
+            gva_page: unit,
+            cr3: 0x1000,
+            ip: 0x400000,
+            write: false,
+            vcpu: 0,
+            pre_cost: 0,
+        },
+        raised_at: 0,
+        delivered_at: 0,
+    }
+}
+
+fn main() {
+    println!("== flexswap hot-path microbenchmarks ==\n");
+
+    // Swapper queue ops: push+pop with conflation checks.
+    {
+        let mut q = flexswap::mm::SwapperQueue::new(65_536);
+        let mut i = 0u64;
+        bench("swapper_queue push+pop", 200_000, || {
+            q.push(i % 65_536, QueueClass::Fault);
+            q.pop(false);
+            i += 1;
+        });
+    }
+
+    // Policy-engine fault handling (no policies) — the critical path.
+    {
+        let vm_cfg = flexswap::config::VmConfig {
+            frames: 65_536,
+            vcpus: 1,
+            page_size: flexswap::types::PageSize::Small,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(1);
+        let mut vm = flexswap::vm::Vm::new(
+            &vm_cfg,
+            &HwConfig::default(),
+            &SwCost::default(),
+            &mut rng,
+        );
+        let mut mm = Mm::new(&MmConfig::default(), 65_536, 4096, &SwCost::default(), 0);
+        let mut i = 0u64;
+        bench("policy_engine on_fault + pick_work", 100_000, || {
+            let u = i % 65_536;
+            mm.on_fault(&vm, &fault_ev(u), i);
+            if mm.pick_work(i).is_some() {
+                let _ = mm.finish_swapin(&mut vm, u, false, i);
+            }
+            i += 1;
+        });
+    }
+
+    // TLB access path.
+    {
+        let mut tlb = flexswap::hw::Tlb::new(1536);
+        let mut rng = Rng::new(2);
+        bench("tlb access (miss-heavy)", 500_000, || {
+            tlb.access(1, rng.below(1 << 22), &mut rng);
+        });
+    }
+
+    // EPT scan of 64k units.
+    {
+        let mut ept = flexswap::hw::Ept::new(65_536);
+        for u in 0..65_536 {
+            ept.map(u);
+        }
+        let mut bm = Bitmap::new(65_536);
+        bench("ept scan_and_clear (64k units)", 2_000, || {
+            bm.zero();
+            ept.scan_and_clear(&mut bm);
+        });
+    }
+
+    // Analytics ablation: native vs XLA artifact over H=32, N=65536.
+    {
+        let mut rng = Rng::new(3);
+        let hist: Vec<Bitmap> = (0..32)
+            .map(|_| {
+                let mut b = Bitmap::new(65_536);
+                for u in 0..65_536 {
+                    if rng.chance(0.3) {
+                        b.set(u);
+                    }
+                }
+                b
+            })
+            .collect();
+        let mut nat = NativeAnalytics::new();
+        bench("dt_reclaim analytics native (64k units)", 20, || {
+            let _ = nat.dt_reclaim(&hist, 0.02, 5.0);
+        });
+        match flexswap::runtime::XlaAnalytics::from_artifacts("artifacts") {
+            Ok(mut x) => {
+                bench("dt_reclaim analytics xla-pjrt (64k units)", 20, || {
+                    let _ = x.dt_reclaim(&hist, 0.02, 5.0);
+                });
+            }
+            Err(e) => println!("(xla analytics skipped: {e})"),
+        }
+    }
+
+    // LRU victim selection under a full resident set.
+    {
+        let mut core = flexswap::mm::EngineCore::new(65_536, 4096, Some(32_768));
+        for u in 0..65_536usize {
+            core.states[u] = flexswap::types::UnitState::Resident;
+            core.last_touch[u] = u as u64;
+        }
+        let mut lru = flexswap::policies::LruReclaimer::new();
+        use flexswap::mm::LimitReclaimer;
+        bench("lru victim (64k resident)", 20_000, || {
+            if let Some(v) = lru.victim(&core, u64::MAX) {
+                core.want_out.set(v as usize);
+            }
+        });
+    }
+}

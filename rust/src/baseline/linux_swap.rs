@@ -1,0 +1,328 @@
+//! In-kernel Linux swap model: the baseline the paper compares against.
+//!
+//! Behaviours reproduced (paper §2, §6 benchmark setup):
+//! * faults handled in-kernel: 6µs VMEXIT (vs 22µs userspace), plus the
+//!   kernel software swap path;
+//! * readahead: `vm.page-cluster = 3` reads a cluster of 8 pages per
+//!   major fault in *swap-slot order* (≈ GPA order — which is exactly
+//!   what degrades under virtualization, §3.2);
+//! * THP: guest memory starts 2MB-backed; swap-out *splits* THPs into
+//!   4kB pages, permanently degrading TLB reach (§6.4's "only 40% of
+//!   memory covered by hugepages by the end");
+//! * cgroup memory limit with direct reclaim on the fault path and a
+//!   2-list-LRU-like clock eviction;
+//! * reactive only: the kernel does not reclaim without pressure.
+
+use crate::config::{HwConfig, LinuxConfig, SwCost};
+use crate::hw::{IoKind, Nvme};
+use crate::metrics::Counters;
+use crate::sim::Rng;
+use crate::types::{Time, UnitState, FRAME_BYTES};
+use crate::vm::Vm;
+
+#[derive(Debug)]
+pub struct LinuxSwap {
+    pub cfg: LinuxConfig,
+    /// Per-4kB-frame state.
+    pub states: Vec<UnitState>,
+    last_touch: Vec<Time>,
+    pub usage_frames: u64,
+    pub limit_frames: Option<u64>,
+    clock_hand: usize,
+    sw: SwCost,
+    pub counters: Counters,
+    /// THP splits performed (coverage telemetry).
+    pub thp_splits: u64,
+    total_2m_regions: u64,
+}
+
+/// Result of handling a kernel fault: when the vCPU resumes.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelFault {
+    pub resume_at: Time,
+    pub major: bool,
+}
+
+impl LinuxSwap {
+    pub fn new(cfg: &LinuxConfig, frames: u64, sw: &SwCost) -> Self {
+        LinuxSwap {
+            cfg: cfg.clone(),
+            states: vec![UnitState::Untouched; frames as usize],
+            last_touch: vec![0; frames as usize],
+            usage_frames: 0,
+            limit_frames: cfg.memory_limit.map(|b| b / FRAME_BYTES),
+            clock_hand: 0,
+            sw: sw.clone(),
+            counters: Counters::default(),
+            thp_splits: 0,
+            total_2m_regions: frames.div_ceil(512),
+        }
+    }
+
+    pub fn set_limit(&mut self, bytes: Option<u64>) {
+        self.limit_frames = bytes.map(|b| b / FRAME_BYTES);
+    }
+
+    /// Fraction of 2MB regions still THP-backed.
+    pub fn thp_coverage(&self) -> f64 {
+        if self.total_2m_regions == 0 {
+            return 1.0;
+        }
+        1.0 - self.thp_splits as f64 / self.total_2m_regions as f64
+    }
+
+    /// Mark guest accesses young (called from scan bitmaps / fault path)
+    /// so the LRU sees recency.
+    pub fn touch(&mut self, frame: u64, now: Time) {
+        self.last_touch[frame as usize] = now;
+    }
+
+    fn evict_one(&mut self, vm: &mut Vm, now: Time, nvme: &mut Nvme, io_end: &mut Time) -> bool {
+        let n = self.states.len();
+        let mut oldest: Option<(Time, usize)> = None;
+        let start = self.clock_hand;
+        let mut victim = None;
+        for step in 0..n {
+            let f = (start + step) % n;
+            if self.states[f] != UnitState::Resident {
+                continue;
+            }
+            let t = self.last_touch[f];
+            if t + 50_000_000 < now {
+                victim = Some(f);
+                self.clock_hand = (f + 1) % n;
+                break;
+            }
+            if oldest.map_or(true, |(bt, _)| t < bt) {
+                oldest = Some((t, f));
+            }
+        }
+        let Some(f) = victim.or(oldest.map(|(_, f)| f)) else {
+            return false;
+        };
+        // Splitting a THP on swap-out (THP cannot be swapped as a unit).
+        let region = f / 512;
+        if self.cfg.thp {
+            if let Some(bm) = vm.host_thp_mut() {
+                if bm.get(region) {
+                    bm.clear(region);
+                    self.thp_splits += 1;
+                }
+            }
+        }
+        self.states[f] = UnitState::Swapped;
+        self.usage_frames -= 1;
+        vm.ept.unmap(f as u64);
+        let done = nvme.submit(now, FRAME_BYTES, IoKind::Write);
+        *io_end = (*io_end).max(done);
+        self.counters.swapout_ops += 1;
+        self.counters.swapout_bytes += FRAME_BYTES;
+        true
+    }
+
+    /// Handle an EPT violation in-kernel at `now`.
+    pub fn fault(
+        &mut self,
+        vm: &mut Vm,
+        frame: u64,
+        now: Time,
+        nvme: &mut Nvme,
+        _rng: &mut Rng,
+    ) -> KernelFault {
+        let fi = frame as usize;
+        let mut t = now + self.sw.vmexit_kernel_ns + self.sw.kernel_swap_sw_ns;
+        self.last_touch[fi] = now;
+
+        // Direct reclaim under the cgroup limit.
+        let mut incoming = match self.states[fi] {
+            UnitState::Untouched if self.cfg.thp => {
+                // THP fault maps a whole 2MB region if fully untouched.
+                let region = frame / 512;
+                let lo = (region * 512) as usize;
+                let hi = (lo + 512).min(self.states.len());
+                if self.states[lo..hi].iter().all(|s| *s == UnitState::Untouched)
+                    && vm.host_thp_mut().map_or(false, |bm| bm.get(region as usize))
+                {
+                    (hi - lo) as u64
+                } else {
+                    1
+                }
+            }
+            _ => 1,
+        };
+        // Readahead cluster for major faults.
+        let major = self.states[fi] == UnitState::Swapped;
+        let mut cluster: Vec<usize> = vec![];
+        if major {
+            let ra = 1usize << self.cfg.page_cluster;
+            for k in 0..ra {
+                let g = fi + k;
+                if g < self.states.len() && self.states[g] == UnitState::Swapped {
+                    cluster.push(g);
+                } else if k > 0 {
+                    break;
+                }
+            }
+            incoming = cluster.len() as u64;
+        }
+
+        let mut io_end = t;
+        if let Some(limit) = self.limit_frames {
+            while self.usage_frames + incoming > limit {
+                if !self.evict_one(vm, t, nvme, &mut io_end) {
+                    break;
+                }
+                self.counters.limit_forced_reclaims += 1;
+            }
+        }
+
+        match self.states[fi] {
+            UnitState::Untouched => {
+                // Minor fault: map (THP region or single page), zero cost
+                // folded into kernel_swap_sw.
+                self.counters.faults_minor += 1;
+                if incoming > 1 {
+                    let region = frame / 512;
+                    let lo = (region * 512) as usize;
+                    for g in lo..lo + incoming as usize {
+                        self.states[g] = UnitState::Resident;
+                        self.last_touch[g] = now;
+                        vm.ept.map(g as u64);
+                    }
+                } else {
+                    self.states[fi] = UnitState::Resident;
+                    vm.ept.map(frame);
+                }
+                self.usage_frames += incoming;
+                KernelFault { resume_at: t.max(io_end), major: false }
+            }
+            UnitState::Swapped => {
+                self.counters.faults_major += 1;
+                // One clustered read.
+                let bytes = (cluster.len() as u64) * FRAME_BYTES;
+                let done = nvme.submit(t, bytes, IoKind::Read);
+                self.counters.swapin_ops += 1;
+                self.counters.swapin_bytes += bytes;
+                for &g in &cluster {
+                    self.states[g] = UnitState::Resident;
+                    self.last_touch[g] = now;
+                    vm.ept.map(g as u64);
+                    // Refaulting 4kB into a split THP region keeps the
+                    // region split (TLB reach stays degraded).
+                }
+                self.usage_frames += cluster.len() as u64;
+                t = done.max(io_end) + self.sw.kernel_swap_sw_ns;
+                KernelFault { resume_at: t, major: true }
+            }
+            UnitState::Resident => {
+                // Spurious (already mapped by readahead): minor.
+                self.counters.faults_minor += 1;
+                vm.ept.map(frame);
+                KernelFault { resume_at: t, major: false }
+            }
+            other => {
+                debug_assert!(false, "kernel fault in state {other:?}");
+                KernelFault { resume_at: t, major: false }
+            }
+        }
+    }
+
+    /// kswapd-style background reclaim towards the limit watermark.
+    pub fn kswapd_tick(&mut self, vm: &mut Vm, now: Time, nvme: &mut Nvme) {
+        let Some(limit) = self.limit_frames else { return };
+        let high = limit - limit / 16; // high watermark
+        let mut io_end = now;
+        let mut budget = 4096;
+        while self.usage_frames > high && budget > 0 {
+            if !self.evict_one(vm, now, nvme, &mut io_end) {
+                break;
+            }
+            budget -= 1;
+        }
+    }
+
+    pub fn usage_bytes(&self) -> u64 {
+        self.usage_frames * FRAME_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::VmConfig;
+    use crate::types::PageSize;
+
+    fn setup(frames: u64, limit: Option<u64>, thp: bool) -> (LinuxSwap, Vm, Nvme, Rng) {
+        let cfg = LinuxConfig {
+            thp,
+            memory_limit: limit.map(|f| f * FRAME_BYTES),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(6);
+        let vm_cfg = VmConfig {
+            frames,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut vm = Vm::new(&vm_cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        if thp {
+            vm.enable_host_thp();
+        }
+        (
+            LinuxSwap::new(&cfg, frames, &SwCost::default()),
+            vm,
+            Nvme::new(&HwConfig::default()),
+            rng,
+        )
+    }
+
+    #[test]
+    fn thp_first_touch_maps_whole_region() {
+        let (mut k, mut vm, mut nvme, mut rng) = setup(1024, None, true);
+        let r = k.fault(&mut vm, 5, 0, &mut nvme, &mut rng);
+        assert!(!r.major);
+        assert_eq!(k.usage_frames, 512);
+        assert!(vm.ept.present(0) && vm.ept.present(511));
+        assert!(!vm.ept.present(512));
+    }
+
+    #[test]
+    fn readahead_clusters_major_faults() {
+        let (mut k, mut vm, mut nvme, mut rng) = setup(64, None, false);
+        for f in 0..16 {
+            k.states[f] = UnitState::Swapped;
+        }
+        let r = k.fault(&mut vm, 4, 0, &mut nvme, &mut rng);
+        assert!(r.major);
+        // page-cluster=3 => 8 pages in one read.
+        assert_eq!(k.counters.swapin_bytes, 8 * FRAME_BYTES);
+        assert_eq!(k.usage_frames, 8);
+        assert!(vm.ept.present(4) && vm.ept.present(11));
+    }
+
+    #[test]
+    fn limit_forces_eviction_and_splits_thp() {
+        let (mut k, mut vm, mut nvme, mut rng) = setup(2048, Some(600), true);
+        // First THP fault maps 512 frames.
+        k.fault(&mut vm, 0, 0, &mut nvme, &mut rng);
+        assert_eq!(k.thp_coverage(), 1.0);
+        // Second THP region would exceed 600: direct reclaim evicts old
+        // 4k frames and splits their region.
+        k.fault(&mut vm, 600, 1_000_000_000, &mut nvme, &mut rng);
+        assert!(k.usage_frames <= 600 + 512);
+        assert!(k.thp_splits > 0);
+        assert!(k.thp_coverage() < 1.0);
+        assert!(k.counters.limit_forced_reclaims > 0);
+    }
+
+    #[test]
+    fn kernel_fault_is_cheaper_than_uffd() {
+        let (mut k, mut vm, mut nvme, mut rng) = setup(64, None, false);
+        k.states[3] = UnitState::Swapped;
+        let r = k.fault(&mut vm, 3, 0, &mut nvme, &mut rng);
+        // 6us exit + sw + ~80us io for 8-page cluster: well under 200us.
+        assert!(r.resume_at < 250_000, "{}", r.resume_at);
+    }
+}

@@ -1,0 +1,8 @@
+//! Linux kernel swap baseline (paper §6 "Comparing to Linux swapping")
+//! and the enhanced-Linux reclaim baseline of §6.4.
+
+pub mod enhanced;
+pub mod linux_swap;
+
+pub use enhanced::EnhancedReclaim;
+pub use linux_swap::LinuxSwap;

@@ -1,0 +1,869 @@
+//! The discrete-event machine: one host running N VMs, each with either
+//! the flexswap MM stack (paper system) or the in-kernel Linux swap
+//! baseline, all sharing one NVMe device and one storage backend —
+//! exactly the paper's deployment shape (§4.1 / Fig 4).
+
+
+use crate::baseline::{EnhancedReclaim, LinuxSwap};
+use crate::config::{HostConfig, LinuxConfig, MmConfig, VmConfig};
+use crate::hw::{IoKind, Nvme};
+use crate::introspect::FaultCtx;
+use crate::metrics::{Counters, LatencyHist, Series};
+use crate::mm::{Mm, WorkOutcome};
+use crate::scanner::EptScanner;
+use crate::sim::{EventQueue, Rng};
+use crate::storage::StorageBackend;
+use crate::types::{Bitmap, Time, UnitId, MS, SEC};
+use crate::vm::{AccessResult, Vm};
+use crate::workloads::{Op, Workload};
+
+/// Swap mechanism attached to a VM.
+pub enum Mechanism {
+    /// The paper's userspace MM.
+    Sys(Box<Mm>),
+    /// Linux kernel swap (optionally driven by the §6.4 enhanced
+    /// reclaimer).
+    Kernel(Box<LinuxSwap>, Option<EnhancedReclaim>),
+}
+
+/// Everything needed to add one VM to the machine.
+pub struct VmSetup {
+    pub vm_cfg: VmConfig,
+    pub mech: Mechanism,
+    pub workloads: Vec<Box<dyn Workload>>, // one per vCPU
+    pub scan_interval: Option<Time>,
+}
+
+struct VcpuState {
+    workload: Box<dyn Workload>,
+    blocked: bool,
+    done: bool,
+    fault_raised_at: Time,
+    ops_done: u64,
+    finished_at: Time,
+}
+
+struct VmSlot {
+    vm: Vm,
+    mech: Mechanism,
+    vcpus: Vec<VcpuState>,
+    /// Host-client (OVS/vhost) access bits for the QEMU-PT scan (§5.4).
+    qemu_bits: Bitmap,
+    scan_interval: Time,
+    proc: usize,
+    fault_hist: LatencyHist,
+    usage_series: Series,
+    pf_series: Series,
+    last_pf_count: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    VcpuRun { vm: usize, vcpu: usize },
+    FaultDeliver { vm: usize },
+    WorkerMapDone { vm: usize, worker: usize, unit: UnitId, from_disk: bool },
+    WorkerIoRead { vm: usize, worker: usize, unit: UnitId },
+    WorkerOutDone { vm: usize, worker: usize, unit: UnitId, wrote: bool },
+    ScanTick { vm: usize },
+    PolicyTimer { vm: usize },
+    PoolRefill { vm: usize },
+    Metrics { vm: usize },
+    SetLimit { vm: usize, bytes_plus_one: u64 }, // 0 = None
+    /// Kernel-mode fault resolved: unblock the vCPU.
+    KernelResume { vm: usize, vcpu: usize },
+    /// Staged (prefetched) unit mapped after a minor fault.
+    WorkerStagedDone { vm: usize, worker: usize, unit: UnitId },
+}
+
+/// Result of a completed run for one VM.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub label: String,
+    /// Virtual time at which the last vCPU finished.
+    pub runtime: Time,
+    pub counters: Counters,
+    pub fault_hist: LatencyHist,
+    /// (t, resident bytes)
+    pub usage_series: Vec<(Time, f64)>,
+    /// (t, faults/sec)
+    pub pf_series: Vec<(Time, f64)>,
+    pub nominal_bytes: u64,
+    pub avg_usage_bytes: f64,
+    pub guest_minor_faults: u64,
+    pub thp_coverage: f64,
+    pub scan_cpu_ns: Time,
+    pub work_ops: u64,
+}
+
+pub struct Machine {
+    pub host: HostConfig,
+    pub clock: Time,
+    rng: Rng,
+    events: EventQueue<Ev>,
+    slots: Vec<VmSlot>,
+    pub nvme: Nvme,
+    pub backend: StorageBackend,
+    scanner: EptScanner,
+    /// vCPU batch size (ops per scheduling quantum).
+    batch: u32,
+    max_time: Time,
+    metrics_interval: Time,
+    /// Scheduled limit changes (vm, at, bytes).
+    limit_plan: Vec<(usize, Time, Option<u64>)>,
+}
+
+impl Machine {
+    pub fn new(host: HostConfig) -> Self {
+        let rng = Rng::new(host.seed);
+        Machine {
+            nvme: Nvme::new(&host.hw),
+            backend: StorageBackend::new(&host.sw),
+            scanner: EptScanner::new(&host.hw),
+            host,
+            clock: 0,
+            rng,
+            events: EventQueue::new(),
+            slots: vec![],
+            batch: 64,
+            max_time: 600 * SEC,
+            metrics_interval: 20 * MS,
+            limit_plan: vec![],
+        }
+    }
+
+    pub fn set_max_time(&mut self, t: Time) {
+        self.max_time = t;
+    }
+
+    /// Schedule a control-plane memory-limit change at virtual time `at`.
+    pub fn plan_limit_change(&mut self, vm: usize, at: Time, bytes: Option<u64>) {
+        self.limit_plan.push((vm, at, bytes));
+    }
+
+    /// Add a VM (and its MM / kernel swap) to the host. Returns its id.
+    pub fn add_vm(&mut self, setup: VmSetup) -> usize {
+        let id = self.slots.len();
+        let mut vm = Vm::new(&setup.vm_cfg, &self.host.hw, &self.host.sw, &mut self.rng);
+        if let Mechanism::Kernel(k, _) = &setup.mech {
+            if k.cfg.thp {
+                vm.enable_host_thp();
+            }
+        }
+        // One guest process addressing the whole guest memory (workload
+        // generators index GVA pages within it).
+        let proc = vm.spawn_process(setup.vm_cfg.frames);
+        let units = vm.units() as usize;
+        let vcpus = setup
+            .workloads
+            .into_iter()
+            .map(|w| VcpuState {
+                workload: w,
+                blocked: false,
+                done: false,
+                fault_raised_at: 0,
+                ops_done: 0,
+                finished_at: 0,
+            })
+            .collect();
+        let scan_interval = setup.scan_interval.unwrap_or(SEC);
+        self.slots.push(VmSlot {
+            vm,
+            mech: setup.mech,
+            vcpus,
+            qemu_bits: Bitmap::new(units),
+            scan_interval,
+            proc,
+            fault_hist: LatencyHist::default(),
+            usage_series: Series::default(),
+            pf_series: Series::default(),
+            last_pf_count: 0,
+        });
+        id
+    }
+
+    fn schedule_initial(&mut self) {
+        for (vmid, slot) in self.slots.iter().enumerate() {
+            for v in 0..slot.vcpus.len() {
+                self.events.push(0, Ev::VcpuRun { vm: vmid, vcpu: v });
+            }
+            self.events.push(slot.scan_interval, Ev::ScanTick { vm: vmid });
+            self.events.push(SEC, Ev::PolicyTimer { vm: vmid });
+            self.events.push(10 * MS, Ev::PoolRefill { vm: vmid });
+            self.events.push(self.metrics_interval, Ev::Metrics { vm: vmid });
+        }
+        let plan = std::mem::take(&mut self.limit_plan);
+        for (vm, at, bytes) in plan {
+            let enc = bytes.map(|b| b + 1).unwrap_or(0);
+            self.events.push(at, Ev::SetLimit { vm, bytes_plus_one: enc });
+        }
+    }
+
+    fn all_done(&self) -> bool {
+        self.slots
+            .iter()
+            .all(|s| s.vcpus.iter().all(|v| v.done))
+    }
+
+    /// Run to completion (all workloads done) or `max_time`.
+    pub fn run(&mut self) -> Vec<RunResult> {
+        self.schedule_initial();
+        while let Some((t, ev)) = self.events.pop() {
+            if t > self.max_time {
+                break;
+            }
+            self.clock = t;
+            self.handle(ev);
+            if self.all_done() {
+                break;
+            }
+        }
+        self.collect_results()
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::VcpuRun { vm, vcpu } => self.vcpu_run(vm, vcpu),
+            Ev::FaultDeliver { vm } => self.fault_deliver(vm),
+            Ev::WorkerMapDone { vm, worker, unit, from_disk } => {
+                self.worker_map_done(vm, worker, unit, from_disk)
+            }
+            Ev::WorkerIoRead { vm, worker, unit } => {
+                self.worker_io_read_done(vm, worker, unit)
+            }
+            Ev::WorkerOutDone { vm, worker, unit, wrote } => {
+                self.worker_out_done(vm, worker, unit, wrote)
+            }
+            Ev::ScanTick { vm } => self.scan_tick(vm),
+            Ev::PolicyTimer { vm } => self.policy_timer(vm),
+            Ev::PoolRefill { vm } => self.pool_refill(vm),
+            Ev::Metrics { vm } => self.metrics_tick(vm),
+            Ev::SetLimit { vm, bytes_plus_one } => {
+                let bytes = if bytes_plus_one == 0 { None } else { Some(bytes_plus_one - 1) };
+                self.set_limit(vm, bytes)
+            }
+            Ev::KernelResume { vm, vcpu } => {
+                self.slots[vm].vcpus[vcpu].blocked = false;
+                self.vcpu_run(vm, vcpu);
+            }
+            Ev::WorkerStagedDone { vm, worker, unit } => {
+                let now = self.clock;
+                let slot = &mut self.slots[vm];
+                if let Mechanism::Sys(mm) = &mut slot.mech {
+                    let (cost, wake) = mm.core_map_staged(&mut slot.vm, unit, now);
+                    mm.swapper.release(worker);
+                    self.wake_vcpus(vm, wake, now + cost);
+                    self.dispatch_workers(vm);
+                }
+            }
+        }
+    }
+
+    fn vcpu_run(&mut self, vmid: usize, vcpu: usize) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        if slot.vcpus[vcpu].done || slot.vcpus[vcpu].blocked {
+            return;
+        }
+        let mut elapsed: Time = 0;
+        for _ in 0..self.batch {
+            let op = slot.vcpus[vcpu].workload.next(&mut self.rng);
+            match op {
+                Op::Done => {
+                    slot.vcpus[vcpu].done = true;
+                    slot.vcpus[vcpu].finished_at = now + elapsed;
+                    break;
+                }
+                Op::Think(t) => elapsed += t,
+                Op::Access { proc, gva_page, write, ip, cost_ns } => {
+                    slot.vcpus[vcpu].ops_done += 1;
+                    if proc == usize::MAX {
+                        // Host-side (OVS/vhost) DMA access: page-locking
+                        // protocol + QEMU page-table A-bit.
+                        elapsed += cost_ns;
+                        Self::host_dma_access(slot, gva_page, write);
+                        continue;
+                    }
+                    let t_access = now + elapsed;
+                    match slot.vm.access(
+                        vcpu,
+                        slot.proc,
+                        gva_page,
+                        write,
+                        ip,
+                        t_access,
+                        &mut self.rng,
+                    ) {
+                        AccessResult::Hit { cost } => elapsed += cost + cost_ns,
+                        AccessResult::Fault(fault) => {
+                            elapsed += fault.pre_cost;
+                            let raised = now + elapsed;
+                            slot.vcpus[vcpu].blocked = true;
+                            slot.vcpus[vcpu].fault_raised_at = raised;
+                            match &mut slot.mech {
+                                Mechanism::Sys(mm) => {
+                                    // KVM pushes VMCS regs into the ring.
+                                    mm.ring.push(FaultCtx {
+                                        cr3: fault.cr3,
+                                        ip: fault.ip,
+                                        gva: fault.gva_page
+                                            * crate::types::FRAME_BYTES,
+                                        gpa_frame: fault.gpa_frame,
+                                    });
+                                    let deliver =
+                                        mm.uffd.raise(fault, raised, &self.host.sw);
+                                    self.events
+                                        .push(deliver, Ev::FaultDeliver { vm: vmid });
+                                }
+                                Mechanism::Kernel(k, _) => {
+                                    let r = k.fault(
+                                        &mut slot.vm,
+                                        fault.gpa_frame,
+                                        raised,
+                                        &mut self.nvme,
+                                        &mut self.rng,
+                                    );
+                                    let lat = r.resume_at - raised;
+                                    if r.major {
+                                        slot.fault_hist.record(lat);
+                                    }
+                                    k.counters.stall_ns += lat;
+                                    self.events.push(
+                                        r.resume_at,
+                                        Ev::KernelResume { vm: vmid, vcpu },
+                                    );
+                                }
+                            }
+                            // Stop the batch: the vCPU is stalled.
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        let slot = &mut self.slots[vmid];
+        match &mut slot.mech {
+            Mechanism::Sys(mm) => mm.core.counters.work_ns += elapsed,
+            Mechanism::Kernel(k, _) => k.counters.work_ns += elapsed,
+        }
+        if !slot.vcpus[vcpu].blocked && !slot.vcpus[vcpu].done {
+            self.events
+                .push(now + elapsed.max(1), Ev::VcpuRun { vm: vmid, vcpu });
+        }
+    }
+
+    fn host_dma_access(slot: &mut VmSlot, gva_page: u64, _write: bool) {
+        // OVS path: lock the page, touch it (forcing swap-in would go
+        // through a fault; for simplicity host touches hit resident pages
+        // or are dropped), record in the QEMU-side bitmap, unlock.
+        let Some(frame) = slot.vm.processes[slot.proc].pt.walk(gva_page) else {
+            return;
+        };
+        let unit = frame as u64 / slot.vm.unit_frames();
+        if let Mechanism::Sys(mm) = &mut slot.mech {
+            mm.core.locks.lock(unit);
+            slot.qemu_bits.set(unit as usize);
+            mm.core.locks.unlock(unit);
+        } else {
+            slot.qemu_bits.set(unit as usize);
+        }
+    }
+
+    fn fault_deliver(&mut self, vmid: usize) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        let Mechanism::Sys(mm) = &mut slot.mech else { return };
+        while let Some(ev) = mm.uffd.poll(now) {
+            mm.on_fault(&slot.vm, &ev, now);
+        }
+        self.dispatch_workers(vmid);
+    }
+
+    /// Hand queued work to idle swapper workers (paper §4.1 step 7-9).
+    fn dispatch_workers(&mut self, vmid: usize) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        let Mechanism::Sys(mm) = &mut slot.mech else { return };
+        while let Some(worker) = mm.swapper.claim() {
+            match mm.pick_work(now) {
+                None => {
+                    mm.swapper.release(worker);
+                    mm.swapper.jobs_done -= 1; // claim/release without job
+                    break;
+                }
+                Some(WorkOutcome::MapZero { unit, cost }) => {
+                    self.events.push(
+                        now + cost,
+                        Ev::WorkerMapDone { vm: vmid, worker, unit, from_disk: false },
+                    );
+                }
+                Some(WorkOutcome::MapStaged { unit, cost }) => {
+                    self.events.push(
+                        now + cost,
+                        Ev::WorkerStagedDone { vm: vmid, worker, unit },
+                    );
+                }
+                Some(WorkOutcome::SwapIn { unit, bytes }) => {
+                    let req = self.backend.submit(
+                        vmid,
+                        unit,
+                        bytes,
+                        IoKind::Read,
+                        now + self.host.sw.queue_handoff_ns,
+                        &mut self.nvme,
+                        &mut self.rng,
+                    );
+                    self.backend.complete(&req);
+                    self.events.push(
+                        req.completes_at,
+                        Ev::WorkerIoRead { vm: vmid, worker, unit },
+                    );
+                }
+                Some(WorkOutcome::SwapOutWrite { unit, bytes, pre_cost }) => {
+                    mm.unmap_for_swapout(&mut slot.vm, unit);
+                    let req = self.backend.submit(
+                        vmid,
+                        unit,
+                        bytes,
+                        IoKind::Write,
+                        now + pre_cost,
+                        &mut self.nvme,
+                        &mut self.rng,
+                    );
+                    self.backend.complete(&req);
+                    self.events.push(
+                        req.completes_at + self.host.sw.punch_hole_ns,
+                        Ev::WorkerOutDone { vm: vmid, worker, unit, wrote: true },
+                    );
+                }
+                Some(WorkOutcome::Drop { unit, cost }) => {
+                    mm.unmap_for_swapout(&mut slot.vm, unit);
+                    self.events.push(
+                        now + cost,
+                        Ev::WorkerOutDone { vm: vmid, worker, unit, wrote: false },
+                    );
+                }
+            }
+        }
+    }
+
+    fn wake_vcpus(&mut self, vmid: usize, wake: Vec<usize>, at: Time) {
+        let slot = &mut self.slots[vmid];
+        for v in wake {
+            if v >= slot.vcpus.len() {
+                continue;
+            }
+            slot.vcpus[v].blocked = false;
+            let stall = at.saturating_sub(slot.vcpus[v].fault_raised_at);
+            slot.fault_hist.record(stall);
+            if let Mechanism::Sys(mm) = &mut slot.mech {
+                mm.core.counters.stall_ns += stall;
+            }
+            self.events.push(at, Ev::VcpuRun { vm: vmid, vcpu: v });
+        }
+    }
+
+    fn worker_map_done(&mut self, vmid: usize, worker: usize, unit: UnitId, from_disk: bool) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        let Mechanism::Sys(mm) = &mut slot.mech else { return };
+        let (cost, wake) = mm.finish_swapin(&mut slot.vm, unit, from_disk, now);
+        mm.swapper.release(worker);
+        self.wake_vcpus(vmid, wake, now + cost);
+        self.dispatch_workers(vmid);
+    }
+
+    fn worker_io_read_done(&mut self, vmid: usize, worker: usize, unit: UnitId) {
+        self.worker_map_done(vmid, worker, unit, true);
+    }
+
+    fn worker_out_done(&mut self, vmid: usize, worker: usize, unit: UnitId, wrote: bool) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        let Mechanism::Sys(mm) = &mut slot.mech else { return };
+        mm.finish_swapout(&mut slot.vm, unit, wrote, now);
+        mm.swapper.release(worker);
+        self.dispatch_workers(vmid);
+    }
+
+    fn scan_tick(&mut self, vmid: usize) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        let qemu = std::mem::replace(
+            &mut slot.qemu_bits,
+            Bitmap::new(slot.vm.units() as usize),
+        );
+        let out = self.scanner.scan(&mut slot.vm, Some(&qemu), now);
+        match &mut slot.mech {
+            Mechanism::Sys(mm) => {
+                mm.core.counters.scan_cpu_ns += out.cpu_ns;
+                mm.on_scan(&slot.vm, &out.bitmap, now);
+                // Policies may have changed the scan cadence (SYS-Agg).
+                if let Some(req) = mm.core.requested_scan_interval.take() {
+                    slot.scan_interval = req;
+                }
+            }
+            Mechanism::Kernel(k, enhanced) => {
+                k.counters.scan_cpu_ns += out.cpu_ns;
+                // Young-page feedback to the kernel LRU.
+                for u in out.bitmap.iter_ones() {
+                    k.touch(u as u64, now);
+                }
+                if let Some(e) = enhanced {
+                    e.on_scan(k, &out.bitmap, now);
+                    k.kswapd_tick(&mut slot.vm, now, &mut self.nvme);
+                }
+            }
+        }
+        let interval = slot.scan_interval;
+        self.events.push(now + interval, Ev::ScanTick { vm: vmid });
+        self.dispatch_workers(vmid);
+    }
+
+    fn policy_timer(&mut self, vmid: usize) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        if let Mechanism::Sys(mm) = &mut slot.mech {
+            mm.on_timer(&slot.vm, now);
+            if let Some(req) = mm.core.requested_scan_interval.take() {
+                slot.scan_interval = req;
+                self.events.push(now + req, Ev::ScanTick { vm: vmid });
+            }
+        }
+        self.events.push(now + SEC, Ev::PolicyTimer { vm: vmid });
+        self.dispatch_workers(vmid);
+    }
+
+    fn pool_refill(&mut self, vmid: usize) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        if let Mechanism::Sys(mm) = &mut slot.mech {
+            mm.zero_pool.refill(2);
+        }
+        self.events.push(now + 10 * MS, Ev::PoolRefill { vm: vmid });
+    }
+
+    fn metrics_tick(&mut self, vmid: usize) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        let (usage, pf) = match &slot.mech {
+            Mechanism::Sys(mm) => (mm.core.usage_bytes(), mm.core.pf_count),
+            Mechanism::Kernel(k, _) => {
+                (k.usage_bytes(), k.counters.faults_major + k.counters.faults_minor)
+            }
+        };
+        slot.usage_series.push(now, usage as f64);
+        let dpf = pf - slot.last_pf_count;
+        slot.last_pf_count = pf;
+        slot.pf_series.push(
+            now,
+            dpf as f64 / (self.metrics_interval as f64 / 1e9),
+        );
+        self.events
+            .push(now + self.metrics_interval, Ev::Metrics { vm: vmid });
+    }
+
+    fn set_limit(&mut self, vmid: usize, bytes: Option<u64>) {
+        let now = self.clock;
+        let slot = &mut self.slots[vmid];
+        match &mut slot.mech {
+            Mechanism::Sys(mm) => mm.set_memory_limit(&slot.vm, bytes, now),
+            Mechanism::Kernel(k, _) => {
+                k.set_limit(bytes);
+                k.kswapd_tick(&mut slot.vm, now, &mut self.nvme);
+            }
+        }
+        self.dispatch_workers(vmid);
+    }
+
+    fn collect_results(&mut self) -> Vec<RunResult> {
+        let clock = self.clock;
+        // Final usage sample so short runs still get a sane average.
+        for slot in self.slots.iter_mut() {
+            let usage = match &slot.mech {
+                Mechanism::Sys(mm) => mm.core.usage_bytes(),
+                Mechanism::Kernel(k, _) => k.usage_bytes(),
+            };
+            slot.usage_series.push(clock.max(1), usage as f64);
+        }
+        self.slots
+            .iter_mut()
+            .map(|slot| {
+                let (counters, tlb) = match &slot.mech {
+                    Mechanism::Sys(mm) => (mm.core.counters.clone(), slot.vm.tlb_stats()),
+                    Mechanism::Kernel(k, _) => (k.counters.clone(), slot.vm.tlb_stats()),
+                };
+                let mut counters = counters;
+                counters.tlb_hits = tlb.0;
+                counters.tlb_misses = tlb.1;
+                let runtime = slot
+                    .vcpus
+                    .iter()
+                    .map(|v| if v.done { v.finished_at } else { clock })
+                    .max()
+                    .unwrap_or(clock);
+                let thp = match &slot.mech {
+                    Mechanism::Kernel(k, _) => k.thp_coverage(),
+                    Mechanism::Sys(_) => 1.0,
+                };
+                RunResult {
+                    label: slot
+                        .vcpus
+                        .first()
+                        .map(|v| v.workload.label().to_string())
+                        .unwrap_or_default(),
+                    runtime,
+                    counters: counters.clone(),
+                    fault_hist: slot.fault_hist.clone(),
+                    usage_series: slot.usage_series.points.clone(),
+                    pf_series: slot.pf_series.downsample(512),
+                    nominal_bytes: slot.vm.cfg.bytes(),
+                    avg_usage_bytes: slot.usage_series.time_weighted_mean(),
+                    guest_minor_faults: slot.vm.guest_minor_faults,
+                    thp_coverage: thp,
+                    scan_cpu_ns: counters.scan_cpu_ns,
+                    work_ops: slot.vcpus.iter().map(|v| v.ops_done).sum(),
+                }
+            })
+            .collect()
+    }
+
+    /// Warm-start helper: make gva pages [0, gva_pages) resident and
+    /// mapped (guest mapping + EPT leaf + MM/kernel accounting).
+    pub fn prime_resident(&mut self, vmid: usize, gva_pages: u64) {
+        let slot = &mut self.slots[vmid];
+        let uf = slot.vm.unit_frames();
+        for g in 0..gva_pages {
+            let Some(frame) = slot.vm.ensure_mapped(slot.proc, g) else { continue };
+            let unit = frame as u64 / uf;
+            slot.vm.ept.map(unit);
+            match &mut slot.mech {
+                Mechanism::Sys(mm) => {
+                    let ui = unit as usize;
+                    if mm.core.states[ui] != crate::types::UnitState::Resident {
+                        mm.core.states[ui] = crate::types::UnitState::Resident;
+                        mm.core.usage_units += 1;
+                    }
+                }
+                Mechanism::Kernel(k, _) => {
+                    let fi = frame as usize;
+                    if k.states[fi] != crate::types::UnitState::Resident {
+                        k.states[fi] = crate::types::UnitState::Resident;
+                        k.usage_frames += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Warm-start helper: make gva pages [lo, hi) swapped out (content
+    /// on the backing store, not mapped).
+    pub fn prime_swapped(&mut self, vmid: usize, lo: u64, hi: u64) {
+        let slot = &mut self.slots[vmid];
+        let uf = slot.vm.unit_frames();
+        for g in lo..hi {
+            let Some(frame) = slot.vm.ensure_mapped(slot.proc, g) else { continue };
+            let unit = frame as u64 / uf;
+            slot.vm.ept.unmap(unit);
+            match &mut slot.mech {
+                Mechanism::Sys(mm) => {
+                    let ui = unit as usize;
+                    if mm.core.states[ui] == crate::types::UnitState::Resident {
+                        mm.core.usage_units -= 1;
+                    }
+                    mm.core.states[ui] = crate::types::UnitState::Swapped;
+                }
+                Mechanism::Kernel(k, _) => {
+                    let fi = frame as usize;
+                    if k.states[fi] == crate::types::UnitState::Resident {
+                        k.usage_frames -= 1;
+                    }
+                    k.states[fi] = crate::types::UnitState::Swapped;
+                }
+            }
+        }
+    }
+
+    /// Direct access to a VM's MM (tests / harness).
+    pub fn mm(&self, vm: usize) -> Option<&Mm> {
+        match &self.slots[vm].mech {
+            Mechanism::Sys(mm) => Some(mm),
+            _ => None,
+        }
+    }
+    pub fn mm_mut(&mut self, vm: usize) -> Option<&mut Mm> {
+        match &mut self.slots[vm].mech {
+            Mechanism::Sys(mm) => Some(mm),
+            _ => None,
+        }
+    }
+    pub fn vm_ref(&self, vm: usize) -> &Vm {
+        &self.slots[vm].vm
+    }
+}
+
+/// Convenience builders used by the harness and examples.
+impl Machine {
+    /// Standard flexswap VM: dt-reclaimer + LRU limit reclaimer.
+    pub fn sys_vm(
+        &mut self,
+        vm_cfg: VmConfig,
+        mm_cfg: &MmConfig,
+        workloads: Vec<Box<dyn Workload>>,
+    ) -> usize {
+        use crate::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
+        let units = vm_cfg.units();
+        let unit_bytes = vm_cfg.page_size.unit_bytes();
+        let mut mm = Mm::new(mm_cfg, units, unit_bytes, &self.host.sw, self.host.hw.zero_2m_ns);
+        let backend: Box<dyn crate::policies::ColdAnalytics> = if mm_cfg.use_xla {
+            match crate::runtime::XlaAnalytics::from_artifacts("artifacts") {
+                Ok(x) => Box::new(x),
+                Err(e) => {
+                    eprintln!("xla analytics unavailable ({e}); using native");
+                    Box::new(NativeAnalytics::new())
+                }
+            }
+        } else {
+            Box::new(NativeAnalytics::new())
+        };
+        mm.add_policy(Box::new(DtReclaimer::new(
+            backend,
+            mm_cfg.history,
+            mm_cfg.target_promotion_rate,
+        )));
+        mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
+        self.add_vm(VmSetup {
+            vm_cfg,
+            mech: Mechanism::Sys(Box::new(mm)),
+            workloads,
+            scan_interval: Some(mm_cfg.scan_interval),
+        })
+    }
+
+    /// Linux-swap baseline VM.
+    pub fn kernel_vm(
+        &mut self,
+        vm_cfg: VmConfig,
+        linux: &LinuxConfig,
+        workloads: Vec<Box<dyn Workload>>,
+        enhanced: Option<EnhancedReclaim>,
+        scan_interval: Time,
+    ) -> usize {
+        let k = LinuxSwap::new(linux, vm_cfg.frames, &self.host.sw);
+        self.add_vm(VmSetup {
+            vm_cfg,
+            mech: Mechanism::Kernel(Box::new(k), enhanced),
+            workloads,
+            scan_interval: Some(scan_interval),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::PageSize;
+    use crate::workloads::UniformRandom;
+
+    fn small_vm_cfg(frames: u64, mode: PageSize) -> VmConfig {
+        VmConfig {
+            frames,
+            vcpus: 1,
+            page_size: mode,
+            scramble: 0.5,
+            guest_thp_coverage: 1.0,
+        }
+    }
+
+    #[test]
+    fn sys_vm_runs_to_completion() {
+        let mut m = Machine::new(HostConfig::default());
+        let cfg = small_vm_cfg(4096, PageSize::Small);
+        let mm_cfg = MmConfig::default();
+        m.sys_vm(
+            cfg,
+            &mm_cfg,
+            vec![Box::new(UniformRandom::new(0, 2048, 50_000))],
+        );
+        let res = m.run();
+        assert_eq!(res.len(), 1);
+        let r = &res[0];
+        assert!(r.runtime > 0);
+        assert_eq!(r.work_ops, 50_000);
+        // All first touches fault through the MM.
+        assert!(r.counters.faults_minor > 1000, "{:?}", r.counters);
+    }
+
+    #[test]
+    fn kernel_vm_runs_to_completion() {
+        let mut m = Machine::new(HostConfig::default());
+        let cfg = small_vm_cfg(4096, PageSize::Small);
+        m.kernel_vm(
+            cfg,
+            &LinuxConfig::default(),
+            vec![Box::new(UniformRandom::new(0, 2048, 50_000))],
+            None,
+            SEC,
+        );
+        let res = m.run();
+        assert_eq!(res[0].work_ops, 50_000);
+        assert_eq!(res[0].thp_coverage, 1.0); // nothing swapped
+    }
+
+    #[test]
+    fn memory_limit_triggers_swap_traffic() {
+        let mut m = Machine::new(HostConfig::default());
+        let cfg = small_vm_cfg(8192, PageSize::Small);
+        let mm_cfg = MmConfig {
+            memory_limit: Some(1024 * 4096), // 1/4 of the working set
+            scan_interval: 50 * MS,
+            ..Default::default()
+        };
+        m.sys_vm(
+            cfg,
+            &mm_cfg,
+            vec![Box::new(UniformRandom::new(0, 4096, 100_000))],
+        );
+        let res = m.run();
+        let c = &res[0].counters;
+        assert!(c.swapout_ops > 100, "swapouts {}", c.swapout_ops);
+        assert!(c.faults_major > 100, "majors {}", c.faults_major);
+        // Usage must respect the limit (within one in-flight unit).
+        let mm = m.mm(0).unwrap();
+        assert!(mm.core.usage_units <= 1024 + mm.swapper.threads() as u64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut m = Machine::new(HostConfig { seed: 42, ..Default::default() });
+            let cfg = small_vm_cfg(2048, PageSize::Small);
+            m.sys_vm(
+                cfg,
+                &MmConfig::default(),
+                vec![Box::new(UniformRandom::new(0, 1024, 20_000))],
+            );
+            let r = m.run();
+            (r[0].runtime, r[0].counters.faults_minor, r[0].counters.faults_major)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn huge_mode_fewer_faults_than_small() {
+        let ops = 60_000;
+        let run = |mode| {
+            let mut m = Machine::new(HostConfig::default());
+            let cfg = small_vm_cfg(16_384, mode);
+            m.sys_vm(
+                cfg,
+                &MmConfig::default(),
+                vec![Box::new(UniformRandom::new(0, 8192, ops))],
+            );
+            let r = m.run();
+            r[0].counters.faults_minor + r[0].counters.faults_major
+        };
+        let f4k = run(PageSize::Small);
+        let f2m = run(PageSize::Huge);
+        assert!(f2m * 10 < f4k, "4k {f4k} vs 2m {f2m}");
+    }
+}

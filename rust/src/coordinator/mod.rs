@@ -1,0 +1,7 @@
+//! The coordinator: composes VMs, MMs (or the kernel baseline), the
+//! shared storage backend and NVMe device into one discrete-event
+//! machine and drives the paper's §4.1 workflows end to end.
+
+pub mod machine;
+
+pub use machine::{Machine, Mechanism, RunResult, VmSetup};

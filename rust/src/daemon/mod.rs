@@ -1,0 +1,159 @@
+//! The daemon (paper §4.1): launched at host startup; spawns and
+//! configures one MM per VM according to the VM's registration (desired
+//! page size + SLA), and exposes the control-plane feedback loop
+//! (per-VM cold-memory estimates, runtime-tunable parameters).
+
+use crate::config::{HostConfig, MmConfig, VmConfig};
+use crate::coordinator::Machine;
+use crate::types::{PageSize, Time, MS, SEC};
+use crate::workloads::Workload;
+
+/// SLA class a VM registers with at boot (paper step ①).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sla {
+    /// Latency-critical: huge pages, conservative reclamation.
+    Gold,
+    /// Balanced (default).
+    Silver,
+    /// Best-effort: aggressive reclamation to maximize density.
+    Bronze,
+}
+
+impl Sla {
+    /// The daemon's MM configuration policy (paper step ②).
+    pub fn mm_config(self) -> MmConfig {
+        match self {
+            Sla::Gold => MmConfig {
+                scan_interval: SEC,
+                target_promotion_rate: 0.005,
+                swapper_threads: 8,
+                ..Default::default()
+            },
+            Sla::Silver => MmConfig {
+                scan_interval: 500 * MS,
+                target_promotion_rate: 0.02,
+                ..Default::default()
+            },
+            Sla::Bronze => MmConfig {
+                scan_interval: 200 * MS,
+                target_promotion_rate: 0.08,
+                swapper_threads: 2,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn page_size(self) -> PageSize {
+        match self {
+            Sla::Gold | Sla::Silver => PageSize::Huge,
+            Sla::Bronze => PageSize::Small,
+        }
+    }
+}
+
+/// A VM registration request (QEMU boot-time handshake).
+pub struct VmRegistration {
+    pub name: String,
+    pub frames: u64,
+    pub vcpus: usize,
+    pub sla: Sla,
+    pub workloads: Vec<Box<dyn Workload>>,
+}
+
+/// The daemon: owns the machine and the fleet bookkeeping.
+pub struct Daemon {
+    pub machine: Machine,
+    names: Vec<String>,
+}
+
+/// Control-plane view of one VM (paper: "inform the control plane about
+/// the number of cold memory pages").
+#[derive(Debug, Clone)]
+pub struct VmReport {
+    pub name: String,
+    pub usage_bytes: u64,
+    pub cold_estimate_bytes: u64,
+    pub pf_count: u64,
+}
+
+impl Daemon {
+    pub fn new(host: HostConfig) -> Self {
+        Daemon { machine: Machine::new(host), names: vec![] }
+    }
+
+    /// Boot-time registration: spawn + configure an MM for the VM.
+    pub fn register(&mut self, reg: VmRegistration) -> usize {
+        let mm_cfg = reg.sla.mm_config();
+        let vm_cfg = VmConfig {
+            frames: reg.frames,
+            vcpus: reg.vcpus,
+            page_size: reg.sla.page_size(),
+            scramble: 0.05,
+            guest_thp_coverage: 1.0,
+        };
+        let id = self.machine.sys_vm(vm_cfg, &mm_cfg, reg.workloads);
+        self.names.push(reg.name);
+        id
+    }
+
+    /// Control-plane report for every VM.
+    pub fn report(&self) -> Vec<VmReport> {
+        (0..self.names.len())
+            .map(|i| {
+                let mm = self.machine.mm(i).expect("daemon VMs are sys VMs");
+                let wss_units =
+                    mm.core.params.get("dt.wss_units").copied().unwrap_or(0.0);
+                let usage = mm.core.usage_bytes();
+                let cold = usage
+                    .saturating_sub((wss_units as u64) * mm.core.unit_bytes);
+                VmReport {
+                    name: self.names[i].clone(),
+                    usage_bytes: usage,
+                    cold_estimate_bytes: cold,
+                    pf_count: mm.core.pf_count,
+                }
+            })
+            .collect()
+    }
+
+    /// Control-plane action: set a VM's memory limit at time `at`.
+    pub fn plan_limit(&mut self, vm: usize, at: Time, bytes: Option<u64>) {
+        self.machine.plan_limit_change(vm, at, bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::UniformRandom;
+
+    #[test]
+    fn daemon_runs_a_small_fleet() {
+        let mut d = Daemon::new(HostConfig::default());
+        for (i, sla) in [Sla::Gold, Sla::Silver, Sla::Bronze].iter().enumerate() {
+            d.register(VmRegistration {
+                name: format!("vm{i}"),
+                frames: 4096,
+                vcpus: 1,
+                sla: *sla,
+                workloads: vec![Box::new(UniformRandom::new(0, 2048, 20_000))],
+            });
+        }
+        let res = d.machine.run();
+        assert_eq!(res.len(), 3);
+        for r in &res {
+            assert_eq!(r.work_ops, 20_000);
+        }
+        let reports = d.report();
+        assert_eq!(reports.len(), 3);
+        assert!(reports.iter().all(|r| r.pf_count > 0));
+    }
+
+    #[test]
+    fn sla_maps_to_config() {
+        assert_eq!(Sla::Gold.page_size(), PageSize::Huge);
+        assert_eq!(Sla::Bronze.page_size(), PageSize::Small);
+        assert!(Sla::Bronze.mm_config().target_promotion_rate
+            > Sla::Gold.mm_config().target_promotion_rate);
+    }
+}

@@ -1,0 +1,96 @@
+//! Guest physical-frame allocator.
+//!
+//! A freshly booted guest hands out frames roughly sequentially, so
+//! GVA-contiguous buffers are GPA-contiguous too. After the system "ages"
+//! (allocations and frees churn the free list), contiguity is destroyed —
+//! this is exactly the §3.2 observation that spatial patterns visible in
+//! GVA space scramble in GPA space. `age()` reproduces the paper's
+//! warm-up ("running a random memory access process for 1 second").
+
+use crate::sim::Rng;
+
+/// 4kB guest-physical frame number.
+pub type Frame = u32;
+
+#[derive(Debug, Clone)]
+pub struct GuestAllocator {
+    /// LIFO free list; boot state is descending so pops are sequential.
+    free: Vec<Frame>,
+    total: u64,
+}
+
+impl GuestAllocator {
+    pub fn new(frames: u64) -> Self {
+        // Reverse order: pop() yields frame 0, 1, 2, ... at boot.
+        let free = (0..frames as Frame).rev().collect();
+        GuestAllocator { free, total: frames }
+    }
+
+    /// Churn the free list, destroying sequential order for a `fraction`
+    /// of entries (0.0 = pristine boot, 1.0 = fully scrambled).
+    pub fn age(&mut self, fraction: f64, rng: &mut Rng) {
+        let n = self.free.len();
+        if n < 2 || fraction <= 0.0 {
+            return;
+        }
+        let swaps = (n as f64 * fraction.clamp(0.0, 1.0)) as usize;
+        for _ in 0..swaps {
+            let i = rng.below(n as u64) as usize;
+            let j = rng.below(n as u64) as usize;
+            self.free.swap(i, j);
+        }
+    }
+
+    pub fn alloc(&mut self) -> Option<Frame> {
+        self.free.pop()
+    }
+
+    pub fn free_frame(&mut self, f: Frame) {
+        self.free.push(f);
+    }
+
+    pub fn available(&self) -> u64 {
+        self.free.len() as u64
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boot_allocation_is_sequential() {
+        let mut a = GuestAllocator::new(16);
+        let frames: Vec<_> = (0..16).map(|_| a.alloc().unwrap()).collect();
+        assert_eq!(frames, (0..16).collect::<Vec<_>>());
+        assert_eq!(a.alloc(), None);
+    }
+
+    #[test]
+    fn aged_allocation_is_scrambled() {
+        let mut a = GuestAllocator::new(4096);
+        a.age(1.0, &mut Rng::new(9));
+        let frames: Vec<_> = (0..4096).map(|_| a.alloc().unwrap()).collect();
+        // Count adjacent pairs that are still sequential.
+        let seq = frames.windows(2).filter(|w| w[1] == w[0] + 1).count();
+        assert!(seq < 200, "still too sequential: {seq}");
+        // Still a permutation.
+        let mut sorted = frames.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..4096).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn free_recycles() {
+        let mut a = GuestAllocator::new(2);
+        let f0 = a.alloc().unwrap();
+        a.alloc().unwrap();
+        assert_eq!(a.available(), 0);
+        a.free_frame(f0);
+        assert_eq!(a.alloc(), Some(f0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Guest-side models: the guest OS physical-page allocator (whose aging
+//! produces the §3.2 GVA->GPA scrambling), per-process guest page tables
+//! and guest processes.
+
+pub mod allocator;
+pub mod pagetable;
+pub mod process;
+
+pub use allocator::GuestAllocator;
+pub use pagetable::GuestPageTable;
+pub use process::GuestProcess;

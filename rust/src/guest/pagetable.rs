@@ -1,0 +1,103 @@
+//! Per-process guest page table (GVA -> GPA at 4kB granularity), with
+//! guest-side access bits (what an in-guest profiler would see — the
+//! "direct" measurement of Fig 2).
+
+use super::allocator::{Frame, GuestAllocator};
+use crate::types::Bitmap;
+
+pub const UNMAPPED: Frame = Frame::MAX;
+
+#[derive(Debug, Clone)]
+pub struct GuestPageTable {
+    /// gva_page -> guest frame.
+    map: Vec<Frame>,
+    /// Guest-side access bits, GVA-indexed.
+    accessed: Bitmap,
+}
+
+impl GuestPageTable {
+    pub fn new(gva_pages: u64) -> Self {
+        GuestPageTable {
+            map: vec![UNMAPPED; gva_pages as usize],
+            accessed: Bitmap::new(gva_pages as usize),
+        }
+    }
+
+    pub fn gva_pages(&self) -> u64 {
+        self.map.len() as u64
+    }
+
+    /// Translate; `None` = guest minor fault (demand-zero page).
+    #[inline]
+    pub fn walk(&self, gva_page: u64) -> Option<Frame> {
+        match self.map.get(gva_page as usize) {
+            Some(&f) if f != UNMAPPED => Some(f),
+            _ => None,
+        }
+    }
+
+    /// Handle the guest's own demand-paging fault: allocate a frame.
+    pub fn map_on_fault(
+        &mut self,
+        gva_page: u64,
+        alloc: &mut GuestAllocator,
+    ) -> Option<Frame> {
+        debug_assert!(self.walk(gva_page).is_none());
+        let f = alloc.alloc()?;
+        self.map[gva_page as usize] = f;
+        Some(f)
+    }
+
+    /// Record a guest-visible access (guest PTE A-bit).
+    #[inline]
+    pub fn touch(&mut self, gva_page: u64) {
+        self.accessed.set(gva_page as usize);
+    }
+
+    /// Read + clear guest A-bits (in-guest scan, GVA order).
+    pub fn scan_and_clear(&mut self) -> Bitmap {
+        let out = self.accessed.clone();
+        self.accessed.zero();
+        out
+    }
+
+    /// Iterate mapped (gva_page, frame) pairs.
+    pub fn mappings(&self) -> impl Iterator<Item = (u64, Frame)> + '_ {
+        self.map
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f != UNMAPPED)
+            .map(|(g, &f)| (g as u64, f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demand_paging() {
+        let mut alloc = GuestAllocator::new(8);
+        let mut pt = GuestPageTable::new(4);
+        assert_eq!(pt.walk(1), None);
+        let f = pt.map_on_fault(1, &mut alloc).unwrap();
+        assert_eq!(pt.walk(1), Some(f));
+    }
+
+    #[test]
+    fn abit_scan_clears() {
+        let mut pt = GuestPageTable::new(4);
+        pt.touch(2);
+        let bm = pt.scan_and_clear();
+        assert!(bm.get(2));
+        assert_eq!(pt.scan_and_clear().count_ones(), 0);
+    }
+
+    #[test]
+    fn oom_returns_none() {
+        let mut alloc = GuestAllocator::new(1);
+        let mut pt = GuestPageTable::new(2);
+        pt.map_on_fault(0, &mut alloc).unwrap();
+        assert!(pt.map_on_fault(1, &mut alloc).is_none());
+    }
+}

@@ -1,0 +1,41 @@
+//! A guest process: an address space (page table) identified by its CR3.
+//!
+//! The hypervisor sees CR3/PDBP values in the VMCS at fault time (§5.2)
+//! and can use them to distinguish guest applications without guest
+//! cooperation.
+
+use super::pagetable::GuestPageTable;
+
+#[derive(Debug, Clone)]
+pub struct GuestProcess {
+    /// Page-directory base pointer — the opaque per-process token the
+    /// introspection ring exposes to policies.
+    pub cr3: u64,
+    /// Hardware ASID used for TLB tagging.
+    pub asid: u16,
+    pub pt: GuestPageTable,
+}
+
+impl GuestProcess {
+    pub fn new(idx: usize, gva_pages: u64) -> Self {
+        GuestProcess {
+            // Realistic-looking kernel pointer for the CR3 value.
+            cr3: 0xFFFF_8000_0000_0000 | ((idx as u64 + 1) << 12),
+            asid: idx as u16 + 1,
+            pt: GuestPageTable::new(gva_pages),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_cr3_and_asid() {
+        let a = GuestProcess::new(0, 4);
+        let b = GuestProcess::new(1, 4);
+        assert_ne!(a.cr3, b.cr3);
+        assert_ne!(a.asid, b.asid);
+    }
+}

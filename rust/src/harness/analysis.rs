@@ -1,0 +1,263 @@
+//! §3 analysis experiments: Fig 1 (hugepage swap trade-off), Fig 2
+//! (virtualization scrambles access patterns), Fig 3 (EPT scan costs).
+
+use crate::config::{HostConfig, HwConfig, MmConfig, SwCost, VmConfig};
+use crate::coordinator::Machine;
+use crate::metrics::Table;
+use crate::scanner::EptScanner;
+use crate::sim::Rng;
+use crate::types::{PageSize, MS, SEC, US};
+use crate::vm::{AccessResult, Vm};
+use crate::workloads::{ColdRatio, SeqScan, UniformRandom, Workload};
+
+use super::Scale;
+
+/// Fig 1: average access latency vs cold-page access ratio.
+pub fn fig1(scale: Scale) -> Vec<Table> {
+    let ratios = [0.0, 1e-5, 5e-5, 1e-4, 5e-4, 1e-3, 1e-2];
+    let ops = scale.u(40_000, 200_000);
+    let mut t = Table::new(
+        "avg access latency (ns) vs cold-access ratio",
+        &["cold_ratio", "strict_4k_ns", "strict_2M_ns", "winner"],
+    );
+    let mut crossover: Option<f64> = None;
+    let mut prev_winner = None;
+    for &r in &ratios {
+        let lat4k = fig1_one(PageSize::Small, r, ops);
+        let lat2m = fig1_one(PageSize::Huge, r, ops);
+        let winner = if lat2m <= lat4k { "2M" } else { "4k" };
+        if prev_winner == Some("2M") && winner == "4k" && crossover.is_none() {
+            crossover = Some(r);
+        }
+        prev_winner = Some(winner);
+        t.row(vec![
+            format!("{r:.0e}"),
+            format!("{lat4k:.0}"),
+            format!("{lat2m:.0}"),
+            winner.to_string(),
+        ]);
+    }
+    t.row(vec![
+        "break-even".into(),
+        "-".into(),
+        "-".into(),
+        crossover.map(|r| format!("~{r:.0e}")).unwrap_or("none<=1e-2".into()),
+    ]);
+    vec![t]
+}
+
+fn fig1_one(mode: PageSize, cold_ratio: f64, ops: u64) -> f64 {
+    let mut m = Machine::new(HostConfig::default());
+    // Hot region resident, cold region swapped out; near-100% TLB miss
+    // (hot region much larger than TLB reach).
+    let frames = 96_000u64;
+    let hot_pages = 64_000u64;
+    let cold_pages = 16_000u64;
+    let cfg = VmConfig {
+        frames,
+        vcpus: 1,
+        page_size: mode,
+        scramble: 0.0,
+        guest_thp_coverage: 1.0,
+    };
+    // A memory limit just above the hot set keeps the cold region
+    // swapped out in steady state (the paper sizes the swap region so
+    // cold accesses always miss).
+    let slack = 4 * mode.unit_frames();
+    let mm_cfg = MmConfig {
+        scan_interval: 3600 * SEC, // no proactive reclamation
+        memory_limit: Some((hot_pages + slack) * 4096),
+        ..Default::default()
+    };
+    let vmid = m.sys_vm(
+        cfg,
+        &mm_cfg,
+        vec![Box::new(ColdRatio::new(hot_pages, cold_pages, cold_ratio, ops))],
+    );
+    // Pre-state: hot region resident + mapped, cold region swapped out.
+    m.prime_resident(vmid, hot_pages);
+    m.prime_swapped(vmid, hot_pages, hot_pages + cold_pages);
+    let res = m.run();
+    let r = &res[0];
+    (r.runtime as f64) / (r.work_ops.max(1) as f64)
+}
+
+/// Fig 2: the same workload seen in GVA (in-guest scan) vs GPA
+/// (hypervisor EPT scan) space. We report a locality score: the fraction
+/// of accessed-page pairs that are neighbours in each address space.
+pub fn fig2(scale: Scale) -> Vec<Table> {
+    let pages = scale.u(8_192, 32_768);
+    let phase_ops = scale.u(40_000, 160_000);
+    let host = HostConfig::default();
+    let mut rng = Rng::new(7);
+    let cfg = VmConfig {
+        frames: pages + 1024,
+        vcpus: 1,
+        page_size: PageSize::Small,
+        scramble: 1.0, // aged guest (the paper warms up with random churn)
+        guest_thp_coverage: 1.0,
+    };
+    let mut vm = Vm::new(&cfg, &host.hw, &host.sw, &mut rng);
+    let p = vm.spawn_process(pages);
+    for u in 0..vm.units() {
+        vm.ept.map(u);
+    }
+    let mut w = crate::workloads::AlternatingHalves::new(pages, phase_ops);
+    let mut scanner = EptScanner::new(&host.hw);
+
+    let mut t = Table::new(
+        "phase locality: GVA vs GPA view",
+        &["phase", "space", "accessed_pages", "low_half_frac", "neighbour_frac"],
+    );
+    for phase in 0..2 {
+        // Drive one phase of accesses.
+        for _ in 0..phase_ops {
+            if let crate::workloads::Op::Access { gva_page, write, ip, .. } =
+                w.next(&mut rng)
+            {
+                let _ = vm.access(0, p, gva_page, write, ip, 0, &mut rng);
+            }
+        }
+        // Guest-side (direct) view.
+        let gva_bits = vm.processes[p].pt.scan_and_clear();
+        // Hypervisor (EPT) view.
+        let out = scanner.scan(&mut vm, None, phase as u64 * SEC);
+        for (space, bits, len) in [
+            ("GVA", &gva_bits, pages as usize),
+            ("GPA", &out.bitmap, vm.units() as usize),
+        ] {
+            let ones: Vec<usize> = bits.iter_ones().collect();
+            let low = ones.iter().filter(|&&i| i < len / 2).count();
+            let mut neigh = 0usize;
+            for w2 in ones.windows(2) {
+                if w2[1] == w2[0] + 1 {
+                    neigh += 1;
+                }
+            }
+            t.row(vec![
+                format!("{}", phase + 1),
+                space.to_string(),
+                ones.len().to_string(),
+                format!("{:.2}", low as f64 / ones.len().max(1) as f64),
+                format!("{:.2}", neigh as f64 / ones.len().max(1) as f64),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// Fig 3: direct (%CPU) and indirect (runtime) cost vs scan interval,
+/// for 4k and 2M EPT leaves.
+pub fn fig3(scale: Scale) -> Vec<Table> {
+    let intervals = [100 * MS, 50 * MS, 20 * MS, 10 * MS, 5 * MS];
+    let ops = scale.u(600_000, 2_400_000);
+    let mut t = Table::new(
+        "EPT scan cost vs interval",
+        &["interval_ms", "mode", "direct_cpu_pct", "runtime_ms", "slowdown_pct"],
+    );
+    for mode in [PageSize::Small, PageSize::Huge] {
+        let base = fig3_one(mode, 3600 * SEC, ops); // no scanning
+        for &iv in &intervals {
+            let (runtime, scan_cpu) = fig3_one_full(mode, iv, ops);
+            let direct = scan_cpu as f64 / runtime as f64 * 100.0;
+            let slow = (runtime as f64 / base as f64 - 1.0) * 100.0;
+            t.row(vec![
+                format!("{}", iv / MS),
+                mode.label().to_string(),
+                format!("{direct:.2}"),
+                format!("{:.1}", runtime as f64 / 1e6),
+                format!("{slow:.1}"),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+fn fig3_one(mode: PageSize, interval: u64, ops: u64) -> u64 {
+    fig3_one_full(mode, interval, ops).0
+}
+
+fn fig3_one_full(mode: PageSize, interval: u64, ops: u64) -> (u64, u64) {
+    let mut m = Machine::new(HostConfig::default());
+    let frames = 16_384;
+    let cfg = VmConfig {
+        frames,
+        vcpus: 1,
+        page_size: mode,
+        scramble: 0.0,
+        guest_thp_coverage: 1.0,
+    };
+    let mm_cfg = MmConfig { scan_interval: interval, ..Default::default() };
+    let vmid = m.sys_vm(
+        cfg,
+        &mm_cfg,
+        // Sequential read scan over memory (paper's workload).
+        vec![Box::new(SeqScan::new(frames - 1024, (ops / (frames - 1024)).max(1), 0))],
+    );
+    m.prime_resident(vmid, frames - 1024);
+    let res = m.run();
+    (res[0].runtime, res[0].scan_cpu_ns)
+}
+
+/// Warm-start helper used across harness experiments: shared by the
+/// uniform microbenchmarks. (Re-exported for the eval module.)
+pub fn uniform_vm(
+    m: &mut Machine,
+    mode: PageSize,
+    frames: u64,
+    pages: u64,
+    ops: u64,
+    mm_cfg: &MmConfig,
+) -> usize {
+    let cfg = VmConfig {
+        frames,
+        vcpus: 1,
+        page_size: mode,
+        scramble: 0.5,
+        guest_thp_coverage: 1.0,
+    };
+    m.sys_vm(cfg, mm_cfg, vec![Box::new(UniformRandom::new(0, pages, ops))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_quick_produces_crossover_shape() {
+        let tables = fig1(Scale::Quick);
+        let t = &tables[0];
+        // First data row (ratio 0): 2M must win (shorter walks).
+        assert_eq!(t.rows[0][3], "2M");
+        // Last data row (1e-2): 4k must win (smaller faults).
+        let last = &t.rows[t.rows.len() - 2];
+        assert_eq!(last[3], "4k", "{last:?}");
+    }
+
+    #[test]
+    fn fig2_quick_shows_scrambling() {
+        let tables = fig2(Scale::Quick);
+        let rows = &tables[0].rows;
+        // Phase 1 GVA low-half fraction ~1.0; GPA ~0.5 (scrambled).
+        let gva_low: f64 = rows[0][3].parse().unwrap();
+        let gpa_low: f64 = rows[1][3].parse().unwrap();
+        assert!(gva_low > 0.95, "gva {gva_low}");
+        assert!(gpa_low < 0.75, "gpa {gpa_low}");
+    }
+
+    #[test]
+    fn fig3_quick_scan_costs_grow_with_frequency() {
+        let tables = fig3(Scale::Quick);
+        let rows = &tables[0].rows;
+        // Within the 4k block (first 6 rows), direct cost grows as the
+        // interval shrinks.
+        let first: f64 = rows[0][2].parse().unwrap();
+        let last: f64 = rows[4][2].parse().unwrap();
+        assert!(last > first, "direct {first} -> {last}");
+        // 2M scanning much cheaper than 4k at the same interval.
+        let d4k: f64 = rows[4][2].parse().unwrap();
+        let d2m: f64 = rows[9][2].parse().unwrap();
+        assert!(d2m < d4k / 10.0, "4k {d4k} vs 2m {d2m}");
+        let _ = US;
+    }
+}

@@ -1,0 +1,162 @@
+//! Experiment harness: one driver per paper figure (DESIGN.md §5 maps
+//! each to its modules). Every driver returns [`crate::metrics::Table`]s
+//! whose rows regenerate the paper's series; `flexswap fig<N>` prints
+//! them and writes CSV into `results/`.
+
+pub mod analysis;
+pub mod eval;
+
+use crate::metrics::Table;
+
+/// A registered experiment.
+pub struct Experiment {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// The paper's qualitative expectation (what "shape holds" means).
+    pub expectation: &'static str,
+    pub run: fn(Scale) -> Vec<Table>,
+}
+
+/// Experiment scale knob: `quick` for CI, `full` for EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn f(self, quick: f64, full: f64) -> f64 {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+    pub fn u(self, quick: u64, full: u64) -> u64 {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "fig1",
+            title: "Fig 1: access latency vs cold-page access ratio (strict-4k vs strict-2M)",
+            expectation: "2M faster below ~0.01% cold ratio; 4k faster above; crossover near 1e-4",
+            run: analysis::fig1,
+        },
+        Experiment {
+            id: "fig2",
+            title: "Fig 2: access pattern, guest-virtual vs guest-physical view",
+            expectation: "clean two-phase pattern in GVA; scrambled in GPA after aging",
+            run: analysis::fig2,
+        },
+        Experiment {
+            id: "fig3",
+            title: "Fig 3: EPT scan frequency: direct %CPU and indirect runtime cost",
+            expectation: "both costs grow as interval shrinks; 2M dramatically cheaper than 4k",
+            run: analysis::fig3,
+        },
+        Experiment {
+            id: "fig6",
+            title: "Fig 6: page fault latency breakdown (VMEXIT vs I/O)",
+            expectation: "sys-4k VMEXIT ~22us vs kernel 6us, total +~13%; 2M ~11x kernel-4k total, VMEXIT share ~4%",
+            run: eval::fig6,
+        },
+        Experiment {
+            id: "fig7",
+            title: "Fig 7: swap I/O throughput vs parallelism",
+            expectation: "2M saturates ~2.6GB/s with 2 swapper threads; 4k sys ~ kernel",
+            run: eval::fig7,
+        },
+        Experiment {
+            id: "fig8",
+            title: "Fig 8: WSS estimation tracks a varying working set",
+            expectation: "reported WSS/memory usage tracks ground truth; PF spikes at phase shifts",
+            run: eval::fig8,
+        },
+        Experiment {
+            id: "fig9",
+            title: "Fig 9: cloud workloads: performance + memory saved (2M vs 4k vs none)",
+            expectation: "2M ~ baseline perf with big savings (kafka ~70%); 4k slower; redis ~no reclaim",
+            run: eval::fig9,
+        },
+        Experiment {
+            id: "fig10",
+            title: "Fig 10: g500 vs enhanced-Linux reclaim under aggressivity sweep",
+            expectation: "baseline saves more but always slower; SYS-Agg saves most at small cost",
+            run: eval::fig10,
+        },
+        Experiment {
+            id: "fig11",
+            title: "Fig 11: runtime under 80% memory limit (redis vs matmul; SYS-R)",
+            expectation: "redis better on 4k, matmul better on 2M; SYS-R ~-30% runtime vs kernel on matmul",
+            run: eval::fig11,
+        },
+        Experiment {
+            id: "figpf",
+            title: "§6.6: LinearPF prefetcher, GVA vs HVA",
+            expectation: "GVA version -30% runtime, >90% timely; HVA version no help, <2% timely",
+            run: eval::fig_pf,
+        },
+        Experiment {
+            id: "fig12",
+            title: "Fig 12: g500 memory usage over time (SYS-Agg vs default)",
+            expectation: "aggressive policy reclaims phase memory much faster",
+            run: eval::fig12,
+        },
+        Experiment {
+            id: "fig13",
+            title: "Fig 13: recovery after memory limit lift (redis/memtier)",
+            expectation: "2M recovers fastest; kernel ~ 4k-WSR; plain 4k slowest",
+            run: eval::fig13,
+        },
+    ]
+}
+
+/// Run one experiment by id and render its tables as markdown.
+pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
+    let exp = registry().into_iter().find(|e| e.id == id)?;
+    let tables = (exp.run)(scale);
+    let mut out = format!("## {}\n\n*Paper expectation:* {}\n\n", exp.title, exp.expectation);
+    for t in &tables {
+        out.push_str(&t.markdown());
+        out.push('\n');
+        // Also persist CSV for plotting.
+        let _ = std::fs::create_dir_all("results");
+        let file = format!(
+            "results/{}_{}.csv",
+            exp.id,
+            t.title
+                .to_lowercase()
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                .collect::<String>()
+        );
+        let _ = std::fs::write(file, t.csv());
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_figures() {
+        let ids: Vec<_> = registry().iter().map(|e| e.id).collect();
+        for want in
+            ["fig1", "fig2", "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "figpf", "fig12", "fig13"]
+        {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(run_by_id("fig99", Scale::Quick).is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! Extended Page Table model: per-swap-unit presence + access/dirty bits.
+//!
+//! The hypervisor's second-stage translation (GPA -> HPA). In strict-2MB
+//! mode every leaf covers one 2MB unit; in strict-4kB mode one 4kB frame.
+//! We only track what the paper's mechanisms consume: presence (an EPT
+//! violation is raised on non-present access), and A/D bits (read +
+//! cleared by the EPT scanner, §5.4).
+
+use crate::types::{Bitmap, UnitId};
+
+const PRESENT: u8 = 1;
+const ACCESSED: u8 = 2;
+const DIRTY: u8 = 4;
+
+/// EPT over `units` swap units.
+#[derive(Debug, Clone)]
+pub struct Ept {
+    flags: Vec<u8>,
+}
+
+impl Ept {
+    pub fn new(units: u64) -> Self {
+        Ept { flags: vec![0; units as usize] }
+    }
+
+    pub fn units(&self) -> u64 {
+        self.flags.len() as u64
+    }
+
+    /// True if the unit is mapped (no EPT violation on access).
+    #[inline]
+    pub fn present(&self, unit: UnitId) -> bool {
+        self.flags[unit as usize] & PRESENT != 0
+    }
+
+    /// Record a guest access; returns false if it raises an EPT violation.
+    #[inline]
+    pub fn touch(&mut self, unit: UnitId, write: bool) -> bool {
+        let f = &mut self.flags[unit as usize];
+        if *f & PRESENT == 0 {
+            return false;
+        }
+        *f |= ACCESSED | if write { DIRTY } else { 0 };
+        true
+    }
+
+    /// Install a leaf mapping (UFFDIO_CONTINUE resolved the violation).
+    pub fn map(&mut self, unit: UnitId) {
+        // Mapping implies an immediate access by the faulting instruction.
+        self.flags[unit as usize] |= PRESENT | ACCESSED;
+    }
+
+    /// Remove a leaf (MADV_DONTNEED on swap-out).
+    pub fn unmap(&mut self, unit: UnitId) {
+        self.flags[unit as usize] = 0;
+    }
+
+    pub fn accessed(&self, unit: UnitId) -> bool {
+        self.flags[unit as usize] & ACCESSED != 0
+    }
+
+    pub fn dirty(&self, unit: UnitId) -> bool {
+        self.flags[unit as usize] & DIRTY != 0
+    }
+
+    pub fn clear_dirty(&mut self, unit: UnitId) {
+        self.flags[unit as usize] &= !DIRTY;
+    }
+
+    /// Scan: copy A-bits into a bitmap and clear them (the kernel-module
+    /// behaviour the userspace EPT scanner drives). Returns the number of
+    /// *present* leaves visited (scan cost scales with PTE count).
+    pub fn scan_and_clear(&mut self, out: &mut Bitmap) -> u64 {
+        assert_eq!(out.len() as u64, self.units());
+        let mut visited = 0;
+        for (i, f) in self.flags.iter_mut().enumerate() {
+            if *f & PRESENT != 0 {
+                visited += 1;
+                if *f & ACCESSED != 0 {
+                    out.set(i);
+                    *f &= !ACCESSED;
+                }
+            }
+        }
+        visited
+    }
+
+    /// Present-unit count (resident memory in units).
+    pub fn resident_units(&self) -> u64 {
+        self.flags.iter().filter(|f| **f & PRESENT != 0).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_requires_present() {
+        let mut e = Ept::new(4);
+        assert!(!e.touch(0, false)); // violation
+        e.map(0);
+        assert!(e.touch(0, true));
+        assert!(e.accessed(0) && e.dirty(0));
+    }
+
+    #[test]
+    fn scan_clears_abits() {
+        let mut e = Ept::new(8);
+        e.map(1);
+        e.map(2);
+        e.touch(1, false);
+        let mut bm = Bitmap::new(8);
+        let visited = e.scan_and_clear(&mut bm);
+        assert_eq!(visited, 2);
+        // map() sets ACCESSED too, so both 1 and 2 read as accessed.
+        assert!(bm.get(1) && bm.get(2));
+        // Second scan: A-bits cleared, nothing accessed.
+        let mut bm2 = Bitmap::new(8);
+        e.scan_and_clear(&mut bm2);
+        assert_eq!(bm2.count_ones(), 0);
+    }
+
+    #[test]
+    fn unmap_clears_everything() {
+        let mut e = Ept::new(2);
+        e.map(0);
+        e.touch(0, true);
+        e.unmap(0);
+        assert!(!e.present(0));
+        assert!(!e.touch(0, false));
+        assert_eq!(e.resident_units(), 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Hardware substrate models: TLB, nested page walk (+ partial-walk
+//! caches), EPT access/dirty bits, and the NVMe swap device.
+//!
+//! These stand in for the paper's Cascade Lake + Intel D7-P5510 testbed
+//! (repro band 0/5 — see DESIGN.md §2). Each model is parameterized by
+//! [`crate::config::HwConfig`] constants calibrated from the paper.
+
+pub mod ept;
+pub mod nvme;
+pub mod pagewalk;
+pub mod tlb;
+
+pub use ept::Ept;
+pub use nvme::{IoKind, Nvme};
+pub use pagewalk::WalkModel;
+pub use tlb::Tlb;

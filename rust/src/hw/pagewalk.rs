@@ -1,0 +1,81 @@
+//! Nested page-walk cost model with partial-walk-cache (PWC) state.
+//!
+//! §3.3: clearing EPT access bits flushes the partial-walk caches, so an
+//! EPT scan has an *indirect* cost — every TLB miss walks slower for a
+//! window after the scan. We model that with a decaying penalty window.
+
+use crate::config::HwConfig;
+use crate::types::{PageSize, Time};
+
+#[derive(Debug, Clone)]
+pub struct WalkModel {
+    walk_4k_ns: Time,
+    walk_2m_ns: Time,
+    pwc_penalty_ns: Time,
+    pwc_penalty_window: Time,
+    /// Walks cost extra until this virtual time (set by A-bit clears).
+    penalty_until: Time,
+}
+
+impl WalkModel {
+    pub fn new(hw: &HwConfig) -> Self {
+        WalkModel {
+            walk_4k_ns: hw.walk_4k_ns,
+            walk_2m_ns: hw.walk_2m_ns,
+            pwc_penalty_ns: hw.pwc_penalty_ns,
+            pwc_penalty_window: hw.pwc_penalty_window,
+            penalty_until: 0,
+        }
+    }
+
+    /// Cost of one full nested walk at `now` for the given leaf size.
+    #[inline]
+    pub fn walk_cost(&self, now: Time, leaf: PageSize) -> Time {
+        let base = match leaf {
+            PageSize::Small => self.walk_4k_ns,
+            PageSize::Huge => self.walk_2m_ns,
+        };
+        if now < self.penalty_until {
+            base + self.pwc_penalty_ns
+        } else {
+            base
+        }
+    }
+
+    /// Called when an EPT scan cleared access bits (flushes PWCs).
+    pub fn on_abit_clear(&mut self, now: Time) {
+        self.penalty_until = now + self.pwc_penalty_window;
+    }
+
+    /// True while the PWC penalty window is active.
+    pub fn penalized(&self, now: Time) -> bool {
+        now < self.penalty_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> WalkModel {
+        WalkModel::new(&HwConfig::default())
+    }
+
+    #[test]
+    fn huge_walks_shorter() {
+        let m = model();
+        assert!(m.walk_cost(0, PageSize::Huge) < m.walk_cost(0, PageSize::Small));
+    }
+
+    #[test]
+    fn penalty_window_applies_and_expires() {
+        let mut m = model();
+        let base = m.walk_cost(0, PageSize::Small);
+        m.on_abit_clear(1000);
+        assert!(m.penalized(1000));
+        assert_eq!(m.walk_cost(1000, PageSize::Small), base + 60);
+        let after = 1000 + HwConfig::default().pwc_penalty_window;
+        assert!(!m.penalized(after));
+        assert_eq!(m.walk_cost(after, PageSize::Small), base);
+    }
+}

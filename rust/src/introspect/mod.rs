@@ -1,0 +1,13 @@
+//! Lightweight VM introspection (paper §5.2): the KVM->MM VMCS register
+//! ring buffer and the GVA->HVA guest-page-table walker.
+//!
+//! At EPT-violation time, a (modified) KVM copies PDBP/CR3, IP and the
+//! guest linear address into a ring shared with the MM; the MM attaches
+//! that context to the matching UFFD event so policies can reason in the
+//! guest application's address space without guest cooperation.
+
+pub mod ring;
+pub mod walker;
+
+pub use ring::{FaultCtx, VmcsRing};
+pub use walker::GvaWalker;

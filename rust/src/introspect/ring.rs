@@ -1,0 +1,89 @@
+//! The KVM->MM fault-context ring buffer.
+//!
+//! Bounded like the real shared-memory ring; on overflow the oldest
+//! context is dropped and the corresponding fault is simply delivered
+//! without guest context (policies must tolerate `None` — the paper's
+//! example prefetcher does exactly that).
+
+use std::collections::VecDeque;
+
+/// Guest registers captured from the VMCS at EPT-violation time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultCtx {
+    /// Page-directory base pointer (CR3) of the faulting guest context.
+    pub cr3: u64,
+    /// Guest instruction pointer.
+    pub ip: u64,
+    /// Guest linear (virtual) address of the access.
+    pub gva: u64,
+    /// Host-side key used to pair ring entries with UFFD events.
+    pub gpa_frame: u64,
+}
+
+#[derive(Debug)]
+pub struct VmcsRing {
+    buf: VecDeque<FaultCtx>,
+    cap: usize,
+    pub pushed: u64,
+    pub dropped: u64,
+}
+
+impl VmcsRing {
+    pub fn new(cap: usize) -> Self {
+        VmcsRing { buf: VecDeque::with_capacity(cap), cap, pushed: 0, dropped: 0 }
+    }
+
+    /// KVM side: record fault context (drops oldest on overflow).
+    pub fn push(&mut self, ctx: FaultCtx) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ctx);
+        self.pushed += 1;
+    }
+
+    /// MM side: find and remove the context for a delivered fault.
+    pub fn take(&mut self, gpa_frame: u64) -> Option<FaultCtx> {
+        let idx = self.buf.iter().position(|c| c.gpa_frame == gpa_frame)?;
+        self.buf.remove(idx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(gpa: u64) -> FaultCtx {
+        FaultCtx { cr3: 0x1000, ip: 0x400000 + gpa, gva: gpa * 2, gpa_frame: gpa }
+    }
+
+    #[test]
+    fn push_take_pairs_by_gpa() {
+        let mut r = VmcsRing::new(4);
+        r.push(ctx(10));
+        r.push(ctx(11));
+        let c = r.take(10).unwrap();
+        assert_eq!(c.ip, 0x400000 + 10);
+        assert!(r.take(10).is_none());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn overflow_drops_oldest() {
+        let mut r = VmcsRing::new(2);
+        r.push(ctx(1));
+        r.push(ctx(2));
+        r.push(ctx(3));
+        assert_eq!(r.dropped, 1);
+        assert!(r.take(1).is_none()); // oldest lost
+        assert!(r.take(3).is_some());
+    }
+}

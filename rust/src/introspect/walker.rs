@@ -1,0 +1,81 @@
+//! GVA -> HVA translation by walking the guest page tables (paper §5.2).
+//!
+//! The real system forwards the request to a QEMU helper thread that
+//! walks the guest tables for a given PDBP; translations can fail when
+//! the guest mapping does not exist yet (the paper observes a small,
+//! ignorable failure fraction). The MM and hypervisor only understand
+//! HVAs, so policies predicting in GVA space must round-trip through
+//! this walker. Host mapping is linear, so HVA == GPA offset here.
+
+use crate::config::SwCost;
+use crate::types::Time;
+use crate::vm::Vm;
+
+#[derive(Debug, Default)]
+pub struct GvaWalker {
+    pub translations: u64,
+    pub failures: u64,
+}
+
+impl GvaWalker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Translate `gva_page` under `cr3`. Returns the host frame number
+    /// (HVA page) or None if the guest has no mapping yet. `cost` models
+    /// the QEMU helper-thread walk.
+    pub fn gva_to_hva(
+        &mut self,
+        vm: &Vm,
+        cr3: u64,
+        gva_page: u64,
+    ) -> Option<u64> {
+        self.translations += 1;
+        let proc = vm.processes.iter().find(|p| p.cr3 == cr3);
+        let frame = proc.and_then(|p| p.pt.walk(gva_page));
+        if frame.is_none() {
+            self.failures += 1;
+        }
+        frame.map(|f| f as u64)
+    }
+
+    pub fn walk_cost(sw: &SwCost) -> Time {
+        sw.gva_walk_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwConfig, VmConfig};
+    use crate::sim::Rng;
+    use crate::types::PageSize;
+    use crate::vm::AccessResult;
+
+    #[test]
+    fn translates_mapped_and_fails_unmapped() {
+        let cfg = VmConfig {
+            frames: 512,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble: 1.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(11);
+        let mut vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        let p = vm.spawn_process(512);
+        // Touch gva 7 so the guest maps it.
+        let fault = match vm.access(0, p, 7, false, 0, 0, &mut rng) {
+            AccessResult::Fault(f) => f,
+            _ => panic!(),
+        };
+        let cr3 = vm.processes[p].cr3;
+        let mut w = GvaWalker::new();
+        let hva = w.gva_to_hva(&vm, cr3, 7).unwrap();
+        assert_eq!(hva, fault.gpa_frame);
+        assert!(w.gva_to_hva(&vm, cr3, 8).is_none()); // untouched gva
+        assert!(w.gva_to_hva(&vm, 0xdead, 7).is_none()); // unknown cr3
+        assert_eq!(w.failures, 2);
+    }
+}

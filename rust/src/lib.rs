@@ -1,0 +1,42 @@
+//! # FlexSwap — Flexible Swapping for the Cloud (reproduction)
+//!
+//! A userspace memory-overcommit / swapping framework for opaque VMs,
+//! reproducing Pandurov et al., "Flexible Swapping for the Cloud" (2024).
+//!
+//! The system under test — Memory Manager, Policy Engine, Swapper queues,
+//! storage backend, VM introspection and the full policy zoo — is
+//! implemented as designed in the paper. Because the paper's substrate
+//! (KVM/EPT, userfaultfd, a dedicated NVMe SSD and multi-hundred-GB cloud
+//! workloads) is hardware we do not have, the substrate is a
+//! discrete-event simulation calibrated with the paper's own measured
+//! constants (see `DESIGN.md` §2 for the substitution map).
+//!
+//! Layer map (three-layer Rust + JAX + Pallas architecture):
+//! * **L3** — this crate: coordinator, policies, substrate, experiment
+//!   harness (`harness`), CLI (`main.rs`).
+//! * **L2/L1** — `python/compile/`: the dt-reclaimer analytics pipeline
+//!   (JAX) with its Pallas `coldstats` hot loop, AOT-lowered to HLO text
+//!   in `artifacts/` and executed from [`runtime`] via PJRT, always off
+//!   the page-fault critical path.
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod daemon;
+pub mod guest;
+pub mod harness;
+pub mod hw;
+pub mod introspect;
+pub mod metrics;
+pub mod mm;
+pub mod policies;
+pub mod runtime;
+pub mod scanner;
+pub mod sim;
+pub mod storage;
+pub mod types;
+pub mod uffd;
+pub mod vm;
+pub mod workloads;
+
+pub use types::{PageSize, Time, UnitId, VmId};

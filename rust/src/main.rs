@@ -1,0 +1,133 @@
+//! flexswap CLI: run paper experiments, individual figures, or a demo
+//! fleet under the daemon.
+//!
+//! Usage:
+//!   flexswap list                 # list experiments
+//!   flexswap fig9 [--full]        # run one experiment
+//!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
+//!   flexswap fleet                # daemon + 3-VM demo fleet
+//!   flexswap selfcheck            # artifacts + PJRT smoke test
+
+use flexswap::harness::{registry, run_by_id, Scale};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("list");
+
+    match cmd {
+        "list" => {
+            println!("experiments:");
+            for e in registry() {
+                println!("  {:7} {}", e.id, e.title);
+            }
+            println!("\nrun one with `flexswap <id>`; add --full for paper-scale runs");
+        }
+        "all" => {
+            for e in registry() {
+                eprintln!("running {} ...", e.id);
+                match run_by_id(e.id, scale) {
+                    Some(md) => println!("{md}"),
+                    None => eprintln!("  failed to run {}", e.id),
+                }
+            }
+        }
+        "fleet" => fleet_demo(),
+        "selfcheck" => selfcheck(),
+        id => match run_by_id(id, scale) {
+            Some(md) => println!("{md}"),
+            None => {
+                eprintln!("unknown experiment '{id}'; try `flexswap list`");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+/// Daemon demo: a 3-VM fleet with different SLAs sharing the NVMe swap
+/// device; prints the control-plane report.
+fn fleet_demo() {
+    use flexswap::config::HostConfig;
+    use flexswap::daemon::{Daemon, Sla, VmRegistration};
+    use flexswap::workloads::{cloud_preset, CloudWorkload};
+
+    let mut d = Daemon::new(HostConfig::default());
+    for (name, sla) in
+        [("kafka", Sla::Bronze), ("redis", Sla::Gold), ("nginx", Sla::Silver)]
+    {
+        let spec = cloud_preset(name, 0.05);
+        d.register(VmRegistration {
+            name: name.to_string(),
+            frames: spec.pages + 2048,
+            vcpus: 1,
+            sla,
+            workloads: vec![Box::new(CloudWorkload::new(spec))],
+        });
+    }
+    let results = d.machine.run();
+    println!("fleet results:");
+    for r in &results {
+        println!(
+            "  {:8} runtime={:8.1}ms usage(avg)={:8.1}MB majors={:6} minors={:6}",
+            r.label,
+            r.runtime as f64 / 1e6,
+            r.avg_usage_bytes / 1e6,
+            r.counters.faults_major,
+            r.counters.faults_minor
+        );
+    }
+    println!("\ncontrol-plane report:");
+    for rep in d.report() {
+        println!(
+            "  {:8} usage={:8.1}MB cold~{:8.1}MB pf={}",
+            rep.name,
+            rep.usage_bytes as f64 / 1e6,
+            rep.cold_estimate_bytes as f64 / 1e6,
+            rep.pf_count
+        );
+    }
+}
+
+/// Verify the AOT artifacts load and agree with the native analytics.
+fn selfcheck() {
+    use flexswap::policies::{ColdAnalytics, NativeAnalytics};
+    use flexswap::runtime::XlaAnalytics;
+    use flexswap::sim::Rng;
+    use flexswap::types::Bitmap;
+
+    match XlaAnalytics::from_artifacts("artifacts") {
+        Err(e) => {
+            eprintln!("FAIL: {e:#}");
+            std::process::exit(1);
+        }
+        Ok(mut x) => {
+            println!("PJRT platform: {}", x.platform());
+            println!(
+                "artifacts: dt_reclaim[H={},N={}] ert_victim[M={}]",
+                x.history, x.pages, x.ert_entries
+            );
+            let mut rng = Rng::new(1);
+            let hist: Vec<Bitmap> = (0..x.history)
+                .map(|_| {
+                    let mut b = Bitmap::new(1000);
+                    for i in 0..1000 {
+                        if rng.chance(0.3) {
+                            b.set(i);
+                        }
+                    }
+                    b
+                })
+                .collect();
+            let xo = x.dt_reclaim(&hist, 0.02, 5.0);
+            let no = NativeAnalytics::pipeline(&hist, 0.02, 5.0);
+            assert_eq!(xo.age, no.age, "age mismatch");
+            assert_eq!(xo.proposed, no.proposed, "threshold mismatch");
+            println!(
+                "xla == native over 1000 units (threshold {}), {} dt calls",
+                xo.proposed, x.dt_calls
+            );
+            println!("selfcheck OK");
+        }
+    }
+}

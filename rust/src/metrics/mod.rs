@@ -1,0 +1,293 @@
+//! Metrics: counters, log-bucketed latency histograms, virtual-time
+//! series, and markdown/CSV table emission for the experiment harness.
+
+use std::fmt::Write as _;
+
+use crate::types::Time;
+
+/// Per-VM counters maintained by the Machine and the MM.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    /// Major faults (required backing-store I/O).
+    pub faults_major: u64,
+    /// Minor faults (first touch / already-in-flight / zero page).
+    pub faults_minor: u64,
+    pub swapin_ops: u64,
+    pub swapin_bytes: u64,
+    pub swapout_ops: u64,
+    pub swapout_bytes: u64,
+    pub prefetch_issued: u64,
+    /// Prefetches that removed I/O from a later fault (timely).
+    pub prefetch_timely: u64,
+    /// Prefetched units reclaimed without ever being touched.
+    pub prefetch_wasted: u64,
+    /// vCPU time spent stalled on faults.
+    pub stall_ns: Time,
+    /// vCPU time spent doing useful work.
+    pub work_ns: Time,
+    /// CPU time burnt by EPT scanning (direct cost, §3.3).
+    pub scan_cpu_ns: Time,
+    /// Redundant operations cancelled by swapper-queue conflation.
+    pub conflated_ops: u64,
+    /// Swap-ins denied / delayed by the memory limit.
+    pub limit_forced_reclaims: u64,
+    /// TLB statistics.
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+}
+
+/// Log-bucketed latency histogram (ns), 2 buckets per octave.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { buckets: vec![0; 128], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl LatencyHist {
+    fn index(v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let lz = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let half = (v >> lz.saturating_sub(1)) & 1; // next bit => half octave
+        (lz * 2 + half as usize).min(127)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let lz = i / 2;
+                let half = i % 2;
+                let lo = 1u64 << lz;
+                return if half == 1 { lo + lo / 2 } else { lo };
+            }
+        }
+        self.max
+    }
+}
+
+/// A (virtual-time, value) series with uniform-bucket downsampling.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub points: Vec<(Time, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, t: Time, v: f64) {
+        self.points.push((t, v));
+    }
+
+    /// Average value over the whole series, weighting each sample by the
+    /// span until the next (time integral / duration).
+    pub fn time_weighted_mean(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.points.first().map(|p| p.1).unwrap_or(0.0);
+        }
+        let mut acc = 0.0;
+        let mut span = 0.0;
+        for w in self.points.windows(2) {
+            let dt = (w[1].0 - w[0].0) as f64;
+            acc += w[0].1 * dt;
+            span += dt;
+        }
+        if span == 0.0 {
+            self.points[0].1
+        } else {
+            acc / span
+        }
+    }
+
+    /// Downsample into `n` uniform time buckets (mean per bucket).
+    pub fn downsample(&self, n: usize) -> Vec<(Time, f64)> {
+        if self.points.is_empty() || n == 0 {
+            return vec![];
+        }
+        let t0 = self.points[0].0;
+        let t1 = self.points.last().unwrap().0.max(t0 + 1);
+        let w = (t1 - t0).div_ceil(n as u64);
+        let mut out: Vec<(Time, f64, u64)> = vec![];
+        for &(t, v) in &self.points {
+            let b = ((t - t0) / w).min(n as u64 - 1);
+            let bt = t0 + b * w;
+            match out.last_mut() {
+                Some((lt, lv, lc)) if *lt == bt => {
+                    *lv += v;
+                    *lc += 1;
+                }
+                _ => out.push((bt, v, 1)),
+            }
+        }
+        out.into_iter().map(|(t, v, c)| (t, v / c as f64)).collect()
+    }
+}
+
+/// A printable results table (markdown + CSV) for the harness.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Pretty-print nanoseconds.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Pretty-print bytes.
+pub fn fmt_bytes(b: u64) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    let bf = b as f64;
+    if bf >= G {
+        format!("{:.2}GiB", bf / G)
+    } else if bf >= M {
+        format!("{:.1}MiB", bf / M)
+    } else {
+        format!("{:.0}KiB", bf / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_mean_and_quantiles() {
+        let mut h = LatencyHist::default();
+        for v in [100u64, 100, 100, 100, 100, 100, 100, 100, 100, 10_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.mean() - 1090.0).abs() < 1.0);
+        assert!(h.quantile(0.5) <= 200);
+        assert!(h.quantile(0.99) >= 4000);
+        assert_eq!(h.max(), 10_000);
+    }
+
+    #[test]
+    fn hist_empty() {
+        let h = LatencyHist::default();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn series_time_weighted() {
+        let mut s = Series::default();
+        s.push(0, 0.0);
+        s.push(10, 10.0); // value 0 held for 10
+        s.push(20, 10.0); // value 10 held for 10
+        assert!((s.time_weighted_mean() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_downsample() {
+        let mut s = Series::default();
+        for t in 0..100u64 {
+            s.push(t, t as f64);
+        }
+        let d = s.downsample(10);
+        assert!(d.len() <= 10 && d.len() >= 9);
+        assert!(d[0].1 < d.last().unwrap().1);
+    }
+
+    #[test]
+    fn table_emit() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert!(t.markdown().contains("| 1 | 2 |"));
+        assert_eq!(t.csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1500), "1.5us");
+        assert_eq!(fmt_bytes(2 * 1024 * 1024), "2.0MiB");
+    }
+}

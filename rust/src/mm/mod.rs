@@ -1,0 +1,14 @@
+//! The Memory Manager (paper §4.2): one userspace process per VM hosting
+//! the Policy Engine, the Swapper (queues + worker threads), the memory
+//! limit accounting, the zero-page pool and the MM-API parameter
+//! registry.
+
+pub mod engine;
+pub mod queues;
+pub mod swapper;
+pub mod zero_pool;
+
+pub use engine::{EngineCore, LimitReclaimer, Mm, MmStats, Policy, PolicyApi, PolicyEvent};
+pub use queues::SwapperQueue;
+pub use swapper::{Swapper, WorkOutcome};
+pub use zero_pool::ZeroPool;

@@ -1,0 +1,171 @@
+//! Swapper queues (paper §4.2): a conflating priority-queue pair.
+//!
+//! The key design point: the queue holds *pages needing attention*, not
+//! explicit operations. The Swapper dequeues a unit, looks at its
+//! current state and the engine's intent, and derives the action — so a
+//! reclaim raced by a fault (or vice versa) collapses into a no-op
+//! instead of a redundant I/O round trip.
+//!
+//! Priority order: page faults > swap-outs (limit pressure) > prefetch.
+
+use std::collections::VecDeque;
+
+use crate::types::{Bitmap, UnitId};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueClass {
+    Fault,
+    Reclaim,
+    Prefetch,
+}
+
+#[derive(Debug)]
+pub struct SwapperQueue {
+    fault_q: VecDeque<UnitId>,
+    reclaim_q: VecDeque<UnitId>,
+    prefetch_q: VecDeque<UnitId>,
+    /// Membership bitmap: a unit appears at most once across all queues.
+    queued: Bitmap,
+    pub enqueued: u64,
+    pub conflated_enqueues: u64,
+}
+
+impl SwapperQueue {
+    pub fn new(units: u64) -> Self {
+        SwapperQueue {
+            fault_q: VecDeque::new(),
+            reclaim_q: VecDeque::new(),
+            prefetch_q: VecDeque::new(),
+            queued: Bitmap::new(units as usize),
+            enqueued: 0,
+            conflated_enqueues: 0,
+        }
+    }
+
+    /// Enqueue a unit for attention. Re-enqueueing an already-queued unit
+    /// is the conflation case: the entry stays where it is (the swapper
+    /// will re-derive the correct action anyway), unless the new class is
+    /// `Fault`, which upgrades the unit into the fault queue.
+    pub fn push(&mut self, unit: UnitId, class: QueueClass) {
+        if self.queued.get(unit as usize) {
+            self.conflated_enqueues += 1;
+            if class == QueueClass::Fault {
+                // Upgrade: remove from lower-priority queues if present.
+                if let Some(p) = self.reclaim_q.iter().position(|&u| u == unit) {
+                    self.reclaim_q.remove(p);
+                    self.fault_q.push_back(unit);
+                } else if let Some(p) =
+                    self.prefetch_q.iter().position(|&u| u == unit)
+                {
+                    self.prefetch_q.remove(p);
+                    self.fault_q.push_back(unit);
+                }
+            }
+            return;
+        }
+        self.queued.set(unit as usize);
+        self.enqueued += 1;
+        match class {
+            QueueClass::Fault => self.fault_q.push_back(unit),
+            QueueClass::Reclaim => self.reclaim_q.push_back(unit),
+            QueueClass::Prefetch => self.prefetch_q.push_back(unit),
+        }
+    }
+
+    /// Dequeue the highest-priority unit. `prefer_out` flips faults and
+    /// reclaims (used when the engine is at the memory limit and must
+    /// drain swap-outs before admitting more swap-ins).
+    pub fn pop(&mut self, prefer_out: bool) -> Option<(UnitId, QueueClass)> {
+        let order: [(QueueClass, bool); 3] = if prefer_out {
+            [(QueueClass::Reclaim, true), (QueueClass::Fault, true), (QueueClass::Prefetch, true)]
+        } else {
+            [(QueueClass::Fault, true), (QueueClass::Reclaim, true), (QueueClass::Prefetch, true)]
+        };
+        for (class, _) in order {
+            let q = match class {
+                QueueClass::Fault => &mut self.fault_q,
+                QueueClass::Reclaim => &mut self.reclaim_q,
+                QueueClass::Prefetch => &mut self.prefetch_q,
+            };
+            if let Some(u) = q.pop_front() {
+                self.queued.clear(u as usize);
+                return Some((u, class));
+            }
+        }
+        None
+    }
+
+    pub fn contains(&self, unit: UnitId) -> bool {
+        self.queued.get(unit as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.fault_q.len() + self.reclaim_q.len() + self.prefetch_q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn pending_reclaims(&self) -> usize {
+        self.reclaim_q.len()
+    }
+    pub fn pending_faults(&self) -> usize {
+        self.fault_q.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_order() {
+        let mut q = SwapperQueue::new(16);
+        q.push(1, QueueClass::Prefetch);
+        q.push(2, QueueClass::Reclaim);
+        q.push(3, QueueClass::Fault);
+        assert_eq!(q.pop(false), Some((3, QueueClass::Fault)));
+        assert_eq!(q.pop(false), Some((2, QueueClass::Reclaim)));
+        assert_eq!(q.pop(false), Some((1, QueueClass::Prefetch)));
+        assert_eq!(q.pop(false), None);
+    }
+
+    #[test]
+    fn prefer_out_flips_order() {
+        let mut q = SwapperQueue::new(16);
+        q.push(3, QueueClass::Fault);
+        q.push(2, QueueClass::Reclaim);
+        assert_eq!(q.pop(true), Some((2, QueueClass::Reclaim)));
+        assert_eq!(q.pop(true), Some((3, QueueClass::Fault)));
+    }
+
+    #[test]
+    fn conflation_no_duplicates() {
+        let mut q = SwapperQueue::new(16);
+        q.push(5, QueueClass::Reclaim);
+        q.push(5, QueueClass::Reclaim);
+        q.push(5, QueueClass::Prefetch);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.conflated_enqueues, 2);
+    }
+
+    #[test]
+    fn fault_upgrades_queued_reclaim() {
+        let mut q = SwapperQueue::new(16);
+        q.push(5, QueueClass::Reclaim);
+        q.push(6, QueueClass::Reclaim);
+        q.push(5, QueueClass::Fault); // upgrade
+        assert_eq!(q.pop(false), Some((5, QueueClass::Fault)));
+        assert_eq!(q.pop(false), Some((6, QueueClass::Reclaim)));
+    }
+
+    #[test]
+    fn contains_tracks_membership() {
+        let mut q = SwapperQueue::new(8);
+        q.push(1, QueueClass::Fault);
+        assert!(q.contains(1));
+        q.pop(false);
+        assert!(!q.contains(1));
+    }
+}

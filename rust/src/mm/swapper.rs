@@ -1,0 +1,84 @@
+//! Swapper worker pool (paper §4.1 step 7, §5.3).
+//!
+//! Workers dequeue units from the Swapper queue, derive the required
+//! action from the unit's *current* state (the conflation design), hand
+//! I/O to the storage backend, and sleep on a semaphore until the
+//! backend wakes them. A worker is therefore occupied for the whole
+//! duration of its operation — which is exactly why 2MB swapping
+//! saturates the device with only two workers (Fig 7).
+
+use crate::types::{Time, UnitId};
+
+/// What a worker must do for the unit it picked up. Produced by
+/// [`super::engine::EngineCore::pick_work`]; executed by the machine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkOutcome {
+    /// First touch: take a zero page and map it (no I/O).
+    MapZero { unit: UnitId, cost: Time },
+    /// Load unit content from the backing store, then map.
+    SwapIn { unit: UnitId, bytes: u64 },
+    /// Map an already-staged (prefetched) unit — no I/O.
+    MapStaged { unit: UnitId, cost: Time },
+    /// Unmapped + dirty: write content out, then punch the hole.
+    SwapOutWrite { unit: UnitId, bytes: u64, pre_cost: Time },
+    /// Unmapped + clean copy already on disk: just punch the hole.
+    Drop { unit: UnitId, cost: Time },
+}
+
+/// Worker-pool occupancy tracking.
+#[derive(Debug)]
+pub struct Swapper {
+    busy: Vec<bool>,
+    pub jobs_done: u64,
+}
+
+impl Swapper {
+    pub fn new(threads: usize) -> Self {
+        Swapper { busy: vec![false; threads.max(1)], jobs_done: 0 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.busy.len()
+    }
+
+    /// Claim an idle worker, if any.
+    pub fn claim(&mut self) -> Option<usize> {
+        let idx = self.busy.iter().position(|b| !b)?;
+        self.busy[idx] = true;
+        Some(idx)
+    }
+
+    /// Release a worker after its chain completes.
+    pub fn release(&mut self, worker: usize) {
+        debug_assert!(self.busy[worker]);
+        self.busy[worker] = false;
+        self.jobs_done += 1;
+    }
+
+    pub fn idle_workers(&self) -> usize {
+        self.busy.iter().filter(|b| !**b).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_release_cycle() {
+        let mut s = Swapper::new(2);
+        let a = s.claim().unwrap();
+        let b = s.claim().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(s.claim(), None);
+        s.release(a);
+        assert_eq!(s.idle_workers(), 1);
+        assert_eq!(s.claim(), Some(a));
+    }
+
+    #[test]
+    fn at_least_one_worker() {
+        let s = Swapper::new(0);
+        assert_eq!(s.threads(), 1);
+    }
+}

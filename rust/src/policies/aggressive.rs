@@ -1,0 +1,201 @@
+//! SYS-Agg (paper §6.7): phase-detecting aggressive reclaimer.
+//!
+//! Workloads like graph500 run in phases with disjoint working sets.
+//! When a phase change happens, the page-fault rate spikes (part of the
+//! new working set is swapped out). The policy detects the uptick and
+//! enters *reclaim mode*: every resident page joins an "old page set";
+//! the EPT is scanned every second, accessed pages leave the set, and up
+//! to `per_tick_bytes` of the remaining set is reclaimed per tick until
+//! the set drains.
+
+use crate::mm::{Policy, PolicyApi, PolicyEvent};
+use crate::types::{Bitmap, Time, UnitState, SEC};
+
+pub struct AggressivePolicy {
+    /// Fault-rate uptick factor that triggers reclaim mode.
+    uptick_factor: f64,
+    /// Minimum faults/window to consider an uptick at all.
+    min_faults: u64,
+    /// Bytes reclaimed per tick in reclaim mode (paper: 2GB/s).
+    per_tick_bytes: u64,
+    window_faults: u64,
+    baseline_rate: f64,
+    old_set: Option<Bitmap>,
+    normal_scan_interval: Time,
+    pub mode_entries: u64,
+    pub reclaimed_units: u64,
+}
+
+impl AggressivePolicy {
+    pub fn new(normal_scan_interval: Time) -> Self {
+        AggressivePolicy {
+            uptick_factor: 3.0,
+            min_faults: 32,
+            per_tick_bytes: 2 << 30,
+            window_faults: 0,
+            baseline_rate: 0.0,
+            old_set: None,
+            normal_scan_interval,
+            mode_entries: 0,
+            reclaimed_units: 0,
+        }
+    }
+
+    pub fn in_reclaim_mode(&self) -> bool {
+        self.old_set.is_some()
+    }
+}
+
+impl Policy for AggressivePolicy {
+    fn name(&self) -> &'static str {
+        "sys-agg"
+    }
+
+    fn timer_interval(&self) -> Option<Time> {
+        Some(SEC)
+    }
+
+    fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
+        match ev {
+            PolicyEvent::PageFault { .. } => {
+                self.window_faults += 1;
+            }
+            PolicyEvent::Timer { .. } => {
+                let rate = self.window_faults as f64;
+                self.window_faults = 0;
+                if self.old_set.is_none() {
+                    let uptick = rate
+                        > (self.baseline_rate * self.uptick_factor)
+                            .max(self.min_faults as f64);
+                    // EMA baseline only updates in normal mode.
+                    self.baseline_rate = 0.7 * self.baseline_rate + 0.3 * rate;
+                    if uptick {
+                        // Enter reclaim mode: all resident units are old.
+                        let n = api.units() as usize;
+                        let mut set = Bitmap::new(n);
+                        for u in 0..n {
+                            if api.page_state(u as u64) == UnitState::Resident {
+                                set.set(u);
+                            }
+                        }
+                        self.old_set = Some(set);
+                        self.mode_entries += 1;
+                        api.set_scan_interval(SEC);
+                        api.register_parameter("agg.reclaim_mode", 1.0);
+                    }
+                }
+            }
+            PolicyEvent::ScanBitmap { bitmap, .. } => {
+                let Some(mut set) = self.old_set.take() else {
+                    return;
+                };
+                // Accessed units are not old.
+                for u in bitmap.iter_ones() {
+                    set.clear(u);
+                }
+                // Reclaim up to the per-tick budget from the old set.
+                let budget =
+                    (self.per_tick_bytes / api.core.unit_bytes).max(1) as usize;
+                let victims: Vec<usize> = set.iter_ones().take(budget).collect();
+                for u in &victims {
+                    api.reclaim(*u as u64);
+                    set.clear(*u);
+                    self.reclaimed_units += 1;
+                }
+                if set.count_ones() == 0 {
+                    // Old set drained: leave reclaim mode.
+                    api.set_scan_interval(self.normal_scan_interval);
+                    api.register_parameter("agg.reclaim_mode", 0.0);
+                } else {
+                    self.old_set = Some(set);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwConfig, MmConfig, SwCost, VmConfig};
+    use crate::mm::Mm;
+    use crate::sim::Rng;
+    use crate::types::PageSize;
+    use crate::vm::Vm;
+
+    fn setup(units: u64) -> (Mm, Vm) {
+        let mut mm = Mm::new(&MmConfig::default(), units, 4096, &SwCost::default(), 0);
+        mm.add_policy(Box::new(AggressivePolicy::new(60 * SEC)));
+        let cfg = VmConfig {
+            frames: units,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(4);
+        let vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        (mm, vm)
+    }
+
+    fn burst_faults(mm: &mut Mm, vm: &Vm, n: u64, t: Time) {
+        for i in 0..n {
+            let ev = crate::uffd::UffdEvent {
+                fault: crate::vm::FaultInfo {
+                    unit: i % 4,
+                    gpa_frame: i % 4,
+                    gva_page: i % 4,
+                    cr3: 0,
+                    ip: 0,
+                    write: false,
+                    vcpu: 0,
+                    pre_cost: 0,
+                },
+                raised_at: t,
+                delivered_at: t,
+            };
+            mm.on_fault(vm, &ev, t);
+        }
+    }
+
+    #[test]
+    fn uptick_enters_reclaim_mode_and_drains_old_set() {
+        let (mut mm, vm) = setup(64);
+        for u in 0..64 {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.usage_units = 64;
+        // Quiet windows to establish the baseline.
+        for k in 0..3 {
+            mm.on_timer(&vm, k * SEC);
+        }
+        // Fault burst -> uptick.
+        burst_faults(&mut mm, &vm, 100, 3 * SEC);
+        mm.on_timer(&vm, 4 * SEC);
+        assert_eq!(mm.core.params.get("agg.reclaim_mode"), Some(&1.0));
+        assert_eq!(mm.core.requested_scan_interval, Some(SEC));
+        // Scan: units 0..8 hot; everything else drains over ticks.
+        let mut hot = Bitmap::new(64);
+        for u in 0..8 {
+            hot.set(u);
+        }
+        mm.on_scan(&vm, &hot, 5 * SEC);
+        // Budget is huge (2GB / 4kB), so one tick drains the whole set.
+        assert_eq!(mm.core.params.get("agg.reclaim_mode"), Some(&0.0));
+        assert!(mm.core.queue.pending_reclaims() >= 48);
+        for u in 0..8u64 {
+            assert!(!mm.core.want_out.get(u as usize), "hot {u} reclaimed");
+        }
+    }
+
+    #[test]
+    fn no_uptick_no_mode() {
+        let (mut mm, vm) = setup(16);
+        for k in 0..5 {
+            burst_faults(&mut mm, &vm, 4, k * SEC);
+            mm.on_timer(&vm, k * SEC);
+        }
+        assert_eq!(mm.core.params.get("agg.reclaim_mode"), None);
+    }
+}

@@ -1,0 +1,215 @@
+//! Reclaimer analytics: the contract between the dt-reclaimer / SYS-R
+//! policies and their compute backends.
+//!
+//! Two implementations exist:
+//! * [`NativeAnalytics`] — plain Rust, mirrors `python/compile/kernels/
+//!   ref.py` exactly (differential-tested against the artifact).
+//! * [`crate::runtime::XlaAnalytics`] — executes the AOT artifacts
+//!   (`artifacts/dt_reclaim.hlo.txt`, `artifacts/ert_victim.hlo.txt`)
+//!   lowered from the L2 JAX pipeline + L1 Pallas kernel via PJRT.
+//!
+//! Both run *off* the page-fault critical path (paper §4.3).
+
+use crate::types::Bitmap;
+
+/// Output of one dt-reclaim analytics pass.
+#[derive(Debug, Clone)]
+pub struct DtOutput {
+    /// Scans since last access per unit (H = never in window).
+    pub age: Vec<f32>,
+    /// Accesses in window per unit.
+    pub count: Vec<f32>,
+    /// Access-distance histogram, buckets 0..=H.
+    pub histogram: Vec<f32>,
+    pub proposed: f32,
+    pub smoothed: f32,
+}
+
+/// dt-reclaimer analytics backend (L2 `dt_reclaim` graph).
+pub trait ColdAnalytics {
+    /// `hist` is the window of access bitmaps, oldest first, all of the
+    /// same length; `hist.len() == H`.
+    fn dt_reclaim(
+        &mut self,
+        hist: &[Bitmap],
+        target_rate: f32,
+        prev_threshold: f32,
+    ) -> DtOutput;
+
+    fn backend_name(&self) -> &'static str;
+}
+
+/// SYS-R victim scorer backend (L2 `ert_victim` graph).
+pub trait ErtScorer {
+    /// Pick argmax |ert - dt| over valid entries; returns (index, score)
+    /// and applies the countdown to `ert` in place.
+    fn victim(&mut self, ert: &mut [f32], valid: &[f32], dt: f32) -> (usize, f32);
+
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Threshold smoothing factor — must match `python/compile/model.py`.
+pub const SMOOTHING: f32 = 0.5;
+
+/// Pure-Rust analytics, the reference implementation.
+#[derive(Debug, Default)]
+pub struct NativeAnalytics;
+
+impl NativeAnalytics {
+    pub fn new() -> Self {
+        NativeAnalytics
+    }
+
+    /// (age, count, distance) per unit — mirrors `coldstats_ref`.
+    pub fn coldstats(hist: &[Bitmap]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let h = hist.len();
+        let n = hist.first().map(|b| b.len()).unwrap_or(0);
+        let mut age = vec![h as f32; n];
+        let mut count = vec![0f32; n];
+        let mut dist = vec![h as f32; n];
+        let mut last = vec![-1i64; n];
+        let mut last2 = vec![-1i64; n];
+        for (row, bm) in hist.iter().enumerate() {
+            for u in bm.iter_ones() {
+                count[u] += 1.0;
+                last2[u] = last[u];
+                last[u] = row as i64;
+            }
+        }
+        for u in 0..n {
+            if last[u] >= 0 {
+                age[u] = (h as i64 - 1 - last[u]) as f32;
+            }
+            if last2[u] >= 0 {
+                dist[u] = (last[u] - last2[u]) as f32;
+            }
+        }
+        (age, count, dist)
+    }
+
+    /// Histogram + threshold — mirrors `dt_reclaim_ref`.
+    pub fn pipeline(
+        hist: &[Bitmap],
+        target_rate: f32,
+        prev_threshold: f32,
+    ) -> DtOutput {
+        let h = hist.len();
+        let (age, count, dist) = Self::coldstats(hist);
+        let mut histogram = vec![0f32; h + 1];
+        for u in 0..age.len() {
+            if count[u] >= 1.0 {
+                histogram[dist[u] as usize] += 1.0;
+            }
+        }
+        // Bucket H (seen < 2 times: unknown distance) and bucket 0 are
+        // excluded from the rate — see python/compile/model.py.
+        let mut measured = histogram.clone();
+        measured[h] = 0.0;
+        measured[0] = 0.0;
+        let total: f32 = measured.iter().sum();
+        let proposed = if total <= 0.0 {
+            h as f32
+        } else {
+            let mut tail = vec![0f32; h + 2];
+            for t in (0..=h).rev() {
+                tail[t] = tail[t + 1] + measured[t];
+            }
+            (1..=h)
+                .find(|&t| tail[t] / total <= target_rate)
+                .unwrap_or(h) as f32
+        };
+        let smoothed = SMOOTHING * prev_threshold + (1.0 - SMOOTHING) * proposed;
+        DtOutput { age, count, histogram, proposed, smoothed }
+    }
+}
+
+impl ColdAnalytics for NativeAnalytics {
+    fn dt_reclaim(
+        &mut self,
+        hist: &[Bitmap],
+        target_rate: f32,
+        prev_threshold: f32,
+    ) -> DtOutput {
+        Self::pipeline(hist, target_rate, prev_threshold)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+impl ErtScorer for NativeAnalytics {
+    fn victim(&mut self, ert: &mut [f32], valid: &[f32], dt: f32) -> (usize, f32) {
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for i in 0..ert.len() {
+            if valid[i] > 0.0 {
+                ert[i] -= dt;
+                let s = ert[i].abs();
+                if s > best.1 {
+                    best = (i, s);
+                }
+            }
+        }
+        best
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bm(n: usize, ones: &[usize]) -> Bitmap {
+        let mut b = Bitmap::new(n);
+        for &i in ones {
+            b.set(i);
+        }
+        b
+    }
+
+    #[test]
+    fn coldstats_matches_python_ref_semantics() {
+        // H=4, N=3: unit0 accessed rows {0,2}, unit1 row {3}, unit2 never.
+        let hist = vec![
+            bm(3, &[0]),
+            bm(3, &[]),
+            bm(3, &[0]),
+            bm(3, &[1]),
+        ];
+        let (age, count, dist) = NativeAnalytics::coldstats(&hist);
+        assert_eq!(age, vec![1.0, 0.0, 4.0]);
+        assert_eq!(count, vec![2.0, 1.0, 0.0]);
+        assert_eq!(dist, vec![2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn threshold_semantics() {
+        // All distances = 1 (hot): with any target, threshold proposes 2+
+        // (tail(2) = 0 <= target).
+        let hist = vec![bm(4, &[0, 1]); 8];
+        let out = NativeAnalytics::pipeline(&hist, 0.02, 8.0);
+        assert_eq!(out.proposed, 2.0);
+        assert_eq!(out.smoothed, 0.5 * 8.0 + 0.5 * 2.0);
+    }
+
+    #[test]
+    fn empty_history_proposes_max() {
+        let hist = vec![bm(4, &[]); 6];
+        let out = NativeAnalytics::pipeline(&hist, 0.02, 3.0);
+        assert_eq!(out.proposed, 6.0);
+    }
+
+    #[test]
+    fn ert_victim_native() {
+        let mut n = NativeAnalytics::new();
+        let mut ert = vec![3.0, -10.0, 5.0];
+        let valid = vec![1.0, 0.0, 1.0];
+        let (idx, score) = n.victim(&mut ert, &valid, 1.0);
+        assert_eq!(idx, 2);
+        assert_eq!(score, 4.0);
+        assert_eq!(ert, vec![2.0, -10.0, 4.0]); // countdown only valid
+    }
+}

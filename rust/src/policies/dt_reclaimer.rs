@@ -1,0 +1,240 @@
+//! The dt-reclaimer (paper §5.4): the default proactive reclaimer.
+//!
+//! Maintains a ring of the last `H` access bitmaps from the EPT scanner
+//! and, each interval, runs the access-distance analytics (L1 Pallas +
+//! L2 JAX pipeline, or the native fallback) to derive a reclamation
+//! threshold such that at most `target_promotion_rate` of the working
+//! set is predicted to fault next interval. Units whose age reaches the
+//! (smoothed) threshold are requested for reclaim.
+//!
+//! Paper §6.4 detail reproduced here: pages that *faulted* since the
+//! last scan are OR-ed into the next bitmap — the kernel baseline cannot
+//! see those accesses, which makes it over-aggressive.
+
+use std::collections::VecDeque;
+
+use crate::mm::{Policy, PolicyApi, PolicyEvent};
+use crate::policies::analytics::ColdAnalytics;
+use crate::types::{Bitmap, Time, UnitId, UnitState};
+
+pub struct DtReclaimer {
+    backend: Box<dyn ColdAnalytics>,
+    history: usize,
+    target_rate: f32,
+    threshold: f32,
+    ring: VecDeque<Bitmap>,
+    /// Units faulted since the last scan (folded into the next bitmap).
+    faulted: Option<Bitmap>,
+    /// Last computed per-unit ages (for WSS estimation).
+    pub last_ages: Vec<f32>,
+    pub reclaims_requested: u64,
+    pub analytics_runs: u64,
+    /// WSS estimate: units with age < threshold at the last run.
+    pub wss_estimate_units: u64,
+}
+
+impl DtReclaimer {
+    pub fn new(backend: Box<dyn ColdAnalytics>, history: usize, target_rate: f64) -> Self {
+        DtReclaimer {
+            backend,
+            history: history.max(2),
+            target_rate: target_rate as f32,
+            threshold: history as f32, // start maximally conservative
+            ring: VecDeque::new(),
+            faulted: None,
+            last_ages: vec![],
+            reclaims_requested: 0,
+            analytics_runs: 0,
+            wss_estimate_units: 0,
+        }
+    }
+
+    fn note_fault(&mut self, unit: UnitId, units: usize) {
+        let bm = self
+            .faulted
+            .get_or_insert_with(|| Bitmap::new(units));
+        bm.set(unit as usize);
+    }
+
+    /// Build the H-row window, padding missing old history with zeros:
+    /// a unit not seen since the window began is genuinely cold (its
+    /// age saturates at H), while units seen once land in the
+    /// "unmeasurable distance" bucket — conservative for the threshold.
+    fn window(&self, n: usize) -> Vec<Bitmap> {
+        let mut rows = Vec::with_capacity(self.history);
+        let missing = self.history.saturating_sub(self.ring.len());
+        for _ in 0..missing {
+            rows.push(Bitmap::new(n));
+        }
+        for b in self.ring.iter() {
+            rows.push(b.clone());
+        }
+        rows
+    }
+}
+
+impl Policy for DtReclaimer {
+    fn name(&self) -> &'static str {
+        "dt-reclaimer"
+    }
+
+    fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
+        match ev {
+            PolicyEvent::PageFault { unit, .. } => {
+                self.note_fault(*unit, api.units() as usize);
+            }
+            PolicyEvent::ScanBitmap { bitmap, now } => {
+                let n = bitmap.len();
+                let mut merged = (*bitmap).clone();
+                if let Some(f) = self.faulted.take() {
+                    if f.len() == n {
+                        merged.or_assign(&f);
+                    }
+                }
+                self.ring.push_back(merged);
+                while self.ring.len() > self.history {
+                    self.ring.pop_front();
+                }
+                // Need some real history before acting.
+                if self.ring.len() < self.history.min(4) {
+                    return;
+                }
+                let window = self.window(n);
+                let out = self.backend.dt_reclaim(
+                    &window,
+                    self.target_rate,
+                    self.threshold,
+                );
+                self.analytics_runs += 1;
+                self.threshold = out.smoothed;
+                let cut = self.threshold;
+                let mut wss = 0u64;
+                for u in 0..n {
+                    if out.age[u] < cut {
+                        wss += 1;
+                    }
+                    if out.age[u] >= cut
+                        && api.page_state(u as UnitId) == UnitState::Resident
+                    {
+                        api.reclaim(u as UnitId);
+                        self.reclaims_requested += 1;
+                    }
+                }
+                self.wss_estimate_units = wss;
+                self.last_ages = out.age;
+                api.register_parameter("dt.threshold", self.threshold as f64);
+                api.register_parameter("dt.wss_units", wss as f64);
+                let _ = now;
+            }
+            _ => {}
+        }
+    }
+
+    fn timer_interval(&self) -> Option<Time> {
+        None // driven by scan events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwConfig, MmConfig, SwCost, VmConfig};
+    use crate::mm::Mm;
+    use crate::policies::analytics::NativeAnalytics;
+    use crate::sim::Rng;
+    use crate::types::PageSize;
+    use crate::vm::Vm;
+
+    fn setup(units: u64) -> (Mm, Vm) {
+        let mm_cfg = MmConfig { history: 8, ..Default::default() };
+        let mut mm = Mm::new(&mm_cfg, units, 4096, &SwCost::default(), 100_000);
+        mm.add_policy(Box::new(DtReclaimer::new(
+            Box::new(NativeAnalytics::new()),
+            8,
+            0.02,
+        )));
+        let cfg = VmConfig {
+            frames: units,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(2);
+        let vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        (mm, vm)
+    }
+
+    #[test]
+    fn cold_units_get_reclaimed_hot_stay() {
+        let (mut mm, vm) = setup(64);
+        // Make all units resident.
+        for u in 0..64 {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.usage_units = 64;
+        // 8 scans: units 0..8 accessed every scan, rest never.
+        for s in 0..8 {
+            let mut bm = Bitmap::new(64);
+            for u in 0..8 {
+                bm.set(u);
+            }
+            mm.on_scan(&vm, &bm, s * 1_000_000_000);
+        }
+        // Cold units must be queued for reclaim, hot must not.
+        assert!(mm.core.queue.pending_reclaims() > 40);
+        for u in 0..8u64 {
+            assert!(!mm.core.want_out.get(u as usize), "hot unit {u} reclaimed");
+        }
+    }
+
+    #[test]
+    fn wss_estimate_tracks_hot_set() {
+        let (mut mm, vm) = setup(128);
+        for u in 0..128 {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.usage_units = 128;
+        for s in 0..8 {
+            let mut bm = Bitmap::new(128);
+            for u in 0..32 {
+                bm.set(u);
+            }
+            mm.on_scan(&vm, &bm, s * 1_000_000_000);
+        }
+        let wss = mm.core.params.get("dt.wss_units").copied().unwrap();
+        assert!((wss - 32.0).abs() <= 4.0, "wss {wss}");
+    }
+
+    #[test]
+    fn faulted_pages_count_as_accessed() {
+        let (mut mm, vm) = setup(32);
+        for u in 0..32 {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.usage_units = 32;
+        // Unit 5 never appears in scan bitmaps but faults continuously.
+        for s in 0..8 {
+            let ev = crate::uffd::UffdEvent {
+                fault: crate::vm::FaultInfo {
+                    unit: 5,
+                    gpa_frame: 5,
+                    gva_page: 5,
+                    cr3: 0,
+                    ip: 0,
+                    write: false,
+                    vcpu: 0,
+                    pre_cost: 0,
+                },
+                raised_at: 0,
+                delivered_at: 0,
+            };
+            mm.on_fault(&vm, &ev, s * 1_000_000_000);
+            mm.on_scan(&vm, &Bitmap::new(32), s * 1_000_000_000 + 1);
+        }
+        assert!(
+            !mm.core.want_out.get(5),
+            "faulting unit must not be reclaimed (paper §6.4)"
+        );
+    }
+}

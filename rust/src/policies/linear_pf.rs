@@ -1,0 +1,192 @@
+//! LinearPF (paper §6.6): the simple next-page prefetcher, in two
+//! flavours — HVA (next page in host/guest-physical space) and GVA
+//! (next page in the *guest application's* address space, via the
+//! introspection ring + gva_to_hva walker).
+//!
+//! This is the paper's flagship demonstration of why introspection
+//! matters: after the guest allocator ages, HVA-neighbourhood no longer
+//! predicts GVA-neighbourhood, so the HVA version prefetches garbage
+//! (<2% timely) while the GVA version covers >98% of faults.
+
+use crate::mm::{Policy, PolicyApi, PolicyEvent};
+use crate::types::UnitId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PfMode {
+    /// Use the fault's host address directly (physical neighbourhood).
+    Hva,
+    /// Look up the faulting GVA and prefetch its GVA-successor
+    /// (application-aware; the paper's §4.3 example policy).
+    Gva,
+}
+
+pub struct LinearPf {
+    mode: PfMode,
+    pub issued: u64,
+    pub ctx_missing: u64,
+    pub translation_failed: u64,
+}
+
+impl LinearPf {
+    pub fn new(mode: PfMode) -> Self {
+        LinearPf { mode, issued: 0, ctx_missing: 0, translation_failed: 0 }
+    }
+}
+
+impl Policy for LinearPf {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            PfMode::Hva => "linear-pf-hva",
+            PfMode::Gva => "linear-pf-gva",
+        }
+    }
+
+    fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
+        let PolicyEvent::PageFault { unit, ctx, .. } = ev else {
+            return;
+        };
+        match self.mode {
+            PfMode::Hva => {
+                let next = unit + 1;
+                if next < api.units() {
+                    api.prefetch(next);
+                    self.issued += 1;
+                }
+            }
+            PfMode::Gva => {
+                // Paper §4.3 example, verbatim logic:
+                //   if (!cr3 || !gva) return;
+                //   next_gva = gva + page.size();
+                //   next_hva = SYS.gva_to_hva(next_gva, cr3);
+                //   if (!next_hva) return;
+                //   SYS.prefetch(next_hva);
+                let Some(ctx) = ctx else {
+                    self.ctx_missing += 1;
+                    return;
+                };
+                let unit_frames = api.vm.unit_frames();
+                let next_gva_page = ctx.gva / crate::types::FRAME_BYTES + unit_frames;
+                match api.gva_to_hva(next_gva_page, ctx.cr3) {
+                    Some(hva_frame) => {
+                        let next_unit: UnitId = api.unit_of_frame(hva_frame);
+                        api.prefetch(next_unit);
+                        self.issued += 1;
+                    }
+                    None => self.translation_failed += 1,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwConfig, MmConfig, SwCost, VmConfig};
+    use crate::introspect::FaultCtx;
+    use crate::mm::Mm;
+    use crate::sim::Rng;
+    use crate::types::{PageSize, UnitState};
+    use crate::vm::{AccessResult, Vm};
+
+    fn setup(scramble: f64) -> (Mm, Vm, Rng) {
+        let mm = Mm::new(&MmConfig::default(), 256, 4096, &SwCost::default(), 0);
+        let cfg = VmConfig {
+            frames: 256,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(7);
+        let vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        (mm, vm, rng)
+    }
+
+    #[test]
+    fn gva_mode_prefetches_gva_successor() {
+        let (mut mm, mut vm, mut rng) = setup(1.0);
+        let p = vm.spawn_process(256);
+        mm.add_policy(Box::new(LinearPf::new(PfMode::Gva)));
+        // Touch gva pages 10 and 11 so guest mappings exist; find units.
+        let u10 = match vm.access(0, p, 10, false, 0, 0, &mut rng) {
+            AccessResult::Fault(f) => f.unit,
+            _ => panic!(),
+        };
+        let u11 = match vm.access(0, p, 11, false, 0, 0, &mut rng) {
+            AccessResult::Fault(f) => f.unit,
+            _ => panic!(),
+        };
+        // Both swapped out.
+        mm.core.states[u10 as usize] = UnitState::Swapped;
+        mm.core.states[u11 as usize] = UnitState::Swapped;
+        let cr3 = vm.processes[p].cr3;
+        mm.ring.push(FaultCtx { cr3, ip: 0x40, gva: 10 * 4096, gpa_frame: u10 });
+        let ev = crate::uffd::UffdEvent {
+            fault: crate::vm::FaultInfo {
+                unit: u10,
+                gpa_frame: u10,
+                gva_page: 10,
+                cr3,
+                ip: 0x40,
+                write: false,
+                vcpu: 0,
+                pre_cost: 0,
+            },
+            raised_at: 0,
+            delivered_at: 0,
+        };
+        mm.on_fault(&vm, &ev, 0);
+        // The GVA successor's *unit* (u11, scrambled != u10+1) is queued.
+        assert!(mm.core.queue.contains(u11), "gva successor not prefetched");
+        assert_eq!(mm.core.counters.prefetch_issued, 1);
+    }
+
+    #[test]
+    fn hva_mode_prefetches_physical_successor() {
+        let (mut mm, vm, _) = setup(1.0);
+        mm.add_policy(Box::new(LinearPf::new(PfMode::Hva)));
+        mm.core.states[20] = UnitState::Swapped;
+        mm.core.states[21] = UnitState::Swapped;
+        let ev = crate::uffd::UffdEvent {
+            fault: crate::vm::FaultInfo {
+                unit: 20,
+                gpa_frame: 20,
+                gva_page: 99,
+                cr3: 0,
+                ip: 0,
+                write: false,
+                vcpu: 0,
+                pre_cost: 0,
+            },
+            raised_at: 0,
+            delivered_at: 0,
+        };
+        mm.on_fault(&vm, &ev, 0);
+        assert!(mm.core.queue.contains(21));
+    }
+
+    #[test]
+    fn gva_mode_tolerates_missing_context() {
+        let (mut mm, vm, _) = setup(1.0);
+        mm.add_policy(Box::new(LinearPf::new(PfMode::Gva)));
+        mm.core.states[5] = UnitState::Swapped;
+        let ev = crate::uffd::UffdEvent {
+            fault: crate::vm::FaultInfo {
+                unit: 5,
+                gpa_frame: 5,
+                gva_page: 5,
+                cr3: 0,
+                ip: 0,
+                write: false,
+                vcpu: 0,
+                pre_cost: 0,
+            },
+            raised_at: 0,
+            delivered_at: 0,
+        };
+        // No ring entry pushed: ctx is None; must not panic or prefetch.
+        mm.on_fault(&vm, &ev, 0);
+        assert_eq!(mm.core.counters.prefetch_issued, 0);
+    }
+}

@@ -1,0 +1,31 @@
+//! The policy zoo (paper §4.3, §5.4, §6.5-§6.8).
+//!
+//! Policies are optional modules subscribed to engine events; they can
+//! only act through the safe [`crate::mm::PolicyApi`]. This module
+//! provides every policy the paper evaluates:
+//!
+//! * [`dt_reclaimer`] — the default proactive reclaimer (§5.4), built on
+//!   the access-distance analytics pipeline that runs as an AOT-compiled
+//!   XLA artifact (L1 Pallas + L2 JAX) or a native Rust fallback.
+//! * [`lru`] — the default LRU memory-limit reclaimer (§4.3).
+//! * [`reuse_dist`] — SYS-R, the reuse-distance (ERT) limit reclaimer
+//!   approximating Bélády (§6.5).
+//! * [`linear_pf`] — LinearPF next-page prefetcher, GVA vs HVA (§6.6).
+//! * [`aggressive`] — SYS-Agg phase-detecting fast reclaimer (§6.7).
+//! * [`wsr`] — 4k-WSR working-set restore after a limit lift (§6.8).
+
+pub mod aggressive;
+pub mod analytics;
+pub mod dt_reclaimer;
+pub mod linear_pf;
+pub mod lru;
+pub mod reuse_dist;
+pub mod wsr;
+
+pub use aggressive::AggressivePolicy;
+pub use analytics::{ColdAnalytics, DtOutput, ErtScorer, NativeAnalytics};
+pub use dt_reclaimer::DtReclaimer;
+pub use linear_pf::{LinearPf, PfMode};
+pub use lru::LruReclaimer;
+pub use reuse_dist::ReuseDistReclaimer;
+pub use wsr::WsrPolicy;

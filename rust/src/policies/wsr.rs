@@ -1,0 +1,157 @@
+//! 4k-WSR, working-set restore (paper §6.8).
+//!
+//! While running under a memory limit, the policy records the working
+//! set (units seen in recent scan bitmaps / faults, with recency). When
+//! the control plane *lifts* the limit, the recorded set is prefetched
+//! in LRU order (most recently used first), turning the recovery's major
+//! faults into minor ones — the paper's "removes I/O from the page fault
+//! path".
+
+use crate::mm::{Policy, PolicyApi, PolicyEvent};
+use crate::types::{Time, UnitId, UnitState};
+
+pub struct WsrPolicy {
+    /// last seen (scan/fault) time per unit while limited.
+    seen: Vec<Time>,
+    pub restored: u64,
+    pub recordings: u64,
+}
+
+impl WsrPolicy {
+    pub fn new(units: u64) -> Self {
+        WsrPolicy { seen: vec![0; units as usize], restored: 0, recordings: 0 }
+    }
+}
+
+impl Policy for WsrPolicy {
+    fn name(&self) -> &'static str {
+        "4k-wsr"
+    }
+
+    fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
+        match ev {
+            PolicyEvent::ScanBitmap { bitmap, now } => {
+                if api.memory_limit().is_some() {
+                    for u in bitmap.iter_ones() {
+                        self.seen[u] = *now;
+                        self.recordings += 1;
+                    }
+                }
+            }
+            PolicyEvent::PageFault { unit, now, .. } => {
+                if api.memory_limit().is_some() {
+                    self.seen[*unit as usize] = *now;
+                }
+            }
+            PolicyEvent::LimitChanged { old, new, .. } => {
+                let lifted = match (old, new) {
+                    (Some(_), None) => true,
+                    (Some(o), Some(n)) => n > o,
+                    _ => false,
+                };
+                if !lifted {
+                    return;
+                }
+                // Prefetch the recorded WS, most recently used first.
+                let mut order: Vec<(Time, UnitId)> = self
+                    .seen
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &t)| t > 0)
+                    .map(|(u, &t)| (t, u as UnitId))
+                    .collect();
+                order.sort_unstable_by(|a, b| b.cmp(a));
+                for (_, u) in order {
+                    if api.page_state(u) == UnitState::Swapped {
+                        api.prefetch(u);
+                        self.restored += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwConfig, MmConfig, SwCost, VmConfig};
+    use crate::mm::Mm;
+    use crate::sim::Rng;
+    use crate::types::{Bitmap, PageSize, SEC};
+    use crate::vm::Vm;
+
+    fn setup(units: u64, limit_units: u64) -> (Mm, Vm) {
+        let cfg = MmConfig {
+            memory_limit: Some(limit_units * 4096),
+            ..Default::default()
+        };
+        let mut mm = Mm::new(&cfg, units, 4096, &SwCost::default(), 0);
+        mm.add_policy(Box::new(WsrPolicy::new(units)));
+        let vm_cfg = VmConfig {
+            frames: units,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(8);
+        let vm = Vm::new(&vm_cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        (mm, vm)
+    }
+
+    #[test]
+    fn restores_recorded_ws_on_limit_lift() {
+        let (mut mm, vm) = setup(32, 8);
+        // Record a working set of units 0..12 under the limit.
+        let mut bm = Bitmap::new(32);
+        for u in 0..12 {
+            bm.set(u);
+        }
+        mm.on_scan(&vm, &bm, SEC);
+        // They all get swapped out (thrashing).
+        for u in 0..12 {
+            mm.core.states[u] = UnitState::Swapped;
+        }
+        // Lift the limit.
+        mm.set_memory_limit(&vm, None, 2 * SEC);
+        // The WS should be queued as prefetches.
+        let queued = (0..12u64).filter(|&u| mm.core.queue.contains(u)).count();
+        assert_eq!(queued, 12);
+        assert_eq!(mm.core.counters.prefetch_issued, 12);
+    }
+
+    #[test]
+    fn no_restore_on_tighten() {
+        let (mut mm, vm) = setup(32, 16);
+        let mut bm = Bitmap::new(32);
+        bm.set(1);
+        mm.on_scan(&vm, &bm, SEC);
+        mm.core.states[1] = UnitState::Swapped;
+        mm.set_memory_limit(&vm, Some(4 * 4096), 2 * SEC);
+        assert_eq!(mm.core.counters.prefetch_issued, 0);
+    }
+
+    #[test]
+    fn lru_order_most_recent_first() {
+        let (mut mm, vm) = setup(16, 4);
+        let mut bm1 = Bitmap::new(16);
+        bm1.set(1);
+        mm.on_scan(&vm, &bm1, SEC);
+        let mut bm2 = Bitmap::new(16);
+        bm2.set(2);
+        mm.on_scan(&vm, &bm2, 2 * SEC);
+        mm.core.states[1] = UnitState::Swapped;
+        mm.core.states[2] = UnitState::Swapped;
+        mm.set_memory_limit(&vm, None, 3 * SEC);
+        // Both prefetched; unit 2 (more recent) first in the queue.
+        let mut popped = vec![];
+        while let Some(w) = mm.pick_work(4 * SEC) {
+            if let crate::mm::WorkOutcome::SwapIn { unit, .. } = w {
+                popped.push(unit);
+            }
+        }
+        assert_eq!(popped, vec![2, 1]);
+    }
+}

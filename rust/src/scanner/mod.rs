@@ -1,0 +1,152 @@
+//! EPT scanner (paper §5.4): kernel module + userspace aggregator.
+//!
+//! Reads + clears EPT access bits on a dedicated core and forwards the
+//! bitmap to subscribed policies. Costs are the §3.3 pair: *direct* CPU
+//! time on the scanning core (∝ present PTEs) and *indirect* slowdown of
+//! the guest from flushed partial-walk caches (applied to the VM's walk
+//! model). Per the paper we do NOT do hierarchical/sampled scanning —
+//! policies adjust the interval instead.
+
+use crate::config::HwConfig;
+use crate::types::{Bitmap, Time};
+use crate::vm::Vm;
+
+#[derive(Debug, Clone)]
+pub struct ScanOutput {
+    /// Access bitmap over swap units (1 = accessed since last scan).
+    pub bitmap: Bitmap,
+    /// Present leaves visited (scan cost scales with this).
+    pub visited: u64,
+    /// CPU time burnt on the scanning core.
+    pub cpu_ns: Time,
+    pub at: Time,
+}
+
+#[derive(Debug)]
+pub struct EptScanner {
+    scan_pte_ns: Time,
+    /// Also scan the QEMU process page table (VIRTIO case, §5.4): bits
+    /// set by host-side clients (e.g. vhost touching guest buffers) are
+    /// OR-ed into the result so policies don't reclaim I/O-hot pages.
+    pub scan_qemu: bool,
+    pub scans: u64,
+    pub total_cpu_ns: Time,
+}
+
+impl EptScanner {
+    pub fn new(hw: &HwConfig) -> Self {
+        EptScanner { scan_pte_ns: hw.scan_pte_ns, scan_qemu: true, scans: 0, total_cpu_ns: 0 }
+    }
+
+    /// One scan pass at `now`. `qemu_bits` is the host-client access
+    /// bitmap maintained by the machine (None when no VIRTIO clients).
+    pub fn scan(
+        &mut self,
+        vm: &mut Vm,
+        qemu_bits: Option<&Bitmap>,
+        now: Time,
+    ) -> ScanOutput {
+        let mut bitmap = Bitmap::new(vm.units() as usize);
+        let visited = vm.ept.scan_and_clear(&mut bitmap);
+        // Clearing A-bits flushes partial-walk caches (indirect cost).
+        vm.walk.on_abit_clear(now);
+
+        let mut cpu_ns = visited * self.scan_pte_ns;
+        if self.scan_qemu {
+            if let Some(q) = qemu_bits {
+                bitmap.or_assign(q);
+                cpu_ns += q.len() as u64 * self.scan_pte_ns;
+            }
+        }
+        self.scans += 1;
+        self.total_cpu_ns += cpu_ns;
+        ScanOutput { bitmap, visited, cpu_ns, at: now }
+    }
+
+    /// Direct cost (fraction of one core) of scanning `visited` PTEs
+    /// every `interval` ns — the Fig 3 "direct (% CPU)" series.
+    pub fn direct_cpu_fraction(&self, visited: u64, interval: Time) -> f64 {
+        if interval == 0 {
+            return 1.0;
+        }
+        ((visited * self.scan_pte_ns) as f64 / interval as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SwCost, VmConfig};
+    use crate::sim::Rng;
+    use crate::types::PageSize;
+
+    fn vm(mode: PageSize) -> (Vm, Rng) {
+        let cfg = VmConfig {
+            frames: 2048,
+            vcpus: 1,
+            page_size: mode,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(5);
+        let vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        (vm, rng)
+    }
+
+    #[test]
+    fn scan_reports_accessed_units_and_clears() {
+        let (mut v, _) = vm(PageSize::Small);
+        v.ept.map(3);
+        v.ept.map(4);
+        v.ept.touch(3, false);
+        let mut s = EptScanner::new(&HwConfig::default());
+        let out = s.scan(&mut v, None, 1000);
+        assert!(out.bitmap.get(3) && out.bitmap.get(4)); // map sets A
+        assert_eq!(out.visited, 2);
+        let out2 = s.scan(&mut v, None, 2000);
+        assert_eq!(out2.bitmap.count_ones(), 0);
+    }
+
+    #[test]
+    fn huge_mode_scans_512x_fewer_ptes() {
+        let (mut v4, _) = vm(PageSize::Small);
+        let (mut v2, _) = vm(PageSize::Huge);
+        for u in 0..v4.units() {
+            v4.ept.map(u);
+        }
+        for u in 0..v2.units() {
+            v2.ept.map(u);
+        }
+        let mut s = EptScanner::new(&HwConfig::default());
+        let c4 = s.scan(&mut v4, None, 0).cpu_ns;
+        let c2 = s.scan(&mut v2, None, 0).cpu_ns;
+        assert_eq!(c4, c2 * 512);
+    }
+
+    #[test]
+    fn scan_sets_pwc_penalty() {
+        let (mut v, _) = vm(PageSize::Small);
+        let mut s = EptScanner::new(&HwConfig::default());
+        assert!(!v.walk.penalized(100));
+        s.scan(&mut v, None, 100);
+        assert!(v.walk.penalized(101));
+    }
+
+    #[test]
+    fn qemu_bits_are_merged() {
+        let (mut v, _) = vm(PageSize::Small);
+        let mut q = Bitmap::new(v.units() as usize);
+        q.set(7);
+        let mut s = EptScanner::new(&HwConfig::default());
+        let out = s.scan(&mut v, Some(&q), 0);
+        assert!(out.bitmap.get(7));
+    }
+
+    #[test]
+    fn direct_fraction() {
+        let s = EptScanner::new(&HwConfig::default());
+        // 1M PTEs * 5ns = 5ms per scan; at 1s interval = 0.5%.
+        let f = s.direct_cpu_fraction(1_000_000, 1_000_000_000);
+        assert!((f - 0.005).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Discrete-event simulation core: deterministic RNG and event queue.
+//!
+//! Everything in the substrate runs on a nanosecond-resolution virtual
+//! clock driven by a binary-heap event queue with deterministic FIFO
+//! tie-breaking, so every experiment is exactly reproducible from its
+//! seed.
+
+pub mod events;
+pub mod rng;
+
+pub use events::EventQueue;
+pub use rng::{Rng, Zipf};

@@ -1,0 +1,193 @@
+//! Deterministic PRNG (SplitMix64 core) + distribution helpers.
+//!
+//! We carry our own tiny generator instead of the `rand` crate so that
+//! simulation results are bit-stable across toolchains and the hot path
+//! stays allocation- and indirection-free.
+
+/// SplitMix64: tiny, fast, passes BigCrush for our purposes.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixpoint-ish start; mix the seed once.
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias is negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple, rare).
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork a stream for an independent component (stable per label).
+    pub fn fork(&mut self, label: u64) -> Rng {
+        Rng::new(self.next_u64() ^ label.wrapping_mul(0xA24BAED4963EE407))
+    }
+}
+
+/// Zipf sampler over [0, n) with exponent `s`, using the rejection-
+/// inversion method of Hörmann & Derflinger — O(1) per sample, no table.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_lo: f64,
+    h_hi: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n > 0);
+        // Keep s away from the 1.0 singularity of the inversion formula.
+        let s = if (s - 1.0).abs() < 1e-6 { 1.0 + 1e-6 } else { s };
+        let hf = |x: f64| x.powf(1.0 - s) / (1.0 - s);
+        Zipf { n, s, h_lo: hf(0.5), h_hi: hf(n as f64 + 0.5) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let hinv = |x: f64| (x * (1.0 - self.s)).powf(1.0 / (1.0 - self.s));
+        loop {
+            let u = self.h_lo + rng.f64() * (self.h_hi - self.h_lo);
+            let x = hinv(u).clamp(0.5, self.n as f64 + 0.5);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            // Accept with probability pmf(k)/envelope(x).
+            if rng.f64() < k.powf(-self.s) / x.powf(-self.s) {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            assert!(rng.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniformity_rough() {
+        let mut rng = Rng::new(3);
+        let mut buckets = [0u32; 10];
+        for _ in 0..100_000 {
+            buckets[rng.below(10) as usize] += 1;
+        }
+        for b in buckets {
+            assert!((8_000..12_000).contains(&b), "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(4);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn zipf_skewed_head() {
+        let mut rng = Rng::new(5);
+        let z = Zipf::new(1000, 1.1);
+        let mut head = 0;
+        const N: usize = 20_000;
+        for _ in 0..N {
+            let k = z.sample(&mut rng);
+            assert!(k < 1000);
+            if k < 10 {
+                head += 1;
+            }
+        }
+        // Top-10 of a 1000-element zipf(1.1) carries a large share.
+        assert!(head > N / 4, "head share too small: {head}/{N}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut rng = Rng::new(6);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.gauss();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,87 @@
+//! Page locking for zero-copy I/O virtualization (paper §5.5).
+//!
+//! Clients like OVS share a page-lock bitmap with the MM. Locking is a
+//! two-step protocol: (1) atomically set the lock bit, (2) read the page
+//! to force a swap-in if it was out. The MM never swaps out a locked
+//! unit; clients clear the bit when the DMA finishes.
+
+use crate::types::{Bitmap, UnitId};
+
+#[derive(Debug)]
+pub struct LockBitmap {
+    bits: Bitmap,
+    pub lock_ops: u64,
+    pub unlock_ops: u64,
+    /// Swap-outs the MM skipped because the unit was locked.
+    pub denied_swapouts: u64,
+}
+
+impl LockBitmap {
+    pub fn new(units: u64) -> Self {
+        LockBitmap {
+            bits: Bitmap::new(units as usize),
+            lock_ops: 0,
+            unlock_ops: 0,
+            denied_swapouts: 0,
+        }
+    }
+
+    /// Client step 1: set the lock bit. The caller must then touch the
+    /// page (which faults it in if swapped) before starting DMA.
+    pub fn lock(&mut self, unit: UnitId) {
+        self.bits.set(unit as usize);
+        self.lock_ops += 1;
+    }
+
+    pub fn unlock(&mut self, unit: UnitId) {
+        self.bits.clear(unit as usize);
+        self.unlock_ops += 1;
+    }
+
+    #[inline]
+    pub fn is_locked(&self, unit: UnitId) -> bool {
+        self.bits.get(unit as usize)
+    }
+
+    /// MM side: check-and-account on the swap-out path.
+    pub fn deny_if_locked(&mut self, unit: UnitId) -> bool {
+        if self.is_locked(unit) {
+            self.denied_swapouts += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn locked_count(&self) -> usize {
+        self.bits.count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_prevents_swapout() {
+        let mut l = LockBitmap::new(8);
+        l.lock(3);
+        assert!(l.deny_if_locked(3));
+        assert!(!l.deny_if_locked(4));
+        assert_eq!(l.denied_swapouts, 1);
+        l.unlock(3);
+        assert!(!l.deny_if_locked(3));
+    }
+
+    #[test]
+    fn counts() {
+        let mut l = LockBitmap::new(4);
+        l.lock(0);
+        l.lock(1);
+        assert_eq!(l.locked_count(), 2);
+        l.unlock(0);
+        assert_eq!(l.locked_count(), 1);
+        assert_eq!(l.lock_ops, 2);
+        assert_eq!(l.unlock_ops, 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Storage Backend (paper §4.4, §5.3): a single SPDK-like polling
+//! process serving swap I/O for all MMs, plus the page-locking protocol
+//! that lets zero-copy I/O clients (OVS/vhost) pin pages against
+//! swap-out.
+
+pub mod backend;
+pub mod locks;
+
+pub use backend::{IoToken, StorageBackend};
+pub use locks::LockBitmap;

@@ -1,0 +1,175 @@
+//! Core shared types: virtual time, page/unit identifiers, bitmaps.
+
+/// Virtual time in nanoseconds since simulation start.
+pub type Time = u64;
+
+/// Time unit helpers.
+pub const NS: Time = 1;
+pub const US: Time = 1_000;
+pub const MS: Time = 1_000_000;
+pub const SEC: Time = 1_000_000_000;
+
+/// 4kB frames per 2MB hugepage.
+pub const HUGE_FRAMES: u64 = 512;
+/// Bytes per 4kB frame.
+pub const FRAME_BYTES: u64 = 4096;
+/// Bytes per 2MB hugepage.
+pub const HUGE_BYTES: u64 = FRAME_BYTES * HUGE_FRAMES;
+
+/// Identifier of a VM on the host.
+pub type VmId = usize;
+
+/// A *swap unit*: the granularity at which the MM swaps. In strict-4kB
+/// mode a unit is one 4kB frame; in strict-2MB mode it is a 512-frame
+/// aligned hugepage. Units index the VM's guest-physical space:
+/// `gpa_frame / unit_frames`.
+pub type UnitId = u64;
+
+/// Page size mode of a VM's backing memory (strict, per the paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PageSize {
+    /// strict-4kB: memory and backing store use 4kB pages.
+    Small,
+    /// strict-2MB: memory and backing store use 2MB pages (HugeTLB-like;
+    /// never split — the paper's headline mode).
+    Huge,
+}
+
+impl PageSize {
+    /// 4kB frames per swap unit.
+    pub fn unit_frames(self) -> u64 {
+        match self {
+            PageSize::Small => 1,
+            PageSize::Huge => HUGE_FRAMES,
+        }
+    }
+    /// Bytes per swap unit.
+    pub fn unit_bytes(self) -> u64 {
+        self.unit_frames() * FRAME_BYTES
+    }
+    pub fn label(self) -> &'static str {
+        match self {
+            PageSize::Small => "4k",
+            PageSize::Huge => "2M",
+        }
+    }
+}
+
+/// Dense bitmap over swap units (the EPT scanner's output format).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    pub fn new(len: usize) -> Self {
+        Bitmap { words: vec![0; len.div_ceil(64)], len }
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        self.words[i / 64] &= !(1 << (i % 64));
+    }
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+    pub fn zero(&mut self) {
+        self.words.fill(0);
+    }
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(move |(wi, &w)| {
+            let mut w = w;
+            let mut out = Vec::with_capacity(w.count_ones() as usize);
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                out.push(wi * 64 + b);
+                w &= w - 1;
+            }
+            out
+        })
+    }
+    /// OR another bitmap into this one (same length).
+    pub fn or_assign(&mut self, other: &Bitmap) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+}
+
+/// Per-unit swap state machine (paper §4.2 "Swapper will determine the
+/// necessary state of the page and perform the required actions").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnitState {
+    /// Never touched: no backing store content, faults map a zero page.
+    Untouched,
+    /// Mapped into all clients, content in DRAM.
+    Resident,
+    /// Content only on the backing store.
+    Swapped,
+    /// Prefetched: content staged in DRAM but not mapped — the next
+    /// fault is minor (no I/O), matching the paper's "prefetching does
+    /// not map the page, it removes I/O from the fault path".
+    Staged,
+    /// Swap-in I/O in flight.
+    SwappingIn,
+    /// Unmapped, swap-out I/O in flight.
+    SwappingOut,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_size_units() {
+        assert_eq!(PageSize::Small.unit_frames(), 1);
+        assert_eq!(PageSize::Huge.unit_frames(), 512);
+        assert_eq!(PageSize::Huge.unit_bytes(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn bitmap_set_get_count() {
+        let mut b = Bitmap::new(130);
+        assert_eq!(b.count_ones(), 0);
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1));
+        assert_eq!(b.count_ones(), 3);
+        let ones: Vec<_> = b.iter_ones().collect();
+        assert_eq!(ones, vec![0, 64, 129]);
+        b.clear(64);
+        assert_eq!(b.count_ones(), 2);
+        b.zero();
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn bitmap_or() {
+        let mut a = Bitmap::new(10);
+        let mut b = Bitmap::new(10);
+        a.set(1);
+        b.set(2);
+        a.or_assign(&b);
+        assert!(a.get(1) && a.get(2));
+    }
+}

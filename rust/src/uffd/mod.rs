@@ -1,0 +1,120 @@
+//! userfaultfd model: the kernel mechanism that routes EPT violations on
+//! missing pages to the userspace Memory Manager (paper §4.1 steps 3-5).
+//!
+//! The real path is: EPT violation -> KVM -> Linux MM -> uffd event ->
+//! MM's UFFD poller. We model its *cost* (the paper's 22µs VMEXIT for
+//! userspace faults vs 6µs in-kernel) and its *semantics*: events are
+//! delivered in order, carry the faulting address, and the fault stays
+//! outstanding until `UFFDIO_CONTINUE` maps the page.
+
+use std::collections::VecDeque;
+
+use crate::config::SwCost;
+use crate::types::{Time, UnitId};
+use crate::vm::FaultInfo;
+
+/// One delivered userfault event.
+#[derive(Debug, Clone)]
+pub struct UffdEvent {
+    pub fault: FaultInfo,
+    /// When the guest instruction faulted.
+    pub raised_at: Time,
+    /// When the MM poller sees the event.
+    pub delivered_at: Time,
+}
+
+/// The uffd channel between a VM's faults and its MM poller.
+#[derive(Debug, Default)]
+pub struct Uffd {
+    queue: VecDeque<UffdEvent>,
+    pub events_raised: u64,
+    pub events_delivered: u64,
+}
+
+impl Uffd {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Kernel side: an EPT violation on a uffd-registered range. Returns
+    /// the delivery time at which the MM poller wakes with the event.
+    pub fn raise(&mut self, fault: FaultInfo, now: Time, sw: &SwCost) -> Time {
+        let delivered_at = now + sw.vmexit_uffd_ns;
+        self.events_raised += 1;
+        self.queue.push_back(UffdEvent { fault, raised_at: now, delivered_at });
+        delivered_at
+    }
+
+    /// MM side: poll the next event that is visible at `now`.
+    pub fn poll(&mut self, now: Time) -> Option<UffdEvent> {
+        if self.queue.front().is_some_and(|e| e.delivered_at <= now) {
+            self.events_delivered += 1;
+            self.queue.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Outstanding (raised, not yet polled) events.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Cost of resolving a fault: UFFDIO_CONTINUE ioctl + vCPU wake.
+    pub fn continue_cost(sw: &SwCost, huge: bool) -> Time {
+        sw.uffd_continue_ns + if huge { sw.map_2m_extra_ns } else { 0 }
+    }
+
+    /// Units currently queued (for conflation checks in tests).
+    pub fn queued_units(&self) -> impl Iterator<Item = UnitId> + '_ {
+        self.queue.iter().map(|e| e.fault.unit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fault(unit: UnitId) -> FaultInfo {
+        FaultInfo {
+            unit,
+            gpa_frame: unit,
+            gva_page: unit,
+            cr3: 0x1000,
+            ip: 0x400000,
+            write: false,
+            vcpu: 0,
+            pre_cost: 0,
+        }
+    }
+
+    #[test]
+    fn delivery_is_delayed_by_vmexit_cost() {
+        let sw = SwCost::default();
+        let mut u = Uffd::new();
+        let at = u.raise(fault(1), 100, &sw);
+        assert_eq!(at, 100 + 22_000);
+        assert!(u.poll(at - 1).is_none());
+        let ev = u.poll(at).unwrap();
+        assert_eq!(ev.fault.unit, 1);
+        assert_eq!(ev.raised_at, 100);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let sw = SwCost::default();
+        let mut u = Uffd::new();
+        u.raise(fault(1), 0, &sw);
+        u.raise(fault(2), 0, &sw);
+        let t = 1_000_000;
+        assert_eq!(u.poll(t).unwrap().fault.unit, 1);
+        assert_eq!(u.poll(t).unwrap().fault.unit, 2);
+        assert_eq!(u.backlog(), 0);
+    }
+
+    #[test]
+    fn continue_cost_huge_is_bigger() {
+        let sw = SwCost::default();
+        assert!(Uffd::continue_cost(&sw, true) > Uffd::continue_cost(&sw, false));
+    }
+}

@@ -1,0 +1,333 @@
+//! The simulated VM: guest processes + nested translation (guest PT ->
+//! EPT) + per-vCPU TLBs. This is the component that *raises* EPT
+//! violations; everything above it (UFFD, MM, policies) is the system
+//! under test.
+
+use crate::config::{HwConfig, SwCost, VmConfig};
+use crate::guest::{GuestAllocator, GuestProcess};
+use crate::hw::{Ept, Tlb, WalkModel};
+use crate::sim::Rng;
+use crate::types::{PageSize, Time, UnitId};
+
+/// Outcome of one guest memory access.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AccessResult {
+    /// Completed in `cost` ns of guest time.
+    Hit { cost: Time },
+    /// EPT violation: the vCPU is stalled until the unit is mapped.
+    /// `cost` is guest time consumed before the exit.
+    Fault(FaultInfo),
+}
+
+/// Everything the hypervisor knows at EPT-violation time. The VMCS
+/// fields (cr3/ip/gva) flow to policies through the introspection ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultInfo {
+    pub unit: UnitId,
+    pub gpa_frame: u64,
+    pub gva_page: u64,
+    pub cr3: u64,
+    pub ip: u64,
+    pub write: bool,
+    pub vcpu: usize,
+    pub pre_cost: Time,
+}
+
+#[derive(Debug)]
+pub struct Vm {
+    pub cfg: VmConfig,
+    pub allocator: GuestAllocator,
+    pub processes: Vec<GuestProcess>,
+    pub ept: Ept,
+    /// Per-vCPU TLBs: [ (4k, 2M) ].
+    tlbs: Vec<(Tlb, Tlb)>,
+    pub walk: WalkModel,
+    guest_alloc_ns: Time,
+    mem_ns: Time,
+    unit_frames: u64,
+    thp_coverage: f64,
+    /// Host-side THP map over 2MB GPA regions (kernel-baseline mode: the
+    /// kernel starts with THP everywhere and splits on swap-out, which
+    /// permanently shrinks TLB reach). `None` = derive from `unit_frames`
+    /// (strict mode).
+    host_thp: Option<crate::types::Bitmap>,
+    /// Guest first-touch (minor fault) count.
+    pub guest_minor_faults: u64,
+}
+
+impl Vm {
+    pub fn new(cfg: &VmConfig, hw: &HwConfig, sw: &SwCost, rng: &mut Rng) -> Self {
+        let mut allocator = GuestAllocator::new(cfg.frames);
+        allocator.age(cfg.scramble, rng);
+        let tlbs = (0..cfg.vcpus)
+            .map(|_| (Tlb::new(hw.tlb_entries_4k), Tlb::new(hw.tlb_entries_2m)))
+            .collect();
+        Vm {
+            allocator,
+            processes: vec![],
+            ept: Ept::new(cfg.units()),
+            tlbs,
+            walk: WalkModel::new(hw),
+            guest_alloc_ns: sw.guest_alloc_ns,
+            mem_ns: hw.mem_ns,
+            unit_frames: cfg.page_size.unit_frames(),
+            thp_coverage: cfg.guest_thp_coverage,
+            host_thp: None,
+            guest_minor_faults: 0,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Kernel-baseline mode: host memory is THP-backed per 2MB region
+    /// until the kernel splits it on swap-out.
+    pub fn enable_host_thp(&mut self) {
+        let regions = self.cfg.frames.div_ceil(512) as usize;
+        let mut bm = crate::types::Bitmap::new(regions);
+        for r in 0..regions {
+            bm.set(r);
+        }
+        self.host_thp = Some(bm);
+    }
+
+    pub fn host_thp_mut(&mut self) -> Option<&mut crate::types::Bitmap> {
+        self.host_thp.as_mut()
+    }
+
+    /// Ensure a guest mapping exists for `gva_page` (warm-start helper);
+    /// returns the backing frame.
+    pub fn ensure_mapped(&mut self, proc_idx: usize, gva_page: u64) -> Option<u32> {
+        let proc = &mut self.processes[proc_idx];
+        match proc.pt.walk(gva_page) {
+            Some(f) => Some(f),
+            None => proc.pt.map_on_fault(gva_page, &mut self.allocator),
+        }
+    }
+
+    /// Spawn a guest process with a `gva_pages`-page address space.
+    pub fn spawn_process(&mut self, gva_pages: u64) -> usize {
+        let idx = self.processes.len();
+        self.processes.push(GuestProcess::new(idx, gva_pages));
+        idx
+    }
+
+    pub fn unit_frames(&self) -> u64 {
+        self.unit_frames
+    }
+
+    pub fn units(&self) -> u64 {
+        self.ept.units()
+    }
+
+    /// Whether the guest backs this gva region with a THP (deterministic
+    /// pseudo-random per 2MB region, with `thp_coverage` probability).
+    #[inline]
+    fn guest_thp(&self, proc_idx: usize, gva_page: u64) -> bool {
+        let region = gva_page / 512;
+        let h = (region ^ (proc_idx as u64) << 40)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            >> 40;
+        (h as f64 / (1u64 << 24) as f64) < self.thp_coverage
+    }
+
+    /// Execute one guest memory access on `vcpu` at virtual time `now`.
+    ///
+    /// Models, in order: guest demand paging (first touch), TLB lookup,
+    /// nested page walk on miss, EPT presence check (violation -> fault).
+    pub fn access(
+        &mut self,
+        vcpu: usize,
+        proc_idx: usize,
+        gva_page: u64,
+        write: bool,
+        ip: u64,
+        now: Time,
+        rng: &mut Rng,
+    ) -> AccessResult {
+        let mut cost = 0;
+        let proc = &mut self.processes[proc_idx];
+
+        // Guest-side translation (+ demand paging on first touch).
+        let frame = match proc.pt.walk(gva_page) {
+            Some(f) => f,
+            None => {
+                self.guest_minor_faults += 1;
+                cost += self.guest_alloc_ns;
+                match proc.pt.map_on_fault(gva_page, &mut self.allocator) {
+                    Some(f) => f,
+                    // Guest OOM: model as access to frame 0 (guest would
+                    // reclaim; irrelevant to host swap behaviour).
+                    None => 0,
+                }
+            }
+        };
+        proc.pt.touch(gva_page);
+        let asid = proc.asid;
+        let cr3 = proc.cr3;
+
+        let gpa_frame = frame as u64;
+        let unit = gpa_frame / self.unit_frames;
+
+        // TLB: hugepage entries only where both host mode and the guest's
+        // THP policy give a 2MB leaf on both levels.
+        let host_huge = match &self.host_thp {
+            Some(bm) => bm.get((gpa_frame / 512) as usize),
+            None => self.unit_frames > 1,
+        };
+        let huge_leaf = host_huge && self.guest_thp(proc_idx, gva_page);
+        let (tlb4k, tlb2m) = &mut self.tlbs[vcpu];
+        let hit = if huge_leaf {
+            tlb2m.access(asid, gva_page / 512, rng)
+        } else {
+            tlb4k.access(asid, gva_page, rng)
+        };
+
+        if hit {
+            // A TLB entry can only exist for a mapped unit; unmap is
+            // modeled as invalidating (we verify against the EPT).
+            if self.ept.touch(unit, write) {
+                return AccessResult::Hit { cost: cost + self.mem_ns };
+            }
+        }
+
+        // TLB miss (or stale entry): nested page walk.
+        let leaf = if huge_leaf { PageSize::Huge } else { PageSize::Small };
+        cost += self.walk.walk_cost(now, leaf) + self.mem_ns;
+
+        if self.ept.touch(unit, write) {
+            return AccessResult::Hit { cost };
+        }
+
+        // EPT violation.
+        AccessResult::Fault(FaultInfo {
+            unit,
+            gpa_frame,
+            gva_page,
+            cr3,
+            ip,
+            write,
+            vcpu,
+            pre_cost: cost,
+        })
+    }
+
+    /// TLB statistics aggregated over vCPUs: (hits, misses).
+    pub fn tlb_stats(&self) -> (u64, u64) {
+        self.tlbs.iter().fold((0, 0), |(h, m), (a, b)| {
+            (h + a.hits + b.hits, m + a.misses + b.misses)
+        })
+    }
+
+    /// Flush all vCPU TLBs (e.g. after bulk unmap).
+    pub fn flush_tlbs(&mut self) {
+        for (a, b) in &mut self.tlbs {
+            a.flush();
+            b.flush();
+        }
+    }
+
+    /// Resident bytes according to the EPT.
+    pub fn resident_bytes(&self) -> u64 {
+        self.ept.resident_units() * self.unit_frames * crate::types::FRAME_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_vm(mode: PageSize) -> (Vm, Rng) {
+        let cfg = VmConfig {
+            frames: 2048,
+            vcpus: 1,
+            page_size: mode,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(1);
+        let vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        (vm, rng)
+    }
+
+    #[test]
+    fn unmapped_access_faults() {
+        let (mut vm, mut rng) = small_vm(PageSize::Small);
+        let p = vm.spawn_process(2048);
+        match vm.access(0, p, 0, false, 0x400000, 0, &mut rng) {
+            AccessResult::Fault(f) => {
+                assert_eq!(f.gva_page, 0);
+                assert_eq!(f.unit, 0); // unscrambled boot allocator
+                assert!(f.cr3 != 0);
+            }
+            other => panic!("expected fault, got {other:?}"),
+        }
+        assert_eq!(vm.guest_minor_faults, 1);
+    }
+
+    #[test]
+    fn mapped_access_hits() {
+        let (mut vm, mut rng) = small_vm(PageSize::Small);
+        let p = vm.spawn_process(2048);
+        // Map every unit.
+        for u in 0..vm.units() {
+            vm.ept.map(u);
+        }
+        match vm.access(0, p, 5, true, 0, 0, &mut rng) {
+            AccessResult::Hit { cost } => assert!(cost > 0),
+            other => panic!("expected hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn huge_mode_unit_covers_512_frames() {
+        let (mut vm, mut rng) = small_vm(PageSize::Huge);
+        let p = vm.spawn_process(2048);
+        assert_eq!(vm.units(), 4);
+        // Touch frame 0 and frame 511: same unit (sequential allocator).
+        let f1 = match vm.access(0, p, 0, false, 0, 0, &mut rng) {
+            AccessResult::Fault(f) => f.unit,
+            _ => panic!(),
+        };
+        vm.ept.map(f1);
+        match vm.access(0, p, 511, false, 0, 0, &mut rng) {
+            AccessResult::Hit { .. } => {}
+            other => panic!("expected hit in same 2M unit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn repeated_access_warms_tlb() {
+        let (mut vm, mut rng) = small_vm(PageSize::Small);
+        let p = vm.spawn_process(2048);
+        for u in 0..vm.units() {
+            vm.ept.map(u);
+        }
+        for _ in 0..50 {
+            vm.access(0, p, 9, false, 0, 0, &mut rng);
+        }
+        let (h, m) = vm.tlb_stats();
+        assert!(h > 40, "hits {h} misses {m}");
+    }
+
+    #[test]
+    fn scrambled_allocator_decorrelates_gva_gpa() {
+        let cfg = VmConfig {
+            frames: 4096,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble: 1.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(3);
+        let mut vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        let p = vm.spawn_process(4096);
+        let mut units = vec![];
+        for g in 0..256 {
+            if let AccessResult::Fault(f) = vm.access(0, p, g, false, 0, 0, &mut rng) {
+                units.push(f.unit);
+                vm.ept.map(f.unit);
+            }
+        }
+        let seq = units.windows(2).filter(|w| w[1] == w[0] + 1).count();
+        assert!(seq < 32, "gva->gpa still sequential: {seq}");
+    }
+}

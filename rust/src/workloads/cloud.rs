@@ -1,0 +1,434 @@
+//! The eight cloud workloads of §6.3, as parameterized generators.
+//!
+//! We do not have the real applications (repro band 0/5); each preset
+//! encodes the properties the evaluation depends on — working-set size,
+//! spatial locality (how many 4kB chunks of a 2MB page get reused, the
+//! paper's ~500 page-fault ratio), phase structure and hot/cold split —
+//! taken from the paper's own description of each workload.
+
+use super::{Op, Workload};
+use crate::sim::{Rng, Zipf};
+use crate::types::Time;
+
+/// One phase of a cloud workload.
+#[derive(Debug, Clone)]
+pub enum PhaseKind {
+    /// Sequential read sweep over a fraction range of the space.
+    SeqRead(f64, f64),
+    /// Sequential write sweep (initialization, matrix output...).
+    SeqWrite(f64, f64),
+    /// Uniform random over a range.
+    Uniform(f64, f64),
+    /// Gaussian around the range's center.
+    Gauss(f64, f64),
+    /// Zipf-skewed over a range (hot head).
+    ZipfRead(f64, f64, f64),
+    /// Pick a random 2MB-aligned block in range, touch `inner` pages
+    /// inside it (high 2M locality, random at large scale).
+    BlockedRandom { lo: f64, hi: f64, block_pages: u64, inner: u64 },
+    /// Log append: write at a growing head, read mostly the recent tail.
+    AppendLog { tail_frac: f64, old_prob: f64 },
+    /// Host-side DMA touches (VIRTIO/OVS serving path): the page is
+    /// accessed by QEMU/OVS, not the guest — visible only to the QEMU
+    /// page-table scan (§5.4).
+    HostServe { lo: f64, hi: f64, zipf_s: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct PhaseSpec {
+    pub kind: PhaseKind,
+    pub ops: u64,
+    /// Base instruction pointer for this phase (IP-indexed predictors).
+    pub ip: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CloudSpec {
+    pub name: &'static str,
+    /// Guest-virtual pages the workload addresses.
+    pub pages: u64,
+    pub write_ratio: f64,
+    pub phases: Vec<PhaseSpec>,
+    /// Repeat the phase list this many times (steady-state workloads).
+    pub repeats: u32,
+}
+
+impl CloudSpec {
+    pub fn total_ops(&self) -> u64 {
+        self.phases.iter().map(|p| p.ops).sum::<u64>() * self.repeats as u64
+    }
+}
+
+pub struct CloudWorkload {
+    spec: CloudSpec,
+    phase: usize,
+    rep: u32,
+    done_in_phase: u64,
+    seq_cursor: u64,
+    log_head: u64,
+    zipf: Option<Zipf>,
+    zipf_key: (u64, u64),
+}
+
+impl CloudWorkload {
+    pub fn new(spec: CloudSpec) -> Self {
+        CloudWorkload {
+            spec,
+            phase: 0,
+            rep: 0,
+            done_in_phase: 0,
+            seq_cursor: 0,
+            log_head: 1,
+            zipf: None,
+            zipf_key: (u64::MAX, u64::MAX),
+        }
+    }
+
+    pub fn spec(&self) -> &CloudSpec {
+        &self.spec
+    }
+
+    fn range(&self, lo: f64, hi: f64) -> (u64, u64) {
+        let n = self.spec.pages as f64;
+        let a = (lo * n) as u64;
+        let b = ((hi * n) as u64).max(a + 1).min(self.spec.pages);
+        (a, b)
+    }
+}
+
+impl Workload for CloudWorkload {
+    fn next(&mut self, rng: &mut Rng) -> Op {
+        loop {
+            if self.phase >= self.spec.phases.len() {
+                self.rep += 1;
+                if self.rep >= self.spec.repeats {
+                    return Op::Done;
+                }
+                self.phase = 0;
+                self.done_in_phase = 0;
+            }
+            let spec_ops = self.spec.phases[self.phase].ops;
+            if self.done_in_phase >= spec_ops {
+                self.phase += 1;
+                self.done_in_phase = 0;
+                self.seq_cursor = 0;
+                continue;
+            }
+            self.done_in_phase += 1;
+            let ip = self.spec.phases[self.phase].ip;
+            let kind = self.spec.phases[self.phase].kind.clone();
+            let write_ratio = self.spec.write_ratio;
+            let (page, write, host) = match kind {
+                PhaseKind::SeqRead(lo, hi) => {
+                    let (a, b) = self.range(lo, hi);
+                    let p = a + self.seq_cursor % (b - a);
+                    self.seq_cursor += 1;
+                    (p, false, false)
+                }
+                PhaseKind::SeqWrite(lo, hi) => {
+                    let (a, b) = self.range(lo, hi);
+                    let p = a + self.seq_cursor % (b - a);
+                    self.seq_cursor += 1;
+                    (p, true, false)
+                }
+                PhaseKind::Uniform(lo, hi) => {
+                    let (a, b) = self.range(lo, hi);
+                    (rng.range(a, b), rng.chance(write_ratio), false)
+                }
+                PhaseKind::Gauss(lo, hi) => {
+                    let (a, b) = self.range(lo, hi);
+                    let span = (b - a) as f64;
+                    let mid = a as f64 + span / 2.0;
+                    let x = (mid + rng.gauss() * span / 6.0)
+                        .clamp(a as f64, (b - 1) as f64);
+                    (x as u64, rng.chance(write_ratio), false)
+                }
+                PhaseKind::ZipfRead(lo, hi, s) => {
+                    let (a, b) = self.range(lo, hi);
+                    if self.zipf_key != (a, b) {
+                        self.zipf = Some(Zipf::new(b - a, s));
+                        self.zipf_key = (a, b);
+                    }
+                    let k = self.zipf.as_ref().unwrap().sample(rng);
+                    // Spread the zipf rank over the range so the hot head
+                    // isn't artificially GVA-contiguous.
+                    let p = a + (k * 2_654_435_761 % (b - a));
+                    (p, false, false)
+                }
+                PhaseKind::BlockedRandom { lo, hi, block_pages, inner } => {
+                    let (a, b) = self.range(lo, hi);
+                    let blocks = ((b - a) / block_pages).max(1);
+                    // Stay in one block for `inner` consecutive accesses.
+                    let seq_in_block = self.seq_cursor % inner;
+                    if seq_in_block == 0 {
+                        self.log_head = rng.below(blocks); // reuse as block idx
+                    }
+                    self.seq_cursor += 1;
+                    let off = rng.below(block_pages);
+                    (a + self.log_head * block_pages + off, rng.chance(write_ratio), false)
+                }
+                PhaseKind::AppendLog { tail_frac, old_prob } => {
+                    let max = self.spec.pages;
+                    let r = rng.f64();
+                    if r < old_prob && self.log_head > 64 {
+                        // Rare read of old, cold log segments.
+                        (rng.below(self.log_head * 4 / 5), false, false)
+                    } else if r < old_prob + 0.1 {
+                        // Append: advance the head.
+                        self.log_head = (self.log_head + 1).min(max - 1);
+                        (self.log_head, true, false)
+                    } else {
+                        // Hot tail: producers + consumers trail the head;
+                        // bounded so the hot set stays small vs the log.
+                        let tail = ((self.log_head as f64 * tail_frac) as u64)
+                            .clamp(1, 2048);
+                        let lo = self.log_head.saturating_sub(tail);
+                        (rng.range(lo, self.log_head + 1), rng.chance(0.5), false)
+                    }
+                }
+                PhaseKind::HostServe { lo, hi, zipf_s } => {
+                    let (a, b) = self.range(lo, hi);
+                    if self.zipf_key != (a, b) {
+                        self.zipf = Some(Zipf::new(b - a, zipf_s));
+                        self.zipf_key = (a, b);
+                    }
+                    let k = self.zipf.as_ref().unwrap().sample(rng);
+                    (a + (k * 2_654_435_761 % (b - a)), false, true)
+                }
+            };
+            // Cloud workloads do real work between page-granularity
+            // touches; 2us/touch keeps reclamation dynamics (seconds)
+            // and access dynamics on the same simulated clock.
+            let cost: Time = 2_000;
+            if host {
+                // Host-side access: machine routes it to the OVS/vhost
+                // path (page locking + QEMU bitmap), guest not involved.
+                return Op::Access { proc: usize::MAX, gva_page: page, write, ip, cost_ns: cost };
+            }
+            return Op::Access { proc: 0, gva_page: page, write, ip, cost_ns: cost };
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        self.spec.name
+    }
+
+    fn total_ops(&self) -> u64 {
+        self.spec.total_ops()
+    }
+}
+
+pub const CLOUD_NAMES: [&str; 8] =
+    ["bert", "xsbench", "elastic", "g500", "kafka", "matmul", "nginx", "redis"];
+
+/// Build a named cloud workload preset. `scale` multiplies page counts
+/// (1.0 ≈ a 200-350MB guest working set, fast to simulate; raise it to
+/// stress larger VMs).
+pub fn cloud_preset(name: &str, scale: f64) -> CloudSpec {
+    let pg = |p: u64| ((p as f64 * scale) as u64).max(64);
+    let op = |o: u64| ((o as f64 * scale) as u64).max(1000);
+    match name {
+        // BERT inference: weights streamed sequentially per query; a
+        // cold tail of rarely-used buffers. High 2M locality.
+        "bert" => CloudSpec {
+            name: "bert",
+            pages: pg(320_000),
+            write_ratio: 0.05,
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.0, 1.0), ops: op(320_000), ip: 0x10 },
+                PhaseSpec { kind: PhaseKind::SeqRead(0.0, 0.62), ops: op(300_000), ip: 0x11 },
+            ],
+            repeats: 1,
+        },
+        // XSBench: huge read-only cross-section tables; each lookup
+        // lands in a random table region but reads many entries there.
+        "xsbench" => CloudSpec {
+            name: "xsbench",
+            pages: pg(480_000),
+            write_ratio: 0.02,
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.0, 1.0), ops: op(480_000), ip: 0x20 },
+                PhaseSpec {
+                    kind: PhaseKind::BlockedRandom { lo: 0.0, hi: 0.55, block_pages: 512, inner: 384 },
+                    ops: op(300_000),
+                    ip: 0x21,
+                },
+            ],
+            repeats: 1,
+        },
+        // Elasticsearch/Rally: hot index + large cold segment store.
+        "elastic" => CloudSpec {
+            name: "elastic",
+            pages: pg(400_000),
+            write_ratio: 0.15,
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.0, 1.0), ops: op(400_000), ip: 0x30 },
+                PhaseSpec { kind: PhaseKind::ZipfRead(0.0, 0.45, 1.05), ops: op(260_000), ip: 0x31 },
+            ],
+            repeats: 1,
+        },
+        // graph500: construction sweep, then BFS/SSSP phases over
+        // (different) subsets — the paper's phase-change workload.
+        "g500" => CloudSpec {
+            name: "g500",
+            pages: pg(640_000),
+            write_ratio: 0.3,
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.0, 1.0), ops: op(640_000), ip: 0x40 },
+                PhaseSpec { kind: PhaseKind::Uniform(0.0, 0.55), ops: op(140_000), ip: 0x41 },
+                PhaseSpec { kind: PhaseKind::Uniform(0.0, 0.55), ops: op(140_000), ip: 0x42 },
+                PhaseSpec { kind: PhaseKind::Uniform(0.35, 0.95), ops: op(140_000), ip: 0x43 },
+                PhaseSpec { kind: PhaseKind::Uniform(0.35, 0.95), ops: op(140_000), ip: 0x44 },
+            ],
+            repeats: 1,
+        },
+        // Kafka: append-only log, hot head, cold history (the paper's
+        // 71%-reclaimable champion).
+        "kafka" => CloudSpec {
+            name: "kafka",
+            pages: pg(1_280_000),
+            write_ratio: 0.5,
+            phases: vec![PhaseSpec {
+                kind: PhaseKind::AppendLog { tail_frac: 0.08, old_prob: 0.0005 },
+                ops: op(700_000),
+                ip: 0x50,
+            }],
+            repeats: 1,
+        },
+        // OpenBLAS dgemm: repeated sequential panel sweeps, very high
+        // spatial locality, WSS = the three matrices.
+        "matmul" => CloudSpec {
+            name: "matmul",
+            pages: pg(240_000),
+            write_ratio: 0.2,
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.0, 1.0), ops: op(240_000), ip: 0x60 },
+                PhaseSpec { kind: PhaseKind::SeqRead(0.0, 0.66), ops: op(120_000), ip: 0x61 },
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.66, 1.0), ops: op(90_000), ip: 0x62 },
+            ],
+            repeats: 3,
+        },
+        // nginx static files: zipf over the page cache, with ~50% of the
+        // working set touched by the host (OVS/vhost) serving path.
+        "nginx" => CloudSpec {
+            name: "nginx",
+            pages: pg(160_000),
+            write_ratio: 0.05,
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.0, 1.0), ops: op(160_000), ip: 0x70 },
+                PhaseSpec { kind: PhaseKind::ZipfRead(0.0, 1.0, 0.9), ops: op(130_000), ip: 0x71 },
+                PhaseSpec { kind: PhaseKind::HostServe { lo: 0.0, hi: 1.0, zipf_s: 0.9 }, ops: op(130_000), ip: 0x72 },
+            ],
+            repeats: 1,
+        },
+        // Redis + memtier: gauss / random / sequential key sweeps over
+        // the whole dataset — touches everything, ~nothing reclaimable.
+        "redis" => CloudSpec {
+            name: "redis",
+            pages: pg(100_000),
+            write_ratio: 0.3,
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::SeqWrite(0.0, 1.0), ops: op(100_000), ip: 0x80 },
+                PhaseSpec { kind: PhaseKind::Gauss(0.0, 1.0), ops: op(150_000), ip: 0x81 },
+                PhaseSpec { kind: PhaseKind::Uniform(0.0, 1.0), ops: op(120_000), ip: 0x82 },
+                PhaseSpec { kind: PhaseKind::SeqRead(0.0, 1.0), ops: op(120_000), ip: 0x83 },
+            ],
+            repeats: 1,
+        },
+        other => panic!("unknown cloud workload {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_build_and_run() {
+        let mut rng = Rng::new(1);
+        for name in CLOUD_NAMES {
+            let spec = cloud_preset(name, 0.02);
+            let mut w = CloudWorkload::new(spec);
+            let mut accesses = 0u64;
+            loop {
+                match w.next(&mut rng) {
+                    Op::Access { gva_page, .. } => {
+                        assert!(gva_page < w.spec().pages, "{name}");
+                        accesses += 1;
+                    }
+                    Op::Done => break,
+                    _ => {}
+                }
+                assert!(accesses < 10_000_000, "{name} runaway");
+            }
+            assert!(accesses > 1000, "{name} too few ops");
+        }
+    }
+
+    #[test]
+    fn kafka_keeps_old_log_cold() {
+        let mut rng = Rng::new(2);
+        let mut w = CloudWorkload::new(cloud_preset("kafka", 0.1));
+        let pages = w.spec().pages;
+        let total = w.total_ops();
+        let mut last_touch = vec![0u64; pages as usize];
+        let mut op_idx = 0u64;
+        loop {
+            match w.next(&mut rng) {
+                Op::Access { gva_page, .. } => {
+                    op_idx += 1;
+                    last_touch[gva_page as usize] = op_idx;
+                }
+                Op::Done => break,
+                _ => {}
+            }
+        }
+        // Old log segments go cold: a large share of touched pages see
+        // no access in the second half of the run (reclaimable).
+        let cold = last_touch
+            .iter()
+            .filter(|&&t| t > 0 && t < total / 2)
+            .count();
+        let touched = last_touch.iter().filter(|&&t| t > 0).count();
+        assert!(
+            cold as f64 > touched as f64 * 0.35,
+            "kafka cold fraction too small: {cold}/{touched}"
+        );
+    }
+
+    #[test]
+    fn redis_touches_nearly_everything() {
+        let mut rng = Rng::new(3);
+        let mut w = CloudWorkload::new(cloud_preset("redis", 0.05));
+        let pages = w.spec().pages;
+        let mut touched = vec![false; pages as usize];
+        loop {
+            match w.next(&mut rng) {
+                Op::Access { gva_page, .. } => touched[gva_page as usize] = true,
+                Op::Done => break,
+                _ => {}
+            }
+        }
+        let frac = touched.iter().filter(|&&t| t).count() as f64 / pages as f64;
+        assert!(frac > 0.95, "redis coverage {frac}");
+    }
+
+    #[test]
+    fn nginx_has_host_side_accesses() {
+        let mut rng = Rng::new(4);
+        let mut w = CloudWorkload::new(cloud_preset("nginx", 0.05));
+        let mut host = 0;
+        loop {
+            match w.next(&mut rng) {
+                Op::Access { proc, .. } => {
+                    if proc == usize::MAX {
+                        host += 1;
+                    }
+                }
+                Op::Done => break,
+                _ => {}
+            }
+        }
+        assert!(host > 1000, "host accesses {host}");
+    }
+}

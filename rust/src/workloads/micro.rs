@@ -1,0 +1,279 @@
+//! Microbenchmark workloads (paper §3.1, §3.2, §6.1, §6.2, §6.6).
+
+use super::{Op, Workload, OP_COST};
+use crate::sim::Rng;
+use crate::types::Time;
+
+/// Uniform random page accesses over [base, base+pages).
+pub struct UniformRandom {
+    base: u64,
+    pages: u64,
+    remaining: u64,
+    total: u64,
+    pub ip: u64,
+}
+
+impl UniformRandom {
+    pub fn new(base: u64, pages: u64, ops: u64) -> Self {
+        UniformRandom { base, pages, remaining: ops, total: ops, ip: 0x401000 }
+    }
+}
+
+impl Workload for UniformRandom {
+    fn next(&mut self, rng: &mut Rng) -> Op {
+        if self.remaining == 0 {
+            return Op::Done;
+        }
+        self.remaining -= 1;
+        Op::Access {
+            proc: 0,
+            gva_page: self.base + rng.below(self.pages),
+            write: rng.chance(0.3),
+            ip: self.ip,
+            cost_ns: OP_COST,
+        }
+    }
+    fn label(&self) -> &'static str {
+        "uniform"
+    }
+    fn total_ops(&self) -> u64 {
+        self.total
+    }
+}
+
+/// Fig 1 microbenchmark: accesses split between a resident region and a
+/// swapped-out region with probability `cold_ratio`.
+pub struct ColdRatio {
+    pub resident_pages: u64,
+    pub cold_pages: u64,
+    pub cold_ratio: f64,
+    remaining: u64,
+    total: u64,
+}
+
+impl ColdRatio {
+    pub fn new(resident_pages: u64, cold_pages: u64, cold_ratio: f64, ops: u64) -> Self {
+        ColdRatio { resident_pages, cold_pages, cold_ratio, remaining: ops, total: ops }
+    }
+}
+
+impl Workload for ColdRatio {
+    fn next(&mut self, rng: &mut Rng) -> Op {
+        if self.remaining == 0 {
+            return Op::Done;
+        }
+        self.remaining -= 1;
+        let (base, span) = if rng.chance(self.cold_ratio) {
+            (self.resident_pages, self.cold_pages) // cold region after hot
+        } else {
+            (0, self.resident_pages)
+        };
+        Op::Access {
+            proc: 0,
+            gva_page: base + rng.below(span),
+            write: false,
+            ip: 0x402000,
+            cost_ns: OP_COST,
+        }
+    }
+    fn label(&self) -> &'static str {
+        "cold-ratio"
+    }
+    fn total_ops(&self) -> u64 {
+        self.total
+    }
+}
+
+/// Fig 2 microbenchmark: access the first half of a buffer for one
+/// phase, then switch to the second half.
+pub struct AlternatingHalves {
+    pages: u64,
+    phase_ops: u64,
+    done_ops: u64,
+    total: u64,
+}
+
+impl AlternatingHalves {
+    pub fn new(pages: u64, phase_ops: u64) -> Self {
+        AlternatingHalves { pages, phase_ops, done_ops: 0, total: phase_ops * 2 }
+    }
+}
+
+impl Workload for AlternatingHalves {
+    fn next(&mut self, rng: &mut Rng) -> Op {
+        if self.done_ops >= self.total {
+            return Op::Done;
+        }
+        let half = self.pages / 2;
+        let base = if self.done_ops < self.phase_ops { 0 } else { half };
+        self.done_ops += 1;
+        Op::Access {
+            proc: 0,
+            gva_page: base + rng.below(half),
+            write: true,
+            ip: 0x403000,
+            cost_ns: OP_COST,
+        }
+    }
+    fn label(&self) -> &'static str {
+        "alternating-halves"
+    }
+    fn total_ops(&self) -> u64 {
+        self.total
+    }
+}
+
+/// §6.6 workload: strictly sequential page writes, with enough think
+/// time between accesses for a prefetcher to stay ahead.
+pub struct SeqScan {
+    pages: u64,
+    iterations: u64,
+    cursor: u64,
+    think: Time,
+    emitted_think: bool,
+}
+
+impl SeqScan {
+    pub fn new(pages: u64, iterations: u64, think: Time) -> Self {
+        SeqScan { pages, iterations, cursor: 0, think, emitted_think: false }
+    }
+}
+
+impl Workload for SeqScan {
+    fn next(&mut self, _rng: &mut Rng) -> Op {
+        let total = self.pages * self.iterations;
+        if self.cursor >= total {
+            return Op::Done;
+        }
+        if self.think > 0 && !self.emitted_think {
+            self.emitted_think = true;
+            return Op::Think(self.think);
+        }
+        self.emitted_think = false;
+        let page = self.cursor % self.pages;
+        self.cursor += 1;
+        Op::Access { proc: 0, gva_page: page, write: true, ip: 0x404000, cost_ns: OP_COST }
+    }
+    fn label(&self) -> &'static str {
+        "seq-scan"
+    }
+    fn total_ops(&self) -> u64 {
+        self.pages * self.iterations
+    }
+}
+
+/// §6.2 workload: a working set that varies over time in known steps, so
+/// the reclaimer's WSS estimate can be compared against ground truth.
+pub struct PhasedWss {
+    /// (wss_pages, ops) per phase.
+    pub phases: Vec<(u64, u64)>,
+    phase: usize,
+    done_in_phase: u64,
+    total: u64,
+}
+
+impl PhasedWss {
+    pub fn new(phases: Vec<(u64, u64)>) -> Self {
+        let total = phases.iter().map(|p| p.1).sum();
+        PhasedWss { phases, phase: 0, done_in_phase: 0, total }
+    }
+
+    /// Ground-truth WSS for the phase active after `ops_done` accesses.
+    pub fn wss_at(&self, mut ops_done: u64) -> u64 {
+        for &(wss, ops) in &self.phases {
+            if ops_done < ops {
+                return wss;
+            }
+            ops_done -= ops;
+        }
+        self.phases.last().map(|p| p.0).unwrap_or(0)
+    }
+}
+
+impl Workload for PhasedWss {
+    fn next(&mut self, rng: &mut Rng) -> Op {
+        loop {
+            let Some(&(wss, ops)) = self.phases.get(self.phase) else {
+                return Op::Done;
+            };
+            if self.done_in_phase >= ops {
+                self.phase += 1;
+                self.done_in_phase = 0;
+                continue;
+            }
+            self.done_in_phase += 1;
+            return Op::Access {
+                proc: 0,
+                gva_page: rng.below(wss),
+                write: rng.chance(0.5),
+                ip: 0x405000 + self.phase as u64,
+                cost_ns: 500, // slower touch rate: WSS dynamics visible
+            };
+        }
+    }
+    fn label(&self) -> &'static str {
+        "phased-wss"
+    }
+    fn total_ops(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_ratio_splits_regions() {
+        let mut rng = Rng::new(2);
+        let mut w = ColdRatio::new(100, 1000, 0.5, 10_000);
+        let (mut hot, mut cold) = (0u64, 0u64);
+        while let Op::Access { gva_page, .. } = w.next(&mut rng) {
+            if gva_page < 100 {
+                hot += 1;
+            } else {
+                cold += 1;
+            }
+        }
+        assert!(hot > 4500 && cold > 4500, "{hot}/{cold}");
+    }
+
+    #[test]
+    fn alternating_switches_halves() {
+        let mut rng = Rng::new(3);
+        let mut w = AlternatingHalves::new(100, 10);
+        let mut first = vec![];
+        loop {
+            match w.next(&mut rng) {
+                Op::Access { gva_page, .. } => first.push(gva_page),
+                Op::Done => break,
+                _ => {}
+            }
+        }
+        assert!(first[..10].iter().all(|&p| p < 50));
+        assert!(first[10..].iter().all(|&p| p >= 50));
+    }
+
+    #[test]
+    fn seq_scan_is_sequential_with_think() {
+        let mut rng = Rng::new(4);
+        let mut w = SeqScan::new(5, 2, 100);
+        let mut pages = vec![];
+        loop {
+            match w.next(&mut rng) {
+                Op::Access { gva_page, .. } => pages.push(gva_page),
+                Op::Done => break,
+                Op::Think(t) => assert_eq!(t, 100),
+            }
+        }
+        assert_eq!(pages, vec![0, 1, 2, 3, 4, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn phased_wss_ground_truth() {
+        let w = PhasedWss::new(vec![(100, 10), (500, 10), (50, 10)]);
+        assert_eq!(w.wss_at(0), 100);
+        assert_eq!(w.wss_at(10), 500);
+        assert_eq!(w.wss_at(25), 50);
+    }
+}

@@ -1,0 +1,59 @@
+//! Workload generators: the microbenchmarks of §3/§6.1-§6.2 and the
+//! eight cloud workloads of §6.3 (modeled on the paper's reported
+//! working-set sizes, locality and phase structure — see DESIGN.md §2
+//! for why generator-based substitution preserves the evaluation).
+
+pub mod cloud;
+pub mod micro;
+
+pub use cloud::{cloud_preset, CloudSpec, CloudWorkload, CLOUD_NAMES};
+pub use micro::{AlternatingHalves, ColdRatio, PhasedWss, SeqScan, UniformRandom};
+
+use crate::sim::Rng;
+use crate::types::Time;
+
+/// One step of a guest workload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Touch a guest-virtual page.
+    Access { proc: usize, gva_page: u64, write: bool, ip: u64, cost_ns: Time },
+    /// Compute without memory traffic.
+    Think(Time),
+    /// The workload finished its fixed amount of work.
+    Done,
+}
+
+/// A guest workload: a deterministic stream of operations.
+pub trait Workload {
+    fn next(&mut self, rng: &mut Rng) -> Op;
+    fn label(&self) -> &'static str;
+    /// Total accesses this workload will issue (for progress metrics).
+    fn total_ops(&self) -> u64;
+}
+
+/// Convenience: per-access base cost used by all generators (accounts
+/// for the non-memory instructions around each touch).
+pub const OP_COST: Time = 40;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_terminates_and_stays_in_range() {
+        let mut rng = Rng::new(1);
+        let mut w = UniformRandom::new(0, 100, 1000);
+        let mut n = 0;
+        loop {
+            match w.next(&mut rng) {
+                Op::Access { gva_page, .. } => {
+                    assert!(gva_page < 100);
+                    n += 1;
+                }
+                Op::Done => break,
+                _ => {}
+            }
+        }
+        assert_eq!(n, 1000);
+    }
+}

@@ -1,0 +1,332 @@
+//! Cross-module integration tests + randomized property tests on the
+//! coordinator invariants (proptest is not in the offline crate set, so
+//! properties are driven by the crate's own deterministic RNG across
+//! many seeds — failures print the offending seed).
+
+use flexswap::config::{HostConfig, LinuxConfig, MmConfig, VmConfig};
+use flexswap::coordinator::{Machine, Mechanism, VmSetup};
+use flexswap::mm::Mm;
+use flexswap::policies::{
+    DtReclaimer, LinearPf, LruReclaimer, NativeAnalytics, PfMode, WsrPolicy,
+};
+use flexswap::sim::Rng;
+use flexswap::types::{PageSize, UnitState, MS, SEC};
+use flexswap::workloads::{cloud_preset, CloudWorkload, SeqScan, UniformRandom};
+
+fn vm_cfg(frames: u64, mode: PageSize) -> VmConfig {
+    VmConfig {
+        frames,
+        vcpus: 1,
+        page_size: mode,
+        scramble: 0.05, // fresh-boot allocator (see harness::eval)
+        guest_thp_coverage: 1.0,
+    }
+}
+
+/// Property: under any (seeded) random workload and limit, the MM never
+/// exceeds its memory limit by more than the in-flight allowance, all
+/// vCPUs finish, and the unit state machine ends consistent with the
+/// EPT.
+#[test]
+fn prop_limit_and_state_consistency() {
+    for seed in 0..12u64 {
+        let mut outer = Rng::new(seed * 7 + 1);
+        let frames = 2048 + outer.below(4096);
+        let pages = frames / 2 + outer.below(frames / 3);
+        let limit_units = pages / 4 + outer.below(pages / 4) + 8;
+        let mode = if outer.chance(0.5) { PageSize::Small } else { PageSize::Huge };
+        let limit_bytes = match mode {
+            PageSize::Small => limit_units * 4096,
+            PageSize::Huge => (limit_units * 4096).max(8 * 2 * 1024 * 1024),
+        };
+        let mut m = Machine::new(HostConfig { seed, ..Default::default() });
+        let mm_cfg = MmConfig {
+            memory_limit: Some(limit_bytes),
+            scan_interval: 40 * MS,
+            history: 8,
+            ..Default::default()
+        };
+        let ops = 20_000 + outer.below(30_000);
+        let vmid = m.sys_vm(
+            vm_cfg(frames, mode),
+            &mm_cfg,
+            vec![Box::new(UniformRandom::new(0, pages, ops))],
+        );
+        let res = m.run();
+        assert_eq!(res[0].work_ops, ops, "seed {seed}: workload incomplete");
+
+        let mm = m.mm(vmid).unwrap();
+        let limit = mm.core.limit_units.unwrap();
+        assert!(
+            mm.core.usage_units <= limit + mm.swapper.threads() as u64,
+            "seed {seed}: usage {} over limit {}",
+            mm.core.usage_units,
+            limit
+        );
+        // State machine vs EPT consistency.
+        let vm = m.vm_ref(vmid);
+        for (u, st) in mm.core.states.iter().enumerate() {
+            match st {
+                UnitState::Resident => assert!(
+                    vm.ept.present(u as u64),
+                    "seed {seed}: resident unit {u} not mapped"
+                ),
+                UnitState::Swapped | UnitState::Untouched | UnitState::Staged => {
+                    assert!(
+                        !vm.ept.present(u as u64),
+                        "seed {seed}: {st:?} unit {u} mapped"
+                    )
+                }
+                _ => {} // in-flight at end of run is fine
+            }
+        }
+        // No stranded waiters (every fault eventually resolved).
+        assert!(
+            mm.core.waiters.is_empty(),
+            "seed {seed}: stranded waiters {:?}",
+            mm.core.waiters
+        );
+    }
+}
+
+/// Property: determinism — identical seeds give identical runs across
+/// mechanisms and page sizes.
+#[test]
+fn prop_determinism_across_configs() {
+    for seed in [3u64, 17, 91] {
+        for mode in [PageSize::Small, PageSize::Huge] {
+            let run = || {
+                let mut m = Machine::new(HostConfig { seed, ..Default::default() });
+                let mm_cfg = MmConfig {
+                    scan_interval: 100 * MS,
+                    history: 8,
+                    memory_limit: Some(4 * 1024 * 1024 * 4),
+                    ..Default::default()
+                };
+                m.sys_vm(
+                    vm_cfg(8192, mode),
+                    &mm_cfg,
+                    vec![Box::new(UniformRandom::new(0, 6000, 40_000))],
+                );
+                let r = m.run();
+                (
+                    r[0].runtime,
+                    r[0].counters.faults_major,
+                    r[0].counters.swapout_ops,
+                    r[0].counters.swapin_bytes,
+                )
+            };
+            assert_eq!(run(), run(), "seed {seed} mode {mode:?}");
+        }
+    }
+}
+
+/// The paper's headline: proactive 2M reclamation keeps performance
+/// close to no-swapping while saving significant memory on a cold-heavy
+/// workload (kafka).
+#[test]
+fn kafka_2m_saves_memory_without_tanking() {
+    let spec = cloud_preset("kafka", 0.5);
+    let frames = spec.pages + 1024;
+    let run = |reclaim: bool| {
+        let mut m = Machine::new(HostConfig::default());
+        let mm_cfg = MmConfig {
+            scan_interval: if reclaim { 10 * MS } else { 3600 * SEC },
+            history: 16,
+            ..Default::default()
+        };
+        let spec = cloud_preset("kafka", 0.5);
+        m.sys_vm(
+            vm_cfg(frames, PageSize::Huge),
+            &mm_cfg,
+            vec![Box::new(CloudWorkload::new(spec))],
+        );
+        let r = m.run();
+        (r[0].runtime, r[0].avg_usage_bytes)
+    };
+    let (rt_base, mem_base) = run(false);
+    let (rt_sys, mem_sys) = run(true);
+    let perf = rt_base as f64 / rt_sys as f64;
+    let saved = 1.0 - mem_sys / mem_base;
+    // Scale note (EXPERIMENTS.md): at simulation scale the 2MB unit
+    // count is ~1000x smaller than the paper's 128GB VMs, so first-touch
+    // scatter into reclaimed hugepages costs relatively more perf than
+    // the paper's ~95%; the savings shape (~70%+) holds.
+    assert!(perf > 0.20, "perf {perf}");
+    assert!(saved > 0.40, "saved {saved}");
+}
+
+/// Kernel baseline on the same workload: runs and reclaims under cgroup.
+#[test]
+fn kernel_baseline_under_cgroup() {
+    let mut m = Machine::new(HostConfig::default());
+    let lx = LinuxConfig {
+        thp: true,
+        memory_limit: Some(1024 * 4096),
+        ..Default::default()
+    };
+    m.kernel_vm(
+        vm_cfg(8192, PageSize::Small),
+        &lx,
+        vec![Box::new(UniformRandom::new(0, 4096, 50_000))],
+        None,
+        200 * MS,
+    );
+    let res = m.run();
+    assert_eq!(res[0].work_ops, 50_000);
+    assert!(res[0].counters.swapout_ops > 0);
+    // THP coverage degrades when swap splits hugepages (§6.4).
+    assert!(res[0].thp_coverage < 1.0);
+}
+
+/// WSR end-to-end: recovery after a limit lift is faster with the
+/// working-set-restore policy than without (paper Fig 13).
+#[test]
+fn wsr_speeds_up_recovery() {
+    let pages = 6_000u64;
+    let run = |wsr: bool| {
+        let mut m = Machine::new(HostConfig::default());
+        let mm_cfg = MmConfig {
+            scan_interval: 100 * MS,
+            history: 8,
+            memory_limit: Some(pages * 4096 * 3 / 10),
+            ..Default::default()
+        };
+        let cfgv = vm_cfg(pages + 512, PageSize::Small);
+        let units = cfgv.units();
+        let mut mm = Mm::new(
+            &mm_cfg,
+            units,
+            cfgv.page_size.unit_bytes(),
+            &m.host.sw,
+            m.host.hw.zero_2m_ns,
+        );
+        mm.add_policy(Box::new(DtReclaimer::new(
+            Box::new(NativeAnalytics::new()),
+            8,
+            0.02,
+        )));
+        if wsr {
+            mm.add_policy(Box::new(WsrPolicy::new(units)));
+        }
+        mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
+        let vmid = m.add_vm(VmSetup {
+            vm_cfg: cfgv,
+            mech: Mechanism::Sys(Box::new(mm)),
+            workloads: vec![Box::new(UniformRandom::new(0, pages, 400_000))],
+            scan_interval: Some(100 * MS),
+        });
+        m.plan_limit_change(vmid, 1 * SEC, None);
+        let r = m.run();
+        r[0].runtime
+    };
+    let without = run(false);
+    let with = run(true);
+    assert!(
+        with < without,
+        "wsr {with} should beat plain {without}"
+    );
+}
+
+/// GVA prefetcher end-to-end beats no-prefetch on an aged sequential
+/// workload (paper §6.6).
+#[test]
+fn gva_prefetcher_improves_sequential() {
+    let pages = 4_000u64;
+    let run = |pf: Option<PfMode>| {
+        let mut m = Machine::new(HostConfig::default());
+        let mm_cfg = MmConfig {
+            scan_interval: 500 * MS,
+            memory_limit: Some(pages * 4096 * 3 / 4),
+            ..Default::default()
+        };
+        let cfgv = VmConfig { scramble: 1.0, ..vm_cfg(pages + 512, PageSize::Small) };
+        let units = cfgv.units();
+        let mut mm = Mm::new(
+            &mm_cfg,
+            units,
+            cfgv.page_size.unit_bytes(),
+            &m.host.sw,
+            m.host.hw.zero_2m_ns,
+        );
+        if let Some(mode) = pf {
+            mm.add_policy(Box::new(LinearPf::new(mode)));
+        }
+        mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
+        m.add_vm(VmSetup {
+            vm_cfg: cfgv,
+            mech: Mechanism::Sys(Box::new(mm)),
+            workloads: vec![Box::new(SeqScan::new(pages, 4, 300_000))],
+            scan_interval: Some(500 * MS),
+        });
+        let r = m.run();
+        (r[0].runtime, r[0].counters.faults_major)
+    };
+    let (rt_none, _) = run(None);
+    let (rt_gva, majors_gva) = run(Some(PfMode::Gva));
+    let (rt_hva, majors_hva) = run(Some(PfMode::Hva));
+    assert!(rt_gva < rt_none, "gva {rt_gva} vs none {rt_none}");
+    assert!(
+        majors_gva * 4 < majors_hva.max(1),
+        "gva majors {majors_gva} vs hva {majors_hva}"
+    );
+    let _ = rt_hva;
+}
+
+/// Page locking: DMA-locked units survive aggressive reclamation.
+#[test]
+fn locked_units_never_swapped() {
+    let mut m = Machine::new(HostConfig::default());
+    let mm_cfg = MmConfig { scan_interval: 20 * MS, history: 8, ..Default::default() };
+    // scramble 0.0: gva == gpa == unit, so we can lock known units.
+    let cfgv = VmConfig { scramble: 0.0, ..vm_cfg(4096, PageSize::Small) };
+    let vmid = m.sys_vm(
+        cfgv,
+        &mm_cfg,
+        vec![Box::new(UniformRandom::new(0, 1024, 1_500_000))],
+    );
+    m.prime_resident(vmid, 2048);
+    {
+        let mm = m.mm_mut(vmid).unwrap();
+        for u in 1500..1600u64 {
+            mm.core.locks.lock(u);
+        }
+    }
+    let _ = m.run();
+    let mm = m.mm(vmid).unwrap();
+    for u in 1500..1600usize {
+        assert_eq!(
+            mm.core.states[u],
+            UnitState::Resident,
+            "locked unit {u} was reclaimed"
+        );
+    }
+    // Reclamation did happen around the locked range: a cold unlocked
+    // unit was swapped while the locked ones survived.
+    assert_ne!(mm.core.states[1400], UnitState::Resident, "cold unit kept");
+    assert!(mm.core.locks.denied_swapouts > 0, "lock never exercised");
+}
+
+/// Multi-VM fleet shares one device without interference bugs.
+#[test]
+fn multi_vm_fleet_all_complete() {
+    let mut m = Machine::new(HostConfig::default());
+    for i in 0..4 {
+        let mm_cfg = MmConfig {
+            scan_interval: 100 * MS,
+            history: 8,
+            memory_limit: if i % 2 == 0 { Some(512 * 4096) } else { None },
+            ..Default::default()
+        };
+        m.sys_vm(
+            vm_cfg(2048, if i % 2 == 0 { PageSize::Small } else { PageSize::Huge }),
+            &mm_cfg,
+            vec![Box::new(UniformRandom::new(0, 1500, 25_000))],
+        );
+    }
+    let res = m.run();
+    assert_eq!(res.len(), 4);
+    for (i, r) in res.iter().enumerate() {
+        assert_eq!(r.work_ops, 25_000, "vm {i}");
+    }
+}
