@@ -1,6 +1,9 @@
 //! Minimal bench harness (criterion is not in the offline crate set):
 //! warms up, runs timed iterations, reports mean / p50 / p99 and
 //! throughput. Deterministic iteration counts for comparable runs.
+//!
+//! Shared by multiple bench binaries, each of which uses a subset.
+#![allow(dead_code)]
 
 use std::time::Instant;
 
@@ -10,6 +13,17 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: u64,
     pub p99_ns: u64,
+}
+
+impl BenchResult {
+    /// Iterations per second implied by the mean.
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
 }
 
 pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchResult {
@@ -45,4 +59,38 @@ pub fn bench_once<F: FnOnce() -> u64>(name: &str, f: F) {
     let rows = f();
     let wall = t0.elapsed().as_secs_f64();
     println!("{:<12} wall {:>8.2}s   ({} result rows)", name, wall, rows);
+}
+
+/// Emit results as machine-readable JSON (hand-rolled: serde is not in
+/// the offline crate set). Schema `flexswap-bench-v1`: per benchmark
+/// name, iteration count, mean/p50/p99 ns and derived ops/s — the
+/// bench-trajectory format tracked at the repo root from PR 1 onward.
+pub fn write_json(
+    bench_name: &str,
+    path: &std::path::Path,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"flexswap-bench-v1\",\n");
+    s.push_str(&format!("  \"bench\": \"{bench_name}\",\n"));
+    s.push_str(&format!(
+        "  \"generated_by\": \"cargo bench --bench {bench_name}\",\n"
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+             \"p50_ns\": {}, \"p99_ns\": {}, \"ops_per_sec\": {:.0}}}{}\n",
+            r.name,
+            r.iters,
+            r.mean_ns,
+            r.p50_ns,
+            r.p99_ns,
+            r.ops_per_sec(),
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
 }

@@ -2,10 +2,14 @@
 //! path, plus the analytics backends (native vs XLA artifact ablation).
 //!
 //! Run: `cargo bench --bench hotpath`
+//!
+//! Besides the console table, results are written to
+//! `BENCH_hotpath.json` at the repo root so the bench trajectory is
+//! tracked across PRs (schema: flexswap-bench-v1).
 
 mod common;
 
-use common::bench;
+use common::{bench, BenchResult};
 use flexswap::config::{HwConfig, MmConfig, SwCost};
 use flexswap::mm::queues::QueueClass;
 use flexswap::mm::Mm;
@@ -34,16 +38,17 @@ fn fault_ev(unit: u64) -> UffdEvent {
 
 fn main() {
     println!("== flexswap hot-path microbenchmarks ==\n");
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // Swapper queue ops: push+pop with conflation checks.
     {
         let mut q = flexswap::mm::SwapperQueue::new(65_536);
         let mut i = 0u64;
-        bench("swapper_queue push+pop", 200_000, || {
+        results.push(bench("swapper_queue push+pop", 200_000, || {
             q.push(i % 65_536, QueueClass::Fault);
             q.pop(false);
             i += 1;
-        });
+        }));
     }
 
     // Policy-engine fault handling (no policies) — the critical path.
@@ -64,23 +69,23 @@ fn main() {
         );
         let mut mm = Mm::new(&MmConfig::default(), 65_536, 4096, &SwCost::default(), 0);
         let mut i = 0u64;
-        bench("policy_engine on_fault + pick_work", 100_000, || {
+        results.push(bench("policy_engine on_fault + pick_work", 100_000, || {
             let u = i % 65_536;
             mm.on_fault(&vm, &fault_ev(u), i);
             if mm.pick_work(i).is_some() {
                 let _ = mm.finish_swapin(&mut vm, u, false, i);
             }
             i += 1;
-        });
+        }));
     }
 
     // TLB access path.
     {
         let mut tlb = flexswap::hw::Tlb::new(1536);
         let mut rng = Rng::new(2);
-        bench("tlb access (miss-heavy)", 500_000, || {
+        results.push(bench("tlb access (miss-heavy)", 500_000, || {
             tlb.access(1, rng.below(1 << 22), &mut rng);
-        });
+        }));
     }
 
     // EPT scan of 64k units.
@@ -90,10 +95,10 @@ fn main() {
             ept.map(u);
         }
         let mut bm = Bitmap::new(65_536);
-        bench("ept scan_and_clear (64k units)", 2_000, || {
+        results.push(bench("ept scan_and_clear (64k units)", 2_000, || {
             bm.zero();
             ept.scan_and_clear(&mut bm);
-        });
+        }));
     }
 
     // Analytics ablation: native vs XLA artifact over H=32, N=65536.
@@ -111,14 +116,14 @@ fn main() {
             })
             .collect();
         let mut nat = NativeAnalytics::new();
-        bench("dt_reclaim analytics native (64k units)", 20, || {
+        results.push(bench("dt_reclaim analytics native (64k units)", 20, || {
             let _ = nat.dt_reclaim(&hist, 0.02, 5.0);
-        });
+        }));
         match flexswap::runtime::XlaAnalytics::from_artifacts("artifacts") {
             Ok(mut x) => {
-                bench("dt_reclaim analytics xla-pjrt (64k units)", 20, || {
+                results.push(bench("dt_reclaim analytics xla-pjrt (64k units)", 20, || {
                     let _ = x.dt_reclaim(&hist, 0.02, 5.0);
-                });
+                }));
             }
             Err(e) => println!("(xla analytics skipped: {e})"),
         }
@@ -133,10 +138,44 @@ fn main() {
         }
         let mut lru = flexswap::policies::LruReclaimer::new();
         use flexswap::mm::LimitReclaimer;
-        bench("lru victim (64k resident)", 20_000, || {
+        results.push(bench("lru victim (64k resident)", 20_000, || {
             if let Some(v) = lru.victim(&core, u64::MAX) {
                 core.want_out.set(v as usize);
             }
-        });
+        }));
+    }
+
+    // LRU steady state: touches and victims interleaved through the O(1)
+    // incremental path (no want_out exhaustion, no rebuilds).
+    {
+        let mut core = flexswap::mm::EngineCore::new(65_536, 4096, Some(32_768));
+        for u in 0..65_536usize {
+            core.states[u] = flexswap::types::UnitState::Resident;
+            core.last_touch[u] = u as u64;
+        }
+        let mut lru = flexswap::policies::LruReclaimer::new();
+        use flexswap::mm::LimitReclaimer;
+        let mut t = 65_536u64;
+        let mut rng = Rng::new(4);
+        results.push(bench("lru touch+victim steady state", 200_000, || {
+            t += 1;
+            let u = rng.below(65_536);
+            core.last_touch[u as usize] = t;
+            lru.touch(u, t);
+            if let Some(v) = lru.victim(&core, t) {
+                // Re-admit immediately so the resident set stays full.
+                core.last_touch[v as usize] = t;
+                lru.touch(v, t);
+            }
+        }));
+    }
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_hotpath.json"))
+        .unwrap_or_else(|| "BENCH_hotpath.json".into());
+    match common::write_json("hotpath", &path, &results) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
     }
 }

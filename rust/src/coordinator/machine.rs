@@ -488,11 +488,10 @@ impl Machine {
     fn scan_tick(&mut self, vmid: usize) {
         let now = self.clock;
         let slot = &mut self.slots[vmid];
-        let qemu = std::mem::replace(
-            &mut slot.qemu_bits,
-            Bitmap::new(slot.vm.units() as usize),
-        );
-        let out = self.scanner.scan(&mut slot.vm, Some(&qemu), now);
+        // Borrow the host-client bitmap in place and word-clear it after
+        // the scan — no per-tick Bitmap allocation.
+        let out = self.scanner.scan(&mut slot.vm, Some(&slot.qemu_bits), now);
+        slot.qemu_bits.zero();
         match &mut slot.mech {
             Mechanism::Sys(mm) => {
                 mm.core.counters.scan_cpu_ns += out.cpu_ns;
@@ -642,6 +641,9 @@ impl Machine {
                     if mm.core.states[ui] != crate::types::UnitState::Resident {
                         mm.core.states[ui] = crate::types::UnitState::Resident;
                         mm.core.usage_units += 1;
+                        // Register with the reclaimer's recency structure
+                        // at time 0 (coldest, ascending-unit tie order).
+                        mm.note_touch(unit, 0);
                     }
                 }
                 Mechanism::Kernel(k, _) => {

@@ -5,81 +5,106 @@
 //! We only track what the paper's mechanisms consume: presence (an EPT
 //! violation is raised on non-present access), and A/D bits (read +
 //! cleared by the EPT scanner, §5.4).
+//!
+//! The bits live in three parallel [`Bitmap`]s rather than a per-unit
+//! flag byte so [`Ept::scan_and_clear`] — the direct CPU cost that
+//! bounds how aggressively policies can scan (§3.3, Fig 3) — operates
+//! on 64 units per AND/clear instead of one unit per branch.
 
 use crate::types::{Bitmap, UnitId};
-
-const PRESENT: u8 = 1;
-const ACCESSED: u8 = 2;
-const DIRTY: u8 = 4;
 
 /// EPT over `units` swap units.
 #[derive(Debug, Clone)]
 pub struct Ept {
-    flags: Vec<u8>,
+    present: Bitmap,
+    accessed: Bitmap,
+    dirty: Bitmap,
 }
 
 impl Ept {
     pub fn new(units: u64) -> Self {
-        Ept { flags: vec![0; units as usize] }
+        Ept {
+            present: Bitmap::new(units as usize),
+            accessed: Bitmap::new(units as usize),
+            dirty: Bitmap::new(units as usize),
+        }
     }
 
     pub fn units(&self) -> u64 {
-        self.flags.len() as u64
+        self.present.len() as u64
     }
 
     /// True if the unit is mapped (no EPT violation on access).
     #[inline]
     pub fn present(&self, unit: UnitId) -> bool {
-        self.flags[unit as usize] & PRESENT != 0
+        self.present.get(unit as usize)
     }
 
     /// Record a guest access; returns false if it raises an EPT violation.
     #[inline]
     pub fn touch(&mut self, unit: UnitId, write: bool) -> bool {
-        let f = &mut self.flags[unit as usize];
-        if *f & PRESENT == 0 {
+        let ui = unit as usize;
+        if !self.present.get(ui) {
             return false;
         }
-        *f |= ACCESSED | if write { DIRTY } else { 0 };
+        self.accessed.set(ui);
+        if write {
+            self.dirty.set(ui);
+        }
         true
     }
 
     /// Install a leaf mapping (UFFDIO_CONTINUE resolved the violation).
     pub fn map(&mut self, unit: UnitId) {
         // Mapping implies an immediate access by the faulting instruction.
-        self.flags[unit as usize] |= PRESENT | ACCESSED;
+        self.present.set(unit as usize);
+        self.accessed.set(unit as usize);
     }
 
     /// Remove a leaf (MADV_DONTNEED on swap-out).
     pub fn unmap(&mut self, unit: UnitId) {
-        self.flags[unit as usize] = 0;
+        self.present.clear(unit as usize);
+        self.accessed.clear(unit as usize);
+        self.dirty.clear(unit as usize);
     }
 
     pub fn accessed(&self, unit: UnitId) -> bool {
-        self.flags[unit as usize] & ACCESSED != 0
+        self.accessed.get(unit as usize)
     }
 
     pub fn dirty(&self, unit: UnitId) -> bool {
-        self.flags[unit as usize] & DIRTY != 0
+        self.dirty.get(unit as usize)
     }
 
     pub fn clear_dirty(&mut self, unit: UnitId) {
-        self.flags[unit as usize] &= !DIRTY;
+        self.dirty.clear(unit as usize);
     }
 
     /// Scan: copy A-bits into a bitmap and clear them (the kernel-module
     /// behaviour the userspace EPT scanner drives). Returns the number of
     /// *present* leaves visited (scan cost scales with PTE count).
+    ///
+    /// Word-parallel: each 64-unit word costs one popcount plus, only
+    /// when some present unit was accessed, one OR into `out` and one
+    /// AND-NOT to clear — no per-unit branching.
     pub fn scan_and_clear(&mut self, out: &mut Bitmap) -> u64 {
         assert_eq!(out.len() as u64, self.units());
-        let mut visited = 0;
-        for (i, f) in self.flags.iter_mut().enumerate() {
-            if *f & PRESENT != 0 {
-                visited += 1;
-                if *f & ACCESSED != 0 {
-                    out.set(i);
-                    *f &= !ACCESSED;
-                }
+        let mut visited = 0u64;
+        let pw = self.present.as_words();
+        let aw = self.accessed.as_words_mut();
+        let ow = out.as_words_mut();
+        for ((&p, a), o) in pw.iter().zip(aw.iter_mut()).zip(ow.iter_mut()) {
+            if p == 0 {
+                continue;
+            }
+            visited += p.count_ones() as u64;
+            // `accessed` is a subset of `present` by construction (touch
+            // requires presence, unmap clears both), but mask anyway so a
+            // stray bit can never leak into the scan output.
+            let hit = *a & p;
+            if hit != 0 {
+                *o |= hit;
+                *a &= !hit;
             }
         }
         visited
@@ -87,7 +112,7 @@ impl Ept {
 
     /// Present-unit count (resident memory in units).
     pub fn resident_units(&self) -> u64 {
-        self.flags.iter().filter(|f| **f & PRESENT != 0).count() as u64
+        self.present.count_ones() as u64
     }
 }
 
@@ -130,5 +155,38 @@ mod tests {
         assert!(!e.present(0));
         assert!(!e.touch(0, false));
         assert_eq!(e.resident_units(), 0);
+    }
+
+    #[test]
+    fn scan_across_word_boundaries() {
+        // Units straddling the 64-bit word edges must scan correctly.
+        let mut e = Ept::new(130);
+        for u in [0u64, 63, 64, 65, 128, 129] {
+            e.map(u);
+        }
+        e.unmap(65); // present gap inside the second word
+        let mut bm = Bitmap::new(130);
+        let visited = e.scan_and_clear(&mut bm);
+        assert_eq!(visited, 5);
+        let ones: Vec<_> = bm.iter_ones().collect();
+        assert_eq!(ones, vec![0, 63, 64, 128, 129]);
+        // A-bits cleared, presence retained.
+        assert_eq!(e.resident_units(), 5);
+        let mut bm2 = Bitmap::new(130);
+        assert_eq!(e.scan_and_clear(&mut bm2), 5);
+        assert_eq!(bm2.count_ones(), 0);
+    }
+
+    #[test]
+    fn dirty_tracking_survives_scan() {
+        let mut e = Ept::new(4);
+        e.map(1);
+        e.touch(1, true);
+        let mut bm = Bitmap::new(4);
+        e.scan_and_clear(&mut bm);
+        // Scanning clears A, never D (write-back elision depends on it).
+        assert!(e.dirty(1) && !e.accessed(1));
+        e.clear_dirty(1);
+        assert!(!e.dirty(1));
     }
 }

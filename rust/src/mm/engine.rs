@@ -8,7 +8,7 @@
 //! state machine and the limit accounting before any work is queued.
 
 use std::collections::BTreeMap;
-use std::collections::HashMap;
+use std::fmt;
 
 use crate::config::{MmConfig, SwCost};
 use crate::introspect::{FaultCtx, GvaWalker, VmcsRing};
@@ -131,9 +131,94 @@ pub trait LimitReclaimer {
     fn name(&self) -> &'static str;
     /// Observe events to train victim selection.
     fn note(&mut self, ev: &PolicyEvent);
+    /// O(1) recency notification: the engine calls this on *every*
+    /// `last_touch` update (faults, swap-in completions, scan hits) so
+    /// incremental reclaimers can maintain their structures without a
+    /// per-fault event allocation or hash lookup. Default: ignore.
+    fn touch(&mut self, _unit: UnitId, _now: Time) {}
     /// Choose a victim among resident units; never a locked/queued unit
     /// (the engine re-validates anyway).
     fn victim(&mut self, core: &EngineCore, now: Time) -> Option<UnitId>;
+}
+
+/// Index-based waiter table: per-unit lists of vCPUs blocked on a fault,
+/// preallocated per unit so the fault path never hashes. Replaces the
+/// old `HashMap<UnitId, Vec<usize>>` (a hash + probe per fault, per
+/// pickup and per completion).
+#[derive(Clone)]
+pub struct WaiterMap {
+    lists: Vec<Vec<usize>>,
+    nonempty: usize,
+}
+
+impl WaiterMap {
+    pub fn new(units: u64) -> Self {
+        WaiterMap { lists: vec![Vec::new(); units as usize], nonempty: 0 }
+    }
+
+    /// Append a waiting vCPU to the unit's list.
+    #[inline]
+    pub fn push(&mut self, unit: UnitId, vcpu: usize) {
+        let l = &mut self.lists[unit as usize];
+        if l.is_empty() {
+            self.nonempty += 1;
+        }
+        l.push(vcpu);
+    }
+
+    /// Any vCPU waiting on this unit?
+    #[inline]
+    pub fn has(&self, unit: UnitId) -> bool {
+        !self.lists[unit as usize].is_empty()
+    }
+
+    /// Remove and return the unit's waiters (empty vec if none). The
+    /// buffer moves out with its capacity; the slot restarts empty, so
+    /// the next fault on the same unit re-allocates (one small alloc
+    /// per fault *burst*, not per fault — piggybacking waiters append).
+    pub fn take(&mut self, unit: UnitId) -> Vec<usize> {
+        let l = &mut self.lists[unit as usize];
+        if l.is_empty() {
+            return Vec::new();
+        }
+        self.nonempty -= 1;
+        std::mem::take(l)
+    }
+
+    /// Waiters for one unit (None if empty) — kept HashMap-call-shaped
+    /// for tests.
+    pub fn get(&self, unit: &UnitId) -> Option<&Vec<usize>> {
+        let l = &self.lists[*unit as usize];
+        if l.is_empty() {
+            None
+        } else {
+            Some(l)
+        }
+    }
+
+    /// True when no unit has waiters.
+    pub fn is_empty(&self) -> bool {
+        self.nonempty == 0
+    }
+
+    /// Number of units with at least one waiter.
+    pub fn waiting_units(&self) -> usize {
+        self.nonempty
+    }
+}
+
+impl fmt::Debug for WaiterMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_map()
+            .entries(
+                self.lists
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| !l.is_empty())
+                    .map(|(u, l)| (u, l)),
+            )
+            .finish()
+    }
 }
 
 /// Shared engine state: unit state machine, queues, accounting.
@@ -146,7 +231,7 @@ pub struct EngineCore {
     /// Unit content exists on the backing store and is unmodified.
     clean_on_disk: Bitmap,
     pub queue: SwapperQueue,
-    pub waiters: HashMap<UnitId, Vec<usize>>,
+    pub waiters: WaiterMap,
     /// Units in DRAM (Resident + in-flight transitions holding DRAM).
     pub usage_units: u64,
     pub limit_units: Option<u64>,
@@ -179,7 +264,7 @@ impl EngineCore {
             prefetch_intent: Bitmap::new(units as usize),
             clean_on_disk: Bitmap::new(units as usize),
             queue: SwapperQueue::new(units),
-            waiters: HashMap::new(),
+            waiters: WaiterMap::new(units),
             usage_units: 0,
             limit_units,
             planned_in: 0,
@@ -263,7 +348,7 @@ impl EngineCore {
             let ui = unit as usize;
             match self.states[ui] {
                 UnitState::Untouched => {
-                    if self.waiters.contains_key(&unit) {
+                    if self.waiters.has(unit) {
                         self.states[ui] = UnitState::SwappingIn;
                         let cost = sw.queue_handoff_ns
                             + if self.huge { zero_pool.take() } else { 0 }
@@ -275,12 +360,12 @@ impl EngineCore {
                     self.counters.conflated_ops += 1;
                 }
                 UnitState::Swapped => {
-                    let wanted = self.waiters.contains_key(&unit)
+                    let wanted = self.waiters.has(unit)
                         || self.prefetch_intent.get(ui);
                     if wanted {
                         self.states[ui] = UnitState::SwappingIn;
                         if self.prefetch_intent.get(ui)
-                            && !self.waiters.contains_key(&unit)
+                            && !self.waiters.has(unit)
                         {
                             self.prefetched_untouched.set(ui);
                         }
@@ -321,7 +406,7 @@ impl EngineCore {
                     self.counters.conflated_ops += 1;
                 }
                 UnitState::Staged => {
-                    if self.waiters.contains_key(&unit) {
+                    if self.waiters.has(unit) {
                         self.states[ui] = UnitState::SwappingIn;
                         let cost = sw.queue_handoff_ns
                             + Uffd::continue_cost(sw, self.huge);
@@ -489,6 +574,17 @@ impl Mm {
         }
     }
 
+    /// Record a touch (fault, swap-in completion or scan hit): updates
+    /// the shared `last_touch` LRU info and notifies the limit
+    /// reclaimer's incremental recency structure — O(1), no event
+    /// construction, no hash lookup.
+    pub fn note_touch(&mut self, unit: UnitId, now: Time) {
+        self.core.last_touch[unit as usize] = now;
+        if let Some(r) = self.limit_reclaimer.as_mut() {
+            r.touch(unit, now);
+        }
+    }
+
     /// Deliver one UFFD fault event to the engine (paper §4.1 steps 5-6).
     /// Returns true if the fault needs swapper work (the machine should
     /// dispatch workers).
@@ -496,7 +592,7 @@ impl Mm {
         let unit = ev.fault.unit;
         let ui = unit as usize;
         self.core.pf_count += 1;
-        self.core.last_touch[ui] = now;
+        self.note_touch(unit, now);
 
         let ctx = self.ring.take(ev.fault.gpa_frame);
         let state = self.core.states[ui];
@@ -532,19 +628,19 @@ impl Mm {
             UnitState::Staged => {
                 // Prefetched content already in DRAM: minor fault, map
                 // only (usage already accounted at stage time).
-                self.core.waiters.entry(unit).or_default().push(ev.fault.vcpu);
+                self.core.waiters.push(unit, ev.fault.vcpu);
                 self.core.queue.push(unit, QueueClass::Fault);
                 true
             }
             UnitState::SwappingIn => {
-                self.core.waiters.entry(unit).or_default().push(ev.fault.vcpu);
+                self.core.waiters.push(unit, ev.fault.vcpu);
                 false
             }
             UnitState::SwappingOut => {
                 // Fault on a page being swapped out: queue it; the
                 // swap-out completion re-queues a swap-in (conflation).
-                let first = !self.core.waiters.contains_key(&unit);
-                self.core.waiters.entry(unit).or_default().push(ev.fault.vcpu);
+                let first = !self.core.waiters.has(unit);
+                self.core.waiters.push(unit, ev.fault.vcpu);
                 if first {
                     self.core.planned_in += 1;
                 }
@@ -552,8 +648,8 @@ impl Mm {
                 true
             }
             UnitState::Untouched | UnitState::Swapped => {
-                let first = !self.core.waiters.contains_key(&unit);
-                self.core.waiters.entry(unit).or_default().push(ev.fault.vcpu);
+                let first = !self.core.waiters.has(unit);
+                self.core.waiters.push(unit, ev.fault.vcpu);
                 if first {
                     if self.core.prefetch_intent.get(ui) {
                         // A queued prefetch is upgraded into this fault;
@@ -601,8 +697,8 @@ impl Mm {
         }
         self.core.counters.swapin_ops += 1;
         self.core.counters.swapin_bytes += self.core.unit_bytes;
-        self.core.last_touch[ui] = now;
-        let wake = self.core.waiters.remove(&unit).unwrap_or_default();
+        self.note_touch(unit, now);
+        let wake = self.core.waiters.take(unit);
         if wake.is_empty() && self.core.prefetched_untouched.get(ui) {
             // Pure prefetch: stage without mapping (the next fault turns
             // minor — no I/O on its path; paper §6.6/§6.8 behaviour).
@@ -629,10 +725,10 @@ impl Mm {
         let ui = unit as usize;
         debug_assert_eq!(self.core.states[ui], UnitState::SwappingIn);
         self.core.states[ui] = UnitState::Resident;
-        self.core.last_touch[ui] = now;
+        self.note_touch(unit, now);
         vm.ept.map(unit);
         vm.ept.clear_dirty(unit);
-        let wake = self.core.waiters.remove(&unit).unwrap_or_default();
+        let wake = self.core.waiters.take(unit);
         let cost = Uffd::continue_cost(&self.sw, self.core.huge);
         (cost, wake)
     }
@@ -656,7 +752,7 @@ impl Mm {
         // flight; its entry may have been conflated away while the unit
         // was in flight, so re-queue it for a swap-in.
         let ui2 = unit as usize;
-        if self.core.waiters.contains_key(&unit) {
+        if self.core.waiters.has(unit) {
             if !self.core.queue.contains(unit) {
                 self.core.queue.push(unit, QueueClass::Fault);
             }
@@ -689,8 +785,11 @@ impl Mm {
 
     /// Deliver a scan bitmap to policies + update shared LRU info.
     pub fn on_scan(&mut self, vm: &Vm, bitmap: &Bitmap, now: Time) {
+        // Ascending-unit order matters: equal-timestamp scan hits enter
+        // the reclaimer's recency structure in unit order, matching the
+        // (last_touch, unit) sort the rank-based reclaimers use.
         for u in bitmap.iter_ones() {
-            self.core.last_touch[u] = now;
+            self.note_touch(u as UnitId, now);
             if self.core.prefetched_untouched.get(u) {
                 self.core.prefetched_untouched.clear(u);
                 self.core.counters.prefetch_timely += 1;
@@ -952,5 +1051,64 @@ mod tests {
         m.pick_work(0).unwrap(); // now SwappingIn
         assert!(!m.on_fault(&vm, &ev1, 1)); // piggybacks
         assert_eq!(m.core.waiters.get(&6).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn waiter_map_push_take_counts() {
+        let mut w = WaiterMap::new(8);
+        assert!(w.is_empty());
+        w.push(3, 0);
+        w.push(3, 1);
+        w.push(5, 2);
+        assert!(w.has(3) && w.has(5) && !w.has(4));
+        assert_eq!(w.waiting_units(), 2);
+        assert_eq!(w.get(&3).unwrap().len(), 2);
+        assert_eq!(w.take(3), vec![0, 1]);
+        assert!(!w.has(3));
+        assert_eq!(w.take(3), Vec::<usize>::new());
+        assert_eq!(w.waiting_units(), 1);
+        assert_eq!(w.take(5), vec![2]);
+        assert!(w.is_empty());
+        // Debug prints only non-empty entries.
+        w.push(2, 7);
+        assert_eq!(format!("{w:?}"), "{2: [7]}");
+    }
+
+    #[test]
+    fn touches_flow_to_limit_reclaimer() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        struct Recorder(Rc<RefCell<Vec<(UnitId, Time)>>>);
+        impl LimitReclaimer for Recorder {
+            fn name(&self) -> &'static str {
+                "recorder"
+            }
+            fn note(&mut self, _ev: &PolicyEvent) {}
+            fn touch(&mut self, unit: UnitId, now: Time) {
+                self.0.borrow_mut().push((unit, now));
+            }
+            fn victim(&mut self, _core: &EngineCore, _now: Time) -> Option<UnitId> {
+                None
+            }
+        }
+
+        let touches = Rc::new(RefCell::new(vec![]));
+        let mut m = mm(8, None);
+        let (mut vm, _) = vm_for(8);
+        m.set_limit_reclaimer(Box::new(Recorder(touches.clone())));
+        // Fault -> touch; swap-in completion -> touch; scan hit -> touch.
+        m.on_fault(&vm, &fault_ev(3), 100);
+        m.pick_work(100).unwrap();
+        m.finish_swapin(&mut vm, 3, false, 200);
+        let mut bm = Bitmap::new(8);
+        bm.set(1);
+        bm.set(3);
+        m.on_scan(&vm, &bm, 300);
+        assert_eq!(
+            touches.borrow().as_slice(),
+            &[(3, 100), (3, 200), (1, 300), (3, 300)]
+        );
+        assert_eq!(m.core.last_touch[3], 300);
     }
 }

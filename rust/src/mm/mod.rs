@@ -8,7 +8,9 @@ pub mod queues;
 pub mod swapper;
 pub mod zero_pool;
 
-pub use engine::{EngineCore, LimitReclaimer, Mm, MmStats, Policy, PolicyApi, PolicyEvent};
+pub use engine::{
+    EngineCore, LimitReclaimer, Mm, MmStats, Policy, PolicyApi, PolicyEvent, WaiterMap,
+};
 pub use queues::SwapperQueue;
 pub use swapper::{Swapper, WorkOutcome};
 pub use zero_pool::ZeroPool;

@@ -7,10 +7,18 @@
 //! instead of a redundant I/O round trip.
 //!
 //! Priority order: page faults > swap-outs (limit pressure) > prefetch.
+//!
+//! Every operation is O(1) amortized. Membership is a per-unit class
+//! tag; a fault upgrade retags the unit and appends a fresh entry to the
+//! fault queue, leaving the old entry behind as a *tombstone* (its
+//! per-unit stamp no longer matches) that `pop` skips lazily. Each push
+//! creates at most one physical entry and each entry is popped at most
+//! once, so tombstone skipping is covered by the push that created it —
+//! no `iter().position()` scans anywhere on the fault path.
 
 use std::collections::VecDeque;
 
-use crate::types::{Bitmap, UnitId};
+use crate::types::UnitId;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QueueClass {
@@ -19,13 +27,35 @@ pub enum QueueClass {
     Prefetch,
 }
 
+/// `class_of` value for "not queued".
+const TAG_NONE: u8 = 0;
+
+#[inline]
+fn tag(class: QueueClass) -> u8 {
+    match class {
+        QueueClass::Fault => 1,
+        QueueClass::Reclaim => 2,
+        QueueClass::Prefetch => 3,
+    }
+}
+
 #[derive(Debug)]
 pub struct SwapperQueue {
-    fault_q: VecDeque<UnitId>,
-    reclaim_q: VecDeque<UnitId>,
-    prefetch_q: VecDeque<UnitId>,
-    /// Membership bitmap: a unit appears at most once across all queues.
-    queued: Bitmap,
+    fault_q: VecDeque<(UnitId, u32)>,
+    reclaim_q: VecDeque<(UnitId, u32)>,
+    prefetch_q: VecDeque<(UnitId, u32)>,
+    /// Per-unit queue membership: TAG_NONE or tag(class).
+    class_of: Vec<u8>,
+    /// Per-unit push generation; a queue entry is live iff its stamp
+    /// matches (tombstones do not).
+    stamp: Vec<u32>,
+    /// Logical (tombstone-free) membership count per class.
+    counts: [usize; 3],
+    /// Outstanding tombstones per class queue. Only fault upgrades
+    /// create tombstones (in the reclaim/prefetch queues); when a
+    /// queue's dead entries outnumber its live ones, it is compacted so
+    /// physical size stays O(live) even under sustained upgrade churn.
+    dead: [usize; 3],
     pub enqueued: u64,
     pub conflated_enqueues: u64,
 }
@@ -36,39 +66,66 @@ impl SwapperQueue {
             fault_q: VecDeque::new(),
             reclaim_q: VecDeque::new(),
             prefetch_q: VecDeque::new(),
-            queued: Bitmap::new(units as usize),
+            class_of: vec![TAG_NONE; units as usize],
+            stamp: vec![0; units as usize],
+            counts: [0; 3],
+            dead: [0; 3],
             enqueued: 0,
             conflated_enqueues: 0,
         }
     }
 
+    /// Drop dead entries from one class queue when they outnumber live
+    /// ones. Amortized O(1): each retained pass is paid for by the
+    /// upgrades that created the tombstones.
+    fn maybe_compact(&mut self, cur: u8) {
+        let ci = (cur - 1) as usize;
+        if self.dead[ci] <= self.counts[ci] + 8 {
+            return;
+        }
+        let (class_of, stamp) = (&self.class_of, &self.stamp);
+        let live = |&(u, s): &(UnitId, u32)| {
+            class_of[u as usize] == cur && stamp[u as usize] == s
+        };
+        match cur {
+            1 => self.fault_q.retain(live),
+            2 => self.reclaim_q.retain(live),
+            _ => self.prefetch_q.retain(live),
+        }
+        self.dead[ci] = 0;
+    }
+
     /// Enqueue a unit for attention. Re-enqueueing an already-queued unit
     /// is the conflation case: the entry stays where it is (the swapper
     /// will re-derive the correct action anyway), unless the new class is
-    /// `Fault`, which upgrades the unit into the fault queue.
+    /// `Fault`, which upgrades the unit into the fault queue in O(1) by
+    /// retagging it and tombstoning the old entry.
     pub fn push(&mut self, unit: UnitId, class: QueueClass) {
-        if self.queued.get(unit as usize) {
+        let ui = unit as usize;
+        let t = tag(class);
+        let cur = self.class_of[ui];
+        if cur != TAG_NONE {
             self.conflated_enqueues += 1;
-            if class == QueueClass::Fault {
-                // Upgrade: remove from lower-priority queues if present.
-                if let Some(p) = self.reclaim_q.iter().position(|&u| u == unit) {
-                    self.reclaim_q.remove(p);
-                    self.fault_q.push_back(unit);
-                } else if let Some(p) =
-                    self.prefetch_q.iter().position(|&u| u == unit)
-                {
-                    self.prefetch_q.remove(p);
-                    self.fault_q.push_back(unit);
-                }
+            if class == QueueClass::Fault && cur != t {
+                self.counts[(cur - 1) as usize] -= 1;
+                self.counts[0] += 1;
+                self.dead[(cur - 1) as usize] += 1;
+                self.class_of[ui] = t;
+                self.stamp[ui] = self.stamp[ui].wrapping_add(1);
+                self.fault_q.push_back((unit, self.stamp[ui]));
+                self.maybe_compact(cur);
             }
             return;
         }
-        self.queued.set(unit as usize);
+        self.class_of[ui] = t;
+        self.stamp[ui] = self.stamp[ui].wrapping_add(1);
+        self.counts[(t - 1) as usize] += 1;
         self.enqueued += 1;
+        let s = self.stamp[ui];
         match class {
-            QueueClass::Fault => self.fault_q.push_back(unit),
-            QueueClass::Reclaim => self.reclaim_q.push_back(unit),
-            QueueClass::Prefetch => self.prefetch_q.push_back(unit),
+            QueueClass::Fault => self.fault_q.push_back((unit, s)),
+            QueueClass::Reclaim => self.reclaim_q.push_back((unit, s)),
+            QueueClass::Prefetch => self.prefetch_q.push_back((unit, s)),
         }
     }
 
@@ -76,31 +133,40 @@ impl SwapperQueue {
     /// reclaims (used when the engine is at the memory limit and must
     /// drain swap-outs before admitting more swap-ins).
     pub fn pop(&mut self, prefer_out: bool) -> Option<(UnitId, QueueClass)> {
-        let order: [(QueueClass, bool); 3] = if prefer_out {
-            [(QueueClass::Reclaim, true), (QueueClass::Fault, true), (QueueClass::Prefetch, true)]
+        let order: [QueueClass; 3] = if prefer_out {
+            [QueueClass::Reclaim, QueueClass::Fault, QueueClass::Prefetch]
         } else {
-            [(QueueClass::Fault, true), (QueueClass::Reclaim, true), (QueueClass::Prefetch, true)]
+            [QueueClass::Fault, QueueClass::Reclaim, QueueClass::Prefetch]
         };
-        for (class, _) in order {
-            let q = match class {
-                QueueClass::Fault => &mut self.fault_q,
-                QueueClass::Reclaim => &mut self.reclaim_q,
-                QueueClass::Prefetch => &mut self.prefetch_q,
-            };
-            if let Some(u) = q.pop_front() {
-                self.queued.clear(u as usize);
-                return Some((u, class));
+        for class in order {
+            let t = tag(class);
+            loop {
+                let q = match class {
+                    QueueClass::Fault => &mut self.fault_q,
+                    QueueClass::Reclaim => &mut self.reclaim_q,
+                    QueueClass::Prefetch => &mut self.prefetch_q,
+                };
+                let Some((unit, s)) = q.pop_front() else { break };
+                let ui = unit as usize;
+                if self.class_of[ui] == t && self.stamp[ui] == s {
+                    self.class_of[ui] = TAG_NONE;
+                    self.counts[(t - 1) as usize] -= 1;
+                    return Some((unit, class));
+                }
+                // Tombstone (upgraded or re-pushed since): skip.
+                self.dead[(t - 1) as usize] = self.dead[(t - 1) as usize].saturating_sub(1);
             }
         }
         None
     }
 
     pub fn contains(&self, unit: UnitId) -> bool {
-        self.queued.get(unit as usize)
+        self.class_of[unit as usize] != TAG_NONE
     }
 
+    /// Logical length: units currently queued (tombstones excluded).
     pub fn len(&self) -> usize {
-        self.fault_q.len() + self.reclaim_q.len() + self.prefetch_q.len()
+        self.counts.iter().sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -108,10 +174,16 @@ impl SwapperQueue {
     }
 
     pub fn pending_reclaims(&self) -> usize {
-        self.reclaim_q.len()
+        self.counts[1]
     }
     pub fn pending_faults(&self) -> usize {
-        self.fault_q.len()
+        self.counts[0]
+    }
+
+    /// Physical entries including tombstones (compaction bound checks).
+    #[cfg(test)]
+    fn physical_len(&self) -> usize {
+        self.fault_q.len() + self.reclaim_q.len() + self.prefetch_q.len()
     }
 }
 
@@ -167,5 +239,131 @@ mod tests {
         assert!(q.contains(1));
         q.pop(false);
         assert!(!q.contains(1));
+    }
+
+    #[test]
+    fn tombstone_does_not_resurrect_after_requeue() {
+        let mut q = SwapperQueue::new(8);
+        // reclaim -> fault upgrade -> pop -> fresh reclaim: the stale
+        // reclaim entry must not surface for the fresh membership.
+        q.push(3, QueueClass::Reclaim);
+        q.push(3, QueueClass::Fault);
+        assert_eq!(q.pop(false), Some((3, QueueClass::Fault)));
+        q.push(4, QueueClass::Reclaim);
+        q.push(3, QueueClass::Reclaim);
+        // FIFO among live entries: 4 was pushed before 3's re-push; the
+        // tombstone ahead of it must be skipped, not returned.
+        assert_eq!(q.pop(false), Some((4, QueueClass::Reclaim)));
+        assert_eq!(q.pop(false), Some((3, QueueClass::Reclaim)));
+        assert_eq!(q.pop(false), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn upgrade_churn_does_not_accumulate_tombstones() {
+        let mut q = SwapperQueue::new(1024);
+        for round in 0..10_000u64 {
+            let u = round % 1024;
+            q.push(u, QueueClass::Reclaim);
+            q.push(u, QueueClass::Fault); // upgrade -> reclaim_q tombstone
+            assert_eq!(q.pop(false), Some((u, QueueClass::Fault)));
+        }
+        // Dead entries are compacted away: physical size stays O(live),
+        // not O(upgrades) (10k churn rounds here).
+        assert!(q.physical_len() <= 64, "physical {}", q.physical_len());
+        assert!(q.is_empty());
+    }
+
+    /// Reference model: the original three-queue implementation with
+    /// eager linear-scan removal. The tombstone queue must be
+    /// observationally identical under arbitrary op sequences.
+    struct RefModel {
+        f: Vec<UnitId>,
+        r: Vec<UnitId>,
+        p: Vec<UnitId>,
+    }
+
+    impl RefModel {
+        fn new() -> Self {
+            RefModel { f: vec![], r: vec![], p: vec![] }
+        }
+        fn contains(&self, u: UnitId) -> bool {
+            self.f.contains(&u) || self.r.contains(&u) || self.p.contains(&u)
+        }
+        fn push(&mut self, u: UnitId, c: QueueClass) {
+            if self.contains(u) {
+                if c == QueueClass::Fault && !self.f.contains(&u) {
+                    self.r.retain(|&x| x != u);
+                    self.p.retain(|&x| x != u);
+                    self.f.push(u);
+                }
+                return;
+            }
+            match c {
+                QueueClass::Fault => self.f.push(u),
+                QueueClass::Reclaim => self.r.push(u),
+                QueueClass::Prefetch => self.p.push(u),
+            }
+        }
+        fn pop(&mut self, prefer_out: bool) -> Option<(UnitId, QueueClass)> {
+            let order = if prefer_out {
+                [QueueClass::Reclaim, QueueClass::Fault, QueueClass::Prefetch]
+            } else {
+                [QueueClass::Fault, QueueClass::Reclaim, QueueClass::Prefetch]
+            };
+            for c in order {
+                let q = match c {
+                    QueueClass::Fault => &mut self.f,
+                    QueueClass::Reclaim => &mut self.r,
+                    QueueClass::Prefetch => &mut self.p,
+                };
+                if !q.is_empty() {
+                    return Some((q.remove(0), c));
+                }
+            }
+            None
+        }
+        fn len(&self) -> usize {
+            self.f.len() + self.r.len() + self.p.len()
+        }
+    }
+
+    #[test]
+    fn randomized_ops_match_reference_model() {
+        use crate::sim::Rng;
+        let units = 64u64;
+        let mut rng = Rng::new(99);
+        let mut q = SwapperQueue::new(units);
+        let mut m = RefModel::new();
+        for step in 0..20_000 {
+            if rng.below(10) < 6 {
+                let u = rng.below(units);
+                let c = match rng.below(3) {
+                    0 => QueueClass::Fault,
+                    1 => QueueClass::Reclaim,
+                    _ => QueueClass::Prefetch,
+                };
+                q.push(u, c);
+                m.push(u, c);
+            } else {
+                let prefer_out = rng.chance(0.3);
+                assert_eq!(q.pop(prefer_out), m.pop(prefer_out), "step {step}");
+            }
+            // Membership invariant: a unit appears at most once across
+            // all queues, and both implementations agree on membership.
+            assert_eq!(q.len(), m.len(), "step {step}");
+            for u in 0..units {
+                assert_eq!(q.contains(u), m.contains(u), "unit {u} step {step}");
+            }
+        }
+        // Drain: the remaining pop sequences must match exactly.
+        loop {
+            let (a, b) = (q.pop(false), m.pop(false));
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert!(q.is_empty() && q.pending_faults() == 0 && q.pending_reclaims() == 0);
     }
 }

@@ -25,16 +25,22 @@ pub enum WorkOutcome {
     Drop { unit: UnitId, cost: Time },
 }
 
-/// Worker-pool occupancy tracking.
+/// Worker-pool occupancy tracking. Idle workers sit on a free list so
+/// `claim` is O(1) (the machine claims a worker per queued work item —
+/// a linear occupancy scan would sit right behind the fault path).
 #[derive(Debug)]
 pub struct Swapper {
     busy: Vec<bool>,
+    /// Idle worker stack; top is the most recently released.
+    free: Vec<usize>,
     pub jobs_done: u64,
 }
 
 impl Swapper {
     pub fn new(threads: usize) -> Self {
-        Swapper { busy: vec![false; threads.max(1)], jobs_done: 0 }
+        let n = threads.max(1);
+        // Reverse so the first claims hand out workers 0, 1, 2, ...
+        Swapper { busy: vec![false; n], free: (0..n).rev().collect(), jobs_done: 0 }
     }
 
     pub fn threads(&self) -> usize {
@@ -43,20 +49,28 @@ impl Swapper {
 
     /// Claim an idle worker, if any.
     pub fn claim(&mut self) -> Option<usize> {
-        let idx = self.busy.iter().position(|b| !b)?;
+        let idx = self.free.pop()?;
+        debug_assert!(!self.busy[idx]);
         self.busy[idx] = true;
         Some(idx)
     }
 
-    /// Release a worker after its chain completes.
+    /// Release a worker after its chain completes. Idempotent: a
+    /// double release must not put a duplicate on the free list (the
+    /// old occupancy-scan implementation tolerated this, so degrade
+    /// gracefully in release builds too).
     pub fn release(&mut self, worker: usize) {
-        debug_assert!(self.busy[worker]);
+        debug_assert!(self.busy[worker], "double release of worker {worker}");
+        if !self.busy[worker] {
+            return;
+        }
         self.busy[worker] = false;
+        self.free.push(worker);
         self.jobs_done += 1;
     }
 
     pub fn idle_workers(&self) -> usize {
-        self.busy.iter().filter(|b| !**b).count()
+        self.free.len()
     }
 }
 

@@ -89,18 +89,22 @@ impl Policy for AggressivePolicy {
                 let Some(mut set) = self.old_set.take() else {
                     return;
                 };
-                // Accessed units are not old.
-                for u in bitmap.iter_ones() {
-                    set.clear(u);
-                }
-                // Reclaim up to the per-tick budget from the old set.
+                // Accessed units are not old (word-parallel subtraction).
+                set.and_not_assign(bitmap);
+                // Reclaim up to the per-tick budget from the old set. The
+                // victims are a prefix of iter_ones, so the drained span
+                // clears as one word-parallel range op instead of
+                // per-unit bit clears.
                 let budget =
                     (self.per_tick_bytes / api.core.unit_bytes).max(1) as usize;
-                let victims: Vec<usize> = set.iter_ones().take(budget).collect();
-                for u in &victims {
-                    api.reclaim(*u as u64);
-                    set.clear(*u);
+                let mut drained_to = None;
+                for u in set.iter_ones().take(budget) {
+                    api.reclaim(u as u64);
+                    drained_to = Some(u);
                     self.reclaimed_units += 1;
+                }
+                if let Some(hi) = drained_to {
+                    set.clear_range(0, hi + 1);
                 }
                 if set.count_ones() == 0 {
                     // Old set drained: leave reclaim mode.

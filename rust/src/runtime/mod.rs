@@ -7,30 +7,17 @@
 //!
 //! Python never runs at simulation time — the artifacts are compiled
 //! once by `make artifacts`, and this module is the only consumer.
-
-use std::path::Path;
-
-use anyhow::{bail, Context, Result};
-
-use crate::policies::analytics::{ColdAnalytics, DtOutput, ErtScorer};
-use crate::types::Bitmap;
-
-/// Executes the `dt_reclaim` and `ert_victim` artifacts on the PJRT CPU
-/// client, tiling inputs to the artifact's static shapes.
-pub struct XlaAnalytics {
-    client: xla::PjRtClient,
-    dt_exe: xla::PjRtLoadedExecutable,
-    ert_exe: xla::PjRtLoadedExecutable,
-    /// Artifact shapes from manifest.json.
-    pub history: usize,
-    pub pages: usize,
-    pub ert_entries: usize,
-    pub dt_calls: u64,
-    pub ert_calls: u64,
-}
+//!
+//! The PJRT path needs the `xla` and `anyhow` crates, which are not in
+//! the offline crate set, so it is gated behind the `xla` cargo
+//! feature. The default build ships a stub whose `from_artifacts`
+//! always fails with [`XlaUnavailable`]; every caller already falls
+//! back to [`crate::policies::NativeAnalytics`] on error, so the
+//! system degrades to the native backend transparently.
 
 /// Minimal extraction of the integer fields we need from manifest.json
 /// (no JSON dependency in the offline build).
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn manifest_field(text: &str, section: &str, key: &str) -> Option<usize> {
     let sec = text.find(&format!("\"{section}\""))?;
     let rest = &text[sec..];
@@ -45,282 +32,438 @@ fn manifest_field(text: &str, section: &str, key: &str) -> Option<usize> {
     digits.parse().ok()
 }
 
-impl XlaAnalytics {
-    /// Load artifacts from `dir` (expects dt_reclaim.hlo.txt,
-    /// ert_victim.hlo.txt, manifest.json).
-    pub fn from_artifacts<P: AsRef<Path>>(dir: P) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
-        let history = manifest_field(&manifest, "dt_reclaim", "history")
-            .context("manifest: dt_reclaim.history")?;
-        let pages = manifest_field(&manifest, "dt_reclaim", "pages")
-            .context("manifest: dt_reclaim.pages")?;
-        let ert_entries = manifest_field(&manifest, "ert_victim", "entries")
-            .context("manifest: ert_victim.entries")?;
+/// Error returned by the stub: the crate was built without the `xla`
+/// feature, so PJRT execution is unavailable.
+#[cfg(not(feature = "xla"))]
+#[derive(Debug, Clone, Copy)]
+pub struct XlaUnavailable;
 
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("path utf8")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client.compile(&comp).with_context(|| format!("compiling {name}"))
-        };
-        Ok(XlaAnalytics {
-            dt_exe: load("dt_reclaim.hlo.txt")?,
-            ert_exe: load("ert_victim.hlo.txt")?,
-            client,
-            history,
-            pages,
-            ert_entries,
-            dt_calls: 0,
-            ert_calls: 0,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute the dt_reclaim artifact on one [H, pages] tile.
-    fn dt_tile(
-        &mut self,
-        hist_rows: &[Vec<f32>],
-        target_rate: f32,
-        prev_threshold: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)> {
-        let h = self.history;
-        let n = self.pages;
-        let mut flat = Vec::with_capacity(h * n);
-        for row in hist_rows {
-            debug_assert_eq!(row.len(), n);
-            flat.extend_from_slice(row);
-        }
-        let hist = xla::Literal::vec1(&flat).reshape(&[h as i64, n as i64])?;
-        let tr = xla::Literal::scalar(target_rate);
-        let pt = xla::Literal::scalar(prev_threshold);
-        let result = self.dt_exe.execute::<xla::Literal>(&[hist, tr, pt])?[0][0]
-            .to_literal_sync()?;
-        // Lowered with return_tuple=True: 5-tuple.
-        let elems = result.to_tuple()?;
-        if elems.len() != 5 {
-            bail!("dt_reclaim returned {} outputs, expected 5", elems.len());
-        }
-        let age = elems[0].to_vec::<f32>()?;
-        let cnt = elems[1].to_vec::<f32>()?;
-        let histo = elems[2].to_vec::<f32>()?;
-        let proposed = elems[3].to_vec::<f32>()?[0];
-        let smoothed = elems[4].to_vec::<f32>()?[0];
-        self.dt_calls += 1;
-        Ok((age, cnt, histo, proposed, smoothed))
-    }
-
-    /// Recompute threshold natively from a merged histogram (used when a
-    /// VM spans multiple tiles; same formula as the artifact).
-    fn threshold_from_histogram(histogram: &[f32], target_rate: f32) -> f32 {
-        let h = histogram.len() - 1;
-        let mut measured = histogram.to_vec();
-        measured[h] = 0.0; // unknown-distance bucket excluded
-        measured[0] = 0.0;
-        let total: f32 = measured.iter().sum();
-        if total <= 0.0 {
-            return h as f32;
-        }
-        let mut tail = vec![0f32; h + 2];
-        for t in (0..=h).rev() {
-            tail[t] = tail[t + 1] + measured[t];
-        }
-        (1..=h)
-            .find(|&t| tail[t] / total <= target_rate)
-            .unwrap_or(h) as f32
+#[cfg(not(feature = "xla"))]
+impl std::fmt::Display for XlaUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "built without the `xla` feature; PJRT artifacts cannot be \
+             executed (the native analytics backend is the fallback)"
+        )
     }
 }
 
-impl ColdAnalytics for XlaAnalytics {
-    fn dt_reclaim(
-        &mut self,
-        hist: &[Bitmap],
-        target_rate: f32,
-        prev_threshold: f32,
-    ) -> DtOutput {
-        let n_units = hist.first().map(|b| b.len()).unwrap_or(0);
-        let h_in = hist.len();
-        let h = self.history;
-        let n = self.pages;
+#[cfg(not(feature = "xla"))]
+impl std::error::Error for XlaUnavailable {}
 
-        // Adapt the window to the artifact's H: truncate older rows or
-        // pad older rows with zeros (same convention as the policies).
-        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(h);
-        if h_in >= h {
-            for bm in &hist[h_in - h..] {
-                let mut r = vec![0f32; n_units];
-                for u in bm.iter_ones() {
-                    r[u] = 1.0;
-                }
-                rows.push(r);
-            }
-        } else {
-            for _ in 0..h - h_in {
-                rows.push(vec![0f32; n_units]);
-            }
-            for bm in hist {
-                let mut r = vec![0f32; n_units];
-                for u in bm.iter_ones() {
-                    r[u] = 1.0;
-                }
-                rows.push(r);
-            }
-        }
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
 
-        // Tile over N.
-        let mut age = Vec::with_capacity(n_units);
-        let mut count = Vec::with_capacity(n_units);
-        let mut histogram = vec![0f32; h + 1];
-        let tiles = n_units.div_ceil(n).max(1);
-        let mut last_prop = h as f32;
-        let mut last_smooth = prev_threshold;
-        for t in 0..tiles {
-            let lo = t * n;
-            let hi = ((t + 1) * n).min(n_units);
-            let tile_rows: Vec<Vec<f32>> = rows
-                .iter()
-                .map(|r| {
-                    let mut v = vec![0f32; n];
-                    if lo < n_units {
-                        v[..hi - lo].copy_from_slice(&r[lo..hi]);
-                    }
-                    v
-                })
-                .collect();
-            match self.dt_tile(&tile_rows, target_rate, prev_threshold) {
-                Ok((a, c, hg, prop, smooth)) => {
-                    age.extend_from_slice(&a[..hi - lo]);
-                    count.extend_from_slice(&c[..hi - lo]);
-                    // Padding columns are all-zero -> they land in the
-                    // "seen < 2 times" bucket only if counted; they have
-                    // count 0, so they don't pollute the histogram.
-                    for (b, v) in histogram.iter_mut().zip(hg.iter()) {
-                        *b += v;
-                    }
-                    last_prop = prop;
-                    last_smooth = smooth;
-                }
-                Err(e) => {
-                    // Fail loudly in debug; degrade to native in release.
-                    debug_assert!(false, "xla dt_reclaim failed: {e}");
-                    return crate::policies::NativeAnalytics::pipeline(
-                        hist,
-                        target_rate,
-                        prev_threshold,
-                    );
-                }
-            }
-        }
-        let (proposed, smoothed) = if tiles == 1 {
-            (last_prop, last_smooth)
-        } else {
-            let p = Self::threshold_from_histogram(&histogram, target_rate);
-            (
-                p,
-                crate::policies::analytics::SMOOTHING * prev_threshold
-                    + (1.0 - crate::policies::analytics::SMOOTHING) * p,
-            )
-        };
-        DtOutput { age, count, histogram, proposed, smoothed }
+    use super::XlaUnavailable;
+    use crate::policies::analytics::{ColdAnalytics, DtOutput, ErtScorer};
+    use crate::types::Bitmap;
+
+    /// Offline stand-in for the PJRT executor. Unconstructible:
+    /// `from_artifacts` always errs, so the trait impls are never
+    /// reached at runtime — they exist only to keep call sites
+    /// (`Box<dyn ColdAnalytics>` from either backend) type-checking.
+    pub struct XlaAnalytics {
+        pub history: usize,
+        pub pages: usize,
+        pub ert_entries: usize,
+        pub dt_calls: u64,
+        pub ert_calls: u64,
     }
 
-    fn backend_name(&self) -> &'static str {
-        "xla-pjrt"
+    impl XlaAnalytics {
+        pub fn from_artifacts<P: AsRef<Path>>(dir: P) -> Result<Self, XlaUnavailable> {
+            let _ = dir;
+            Err(XlaUnavailable)
+        }
+
+        pub fn platform(&self) -> String {
+            unreachable!("XlaAnalytics stub cannot be constructed")
+        }
+    }
+
+    impl ColdAnalytics for XlaAnalytics {
+        fn dt_reclaim(
+            &mut self,
+            _hist: &[Bitmap],
+            _target_rate: f32,
+            _prev_threshold: f32,
+        ) -> DtOutput {
+            unreachable!("XlaAnalytics stub cannot be constructed")
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "xla-unavailable"
+        }
+    }
+
+    impl ErtScorer for XlaAnalytics {
+        fn victim(&mut self, _ert: &mut [f32], _valid: &[f32], _dt: f32) -> (usize, f32) {
+            unreachable!("XlaAnalytics stub cannot be constructed")
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "xla-unavailable"
+        }
     }
 }
 
-impl ErtScorer for XlaAnalytics {
-    fn victim(&mut self, ert: &mut [f32], valid: &[f32], dt: f32) -> (usize, f32) {
-        let m = self.ert_entries;
-        let mut best = (0usize, f32::NEG_INFINITY);
-        let tiles = ert.len().div_ceil(m).max(1);
-        for tile_idx in 0..tiles {
-            let lo = tile_idx * m;
-            let hi = ((tile_idx + 1) * m).min(ert.len());
-            let chunk_len = hi - lo;
-            let mut e = vec![0f32; m];
-            e[..chunk_len].copy_from_slice(&ert[lo..hi]);
-            let mut v = vec![0f32; m];
-            v[..chunk_len].copy_from_slice(&valid[lo..hi]);
-            let run = || -> Result<(f32, f32, Vec<f32>)> {
-                let el = xla::Literal::vec1(&e);
-                let vl = xla::Literal::vec1(&v);
-                let dl = xla::Literal::scalar(dt);
-                let out = self.ert_exe.execute::<xla::Literal>(&[el, vl, dl])?[0][0]
-                    .to_literal_sync()?;
-                let elems = out.to_tuple()?;
-                Ok((
-                    elems[0].to_vec::<f32>()?[0],
-                    elems[1].to_vec::<f32>()?[0],
-                    elems[2].to_vec::<f32>()?,
-                ))
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaAnalytics;
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::path::Path;
+
+    use anyhow::{bail, Context, Result};
+
+    use super::manifest_field;
+    use crate::policies::analytics::{ColdAnalytics, DtOutput, ErtScorer};
+    use crate::types::Bitmap;
+
+    /// Executes the `dt_reclaim` and `ert_victim` artifacts on the PJRT CPU
+    /// client, tiling inputs to the artifact's static shapes.
+    pub struct XlaAnalytics {
+        client: xla::PjRtClient,
+        dt_exe: xla::PjRtLoadedExecutable,
+        ert_exe: xla::PjRtLoadedExecutable,
+        /// Artifact shapes from manifest.json.
+        pub history: usize,
+        pub pages: usize,
+        pub ert_entries: usize,
+        pub dt_calls: u64,
+        pub ert_calls: u64,
+    }
+
+    impl XlaAnalytics {
+        /// Load artifacts from `dir` (expects dt_reclaim.hlo.txt,
+        /// ert_victim.hlo.txt, manifest.json).
+        pub fn from_artifacts<P: AsRef<Path>>(dir: P) -> Result<Self> {
+            let dir = dir.as_ref();
+            let manifest = std::fs::read_to_string(dir.join("manifest.json"))
+                .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+            let history = manifest_field(&manifest, "dt_reclaim", "history")
+                .context("manifest: dt_reclaim.history")?;
+            let pages = manifest_field(&manifest, "dt_reclaim", "pages")
+                .context("manifest: dt_reclaim.pages")?;
+            let ert_entries = manifest_field(&manifest, "ert_victim", "entries")
+                .context("manifest: ert_victim.entries")?;
+
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(name);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("path utf8")?,
+                )
+                .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).with_context(|| format!("compiling {name}"))
             };
-            match run() {
-                Ok((idx, score, new)) => {
-                    self.ert_calls += 1;
-                    for (dst, src) in ert[lo..hi]
-                        .iter_mut()
-                        .zip(new.iter())
-                    {
-                        *dst = *src;
+            Ok(XlaAnalytics {
+                dt_exe: load("dt_reclaim.hlo.txt")?,
+                ert_exe: load("ert_victim.hlo.txt")?,
+                client,
+                history,
+                pages,
+                ert_entries,
+                dt_calls: 0,
+                ert_calls: 0,
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Execute the dt_reclaim artifact on one [H, pages] tile.
+        fn dt_tile(
+            &mut self,
+            hist_rows: &[Vec<f32>],
+            target_rate: f32,
+            prev_threshold: f32,
+        ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)> {
+            let h = self.history;
+            let n = self.pages;
+            let mut flat = Vec::with_capacity(h * n);
+            for row in hist_rows {
+                debug_assert_eq!(row.len(), n);
+                flat.extend_from_slice(row);
+            }
+            let hist = xla::Literal::vec1(&flat).reshape(&[h as i64, n as i64])?;
+            let tr = xla::Literal::scalar(target_rate);
+            let pt = xla::Literal::scalar(prev_threshold);
+            let result = self.dt_exe.execute::<xla::Literal>(&[hist, tr, pt])?[0][0]
+                .to_literal_sync()?;
+            // Lowered with return_tuple=True: 5-tuple.
+            let elems = result.to_tuple()?;
+            if elems.len() != 5 {
+                bail!("dt_reclaim returned {} outputs, expected 5", elems.len());
+            }
+            let age = elems[0].to_vec::<f32>()?;
+            let cnt = elems[1].to_vec::<f32>()?;
+            let histo = elems[2].to_vec::<f32>()?;
+            let proposed = elems[3].to_vec::<f32>()?[0];
+            let smoothed = elems[4].to_vec::<f32>()?[0];
+            self.dt_calls += 1;
+            Ok((age, cnt, histo, proposed, smoothed))
+        }
+
+        /// Recompute threshold natively from a merged histogram (used when a
+        /// VM spans multiple tiles; same formula as the artifact).
+        fn threshold_from_histogram(histogram: &[f32], target_rate: f32) -> f32 {
+            let h = histogram.len() - 1;
+            let mut measured = histogram.to_vec();
+            measured[h] = 0.0; // unknown-distance bucket excluded
+            measured[0] = 0.0;
+            let total: f32 = measured.iter().sum();
+            if total <= 0.0 {
+                return h as f32;
+            }
+            let mut tail = vec![0f32; h + 2];
+            for t in (0..=h).rev() {
+                tail[t] = tail[t + 1] + measured[t];
+            }
+            (1..=h)
+                .find(|&t| tail[t] / total <= target_rate)
+                .unwrap_or(h) as f32
+        }
+    }
+
+    impl ColdAnalytics for XlaAnalytics {
+        fn dt_reclaim(
+            &mut self,
+            hist: &[Bitmap],
+            target_rate: f32,
+            prev_threshold: f32,
+        ) -> DtOutput {
+            let n_units = hist.first().map(|b| b.len()).unwrap_or(0);
+            let h_in = hist.len();
+            let h = self.history;
+            let n = self.pages;
+
+            // Adapt the window to the artifact's H: truncate older rows or
+            // pad older rows with zeros (same convention as the policies).
+            let mut rows: Vec<Vec<f32>> = Vec::with_capacity(h);
+            if h_in >= h {
+                for bm in &hist[h_in - h..] {
+                    let mut r = vec![0f32; n_units];
+                    for u in bm.iter_ones() {
+                        r[u] = 1.0;
                     }
-                    if score > best.1 {
-                        best = (lo + idx as usize, score);
+                    rows.push(r);
+                }
+            } else {
+                for _ in 0..h - h_in {
+                    rows.push(vec![0f32; n_units]);
+                }
+                for bm in hist {
+                    let mut r = vec![0f32; n_units];
+                    for u in bm.iter_ones() {
+                        r[u] = 1.0;
+                    }
+                    rows.push(r);
+                }
+            }
+
+            // Tile over N.
+            let mut age = Vec::with_capacity(n_units);
+            let mut count = Vec::with_capacity(n_units);
+            let mut histogram = vec![0f32; h + 1];
+            let tiles = n_units.div_ceil(n).max(1);
+            let mut last_prop = h as f32;
+            let mut last_smooth = prev_threshold;
+            for t in 0..tiles {
+                let lo = t * n;
+                let hi = ((t + 1) * n).min(n_units);
+                let tile_rows: Vec<Vec<f32>> = rows
+                    .iter()
+                    .map(|r| {
+                        let mut v = vec![0f32; n];
+                        if lo < n_units {
+                            v[..hi - lo].copy_from_slice(&r[lo..hi]);
+                        }
+                        v
+                    })
+                    .collect();
+                match self.dt_tile(&tile_rows, target_rate, prev_threshold) {
+                    Ok((a, c, hg, prop, smooth)) => {
+                        age.extend_from_slice(&a[..hi - lo]);
+                        count.extend_from_slice(&c[..hi - lo]);
+                        // Padding columns are all-zero -> they land in the
+                        // "seen < 2 times" bucket only if counted; they have
+                        // count 0, so they don't pollute the histogram.
+                        for (b, v) in histogram.iter_mut().zip(hg.iter()) {
+                            *b += v;
+                        }
+                        last_prop = prop;
+                        last_smooth = smooth;
+                    }
+                    Err(e) => {
+                        // Fail loudly in debug; degrade to native in release.
+                        debug_assert!(false, "xla dt_reclaim failed: {e}");
+                        return crate::policies::NativeAnalytics::pipeline(
+                            hist,
+                            target_rate,
+                            prev_threshold,
+                        );
                     }
                 }
-                Err(e) => {
-                    debug_assert!(false, "xla ert_victim failed: {e}");
-                    // Native fallback for this tile.
-                    for i in lo..hi {
-                        if valid[i] > 0.0 {
-                            ert[i] -= dt;
-                            if ert[i].abs() > best.1 {
-                                best = (i, ert[i].abs());
+            }
+            let (proposed, smoothed) = if tiles == 1 {
+                (last_prop, last_smooth)
+            } else {
+                let p = Self::threshold_from_histogram(&histogram, target_rate);
+                (
+                    p,
+                    crate::policies::analytics::SMOOTHING * prev_threshold
+                        + (1.0 - crate::policies::analytics::SMOOTHING) * p,
+                )
+            };
+            DtOutput { age, count, histogram, proposed, smoothed }
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "xla-pjrt"
+        }
+    }
+
+    impl ErtScorer for XlaAnalytics {
+        fn victim(&mut self, ert: &mut [f32], valid: &[f32], dt: f32) -> (usize, f32) {
+            let m = self.ert_entries;
+            let mut best = (0usize, f32::NEG_INFINITY);
+            let tiles = ert.len().div_ceil(m).max(1);
+            for tile_idx in 0..tiles {
+                let lo = tile_idx * m;
+                let hi = ((tile_idx + 1) * m).min(ert.len());
+                let chunk_len = hi - lo;
+                let mut e = vec![0f32; m];
+                e[..chunk_len].copy_from_slice(&ert[lo..hi]);
+                let mut v = vec![0f32; m];
+                v[..chunk_len].copy_from_slice(&valid[lo..hi]);
+                let run = || -> Result<(f32, f32, Vec<f32>)> {
+                    let el = xla::Literal::vec1(&e);
+                    let vl = xla::Literal::vec1(&v);
+                    let dl = xla::Literal::scalar(dt);
+                    let out = self.ert_exe.execute::<xla::Literal>(&[el, vl, dl])?[0][0]
+                        .to_literal_sync()?;
+                    let elems = out.to_tuple()?;
+                    Ok((
+                        elems[0].to_vec::<f32>()?[0],
+                        elems[1].to_vec::<f32>()?[0],
+                        elems[2].to_vec::<f32>()?,
+                    ))
+                };
+                match run() {
+                    Ok((idx, score, new)) => {
+                        self.ert_calls += 1;
+                        for (dst, src) in ert[lo..hi]
+                            .iter_mut()
+                            .zip(new.iter())
+                        {
+                            *dst = *src;
+                        }
+                        if score > best.1 {
+                            best = (lo + idx as usize, score);
+                        }
+                    }
+                    Err(e) => {
+                        debug_assert!(false, "xla ert_victim failed: {e}");
+                        // Native fallback for this tile.
+                        for i in lo..hi {
+                            if valid[i] > 0.0 {
+                                ert[i] -= dt;
+                                if ert[i].abs() > best.1 {
+                                    best = (i, ert[i].abs());
+                                }
                             }
                         }
                     }
                 }
             }
+            best
         }
-        best
+
+        fn backend_name(&self) -> &'static str {
+            "xla-pjrt"
+        }
     }
 
-    fn backend_name(&self) -> &'static str {
-        "xla-pjrt"
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::policies::analytics::NativeAnalytics;
+        use crate::sim::Rng;
+
+        fn artifacts_available() -> bool {
+            std::path::Path::new("artifacts/dt_reclaim.hlo.txt").exists()
+        }
+
+        fn random_hist(rng: &mut Rng, h: usize, n: usize, p: f64) -> Vec<Bitmap> {
+            (0..h)
+                .map(|_| {
+                    let mut b = Bitmap::new(n);
+                    for i in 0..n {
+                        if rng.chance(p) {
+                            b.set(i);
+                        }
+                    }
+                    b
+                })
+                .collect()
+        }
+
+        #[test]
+        fn xla_matches_native_dt() {
+            if !artifacts_available() {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+            let mut x = XlaAnalytics::from_artifacts("artifacts").unwrap();
+            let mut rng = Rng::new(10);
+            // Window matching the artifact H, small N (padded to tile).
+            let hist = random_hist(&mut rng, x.history, 500, 0.3);
+            let xo = x.dt_reclaim(&hist, 0.02, 5.0);
+            let no = NativeAnalytics::pipeline(&hist, 0.02, 5.0);
+            assert_eq!(xo.age.len(), 500);
+            for u in 0..500 {
+                assert_eq!(xo.age[u], no.age[u], "age mismatch at {u}");
+                assert_eq!(xo.count[u], no.count[u], "count mismatch at {u}");
+            }
+            assert_eq!(xo.proposed, no.proposed);
+            assert!((xo.smoothed - no.smoothed).abs() < 1e-5);
+        }
+
+        #[test]
+        fn xla_matches_native_ert() {
+            if !artifacts_available() {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+            let mut x = XlaAnalytics::from_artifacts("artifacts").unwrap();
+            let mut rng = Rng::new(11);
+            let n = 300;
+            let mut ert_x: Vec<f32> = (0..n).map(|_| (rng.f64() * 100.0 - 50.0) as f32).collect();
+            let valid: Vec<f32> = (0..n).map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 }).collect();
+            let mut ert_n = ert_x.clone();
+            let (xi, xs) = ErtScorer::victim(&mut x, &mut ert_x, &valid, 3.0);
+            let mut nat = NativeAnalytics::new();
+            let (ni, ns) = nat.victim(&mut ert_n, &valid, 3.0);
+            assert_eq!(ert_x, ert_n);
+            assert!((xs - ns).abs() < 1e-5, "{xs} vs {ns}");
+            // Ties may pick different indices; scores must match.
+            assert_eq!(valid[xi], 1.0);
+            let _ = ni;
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::XlaAnalytics;
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::policies::analytics::NativeAnalytics;
-    use crate::sim::Rng;
-
-    fn artifacts_available() -> bool {
-        std::path::Path::new("artifacts/dt_reclaim.hlo.txt").exists()
-    }
-
-    fn random_hist(rng: &mut Rng, h: usize, n: usize, p: f64) -> Vec<Bitmap> {
-        (0..h)
-            .map(|_| {
-                let mut b = Bitmap::new(n);
-                for i in 0..n {
-                    if rng.chance(p) {
-                        b.set(i);
-                    }
-                }
-                b
-            })
-            .collect()
-    }
 
     #[test]
     fn manifest_parser() {
@@ -332,46 +475,10 @@ mod tests {
         assert_eq!(manifest_field(text, "nope", "x"), None);
     }
 
+    #[cfg(not(feature = "xla"))]
     #[test]
-    fn xla_matches_native_dt() {
-        if !artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let mut x = XlaAnalytics::from_artifacts("artifacts").unwrap();
-        let mut rng = Rng::new(10);
-        // Window matching the artifact H, small N (padded to tile).
-        let hist = random_hist(&mut rng, x.history, 500, 0.3);
-        let xo = x.dt_reclaim(&hist, 0.02, 5.0);
-        let no = NativeAnalytics::pipeline(&hist, 0.02, 5.0);
-        assert_eq!(xo.age.len(), 500);
-        for u in 0..500 {
-            assert_eq!(xo.age[u], no.age[u], "age mismatch at {u}");
-            assert_eq!(xo.count[u], no.count[u], "count mismatch at {u}");
-        }
-        assert_eq!(xo.proposed, no.proposed);
-        assert!((xo.smoothed - no.smoothed).abs() < 1e-5);
-    }
-
-    #[test]
-    fn xla_matches_native_ert() {
-        if !artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let mut x = XlaAnalytics::from_artifacts("artifacts").unwrap();
-        let mut rng = Rng::new(11);
-        let n = 300;
-        let mut ert_x: Vec<f32> = (0..n).map(|_| (rng.f64() * 100.0 - 50.0) as f32).collect();
-        let valid: Vec<f32> = (0..n).map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 }).collect();
-        let mut ert_n = ert_x.clone();
-        let (xi, xs) = ErtScorer::victim(&mut x, &mut ert_x, &valid, 3.0);
-        let mut nat = NativeAnalytics::new();
-        let (ni, ns) = nat.victim(&mut ert_n, &valid, 3.0);
-        assert_eq!(ert_x, ert_n);
-        assert!((xs - ns).abs() < 1e-5, "{xs} vs {ns}");
-        // Ties may pick different indices; scores must match.
-        assert_eq!(valid[xi], 1.0);
-        let _ = ni;
+    fn stub_reports_unavailable() {
+        let err = XlaAnalytics::from_artifacts("artifacts").err().unwrap();
+        assert!(format!("{err}").contains("xla"));
     }
 }

@@ -93,17 +93,10 @@ impl Bitmap {
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
-    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
-        self.words.iter().enumerate().flat_map(move |(wi, &w)| {
-            let mut w = w;
-            let mut out = Vec::with_capacity(w.count_ones() as usize);
-            while w != 0 {
-                let b = w.trailing_zeros() as usize;
-                out.push(wi * 64 + b);
-                w &= w - 1;
-            }
-            out
-        })
+    /// Allocation-free iterator over set bit indices, ascending. Sits on
+    /// the EPT-scan and policy paths, so it must not heap-allocate.
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter { words: &self.words, cur: 0, wi: 0, base: 0 }
     }
     /// OR another bitmap into this one (same length).
     pub fn or_assign(&mut self, other: &Bitmap) {
@@ -111,6 +104,72 @@ impl Bitmap {
         for (a, b) in self.words.iter_mut().zip(&other.words) {
             *a |= b;
         }
+    }
+    /// Clear every bit that is set in `other` (word-parallel `self &= !other`).
+    pub fn and_not_assign(&mut self, other: &Bitmap) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+    /// Clear bits in `[lo, hi)`, 64 at a time for interior words.
+    pub fn clear_range(&mut self, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        assert!(hi <= self.len);
+        let lw = lo / 64;
+        let hw = (hi - 1) / 64;
+        let lo_mask = !0u64 << (lo % 64);
+        let hi_mask = !0u64 >> (63 - ((hi - 1) % 64));
+        if lw == hw {
+            self.words[lw] &= !(lo_mask & hi_mask);
+        } else {
+            self.words[lw] &= !lo_mask;
+            for w in &mut self.words[lw + 1..hw] {
+                *w = 0;
+            }
+            self.words[hw] &= !hi_mask;
+        }
+    }
+    /// Raw 64-bit words (bit `i` of word `w` is unit `w*64 + i`). Bits at
+    /// or beyond `len()` are always zero.
+    #[inline]
+    pub fn as_words(&self) -> &[u64] {
+        &self.words
+    }
+    /// Mutable raw words. Callers must keep bits `>= len()` zero — the
+    /// word-parallel EPT scan relies on this invariant.
+    #[inline]
+    pub fn as_words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+}
+
+/// Iterator state for [`Bitmap::iter_ones`]: one word cursor, no heap.
+pub struct OnesIter<'a> {
+    words: &'a [u64],
+    cur: u64,
+    wi: usize,
+    base: usize,
+}
+
+impl Iterator for OnesIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        while self.cur == 0 {
+            if self.wi >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.wi];
+            self.base = self.wi * 64;
+            self.wi += 1;
+        }
+        let b = self.cur.trailing_zeros() as usize;
+        self.cur &= self.cur - 1;
+        Some(self.base + b)
     }
 }
 
@@ -171,5 +230,66 @@ mod tests {
         b.set(2);
         a.or_assign(&b);
         assert!(a.get(1) && a.get(2));
+    }
+
+    #[test]
+    fn bitmap_and_not() {
+        let mut a = Bitmap::new(130);
+        let mut b = Bitmap::new(130);
+        for i in [0, 63, 64, 129] {
+            a.set(i);
+        }
+        b.set(63);
+        b.set(129);
+        a.and_not_assign(&b);
+        let ones: Vec<_> = a.iter_ones().collect();
+        assert_eq!(ones, vec![0, 64]);
+    }
+
+    #[test]
+    fn bitmap_clear_range() {
+        // Spans three words; check sub-word, word-boundary and interior.
+        let mut a = Bitmap::new(200);
+        for i in 0..200 {
+            a.set(i);
+        }
+        a.clear_range(10, 10); // empty range: no-op
+        assert_eq!(a.count_ones(), 200);
+        a.clear_range(60, 140);
+        for i in 0..200 {
+            assert_eq!(a.get(i), !(60..140).contains(&i), "bit {i}");
+        }
+        a.clear_range(0, 200);
+        assert_eq!(a.count_ones(), 0);
+        // Single-word interior range.
+        let mut b = Bitmap::new(64);
+        for i in 0..64 {
+            b.set(i);
+        }
+        b.clear_range(3, 7);
+        assert_eq!(b.count_ones(), 60);
+        assert!(b.get(2) && !b.get(3) && !b.get(6) && b.get(7));
+    }
+
+    #[test]
+    fn iter_ones_across_words_and_tails() {
+        let mut a = Bitmap::new(300);
+        let want = vec![0usize, 1, 63, 64, 127, 128, 255, 299];
+        for &i in &want {
+            a.set(i);
+        }
+        assert_eq!(a.iter_ones().collect::<Vec<_>>(), want);
+        assert_eq!(Bitmap::new(0).iter_ones().count(), 0);
+        assert_eq!(Bitmap::new(64).iter_ones().count(), 0);
+    }
+
+    #[test]
+    fn word_accessors_round_trip() {
+        let mut a = Bitmap::new(130);
+        a.set(64);
+        assert_eq!(a.as_words()[1], 1);
+        a.as_words_mut()[0] = 0b101;
+        assert!(a.get(0) && a.get(2) && !a.get(1));
+        assert_eq!(a.count_ones(), 3);
     }
 }
