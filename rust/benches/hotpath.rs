@@ -115,17 +115,71 @@ fn main() {
                 b
             })
             .collect();
+        let hist_refs: Vec<&Bitmap> = hist.iter().collect();
         let mut nat = NativeAnalytics::new();
         results.push(bench("dt_reclaim analytics native (64k units)", 20, || {
-            let _ = nat.dt_reclaim(&hist, 0.02, 5.0);
+            let _ = nat.dt_reclaim(&hist_refs, 0.02, 5.0);
         }));
         match flexswap::runtime::XlaAnalytics::from_artifacts("artifacts") {
             Ok(mut x) => {
                 results.push(bench("dt_reclaim analytics xla-pjrt (64k units)", 20, || {
-                    let _ = x.dt_reclaim(&hist, 0.02, 5.0);
+                    let _ = x.dt_reclaim(&hist_refs, 0.02, 5.0);
                 }));
             }
             Err(e) => println!("(xla analytics skipped: {e})"),
+        }
+    }
+
+    // Storage tiers: the codec and the tiered backend's hot operations
+    // (the `storage_tiers` series tracked from PR 2 onward).
+    {
+        use flexswap::config::TierConfig;
+        use flexswap::hw::Nvme;
+        use flexswap::storage::{SwapBackend, TierHint, TieredBackend};
+
+        let sw = SwCost::default();
+        let hw = HwConfig::default();
+
+        // Run-structured 4k page (the pool's common case).
+        let mut page = vec![0u8; 4096];
+        for i in (0..4096).step_by(512) {
+            page[i] = (i / 512) as u8;
+        }
+        results.push(bench("storage_tiers codec compress 4k (pattern)", 100_000, || {
+            let _ = flexswap::storage::compress(&page);
+        }));
+
+        let mut nvme = Nvme::new(&hw);
+
+        // Pool store + decompress-on-hit round trip.
+        {
+            let mut b = TieredBackend::new(&TierConfig::default(), &sw);
+            let mut rng = Rng::new(7);
+            let mut out = Vec::new();
+            let mut i = 0u64;
+            results.push(bench("storage_tiers pool write+read hit (4k)", 50_000, || {
+                let u = i % 4096;
+                b.write(0, u, &page, TierHint::Auto, i, &mut nvme, &mut rng);
+                b.read(0, u, 4096, &mut out, i, &mut nvme, &mut rng);
+                i += 1;
+            }));
+        }
+
+        // Sustained watermark writeback churn (sort + coalesce path).
+        {
+            let cfg = TierConfig {
+                pool_capacity_bytes: 64 * 4096,
+                reject_pct: 101,
+                ..TierConfig::default()
+            };
+            let mut b = TieredBackend::new(&cfg, &sw);
+            let mut rng = Rng::new(8);
+            let rnd: Vec<u8> = (0..4096).map(|_| rng.below(256) as u8).collect();
+            let mut j = 0u64;
+            results.push(bench("storage_tiers write + watermark drain (4k)", 20_000, || {
+                b.write(0, j % 65_536, &rnd, TierHint::Pool, j, &mut nvme, &mut rng);
+                j += 1;
+            }));
         }
     }
 

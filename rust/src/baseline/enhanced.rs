@@ -23,6 +23,8 @@ pub struct EnhancedReclaim {
     target_rate: f32,
     threshold: f32,
     ring: VecDeque<Bitmap>,
+    /// Shared zero pad row (window borrows, no per-tick clones).
+    zero_pad: Bitmap,
     backend: NativeAnalytics,
     /// Aggressivity scale on the derived cold set (for the Fig 10 sweep).
     pub aggressivity: f64,
@@ -36,6 +38,7 @@ impl EnhancedReclaim {
             target_rate: target_rate as f32,
             threshold: history as f32,
             ring: VecDeque::new(),
+            zero_pad: Bitmap::default(),
             backend: NativeAnalytics::new(),
             aggressivity: 1.0,
             limit_updates: 0,
@@ -55,12 +58,12 @@ impl EnhancedReclaim {
             return;
         }
         let n = bitmap.len();
-        let mut window: Vec<Bitmap> = Vec::with_capacity(self.history);
-        let missing = self.history.saturating_sub(self.ring.len());
-        for _ in 0..missing {
-            window.push(Bitmap::new(n));
-        }
-        window.extend(self.ring.iter().cloned());
+        let window = crate::policies::analytics::window_refs(
+            &mut self.zero_pad,
+            &self.ring,
+            self.history,
+            n,
+        );
         let out = self.backend.dt_reclaim(&window, self.target_rate, self.threshold);
         self.threshold = out.smoothed;
         let cold = out

@@ -91,6 +91,11 @@ pub struct SwCost {
     pub guest_alloc_ns: Time,
     /// Cost of one GVA->HVA guest page-table walk in the QEMU helper.
     pub gva_walk_ns: Time,
+    /// Compressing one 4kB page into the compressed swap pool (LZO-class
+    /// software codec; scaled linearly for 2MB units).
+    pub compress_4k_ns: Time,
+    /// Decompressing one 4kB page on a compressed-pool fault hit.
+    pub decompress_4k_ns: Time,
 }
 
 impl Default for SwCost {
@@ -108,7 +113,67 @@ impl Default for SwCost {
             kernel_swap_sw_ns: 4 * US,
             guest_alloc_ns: 800 * NS,
             gva_walk_ns: 2 * US,
+            compress_4k_ns: 2 * US,
+            decompress_4k_ns: 1 * US,
         }
+    }
+}
+
+/// Tiered storage-backend configuration (compressed pool + NVMe
+/// writeback; see [`crate::storage::TieredBackend`]).
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    /// Compressed-pool capacity in bytes of *compressed* data. 0
+    /// disables the pool entirely: every write goes straight to NVMe
+    /// (the flat backend the paper's testbed uses).
+    pub pool_capacity_bytes: u64,
+    /// Start background writeback when compressed-pool occupancy
+    /// exceeds this percentage of capacity.
+    pub high_watermark_pct: u8,
+    /// Writeback drains the pool down to this percentage of capacity.
+    pub low_watermark_pct: u8,
+    /// Maximum pool entries drained per writeback round.
+    pub writeback_batch: usize,
+    /// Adjacent-unit writeback requests are coalesced into a single
+    /// NVMe I/O of up to this many units.
+    pub max_coalesce_units: u64,
+    /// Reject pool admission when the compressed image is at least this
+    /// percentage of the raw size (incompressible page; zswap's
+    /// same-filled/reject heuristic).
+    pub reject_pct: u8,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        TierConfig {
+            pool_capacity_bytes: 256 * 1024 * 1024,
+            high_watermark_pct: 90,
+            low_watermark_pct: 70,
+            writeback_batch: 64,
+            max_coalesce_units: 8,
+            reject_pct: 90,
+        }
+    }
+}
+
+impl TierConfig {
+    /// Flat single-tier backend: no compressed pool, every swap write
+    /// is an NVMe I/O (the paper's §6 testbed).
+    pub fn flat() -> Self {
+        TierConfig { pool_capacity_bytes: 0, ..Default::default() }
+    }
+
+    /// True when the compressed pool is enabled.
+    pub fn pool_enabled(&self) -> bool {
+        self.pool_capacity_bytes > 0
+    }
+
+    pub fn high_watermark_bytes(&self) -> u64 {
+        self.pool_capacity_bytes / 100 * self.high_watermark_pct as u64
+    }
+
+    pub fn low_watermark_bytes(&self) -> u64 {
+        self.pool_capacity_bytes / 100 * self.low_watermark_pct as u64
     }
 }
 
@@ -210,7 +275,18 @@ impl Default for LinuxConfig {
 pub struct HostConfig {
     pub hw: HwConfig,
     pub sw: SwCost,
+    /// Storage-backend tiering (default: compressed pool enabled).
+    pub tier: TierConfig,
     pub seed: u64,
+}
+
+impl HostConfig {
+    /// The paper's §6 testbed: a flat NVMe swap backend with no
+    /// compressed tier. The figure-reproduction experiments use this so
+    /// their calibrated latency shapes match the paper's hardware.
+    pub fn paper() -> Self {
+        HostConfig { tier: TierConfig::flat(), ..Default::default() }
+    }
 }
 
 #[cfg(test)]
@@ -225,6 +301,19 @@ mod tests {
         let hw = HwConfig::default();
         assert_eq!(hw.zero_2m_ns, 100_000);
         assert_eq!(hw.nvme_bus_bytes_per_sec, 2_600_000_000);
+    }
+
+    #[test]
+    fn tier_config_watermarks_and_flat() {
+        let t = TierConfig::default();
+        assert!(t.pool_enabled());
+        assert!(t.high_watermark_bytes() > t.low_watermark_bytes());
+        assert!(t.high_watermark_bytes() < t.pool_capacity_bytes);
+        let f = TierConfig::flat();
+        assert!(!f.pool_enabled());
+        assert_eq!(f.high_watermark_bytes(), 0);
+        assert!(!HostConfig::paper().tier.pool_enabled());
+        assert!(HostConfig::default().tier.pool_enabled());
     }
 
     #[test]

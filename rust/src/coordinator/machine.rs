@@ -6,14 +6,16 @@
 
 use crate::baseline::{EnhancedReclaim, LinuxSwap};
 use crate::config::{HostConfig, LinuxConfig, MmConfig, VmConfig};
-use crate::hw::{IoKind, Nvme};
+use crate::hw::Nvme;
 use crate::introspect::FaultCtx;
 use crate::metrics::{Counters, LatencyHist, Series};
 use crate::mm::{Mm, WorkOutcome};
 use crate::scanner::EptScanner;
 use crate::sim::{EventQueue, Rng};
-use crate::storage::StorageBackend;
-use crate::types::{Bitmap, Time, UnitId, MS, SEC};
+use crate::storage::{
+    ContentMix, ContentModel, SwapBackend, SwapTier, TierMetrics, TieredBackend,
+};
+use crate::types::{Bitmap, Time, UnitId, VmId, MS, SEC};
 use crate::vm::{AccessResult, Vm};
 use crate::workloads::{Op, Workload};
 
@@ -55,6 +57,11 @@ struct VmSlot {
     usage_series: Series,
     pf_series: Series,
     last_pf_count: u64,
+    /// Deterministic guest-page-content synthesizer (the backend's
+    /// compressed tier works on real bytes).
+    content: ContentModel,
+    /// Reusable page-image buffer for backend reads/writes.
+    scratch: Vec<u8>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,7 +109,7 @@ pub struct Machine {
     events: EventQueue<Ev>,
     slots: Vec<VmSlot>,
     pub nvme: Nvme,
-    pub backend: StorageBackend,
+    pub backend: Box<dyn SwapBackend>,
     scanner: EptScanner,
     /// vCPU batch size (ops per scheduling quantum).
     batch: u32,
@@ -117,7 +124,7 @@ impl Machine {
         let rng = Rng::new(host.seed);
         Machine {
             nvme: Nvme::new(&host.hw),
-            backend: StorageBackend::new(&host.sw),
+            backend: Box::new(TieredBackend::new(&host.tier, &host.sw)),
             scanner: EptScanner::new(&host.hw),
             host,
             clock: 0,
@@ -166,6 +173,7 @@ impl Machine {
             })
             .collect();
         let scan_interval = setup.scan_interval.unwrap_or(SEC);
+        let content = ContentModel::new(self.content_seed(id), ContentMix::default());
         self.slots.push(VmSlot {
             vm,
             mech: setup.mech,
@@ -177,8 +185,27 @@ impl Machine {
             usage_series: Series::default(),
             pf_series: Series::default(),
             last_pf_count: 0,
+            content,
+            scratch: Vec::new(),
         });
         id
+    }
+
+    /// Per-VM content-model seed (shared by `add_vm`/`set_content_mix`
+    /// so re-mixing keeps the VM's deterministic content identity).
+    fn content_seed(&self, vm: usize) -> u64 {
+        self.host.seed ^ (vm as u64).wrapping_mul(0x9E3779B97F4A7C15)
+    }
+
+    /// Override a VM's guest-content mix (tests / tier experiments).
+    pub fn set_content_mix(&mut self, vm: usize, mix: ContentMix) {
+        self.slots[vm].content = ContentModel::new(self.content_seed(vm), mix);
+    }
+
+    /// Aggregate storage-backend counters (per-tier hits, occupancy,
+    /// compression ratio, NVMe request counts).
+    pub fn backend_metrics(&self) -> &TierMetrics {
+        self.backend.metrics()
     }
 
     fn schedule_initial(&mut self) {
@@ -379,8 +406,15 @@ impl Machine {
     }
 
     /// Hand queued work to idle swapper workers (paper §4.1 step 7-9).
+    /// Swap I/O goes through the [`SwapBackend`] trait: reads check the
+    /// compressed pool first (no NVMe on a hit), writes carry the
+    /// policy's tier hint, and watermark writebacks reported in the
+    /// receipt update each MM's tier map.
     fn dispatch_workers(&mut self, vmid: usize) {
         let now = self.clock;
+        // Tier-map updates for *other* VMs whose pool entries a
+        // writeback drained (applied after the current slot borrow ends).
+        let mut cross_vm_writeback: Vec<(VmId, UnitId)> = Vec::new();
         let slot = &mut self.slots[vmid];
         let Mechanism::Sys(mm) = &mut slot.mech else { return };
         while let Some(worker) = mm.swapper.claim() {
@@ -403,45 +437,111 @@ impl Machine {
                     );
                 }
                 Some(WorkOutcome::SwapIn { unit, bytes }) => {
-                    let req = self.backend.submit(
+                    let r = self.backend.read(
                         vmid,
                         unit,
                         bytes,
-                        IoKind::Read,
+                        &mut slot.scratch,
                         now + self.host.sw.queue_handoff_ns,
                         &mut self.nvme,
                         &mut self.rng,
                     );
-                    self.backend.complete(&req);
+                    if r.tier == SwapTier::Pool {
+                        mm.core.counters.swapin_pool_hits += 1;
+                    }
                     self.events.push(
-                        req.completes_at,
+                        r.completes_at,
                         Ev::WorkerIoRead { vm: vmid, worker, unit },
                     );
                 }
-                Some(WorkOutcome::SwapOutWrite { unit, bytes, pre_cost }) => {
+                Some(WorkOutcome::SwapOutWrite { unit, bytes, pre_cost, hint }) => {
                     mm.unmap_for_swapout(&mut slot.vm, unit);
-                    let req = self.backend.submit(
+                    if self.host.tier.pool_enabled() {
+                        slot.content.fill(unit, bytes, &mut slot.scratch);
+                    } else if slot.scratch.len() != bytes as usize {
+                        // Flat mode never reads content back (PR 1
+                        // behavior): skip synthesis, keep an all-zero
+                        // page of the right size (stores as a marker,
+                        // no bytes retained).
+                        slot.scratch.clear();
+                        slot.scratch.resize(bytes as usize, 0);
+                    }
+                    let r = self.backend.write(
                         vmid,
                         unit,
-                        bytes,
-                        IoKind::Write,
+                        &slot.scratch,
+                        hint,
                         now + pre_cost,
                         &mut self.nvme,
                         &mut self.rng,
                     );
-                    self.backend.complete(&req);
+                    if r.tier == SwapTier::Pool {
+                        mm.core.counters.swapout_pool_stores += 1;
+                    }
+                    mm.core.set_backend_tier(unit, Some(r.tier));
+                    for (wvm, wunit) in r.writeback {
+                        if wvm == vmid {
+                            mm.core.set_backend_tier(wunit, Some(SwapTier::Nvme));
+                        } else {
+                            cross_vm_writeback.push((wvm, wunit));
+                        }
+                    }
                     self.events.push(
-                        req.completes_at + self.host.sw.punch_hole_ns,
+                        r.completes_at + self.host.sw.punch_hole_ns,
                         Ev::WorkerOutDone { vm: vmid, worker, unit, wrote: true },
                     );
                 }
                 Some(WorkOutcome::Drop { unit, cost }) => {
+                    // The elision was decided from `clean_on_disk`, which
+                    // can be stale: if the guest dirtied the unit since
+                    // its swap-in, the backend copy is invalid and the
+                    // content must be written after all.
+                    let was_dirty = slot.vm.ept.dirty(unit);
                     mm.unmap_for_swapout(&mut slot.vm, unit);
-                    self.events.push(
-                        now + cost,
-                        Ev::WorkerOutDone { vm: vmid, worker, unit, wrote: false },
-                    );
+                    if was_dirty {
+                        let bytes = mm.core.unit_bytes;
+                        if self.host.tier.pool_enabled() {
+                            slot.content.fill(unit, bytes, &mut slot.scratch);
+                        } else if slot.scratch.len() != bytes as usize {
+                            slot.scratch.clear();
+                            slot.scratch.resize(bytes as usize, 0);
+                        }
+                        let r = self.backend.write(
+                            vmid,
+                            unit,
+                            &slot.scratch,
+                            crate::storage::TierHint::Auto,
+                            now + cost,
+                            &mut self.nvme,
+                            &mut self.rng,
+                        );
+                        if r.tier == SwapTier::Pool {
+                            mm.core.counters.swapout_pool_stores += 1;
+                        }
+                        mm.core.set_backend_tier(unit, Some(r.tier));
+                        for (wvm, wunit) in r.writeback {
+                            if wvm == vmid {
+                                mm.core.set_backend_tier(wunit, Some(SwapTier::Nvme));
+                            } else {
+                                cross_vm_writeback.push((wvm, wunit));
+                            }
+                        }
+                        self.events.push(
+                            r.completes_at + self.host.sw.punch_hole_ns,
+                            Ev::WorkerOutDone { vm: vmid, worker, unit, wrote: true },
+                        );
+                    } else {
+                        self.events.push(
+                            now + cost,
+                            Ev::WorkerOutDone { vm: vmid, worker, unit, wrote: false },
+                        );
+                    }
                 }
+            }
+        }
+        for (wvm, wunit) in cross_vm_writeback {
+            if let Mechanism::Sys(other) = &mut self.slots[wvm].mech {
+                other.core.set_backend_tier(wunit, Some(SwapTier::Nvme));
             }
         }
     }
@@ -496,6 +596,23 @@ impl Machine {
             Mechanism::Sys(mm) => {
                 mm.core.counters.scan_cpu_ns += out.cpu_ns;
                 mm.on_scan(&slot.vm, &out.bitmap, now);
+                // Units dirtied since their swap-in have a stale backend
+                // copy: drop the clean-elision flag and free the dead
+                // pool/NVMe copy so it neither occupies pool capacity
+                // nor gets written back as garbage I/O.
+                for u in out.bitmap.iter_ones() {
+                    let uu = u as UnitId;
+                    if slot.vm.ept.dirty(uu)
+                        && mm.core.states[u] == crate::types::UnitState::Resident
+                    {
+                        mm.note_dirty(uu);
+                        self.backend.discard(vmid, uu);
+                        mm.core.set_backend_tier(uu, None);
+                        // One reap per dirtying: clean_on_disk is now
+                        // cleared, so the dirty bit has done its job.
+                        slot.vm.ept.clear_dirty(uu);
+                    }
+                }
                 // Policies may have changed the scan cadence (SYS-Agg).
                 if let Some(req) = mm.core.requested_scan_interval.take() {
                     slot.scan_interval = req;
@@ -832,6 +949,45 @@ mod tests {
         // Usage must respect the limit (within one in-flight unit).
         let mm = m.mm(0).unwrap();
         assert!(mm.core.usage_units <= 1024 + mm.swapper.threads() as u64);
+    }
+
+    #[test]
+    fn tiered_backend_absorbs_compressible_reclaim() {
+        let run = |host: HostConfig| {
+            let mut m = Machine::new(host);
+            let cfg = small_vm_cfg(8192, PageSize::Small);
+            let mm_cfg = MmConfig {
+                memory_limit: Some(1024 * 4096),
+                scan_interval: 50 * MS,
+                ..Default::default()
+            };
+            m.sys_vm(
+                cfg,
+                &mm_cfg,
+                vec![Box::new(UniformRandom::new(0, 4096, 100_000))],
+            );
+            let res = m.run();
+            let c = res[0].counters.clone();
+            let bm = m.backend_metrics().clone();
+            (c, bm)
+        };
+        let (c, bm) = run(HostConfig::default());
+        // The pool absorbed writes and served fault hits without I/O.
+        assert!(c.swapout_pool_stores > 0, "{bm:?}");
+        assert!(c.swapin_pool_hits > 0, "{bm:?}");
+        assert!(bm.pool_stores > 0 && bm.pool_hits > 0);
+        assert!(bm.compression_ratio() > 1.0);
+        // Same run against the paper's flat backend: every request is
+        // NVMe, and it issues strictly more of them.
+        let (cf, bf) = run(HostConfig::paper());
+        assert_eq!(cf.swapout_pool_stores + cf.swapin_pool_hits, 0);
+        assert_eq!(bf.pool_stores, 0);
+        assert!(
+            bm.nvme_io_reqs() < bf.nvme_io_reqs(),
+            "tiered {} vs flat {}",
+            bm.nvme_io_reqs(),
+            bf.nvme_io_reqs()
+        );
     }
 
     #[test]

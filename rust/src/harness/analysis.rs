@@ -47,7 +47,7 @@ pub fn fig1(scale: Scale) -> Vec<Table> {
 }
 
 fn fig1_one(mode: PageSize, cold_ratio: f64, ops: u64) -> f64 {
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     // Hot region resident, cold region swapped out; near-100% TLB miss
     // (hot region much larger than TLB reach).
     let frames = 96_000u64;
@@ -178,7 +178,7 @@ fn fig3_one(mode: PageSize, interval: u64, ops: u64) -> u64 {
 }
 
 fn fig3_one_full(mode: PageSize, interval: u64, ops: u64) -> (u64, u64) {
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     let frames = 16_384;
     let cfg = VmConfig {
         frames,

@@ -9,6 +9,7 @@ use crate::policies::{
     AggressivePolicy, DtReclaimer, LinearPf, LruReclaimer, NativeAnalytics, PfMode,
     ReuseDistReclaimer, WsrPolicy,
 };
+use crate::storage::TierMetrics;
 use crate::types::{PageSize, Time, MS, SEC};
 use crate::workloads::{
     cloud_preset, CloudWorkload, PhasedWss, SeqScan, UniformRandom, Workload,
@@ -73,7 +74,7 @@ pub fn fig6(scale: Scale) -> Vec<Table> {
 }
 
 fn fig6_one(config: &str, ops: u64) -> (f64, f64) {
-    let host = HostConfig::default();
+    let host = HostConfig::paper();
     let mut m = Machine::new(host.clone());
     let frames = 48_000u64;
     let pages = 40_960u64;
@@ -124,7 +125,7 @@ pub fn fig7(scale: Scale) -> Vec<Table> {
 }
 
 fn fig7_one(config: &str, vcpus: usize, ops_per_vcpu: u64) -> f64 {
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     let frames = 200_000u64;
     let pages = 180_000u64;
     let (mode, kernel) = match config {
@@ -168,7 +169,7 @@ pub fn fig8(scale: Scale) -> Vec<Table> {
         (unit * 3, per_phase),
     ];
     let w = PhasedWss::new(phases.clone());
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     let mm = MmConfig { scan_interval: 8 * MS, history: 16, ..Default::default() };
     let frames = unit * 5;
     let vmid = m.sys_vm(vm_cfg(frames, PageSize::Small, 1), &mm, vec![Box::new(w)]);
@@ -252,7 +253,7 @@ struct FigNine {
 fn fig9_one(name: &str, wl_scale: f64, mode: PageSize, reclaim: bool) -> FigNine {
     let spec = cloud_preset(name, wl_scale);
     let frames = spec.pages + spec.pages / 8 + 1024;
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     let mm = MmConfig {
         scan_interval: if reclaim { 80 * MS } else { 3600 * SEC },
         history: 16,
@@ -295,7 +296,7 @@ pub fn fig10(scale: Scale) -> Vec<Table> {
 fn fig10_one(config: &str, wl_scale: f64) -> (Time, f64, f64) {
     let spec = cloud_preset("g500", wl_scale);
     let frames = spec.pages + spec.pages / 8 + 1024;
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     m.set_max_time(15 * SEC); // thrashing baselines: cap, ordering is set
     let w: Vec<Box<dyn Workload>> = vec![Box::new(CloudWorkload::new(spec))];
     match config {
@@ -389,7 +390,7 @@ pub fn fig11(scale: Scale) -> Vec<Table> {
 fn fig11_one(name: &str, wl_scale: f64, config: &str, limit: u64) -> (Time, u64) {
     let spec = cloud_preset(name, wl_scale);
     let frames = spec.pages + spec.pages / 8 + 1024;
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     m.set_max_time(60 * SEC);
     let w: Vec<Box<dyn Workload>> = vec![Box::new(CloudWorkload::new(spec))];
     match config {
@@ -469,7 +470,7 @@ pub fn fig_pf(scale: Scale) -> Vec<Table> {
 fn fig_pf_one(pages: u64, iters: u64, pf: Option<PfMode>) -> (Time, f64) {
     let frames = pages + 2048;
     let limit = pages * 4096 * 3 / 4;
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     let mode = PageSize::Small;
     let mm_cfg = MmConfig {
         scan_interval: 500 * MS,
@@ -496,6 +497,61 @@ fn fig_pf_one(pages: u64, iters: u64, pf: Option<PfMode>) -> (Time, f64) {
         / (c.prefetch_timely + c.faults_major).max(1) as f64
         * 100.0;
     (res[0].runtime, timely)
+}
+
+/// Storage tiers (PR 2 extension, beyond the paper): the same
+/// reclaim-heavy workload against the flat NVMe backend vs the tiered
+/// backend (compressed pool + batched writeback). The tiered run must
+/// issue fewer NVMe requests and serve fault hits from the pool.
+pub fn fig_tiers(scale: Scale) -> Vec<Table> {
+    let pages = scale.u(6_000, 24_000);
+    let ops = scale.u(150_000, 600_000);
+    let mut t = Table::new(
+        "storage tiers: flat NVMe vs compressed pool + writeback",
+        &[
+            "config",
+            "runtime_ms",
+            "nvme_reqs",
+            "nvme_mb_written",
+            "pool_hit_pct",
+            "compression_x",
+            "pool_peak_mb",
+        ],
+    );
+    for (label, host) in [("flat", HostConfig::paper()), ("tiered", HostConfig::default())] {
+        let (rt, bm) = fig_tiers_one(host, pages, ops);
+        let cr = bm.compression_ratio();
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", rt as f64 / 1e6),
+            bm.nvme_io_reqs().to_string(),
+            format!("{:.1}", bm.nvme_bytes_written as f64 / 1e6),
+            format!("{:.0}", bm.pool_hit_rate() * 100.0),
+            if cr.is_finite() { format!("{cr:.1}") } else { "inf".into() },
+            format!("{:.1}", bm.pool_peak_bytes as f64 / 1e6),
+        ]);
+    }
+    vec![t]
+}
+
+fn fig_tiers_one(host: HostConfig, pages: u64, ops: u64) -> (Time, TierMetrics) {
+    let frames = pages + 2048;
+    // Half the working set fits: sustained reclaim + fault-back traffic.
+    let limit = pages * 4096 / 2;
+    let mut m = Machine::new(host);
+    let mm_cfg = MmConfig {
+        scan_interval: 50 * MS,
+        history: 16,
+        memory_limit: Some(limit),
+        ..Default::default()
+    };
+    m.sys_vm(
+        vm_cfg(frames, PageSize::Small, 1),
+        &mm_cfg,
+        vec![Box::new(UniformRandom::new(0, pages, ops))],
+    );
+    let res = m.run();
+    (res[0].runtime, m.backend_metrics().clone())
 }
 
 /// Fig 12: g500 memory usage over time, default vs aggressive policy.
@@ -527,7 +583,7 @@ pub fn fig12(scale: Scale) -> Vec<Table> {
 fn fig12_series(config: &str, wl_scale: f64) -> Vec<(Time, f64)> {
     let spec = cloud_preset("g500", wl_scale);
     let frames = spec.pages + spec.pages / 8 + 1024;
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     let w: Vec<Box<dyn Workload>> = vec![Box::new(CloudWorkload::new(spec))];
     let mm_cfg = MmConfig { scan_interval: 80 * MS, history: 16, ..Default::default() };
     let units = vm_cfg(frames, PageSize::Huge, 1).units();
@@ -582,7 +638,7 @@ fn fig13_one(config: &str, pages: u64, ops: u64) -> (Time, Time, u64) {
     // (thrash-then-recover: bounded below by construction)
     let tight = pages * 4096 * 3 / 10; // 30% of WSS: thrashing
     let lift_at = 2 * SEC;
-    let mut m = Machine::new(HostConfig::default());
+    let mut m = Machine::new(HostConfig::paper());
     let w: Vec<Box<dyn Workload>> =
         vec![Box::new(UniformRandom::new(0, pages, ops))];
     let vmid = match config {
@@ -695,5 +751,23 @@ mod tests {
     #[test]
     fn fmt_helper_reachable() {
         assert_eq!(fmt_bytes(4096), "4KiB");
+    }
+
+    #[test]
+    fn tiers_quick_tiered_beats_flat_on_requests() {
+        let pages = 4_000;
+        let ops = 120_000;
+        let (_, flat) = fig_tiers_one(HostConfig::paper(), pages, ops);
+        let (_, tiered) = fig_tiers_one(HostConfig::default(), pages, ops);
+        assert_eq!(flat.pool_hits, 0);
+        assert!(flat.nvme_io_reqs() > 0);
+        assert!(
+            tiered.nvme_io_reqs() < flat.nvme_io_reqs(),
+            "tiered {} vs flat {}",
+            tiered.nvme_io_reqs(),
+            flat.nvme_io_reqs()
+        );
+        assert!(tiered.pool_hit_rate() > 0.3, "hit rate {}", tiered.pool_hit_rate());
+        assert!(tiered.compression_ratio() > 1.5);
     }
 }

@@ -103,6 +103,12 @@ pub fn registry() -> Vec<Experiment> {
             run: eval::fig_pf,
         },
         Experiment {
+            id: "tiers",
+            title: "Storage tiers: compressed pool + NVMe writeback vs flat backend (PR 2 extension)",
+            expectation: "tiered run issues fewer NVMe requests; compressible fault hits served from the pool with no I/O",
+            run: eval::fig_tiers,
+        },
+        Experiment {
             id: "fig12",
             title: "Fig 12: g500 memory usage over time (SYS-Agg vs default)",
             expectation: "aggressive policy reclaims phase memory much faster",
@@ -148,9 +154,10 @@ mod tests {
     #[test]
     fn registry_covers_all_figures() {
         let ids: Vec<_> = registry().iter().map(|e| e.id).collect();
-        for want in
-            ["fig1", "fig2", "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "figpf", "fig12", "fig13"]
-        {
+        for want in [
+            "fig1", "fig2", "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "figpf",
+            "tiers", "fig12", "fig13",
+        ] {
             assert!(ids.contains(&want), "missing {want}");
         }
     }

@@ -18,6 +18,18 @@
 //!   (JAX) with its Pallas `coldstats` hot loop, AOT-lowered to HLO text
 //!   in `artifacts/` and executed from [`runtime`] via PJRT, always off
 //!   the page-fault critical path.
+//!
+//! Beyond the paper, swap storage is tiered (PR 2): the [`storage`]
+//! module defines the [`storage::SwapBackend`] trait and a two-tier
+//! implementation — a zswap-style compressed in-memory pool that
+//! absorbs reclaim writes (zero-page/run-length codec) in front of the
+//! NVMe device, drained by watermark-triggered batched+sorted
+//! writeback. Policies target tiers through
+//! [`mm::PolicyApi::reclaim_to`] / [`mm::PolicyApi::swap_tier`].
+//!
+//! `ARCHITECTURE.md` at the repo root carries the full module map, a
+//! narrated end-to-end page-fault walkthrough, and the fault-path
+//! complexity tables; `README.md` has the build/test/bench quickstart.
 
 pub mod baseline;
 pub mod config;

@@ -119,8 +119,9 @@ fn selfcheck() {
                     b
                 })
                 .collect();
-            let xo = x.dt_reclaim(&hist, 0.02, 5.0);
-            let no = NativeAnalytics::pipeline(&hist, 0.02, 5.0);
+            let refs: Vec<&Bitmap> = hist.iter().collect();
+            let xo = x.dt_reclaim(&refs, 0.02, 5.0);
+            let no = NativeAnalytics::pipeline(&refs, 0.02, 5.0);
             assert_eq!(xo.age, no.age, "age mismatch");
             assert_eq!(xo.proposed, no.proposed, "threshold mismatch");
             println!(

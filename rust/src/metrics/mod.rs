@@ -16,6 +16,10 @@ pub struct Counters {
     pub swapin_bytes: u64,
     pub swapout_ops: u64,
     pub swapout_bytes: u64,
+    /// Swap-ins served from the compressed pool (no NVMe I/O).
+    pub swapin_pool_hits: u64,
+    /// Swap-outs absorbed by the compressed pool (no NVMe I/O).
+    pub swapout_pool_stores: u64,
     pub prefetch_issued: u64,
     /// Prefetches that removed I/O from a later fault (timely).
     pub prefetch_timely: u64,

@@ -16,7 +16,7 @@ use crate::metrics::Counters;
 use crate::mm::queues::{QueueClass, SwapperQueue};
 use crate::mm::swapper::{Swapper, WorkOutcome};
 use crate::mm::zero_pool::ZeroPool;
-use crate::storage::LockBitmap;
+use crate::storage::{LockBitmap, SwapTier, TierHint};
 use crate::types::{Bitmap, Time, UnitId, UnitState};
 use crate::uffd::{Uffd, UffdEvent};
 use crate::vm::Vm;
@@ -53,6 +53,22 @@ impl<'a> PolicyApi<'a> {
     /// for non-resident or DMA-locked units.
     pub fn reclaim(&mut self, unit: UnitId) {
         self.core.request_reclaim(unit);
+    }
+
+    /// `reclaim(addr, tier)`: like [`PolicyApi::reclaim`] but routes the
+    /// write to a specific storage tier — e.g. the dt-reclaimer sends
+    /// maximally-cold units straight to NVMe so they don't churn the
+    /// compressed pool.
+    pub fn reclaim_to(&mut self, unit: UnitId, hint: TierHint) {
+        self.core.request_reclaim_to(unit, hint);
+    }
+
+    /// `get_swap_tier(addr)`: which storage tier holds the unit's swap
+    /// copy (None while resident with no backing copy). Maintained by
+    /// the machine from backend receipts, so policies can target tiers
+    /// without touching the backend.
+    pub fn swap_tier(&self, unit: UnitId) -> Option<SwapTier> {
+        self.core.swap_tier(unit)
     }
 
     /// `prefetch(addr)`: request a swap-in. Dropped if it would violate
@@ -253,7 +269,32 @@ pub struct EngineCore {
     pub staged_at: Vec<Time>,
     /// Set when a policy asks for a different scan cadence.
     pub requested_scan_interval: Option<Time>,
+    /// Per-unit reclaim tier routing (encoded [`TierHint`]), set by
+    /// `reclaim_to`, consumed at swap-out pickup.
+    tier_hint: Vec<u8>,
+    /// Which backend tier holds each unit's swap copy (encoded
+    /// `Option<SwapTier>`): mirror of backend receipts, kept by the
+    /// machine so the fault path / policies never query the backend.
+    backend_tier: Vec<u8>,
     clock_hand: usize,
+}
+
+#[inline]
+fn hint_code(h: TierHint) -> u8 {
+    match h {
+        TierHint::Auto => 0,
+        TierHint::Pool => 1,
+        TierHint::Nvme => 2,
+    }
+}
+
+#[inline]
+fn hint_from(c: u8) -> TierHint {
+    match c {
+        1 => TierHint::Pool,
+        2 => TierHint::Nvme,
+        _ => TierHint::Auto,
+    }
 }
 
 impl EngineCore {
@@ -279,7 +320,28 @@ impl EngineCore {
             prefetched_untouched: Bitmap::new(units as usize),
             staged_at: vec![0; units as usize],
             requested_scan_interval: None,
+            tier_hint: vec![0; units as usize],
+            backend_tier: vec![0; units as usize],
             clock_hand: 0,
+        }
+    }
+
+    /// Record where the backend put this unit's swap copy (machine-side
+    /// bookkeeping from [`crate::storage::IoReceipt`]s).
+    pub fn set_backend_tier(&mut self, unit: UnitId, tier: Option<SwapTier>) {
+        self.backend_tier[unit as usize] = match tier {
+            None => 0,
+            Some(SwapTier::Pool) => 1,
+            Some(SwapTier::Nvme) => 2,
+        };
+    }
+
+    /// Storage tier holding the unit's swap copy, if any.
+    pub fn swap_tier(&self, unit: UnitId) -> Option<SwapTier> {
+        match self.backend_tier[unit as usize] {
+            1 => Some(SwapTier::Pool),
+            2 => Some(SwapTier::Nvme),
+            _ => None,
         }
     }
 
@@ -302,12 +364,19 @@ impl EngineCore {
     /// Policy request: reclaim. Validated (paper: cannot corrupt, cannot
     /// break the fault path).
     pub fn request_reclaim(&mut self, unit: UnitId) {
+        self.request_reclaim_to(unit, TierHint::Auto);
+    }
+
+    /// Reclaim with an explicit storage-tier routing hint (consumed at
+    /// swap-out pickup; the last request's hint wins).
+    pub fn request_reclaim_to(&mut self, unit: UnitId, hint: TierHint) {
         if self.states[unit as usize] != UnitState::Resident {
             return;
         }
         if self.locks.deny_if_locked(unit) {
             return;
         }
+        self.tier_hint[unit as usize] = hint_code(hint);
         if self.want_out.get(unit as usize) {
             return; // already requested
         }
@@ -387,6 +456,9 @@ impl EngineCore {
                             self.counters.prefetch_wasted += 1;
                         }
                         let pre = sw.queue_handoff_ns + sw.madvise_ns;
+                        // Consume the routing hint either way so a Drop
+                        // elision can't leak it into a later reclaim.
+                        let hint = hint_from(std::mem::take(&mut self.tier_hint[ui]));
                         if self.clean_on_disk.get(ui) {
                             // Clean copy on disk: no write-back needed.
                             return Some(WorkOutcome::Drop {
@@ -398,6 +470,7 @@ impl EngineCore {
                             unit,
                             bytes: self.unit_bytes,
                             pre_cost: pre,
+                            hint,
                         });
                     }
                     // Fault/prefetch raced a completed map, or the unit
@@ -416,6 +489,7 @@ impl EngineCore {
                         // Reclaiming an untouched prefetch: content is a
                         // clean disk copy — just punch the hole.
                         self.want_out.clear(ui);
+                        self.tier_hint[ui] = 0;
                         self.states[ui] = UnitState::SwappingOut;
                         self.prefetched_untouched.clear(ui);
                         self.counters.prefetch_wasted += 1;
@@ -443,6 +517,7 @@ impl EngineCore {
         if self.want_out.get(ui) {
             self.want_out.clear(ui);
             self.planned_out = self.planned_out.saturating_sub(1);
+            self.tier_hint[ui] = 0;
         }
         if self.prefetch_intent.get(ui) {
             self.prefetch_intent.clear(ui);
@@ -953,6 +1028,35 @@ mod tests {
         assert_eq!(m.core.counters.faults_major, 1);
         match m.pick_work(10) {
             Some(WorkOutcome::SwapIn { unit: 1, bytes: 4096 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn reclaim_to_routes_tier_hint_and_consumes_it() {
+        let mut m = mm(8, None);
+        let (mut vm, _) = vm_for(8);
+        m.on_fault(&vm, &fault_ev(1), 0);
+        m.pick_work(0).unwrap();
+        m.finish_swapin(&mut vm, 1, false, 1);
+        m.core.request_reclaim_to(1, TierHint::Nvme);
+        match m.pick_work(2) {
+            Some(WorkOutcome::SwapOutWrite { unit: 1, hint: TierHint::Nvme, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        m.unmap_for_swapout(&mut vm, 1);
+        m.finish_swapout(&mut vm, 1, true, 3);
+        // Machine mirrors the backend receipt into the tier map.
+        m.core.set_backend_tier(1, Some(SwapTier::Nvme));
+        assert_eq!(m.core.swap_tier(1), Some(SwapTier::Nvme));
+        // Hint was consumed: the next reclaim defaults to Auto.
+        m.on_fault(&vm, &fault_ev(1), 4);
+        m.pick_work(4).unwrap();
+        m.finish_swapin(&mut vm, 1, false, 5);
+        m.core.request_reclaim(1);
+        match m.pick_work(6) {
+            Some(WorkOutcome::SwapOutWrite { unit: 1, hint: TierHint::Auto, .. }) => {}
+            Some(WorkOutcome::Drop { .. }) => {} // clean elision also fine
             other => panic!("{other:?}"),
         }
     }

@@ -2,6 +2,13 @@
 //! the Policy Engine, the Swapper (queues + worker threads), the memory
 //! limit accounting, the zero-page pool and the MM-API parameter
 //! registry.
+//!
+//! Swap I/O leaves this layer through [`crate::storage::SwapBackend`]:
+//! swap-out pickups carry a policy tier hint
+//! ([`WorkOutcome::SwapOutWrite`]), and the engine mirrors backend
+//! receipts into a per-unit tier map so policies can query
+//! [`PolicyApi::swap_tier`] without ever touching the backend on the
+//! fault path.
 
 pub mod engine;
 pub mod queues;

@@ -7,6 +7,7 @@
 //! duration of its operation — which is exactly why 2MB swapping
 //! saturates the device with only two workers (Fig 7).
 
+use crate::storage::TierHint;
 use crate::types::{Time, UnitId};
 
 /// What a worker must do for the unit it picked up. Produced by
@@ -15,12 +16,15 @@ use crate::types::{Time, UnitId};
 pub enum WorkOutcome {
     /// First touch: take a zero page and map it (no I/O).
     MapZero { unit: UnitId, cost: Time },
-    /// Load unit content from the backing store, then map.
+    /// Load unit content from the backing store, then map. The backend
+    /// resolves the tier (compressed pool first, then NVMe).
     SwapIn { unit: UnitId, bytes: u64 },
     /// Map an already-staged (prefetched) unit — no I/O.
     MapStaged { unit: UnitId, cost: Time },
     /// Unmapped + dirty: write content out, then punch the hole.
-    SwapOutWrite { unit: UnitId, bytes: u64, pre_cost: Time },
+    /// `hint` carries the requesting policy's tier routing (Auto unless
+    /// the policy called `reclaim_to`).
+    SwapOutWrite { unit: UnitId, bytes: u64, pre_cost: Time, hint: TierHint },
     /// Unmapped + clean copy already on disk: just punch the hole.
     Drop { unit: UnitId, cost: Time },
 }

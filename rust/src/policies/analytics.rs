@@ -10,7 +10,31 @@
 //!
 //! Both run *off* the page-fault critical path (paper §4.3).
 
+use std::collections::VecDeque;
+
 use crate::types::Bitmap;
+
+/// Build an H-row borrowed analytics window from a history ring:
+/// missing old rows are padded with a shared zero row (resized to `n`
+/// on demand), newer rows are borrowed from the ring. No bitmap is
+/// cloned — the ring-of-references fix for the ROADMAP-flagged
+/// per-scan-tick `window()` clones, shared by the dt-reclaimer and the
+/// §6.4 enhanced-Linux baseline.
+pub fn window_refs<'a>(
+    zero_pad: &'a mut Bitmap,
+    ring: &'a VecDeque<Bitmap>,
+    history: usize,
+    n: usize,
+) -> Vec<&'a Bitmap> {
+    if zero_pad.len() != n {
+        *zero_pad = Bitmap::new(n);
+    }
+    let missing = history.saturating_sub(ring.len());
+    std::iter::repeat(&*zero_pad)
+        .take(missing)
+        .chain(ring.iter())
+        .collect()
+}
 
 /// Output of one dt-reclaim analytics pass.
 #[derive(Debug, Clone)]
@@ -28,10 +52,13 @@ pub struct DtOutput {
 /// dt-reclaimer analytics backend (L2 `dt_reclaim` graph).
 pub trait ColdAnalytics {
     /// `hist` is the window of access bitmaps, oldest first, all of the
-    /// same length; `hist.len() == H`.
+    /// same length; `hist.len() == H`. Rows are borrowed (`&Bitmap`) so
+    /// callers keeping a history ring pass references instead of
+    /// cloning H bitmaps per scan tick (the PR 1 ROADMAP flagged that
+    /// clone; see ARCHITECTURE.md "dt-reclaimer window").
     fn dt_reclaim(
         &mut self,
-        hist: &[Bitmap],
+        hist: &[&Bitmap],
         target_rate: f32,
         prev_threshold: f32,
     ) -> DtOutput;
@@ -61,7 +88,7 @@ impl NativeAnalytics {
     }
 
     /// (age, count, distance) per unit — mirrors `coldstats_ref`.
-    pub fn coldstats(hist: &[Bitmap]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    pub fn coldstats(hist: &[&Bitmap]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let h = hist.len();
         let n = hist.first().map(|b| b.len()).unwrap_or(0);
         let mut age = vec![h as f32; n];
@@ -89,7 +116,7 @@ impl NativeAnalytics {
 
     /// Histogram + threshold — mirrors `dt_reclaim_ref`.
     pub fn pipeline(
-        hist: &[Bitmap],
+        hist: &[&Bitmap],
         target_rate: f32,
         prev_threshold: f32,
     ) -> DtOutput {
@@ -126,7 +153,7 @@ impl NativeAnalytics {
 impl ColdAnalytics for NativeAnalytics {
     fn dt_reclaim(
         &mut self,
-        hist: &[Bitmap],
+        hist: &[&Bitmap],
         target_rate: f32,
         prev_threshold: f32,
     ) -> DtOutput {
@@ -170,6 +197,10 @@ mod tests {
         b
     }
 
+    fn refs(hist: &[Bitmap]) -> Vec<&Bitmap> {
+        hist.iter().collect()
+    }
+
     #[test]
     fn coldstats_matches_python_ref_semantics() {
         // H=4, N=3: unit0 accessed rows {0,2}, unit1 row {3}, unit2 never.
@@ -179,7 +210,7 @@ mod tests {
             bm(3, &[0]),
             bm(3, &[1]),
         ];
-        let (age, count, dist) = NativeAnalytics::coldstats(&hist);
+        let (age, count, dist) = NativeAnalytics::coldstats(&refs(&hist));
         assert_eq!(age, vec![1.0, 0.0, 4.0]);
         assert_eq!(count, vec![2.0, 1.0, 0.0]);
         assert_eq!(dist, vec![2.0, 4.0, 4.0]);
@@ -190,7 +221,7 @@ mod tests {
         // All distances = 1 (hot): with any target, threshold proposes 2+
         // (tail(2) = 0 <= target).
         let hist = vec![bm(4, &[0, 1]); 8];
-        let out = NativeAnalytics::pipeline(&hist, 0.02, 8.0);
+        let out = NativeAnalytics::pipeline(&refs(&hist), 0.02, 8.0);
         assert_eq!(out.proposed, 2.0);
         assert_eq!(out.smoothed, 0.5 * 8.0 + 0.5 * 2.0);
     }
@@ -198,7 +229,7 @@ mod tests {
     #[test]
     fn empty_history_proposes_max() {
         let hist = vec![bm(4, &[]); 6];
-        let out = NativeAnalytics::pipeline(&hist, 0.02, 3.0);
+        let out = NativeAnalytics::pipeline(&refs(&hist), 0.02, 3.0);
         assert_eq!(out.proposed, 6.0);
     }
 

@@ -15,6 +15,7 @@ use std::collections::VecDeque;
 
 use crate::mm::{Policy, PolicyApi, PolicyEvent};
 use crate::policies::analytics::ColdAnalytics;
+use crate::storage::TierHint;
 use crate::types::{Bitmap, Time, UnitId, UnitState};
 
 pub struct DtReclaimer {
@@ -23,11 +24,17 @@ pub struct DtReclaimer {
     target_rate: f32,
     threshold: f32,
     ring: VecDeque<Bitmap>,
+    /// Shared all-zero pad row for a not-yet-full ring, so the window
+    /// borrows H references instead of cloning H bitmaps per scan tick
+    /// (the ROADMAP-flagged `window()` inefficiency, fixed in PR 2).
+    zero_pad: Bitmap,
     /// Units faulted since the last scan (folded into the next bitmap).
     faulted: Option<Bitmap>,
     /// Last computed per-unit ages (for WSS estimation).
     pub last_ages: Vec<f32>,
     pub reclaims_requested: u64,
+    /// Reclaims routed straight to NVMe (maximally cold: age == H).
+    pub nvme_routed: u64,
     pub analytics_runs: u64,
     /// WSS estimate: units with age < threshold at the last run.
     pub wss_estimate_units: u64,
@@ -41,9 +48,11 @@ impl DtReclaimer {
             target_rate: target_rate as f32,
             threshold: history as f32, // start maximally conservative
             ring: VecDeque::new(),
+            zero_pad: Bitmap::default(),
             faulted: None,
             last_ages: vec![],
             reclaims_requested: 0,
+            nvme_routed: 0,
             analytics_runs: 0,
             wss_estimate_units: 0,
         }
@@ -54,22 +63,6 @@ impl DtReclaimer {
             .faulted
             .get_or_insert_with(|| Bitmap::new(units));
         bm.set(unit as usize);
-    }
-
-    /// Build the H-row window, padding missing old history with zeros:
-    /// a unit not seen since the window began is genuinely cold (its
-    /// age saturates at H), while units seen once land in the
-    /// "unmeasurable distance" bucket — conservative for the threshold.
-    fn window(&self, n: usize) -> Vec<Bitmap> {
-        let mut rows = Vec::with_capacity(self.history);
-        let missing = self.history.saturating_sub(self.ring.len());
-        for _ in 0..missing {
-            rows.push(Bitmap::new(n));
-        }
-        for b in self.ring.iter() {
-            rows.push(b.clone());
-        }
-        rows
     }
 }
 
@@ -99,7 +92,14 @@ impl Policy for DtReclaimer {
                 if self.ring.len() < self.history.min(4) {
                     return;
                 }
-                let window = self.window(n);
+                // Ring-of-references window: a unit not seen since the
+                // window began is genuinely cold (age saturates at H).
+                let window = crate::policies::analytics::window_refs(
+                    &mut self.zero_pad,
+                    &self.ring,
+                    self.history,
+                    n,
+                );
                 let out = self.backend.dt_reclaim(
                     &window,
                     self.target_rate,
@@ -108,6 +108,7 @@ impl Policy for DtReclaimer {
                 self.analytics_runs += 1;
                 self.threshold = out.smoothed;
                 let cut = self.threshold;
+                let h_max = self.history as f32;
                 let mut wss = 0u64;
                 for u in 0..n {
                     if out.age[u] < cut {
@@ -116,7 +117,15 @@ impl Policy for DtReclaimer {
                     if out.age[u] >= cut
                         && api.page_state(u as UnitId) == UnitState::Resident
                     {
-                        api.reclaim(u as UnitId);
+                        if out.age[u] >= h_max {
+                            // Never seen in the whole window: predicted
+                            // to stay cold — bypass the compressed pool
+                            // so it doesn't churn capacity.
+                            api.reclaim_to(u as UnitId, TierHint::Nvme);
+                            self.nvme_routed += 1;
+                        } else {
+                            api.reclaim(u as UnitId);
+                        }
                         self.reclaims_requested += 1;
                     }
                 }
@@ -186,6 +195,34 @@ mod tests {
         for u in 0..8u64 {
             assert!(!mm.core.want_out.get(u as usize), "hot unit {u} reclaimed");
         }
+    }
+
+    #[test]
+    fn maximally_cold_units_routed_to_nvme() {
+        use crate::mm::WorkOutcome;
+        use crate::storage::TierHint;
+        let (mut mm, vm) = setup(64);
+        for u in 0..64 {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.usage_units = 64;
+        for s in 0..8 {
+            let mut bm = Bitmap::new(64);
+            for u in 0..8 {
+                bm.set(u);
+            }
+            mm.on_scan(&vm, &bm, s * 1_000_000_000);
+        }
+        // Units never seen in the window have age == H: their swap-outs
+        // carry the NVMe bypass hint at pickup.
+        let mut nvme_hints = 0;
+        while let Some(w) = mm.pick_work(9_000_000_000) {
+            if let WorkOutcome::SwapOutWrite { hint, .. } = w {
+                assert_eq!(hint, TierHint::Nvme);
+                nvme_hints += 1;
+            }
+        }
+        assert!(nvme_hints > 40, "nvme-routed {nvme_hints}");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! (<2% timely) while the GVA version covers >98% of faults.
 
 use crate::mm::{Policy, PolicyApi, PolicyEvent};
+use crate::storage::SwapTier;
 use crate::types::UnitId;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,14 +23,43 @@ pub enum PfMode {
 
 pub struct LinearPf {
     mode: PfMode,
+    /// Tier-aware mode: only prefetch units whose swap copy sits on
+    /// NVMe. A compressed-pool hit is already cheap on the fault path
+    /// (decompress, no device I/O), so prefetching it mostly burns
+    /// Swapper-queue slots. Off by default (paper §6.6 behavior).
+    pub nvme_only: bool,
     pub issued: u64,
     pub ctx_missing: u64,
     pub translation_failed: u64,
+    /// Prefetches suppressed because the target was pool-resident.
+    pub skipped_pool_resident: u64,
 }
 
 impl LinearPf {
     pub fn new(mode: PfMode) -> Self {
-        LinearPf { mode, issued: 0, ctx_missing: 0, translation_failed: 0 }
+        LinearPf {
+            mode,
+            nvme_only: false,
+            issued: 0,
+            ctx_missing: 0,
+            translation_failed: 0,
+            skipped_pool_resident: 0,
+        }
+    }
+
+    /// Tier-aware variant: see [`LinearPf::nvme_only`].
+    pub fn tier_aware(mode: PfMode) -> Self {
+        LinearPf { nvme_only: true, ..Self::new(mode) }
+    }
+
+    /// Issue (or tier-skip) one prefetch.
+    fn emit(&mut self, next: UnitId, api: &mut PolicyApi) {
+        if self.nvme_only && api.swap_tier(next) == Some(SwapTier::Pool) {
+            self.skipped_pool_resident += 1;
+            return;
+        }
+        api.prefetch(next);
+        self.issued += 1;
     }
 }
 
@@ -49,8 +79,7 @@ impl Policy for LinearPf {
             PfMode::Hva => {
                 let next = unit + 1;
                 if next < api.units() {
-                    api.prefetch(next);
-                    self.issued += 1;
+                    self.emit(next, api);
                 }
             }
             PfMode::Gva => {
@@ -69,8 +98,7 @@ impl Policy for LinearPf {
                 match api.gva_to_hva(next_gva_page, ctx.cr3) {
                     Some(hva_frame) => {
                         let next_unit: UnitId = api.unit_of_frame(hva_frame);
-                        api.prefetch(next_unit);
-                        self.issued += 1;
+                        self.emit(next_unit, api);
                     }
                     None => self.translation_failed += 1,
                 }
@@ -164,6 +192,42 @@ mod tests {
         };
         mm.on_fault(&vm, &ev, 0);
         assert!(mm.core.queue.contains(21));
+    }
+
+    #[test]
+    fn tier_aware_mode_skips_pool_resident_targets() {
+        let (mut mm, vm, _) = setup(1.0);
+        mm.add_policy(Box::new(LinearPf::tier_aware(PfMode::Hva)));
+        mm.core.states[20] = UnitState::Swapped;
+        mm.core.states[21] = UnitState::Swapped;
+        // Unit 21's swap copy sits in the compressed pool: a fault on it
+        // is already I/O-free, so the prefetch is suppressed.
+        mm.core.set_backend_tier(21, Some(crate::storage::SwapTier::Pool));
+        let ev = crate::uffd::UffdEvent {
+            fault: crate::vm::FaultInfo {
+                unit: 20,
+                gpa_frame: 20,
+                gva_page: 99,
+                cr3: 0,
+                ip: 0,
+                write: false,
+                vcpu: 0,
+                pre_cost: 0,
+            },
+            raised_at: 0,
+            delivered_at: 0,
+        };
+        mm.on_fault(&vm, &ev, 0);
+        assert_eq!(mm.core.counters.prefetch_issued, 0);
+        // But an NVMe-resident target is still prefetched.
+        mm.core.states[30] = UnitState::Swapped;
+        mm.core.states[31] = UnitState::Swapped;
+        mm.core.set_backend_tier(31, Some(crate::storage::SwapTier::Nvme));
+        let mut ev2 = ev;
+        ev2.fault.unit = 30;
+        ev2.fault.gpa_frame = 30;
+        mm.on_fault(&vm, &ev2, 1);
+        assert!(mm.core.queue.contains(31));
     }
 
     #[test]

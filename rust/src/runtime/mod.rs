@@ -86,7 +86,7 @@ mod stub {
     impl ColdAnalytics for XlaAnalytics {
         fn dt_reclaim(
             &mut self,
-            _hist: &[Bitmap],
+            _hist: &[&Bitmap],
             _target_rate: f32,
             _prev_threshold: f32,
         ) -> DtOutput {
@@ -233,7 +233,7 @@ mod pjrt {
     impl ColdAnalytics for XlaAnalytics {
         fn dt_reclaim(
             &mut self,
-            hist: &[Bitmap],
+            hist: &[&Bitmap],
             target_rate: f32,
             prev_threshold: f32,
         ) -> DtOutput {
@@ -423,8 +423,9 @@ mod pjrt {
             let mut rng = Rng::new(10);
             // Window matching the artifact H, small N (padded to tile).
             let hist = random_hist(&mut rng, x.history, 500, 0.3);
-            let xo = x.dt_reclaim(&hist, 0.02, 5.0);
-            let no = NativeAnalytics::pipeline(&hist, 0.02, 5.0);
+            let refs: Vec<&Bitmap> = hist.iter().collect();
+            let xo = x.dt_reclaim(&refs, 0.02, 5.0);
+            let no = NativeAnalytics::pipeline(&refs, 0.02, 5.0);
             assert_eq!(xo.age.len(), 500);
             for u in 0..500 {
                 assert_eq!(xo.age[u], no.age[u], "age mismatch at {u}");

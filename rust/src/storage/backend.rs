@@ -1,147 +1,195 @@
-//! SPDK-like storage backend: one polling core, a lock-free request
-//! queue per MM, zero-copy DMA for 2MB pages and bounce buffers for 4kB
-//! (SPDK cannot DMA unaligned 4k directly, §5.3).
+//! The [`SwapBackend`] trait: the contract between the MM/Swapper layer
+//! and swap storage, plus the receipt and metrics types every backend
+//! implementation shares.
 //!
-//! Swapper worker threads enqueue a request and sleep on a semaphore;
-//! the backend polls, programs the NVMe DMA engine, and wakes the worker
-//! on completion. We model the poll pickup as a uniformly distributed
-//! delay in [0, poll_interval), the DMA via [`crate::hw::Nvme`], and the
-//! 4kB bounce copy as a fixed per-op cost.
+//! PR 1's `StorageBackend` was a single flat SPDK-like NVMe path; this
+//! trait replaces it so the machine can route swap I/O through a tiered
+//! implementation ([`crate::storage::TieredBackend`]: compressed
+//! in-memory pool + batched NVMe writeback) while policies target tiers
+//! explicitly via [`TierHint`].
+//!
+//! # Contract
+//!
+//! * **Idempotence / replacement** — [`SwapBackend::write`] for a
+//!   `(vm, unit)` that already has a stored copy *replaces* it (the old
+//!   copy's pool bytes are released). [`SwapBackend::discard`] of an
+//!   absent unit is a no-op. [`SwapBackend::read`] is non-destructive:
+//!   the stored copy survives, which is what lets the engine's
+//!   `clean_on_disk` write-back elision (`WorkOutcome::Drop`) stay
+//!   correct — a clean reclaim never re-writes, so the backend copy
+//!   must remain valid.
+//! * **Tier fallthrough** — reads check the compressed pool first
+//!   (decompress on hit, no NVMe I/O), then NVMe. A unit that was never
+//!   written (e.g. a warm-start `prime_swapped` VM) models pre-existing
+//!   cold swap-file content: the read is a full NVMe I/O returning a
+//!   zero-filled page. A pool-disabled (flat) backend is
+//!   accounting-only: timing and counters are exact, but no content is
+//!   retained and `read` leaves `out` untouched (PR 1 parity).
+//! * **Writeback ordering** — when pool occupancy crosses the
+//!   configured high watermark, the backend drains oldest-admitted
+//!   entries in batches, *sorted ascending by `(vm, unit)`*, and
+//!   coalesces runs of adjacent units into single NVMe requests. The
+//!   drained units are reported in [`IoReceipt::writeback`] so the
+//!   machine can update per-MM tier maps.
+//! * **Fault-during-writeback** — a read of a unit whose writeback I/O
+//!   is still in flight must not complete before that writeback does
+//!   (the data is not on the device yet); implementations serialize the
+//!   read behind the writeback's completion time.
+//!
+//! Completion is returned as a virtual-time stamp ([`IoReceipt::completes_at`])
+//! rather than a callback: the discrete-event machine schedules the
+//! wake-up event itself, exactly as it did against the flat backend.
 
-use crate::config::SwCost;
-use crate::hw::{IoKind, Nvme};
+use crate::hw::Nvme;
 use crate::sim::Rng;
-use crate::types::{Time, UnitId, VmId, FRAME_BYTES};
+use crate::types::{Time, UnitId, VmId};
 
 /// Token identifying an in-flight I/O (paired with its completion event).
 pub type IoToken = u64;
 
+/// Which storage tier currently holds (or served) a unit's swap copy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SwapTier {
+    /// Compressed in-memory pool (zswap-style): no device I/O to hit.
+    Pool,
+    /// NVMe device (flat tier / writeback target).
+    Nvme,
+}
+
+/// Policy-provided routing hint for a swap-out write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TierHint {
+    /// Backend decides (pool if compressible and within capacity).
+    #[default]
+    Auto,
+    /// Prefer the compressed pool even for poorly-compressing data
+    /// (admit unless it alone exceeds pool capacity).
+    Pool,
+    /// Bypass the pool: write straight to NVMe. Policies use this for
+    /// units predicted never to fault again (e.g. the dt-reclaimer's
+    /// maximally-cold class) so they don't churn pool capacity.
+    Nvme,
+}
+
+/// Result of a [`SwapBackend`] operation: where the data landed / came
+/// from and when the operation completes in virtual time.
 #[derive(Debug, Clone)]
-pub struct IoRequest {
+pub struct IoReceipt {
     pub token: IoToken,
-    pub vm: VmId,
-    pub unit: UnitId,
-    pub bytes: u64,
-    pub kind: IoKind,
-    pub submitted_at: Time,
     pub completes_at: Time,
+    /// Tier that absorbed the write or served the read.
+    pub tier: SwapTier,
+    /// Units this operation's watermark writeback drained from the pool
+    /// to NVMe (sorted ascending by `(vm, unit)`; usually empty).
+    pub writeback: Vec<(VmId, UnitId)>,
 }
 
-#[derive(Debug)]
-pub struct StorageBackend {
-    next_token: IoToken,
-    poll_ns: Time,
-    bounce_copy_4k_ns: Time,
-    pub inflight: u64,
-    pub completed: u64,
-    pub bytes_read: u64,
-    pub bytes_written: u64,
-    /// Zero-copy ops (2MB DMA straight into VM memory).
+/// Aggregate backend counters (per-host; per-VM splits live in
+/// [`crate::metrics::Counters`]).
+#[derive(Debug, Clone, Default)]
+pub struct TierMetrics {
+    /// Writes absorbed by the compressed pool.
+    pub pool_stores: u64,
+    /// Pool admissions denied (incompressible page -> straight to NVMe).
+    pub pool_rejects: u64,
+    /// Stored pages that were all-zero (no payload at all).
+    pub pool_zero_pages: u64,
+    /// Reads served by pool decompression (no NVMe I/O).
+    pub pool_hits: u64,
+    /// Reads that fell through the pool to NVMe (incl. cold content).
+    pub pool_fallthrough: u64,
+    /// Current compressed-pool occupancy in bytes.
+    pub pool_bytes: u64,
+    pub pool_peak_bytes: u64,
+    /// Raw vs compressed size of everything admitted to the pool.
+    pub raw_bytes_stored: u64,
+    pub compressed_bytes_stored: u64,
+    /// Watermark writeback activity.
+    pub writeback_batches: u64,
+    pub writeback_units: u64,
+    /// NVMe request counts *after* coalescing (direct writes + writeback
+    /// + reads). The tiering win is measured here.
+    pub nvme_write_reqs: u64,
+    pub nvme_reads: u64,
+    pub nvme_bytes_read: u64,
+    pub nvme_bytes_written: u64,
+    /// SPDK DMA modeling (§5.3): 2MB ops are zero-copy, 4kB bounce.
     pub zero_copy_ops: u64,
-    /// Bounce-buffered ops (4kB).
     pub bounced_ops: u64,
+    pub discards: u64,
 }
 
-impl StorageBackend {
-    pub fn new(sw: &SwCost) -> Self {
-        StorageBackend {
-            next_token: 0,
-            poll_ns: sw.backend_poll_ns,
-            bounce_copy_4k_ns: sw.bounce_copy_4k_ns,
-            inflight: 0,
-            completed: 0,
-            bytes_read: 0,
-            bytes_written: 0,
-            zero_copy_ops: 0,
-            bounced_ops: 0,
+impl TierMetrics {
+    /// Raw/compressed ratio of pool-admitted data (1.0 when nothing
+    /// was admitted).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.compressed_bytes_stored == 0 {
+            if self.raw_bytes_stored > 0 {
+                f64::INFINITY // everything stored was zero-filled
+            } else {
+                1.0
+            }
+        } else {
+            self.raw_bytes_stored as f64 / self.compressed_bytes_stored as f64
         }
     }
 
-    /// Submit a swap I/O at `now`; returns the request with its
-    /// completion time (the machine schedules the IoDone event).
-    pub fn submit(
+    /// Total NVMe requests issued (reads + coalesced writes).
+    pub fn nvme_io_reqs(&self) -> u64 {
+        self.nvme_reads + self.nvme_write_reqs
+    }
+
+    /// Fraction of backend reads served without NVMe I/O.
+    pub fn pool_hit_rate(&self) -> f64 {
+        let total = self.pool_hits + self.pool_fallthrough;
+        if total == 0 {
+            0.0
+        } else {
+            self.pool_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Swap storage behind the Swapper workers. See the module docs for the
+/// ordering / idempotence / fallthrough contract.
+pub trait SwapBackend {
+    /// Store `data` as the swap copy of `(vm, unit)`, replacing any
+    /// previous copy. `hint` routes between tiers; the returned receipt
+    /// says where the data landed and when the store completes.
+    #[allow(clippy::too_many_arguments)]
+    fn write(
+        &mut self,
+        vm: VmId,
+        unit: UnitId,
+        data: &[u8],
+        hint: TierHint,
+        now: Time,
+        nvme: &mut Nvme,
+        rng: &mut Rng,
+    ) -> IoReceipt;
+
+    /// Fetch the swap copy of `(vm, unit)` into `out` (resized to the
+    /// unit's length). `bytes` is the expected unit size, used to model
+    /// cold (never-written) content. Non-destructive.
+    #[allow(clippy::too_many_arguments)]
+    fn read(
         &mut self,
         vm: VmId,
         unit: UnitId,
         bytes: u64,
-        kind: IoKind,
+        out: &mut Vec<u8>,
         now: Time,
         nvme: &mut Nvme,
         rng: &mut Rng,
-    ) -> IoRequest {
-        let token = self.next_token;
-        self.next_token += 1;
-        self.inflight += 1;
+    ) -> IoReceipt;
 
-        // Poll-loop pickup jitter.
-        let pickup = now + rng.below(self.poll_ns.max(1));
+    /// Drop the stored copy, releasing pool space. No-op if absent.
+    fn discard(&mut self, vm: VmId, unit: UnitId);
 
-        // 2MB: program the DMA engine against VM memory directly
-        // (zero-copy). 4kB: DMA into a bounce buffer, then copy.
-        let extra = if bytes > FRAME_BYTES {
-            self.zero_copy_ops += 1;
-            0
-        } else {
-            self.bounced_ops += 1;
-            self.bounce_copy_4k_ns
-        };
+    /// Tier currently holding the unit's copy (None if never written or
+    /// discarded).
+    fn tier_of(&self, vm: VmId, unit: UnitId) -> Option<SwapTier>;
 
-        match kind {
-            IoKind::Read => self.bytes_read += bytes,
-            IoKind::Write => self.bytes_written += bytes,
-        }
-
-        let done = nvme.submit(pickup, bytes, kind) + extra;
-        IoRequest { token, vm, unit, bytes, kind, submitted_at: now, completes_at: done }
-    }
-
-    /// Mark an I/O completed (wake the waiting swapper thread).
-    pub fn complete(&mut self, _req: &IoRequest) {
-        self.inflight -= 1;
-        self.completed += 1;
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::HwConfig;
-    use crate::types::HUGE_BYTES;
-
-    fn setup() -> (StorageBackend, Nvme, Rng) {
-        (
-            StorageBackend::new(&SwCost::default()),
-            Nvme::new(&HwConfig::default()),
-            Rng::new(3),
-        )
-    }
-
-    #[test]
-    fn huge_is_zero_copy_small_is_bounced() {
-        let (mut b, mut n, mut rng) = setup();
-        b.submit(0, 1, HUGE_BYTES, IoKind::Read, 0, &mut n, &mut rng);
-        b.submit(0, 2, FRAME_BYTES, IoKind::Read, 0, &mut n, &mut rng);
-        assert_eq!(b.zero_copy_ops, 1);
-        assert_eq!(b.bounced_ops, 1);
-        assert_eq!(b.inflight, 2);
-    }
-
-    #[test]
-    fn completion_accounting() {
-        let (mut b, mut n, mut rng) = setup();
-        let r = b.submit(0, 1, FRAME_BYTES, IoKind::Write, 100, &mut n, &mut rng);
-        assert!(r.completes_at > 100);
-        b.complete(&r);
-        assert_eq!(b.inflight, 0);
-        assert_eq!(b.completed, 1);
-        assert_eq!(b.bytes_written, FRAME_BYTES);
-    }
-
-    #[test]
-    fn tokens_unique() {
-        let (mut b, mut n, mut rng) = setup();
-        let a = b.submit(0, 1, FRAME_BYTES, IoKind::Read, 0, &mut n, &mut rng);
-        let c = b.submit(0, 1, FRAME_BYTES, IoKind::Read, 0, &mut n, &mut rng);
-        assert_ne!(a.token, c.token);
-    }
+    /// Aggregate counters.
+    fn metrics(&self) -> &TierMetrics;
 }

@@ -1,0 +1,210 @@
+//! Page codec for the compressed swap pool: zero-page detection plus a
+//! byte-run-length encoder with a verbatim fallback for incompressible
+//! data.
+//!
+//! The codec is deliberately simple — the pool's value comes from the
+//! *tiering* (absorbing reclaim writes in DRAM instead of NVMe), not
+//! from squeezing the last percent of ratio — but it is a real codec
+//! over real bytes: `decompress(compress(p)) == p` for every input, a
+//! property the round-trip tests drive with random and zero-heavy
+//! pages. Zero detection mirrors the zero-page special-casing the MM
+//! already does for first-touch faults ([`crate::mm::ZeroPool`]): an
+//! all-zero page stores no payload at all, like zswap's same-filled
+//! page path.
+//!
+//! Encoding format (`Compressed::Rle`): a sequence of `(run_len, byte)`
+//! pairs, `run_len` in `1..=255`. Runs longer than 255 split into
+//! multiple pairs. If the encoded stream would reach the input length,
+//! [`compress`] returns `Compressed::Raw` instead (never larger than
+//! the input plus the enum tag).
+
+/// A compressed page image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Compressed {
+    /// All-zero page of `len` bytes: no payload stored.
+    Zero { len: u32 },
+    /// Run-length-encoded payload (strictly smaller than the input).
+    Rle { len: u32, data: Vec<u8> },
+    /// Incompressible page stored verbatim.
+    Raw(Vec<u8>),
+}
+
+impl Compressed {
+    /// Bytes of pool memory this image occupies (payload only; the
+    /// per-entry bookkeeping overhead is accounted by the pool).
+    pub fn stored_bytes(&self) -> u64 {
+        match self {
+            Compressed::Zero { .. } => 0,
+            Compressed::Rle { data, .. } => data.len() as u64,
+            Compressed::Raw(data) => data.len() as u64,
+        }
+    }
+
+    /// Length of the original (decompressed) page.
+    pub fn raw_len(&self) -> usize {
+        match self {
+            Compressed::Zero { len } => *len as usize,
+            Compressed::Rle { len, .. } => *len as usize,
+            Compressed::Raw(data) => data.len(),
+        }
+    }
+}
+
+/// True if every byte of `data` is zero (word-at-a-time scan).
+pub fn is_zero_page(data: &[u8]) -> bool {
+    let mut chunks = data.chunks_exact(8);
+    if !chunks.all(|c| u64::from_ne_bytes(c.try_into().unwrap()) == 0) {
+        return false;
+    }
+    data.chunks_exact(8).remainder().iter().all(|&b| b == 0)
+}
+
+/// Compress a page. Zero pages store nothing; pages whose RLE stream
+/// does not shrink are stored raw.
+pub fn compress(data: &[u8]) -> Compressed {
+    if is_zero_page(data) {
+        return Compressed::Zero { len: data.len() as u32 };
+    }
+    let mut out = Vec::with_capacity(data.len() / 4);
+    let mut i = 0;
+    while i < data.len() {
+        let b = data[i];
+        let mut run = 1usize;
+        while i + run < data.len() && data[i + run] == b && run < 255 {
+            run += 1;
+        }
+        out.push(run as u8);
+        out.push(b);
+        i += run;
+        if out.len() >= data.len() {
+            // Not shrinking: bail out to the verbatim representation.
+            return Compressed::Raw(data.to_vec());
+        }
+    }
+    Compressed::Rle { len: data.len() as u32, data: out }
+}
+
+/// Decompress into `out` (cleared and refilled; capacity is reused).
+pub fn decompress(img: &Compressed, out: &mut Vec<u8>) {
+    out.clear();
+    match img {
+        Compressed::Zero { len } => out.resize(*len as usize, 0),
+        Compressed::Raw(data) => out.extend_from_slice(data),
+        Compressed::Rle { len, data } => {
+            out.reserve(*len as usize);
+            for pair in data.chunks_exact(2) {
+                let (run, b) = (pair[0] as usize, pair[1]);
+                let start = out.len();
+                out.resize(start + run, b);
+            }
+            debug_assert_eq!(out.len(), *len as usize);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    fn roundtrip(data: &[u8]) -> Compressed {
+        let img = compress(data);
+        let mut out = Vec::new();
+        decompress(&img, &mut out);
+        assert_eq!(out.as_slice(), data, "roundtrip mismatch ({} bytes)", data.len());
+        img
+    }
+
+    #[test]
+    fn zero_page_stores_nothing() {
+        let img = roundtrip(&[0u8; 4096]);
+        assert_eq!(img, Compressed::Zero { len: 4096 });
+        assert_eq!(img.stored_bytes(), 0);
+        assert_eq!(img.raw_len(), 4096);
+    }
+
+    #[test]
+    fn pattern_page_shrinks() {
+        let mut page = vec![0xABu8; 4096];
+        page[100] = 1;
+        page[3000] = 2;
+        let img = roundtrip(&page);
+        assert!(img.stored_bytes() < 200, "stored {}", img.stored_bytes());
+    }
+
+    #[test]
+    fn random_page_falls_back_to_raw() {
+        let mut rng = Rng::new(5);
+        let page: Vec<u8> = (0..4096).map(|_| rng.below(256) as u8).collect();
+        let img = roundtrip(&page);
+        assert!(matches!(img, Compressed::Raw(_)));
+        assert_eq!(img.stored_bytes(), 4096);
+    }
+
+    #[test]
+    fn run_length_boundaries() {
+        // Runs of exactly 255, 256 and 510 bytes cross the u8 limit.
+        for n in [1usize, 2, 254, 255, 256, 510, 511, 1024] {
+            let mut page = vec![7u8; n];
+            if n > 2 {
+                page[n / 2] = 9; // break the run mid-way too
+            }
+            roundtrip(&page);
+        }
+        roundtrip(&[]);
+        roundtrip(&[0]);
+        roundtrip(&[1]);
+    }
+
+    /// Property: compress/decompress identity over randomized pages —
+    /// random, zero-heavy, and run-structured — across many seeds.
+    #[test]
+    fn prop_roundtrip_identity() {
+        let mut rng = Rng::new(42);
+        for case in 0..200u64 {
+            let len = match case % 4 {
+                0 => 4096,
+                1 => 1 + rng.below(4096) as usize,
+                2 => 2 * 1024 * 1024 / 64, // 2M unit sampled at /64 for speed
+                _ => 64 + rng.below(512) as usize,
+            };
+            let mut page = vec![0u8; len];
+            match case % 3 {
+                0 => {
+                    // Zero-heavy: a few random dirty islands.
+                    for _ in 0..rng.below(8) {
+                        let at = rng.below(len as u64) as usize;
+                        let span = (rng.below(64) as usize + 1).min(len - at);
+                        for b in &mut page[at..at + span] {
+                            *b = rng.below(256) as u8;
+                        }
+                    }
+                }
+                1 => {
+                    // Fully random (incompressible).
+                    for b in page.iter_mut() {
+                        *b = rng.below(256) as u8;
+                    }
+                }
+                _ => {
+                    // Run-structured: random-length constant runs.
+                    let mut i = 0;
+                    while i < len {
+                        let run = (1 + rng.below(400) as usize).min(len - i);
+                        let v = rng.below(256) as u8;
+                        for b in &mut page[i..i + run] {
+                            *b = v;
+                        }
+                        i += run;
+                    }
+                }
+            }
+            let img = compress(&page);
+            let mut out = Vec::new();
+            decompress(&img, &mut out);
+            assert_eq!(out, page, "case {case} len {len}");
+            // Compressed never exceeds raw (Raw fallback guarantees it).
+            assert!(img.stored_bytes() <= len as u64, "case {case}");
+        }
+    }
+}

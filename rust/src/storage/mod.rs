@@ -1,10 +1,68 @@
-//! Storage Backend (paper §4.4, §5.3): a single SPDK-like polling
-//! process serving swap I/O for all MMs, plus the page-locking protocol
-//! that lets zero-copy I/O clients (OVS/vhost) pin pages against
-//! swap-out.
+//! Storage backend (paper §4.4, §5.3) — now tiered.
+//!
+//! One backend process serves swap I/O for all MMs on the host. PR 2
+//! replaced the flat SPDK/NVMe path with the [`SwapBackend`] trait and
+//! a two-tier implementation, [`TieredBackend`]:
+//!
+//! * **Tier 0 — compressed pool** ([`codec`]): a zswap-style in-memory
+//!   pool that absorbs reclaim writes. Zero pages (detected with the
+//!   same all-zero scan idea as the MM's [`crate::mm::ZeroPool`]) store
+//!   no payload; run-length-compressible pages store their encoded
+//!   form; incompressible pages are rejected to NVMe.
+//! * **Tier 1 — NVMe writeback** ([`crate::hw::Nvme`]): when the pool
+//!   crosses its high watermark, the oldest entries are drained in
+//!   batches of sorted, adjacent-unit-coalesced I/O requests down to
+//!   the low watermark.
+//!
+//! Faults check the pool first (decompress-on-hit, **no** NVMe I/O) and
+//! fall through to the device; see [`backend`] for the full trait
+//! contract (write idempotence, non-destructive reads, writeback
+//! ordering, the fault-during-writeback rule). [`locks`] carries the
+//! page-locking protocol that lets zero-copy I/O clients (OVS/vhost)
+//! pin pages against swap-out, unchanged from PR 1.
+//!
+//! # Example
+//!
+//! A zero page is absorbed by the pool and faults back without device
+//! I/O; an incompressible page falls through to NVMe:
+//!
+//! ```
+//! use flexswap::config::{HwConfig, SwCost, TierConfig};
+//! use flexswap::hw::Nvme;
+//! use flexswap::sim::Rng;
+//! use flexswap::storage::{SwapBackend, SwapTier, TierHint, TieredBackend};
+//!
+//! let mut backend = TieredBackend::new(&TierConfig::default(), &SwCost::default());
+//! let mut nvme = Nvme::new(&HwConfig::default());
+//! let mut rng = Rng::new(1);
+//!
+//! // Reclaim write of a zero page: pool tier, no NVMe request.
+//! let zero = vec![0u8; 4096];
+//! let w = backend.write(0, 7, &zero, TierHint::Auto, 0, &mut nvme, &mut rng);
+//! assert_eq!(w.tier, SwapTier::Pool);
+//! assert_eq!(backend.metrics().nvme_write_reqs, 0);
+//!
+//! // Fault hit on the compressed pool: decompress only, content intact.
+//! let mut page = Vec::new();
+//! let r = backend.read(0, 7, 4096, &mut page, w.completes_at, &mut nvme, &mut rng);
+//! assert_eq!(r.tier, SwapTier::Pool);
+//! assert_eq!(page, zero);
+//! assert_eq!(backend.metrics().nvme_reads, 0);
+//!
+//! // A policy can route a cold unit straight to NVMe.
+//! let w2 = backend.write(0, 8, &zero, TierHint::Nvme, 0, &mut nvme, &mut rng);
+//! assert_eq!(w2.tier, SwapTier::Nvme);
+//! assert_eq!(backend.metrics().nvme_write_reqs, 1);
+//! ```
 
 pub mod backend;
+pub mod codec;
+pub mod content;
 pub mod locks;
+pub mod tiered;
 
-pub use backend::{IoToken, StorageBackend};
+pub use backend::{IoReceipt, IoToken, SwapBackend, SwapTier, TierHint, TierMetrics};
+pub use codec::{compress, decompress, is_zero_page, Compressed};
+pub use content::{ContentClass, ContentMix, ContentModel};
 pub use locks::LockBitmap;
+pub use tiered::TieredBackend;

@@ -1,0 +1,713 @@
+//! [`TieredBackend`]: the two-tier swap store — a zswap-style
+//! compressed in-memory pool in front of the SPDK/NVMe path — behind
+//! the [`SwapBackend`] trait.
+//!
+//! Write path: poll-loop pickup (same jitter model as the flat PR 1
+//! backend), then a compression attempt. Compressible pages are
+//! admitted to the pool (zero pages store no payload at all);
+//! incompressible pages and [`TierHint::Nvme`]-routed pages go straight
+//! to the device with the §5.3 DMA model (2MB zero-copy, 4kB bounce
+//! buffer). When pool occupancy crosses the high watermark, the
+//! oldest-admitted entries are drained to NVMe in batches: victims are
+//! sorted by `(vm, unit)` and runs of adjacent units are coalesced into
+//! single large sequential I/O requests — the request-count win the
+//! `storage_tiers` bench series and the acceptance tests measure.
+//!
+//! Read path: pool hit = decompress only (no NVMe I/O); NVMe-tier reads
+//! serialize behind any still-in-flight writeback of the same unit
+//! (fault-during-writeback race); never-written units model cold
+//! pre-existing swap-file content (zero-filled, full NVMe read) so
+//! warm-start (`prime_swapped`) experiments keep the flat backend's
+//! exact timing.
+//!
+//! With `TierConfig::flat()` (pool capacity 0) the backend is
+//! *accounting-only*, exactly like the PR 1 flat backend: no codec
+//! work, no content retained, `read` leaves `out` untouched, and every
+//! op reproduces the PR 1 cost structure — the paper-figure
+//! experiments run in that mode.
+
+use std::collections::VecDeque;
+
+use crate::config::{SwCost, TierConfig};
+use crate::hw::{IoKind, Nvme};
+use crate::sim::Rng;
+use crate::storage::backend::{IoReceipt, IoToken, SwapBackend, SwapTier, TierHint, TierMetrics};
+use crate::storage::codec::{self, Compressed};
+use crate::types::{Time, UnitId, VmId, FRAME_BYTES};
+
+#[derive(Debug)]
+struct Entry {
+    img: Compressed,
+    tier: SwapTier,
+    /// Generation stamp; a drain-FIFO reference is live iff it matches.
+    stamp: u32,
+    /// Completion time of the writeback (or direct write) that put the
+    /// copy on NVMe; reads of this unit cannot start earlier.
+    nvme_ready_at: Time,
+}
+
+/// Two-tier swap store: compressed pool + NVMe writeback.
+#[derive(Debug)]
+pub struct TieredBackend {
+    cfg: TierConfig,
+    poll_ns: Time,
+    bounce_copy_4k_ns: Time,
+    compress_4k_ns: Time,
+    decompress_4k_ns: Time,
+    /// Per-VM unit stores, grown lazily.
+    stores: Vec<Vec<Option<Entry>>>,
+    /// Pool admission order: `(vm, unit, stamp)`, lazily invalidated
+    /// (same tombstone idiom as the Swapper queue).
+    drain_fifo: VecDeque<(VmId, UnitId, u32)>,
+    /// Globally monotonic entry stamp: a replaced entry always gets a
+    /// fresh stamp, so stale FIFO references can never match it.
+    next_stamp: u32,
+    next_token: IoToken,
+    metrics: TierMetrics,
+}
+
+impl TieredBackend {
+    pub fn new(cfg: &TierConfig, sw: &SwCost) -> Self {
+        TieredBackend {
+            cfg: cfg.clone(),
+            poll_ns: sw.backend_poll_ns,
+            bounce_copy_4k_ns: sw.bounce_copy_4k_ns,
+            compress_4k_ns: sw.compress_4k_ns,
+            decompress_4k_ns: sw.decompress_4k_ns,
+            stores: vec![],
+            drain_fifo: VecDeque::new(),
+            next_stamp: 1,
+            next_token: 0,
+            metrics: TierMetrics::default(),
+        }
+    }
+
+    /// Flat single-tier backend (the paper's testbed shape).
+    pub fn flat(sw: &SwCost) -> Self {
+        Self::new(&TierConfig::flat(), sw)
+    }
+
+    fn slot_mut(&mut self, vm: VmId, unit: UnitId) -> &mut Option<Entry> {
+        if self.stores.len() <= vm {
+            self.stores.resize_with(vm + 1, Vec::new);
+        }
+        let store = &mut self.stores[vm];
+        if store.len() <= unit as usize {
+            store.resize_with(unit as usize + 1, || None);
+        }
+        &mut store[unit as usize]
+    }
+
+    fn entry(&self, vm: VmId, unit: UnitId) -> Option<&Entry> {
+        self.stores.get(vm)?.get(unit as usize)?.as_ref()
+    }
+
+    /// Per-op CPU cost of the codec, scaled from the 4kB calibration.
+    fn scaled(&self, per_4k: Time, bytes: u64) -> Time {
+        per_4k * bytes.div_ceil(FRAME_BYTES)
+    }
+
+    /// Release a unit's previous copy (write replacement / discard).
+    fn remove_entry(&mut self, vm: VmId, unit: UnitId) -> bool {
+        let slot = self.slot_mut(vm, unit);
+        match slot.take() {
+            Some(e) => {
+                if e.tier == SwapTier::Pool {
+                    self.metrics.pool_bytes -= e.img.stored_bytes();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// NVMe DMA submission with the §5.3 bounce/zero-copy model.
+    fn nvme_op(&mut self, start: Time, bytes: u64, kind: IoKind, nvme: &mut Nvme) -> Time {
+        let extra = if bytes > FRAME_BYTES {
+            self.metrics.zero_copy_ops += 1;
+            0
+        } else {
+            self.metrics.bounced_ops += 1;
+            self.bounce_copy_4k_ns
+        };
+        match kind {
+            IoKind::Read => {
+                self.metrics.nvme_reads += 1;
+                self.metrics.nvme_bytes_read += bytes;
+            }
+            IoKind::Write => {
+                self.metrics.nvme_write_reqs += 1;
+                self.metrics.nvme_bytes_written += bytes;
+            }
+        }
+        nvme.submit(start, bytes, kind) + extra
+    }
+
+    /// Drain the pool down to the low watermark: oldest-admitted first,
+    /// sorted by `(vm, unit)` per batch, adjacent units coalesced into
+    /// single NVMe requests. Returns the drained units in sorted order.
+    fn drain(&mut self, now: Time, nvme: &mut Nvme) -> Vec<(VmId, UnitId)> {
+        let low = self.cfg.low_watermark_bytes();
+        let mut all_drained = Vec::new();
+        while self.metrics.pool_bytes > low {
+            // Collect one batch of live FIFO entries.
+            let mut victims: Vec<(VmId, UnitId)> = Vec::new();
+            let mut freed = 0u64;
+            while victims.len() < self.cfg.writeback_batch {
+                if self.metrics.pool_bytes - freed <= low {
+                    break;
+                }
+                let Some((vm, unit, stamp)) = self.drain_fifo.pop_front() else { break };
+                let Some(e) = self.entry(vm, unit) else { continue };
+                if e.stamp != stamp || e.tier != SwapTier::Pool {
+                    continue; // stale reference (replaced or already drained)
+                }
+                freed += e.img.stored_bytes();
+                victims.push((vm, unit));
+            }
+            if victims.is_empty() {
+                break; // only zero pages (never queued) remain
+            }
+            victims.sort_unstable();
+            self.metrics.writeback_batches += 1;
+            self.metrics.writeback_units += victims.len() as u64;
+
+            // Coalesce runs of adjacent units into single sequential I/Os.
+            let mut i = 0;
+            while i < victims.len() {
+                let (vm0, _) = victims[i];
+                let mut j = i + 1;
+                while j < victims.len()
+                    && victims[j].0 == vm0
+                    && victims[j].1 == victims[j - 1].1 + 1
+                    && (j - i) < self.cfg.max_coalesce_units as usize
+                {
+                    j += 1;
+                }
+                let bytes: u64 = victims[i..j]
+                    .iter()
+                    .map(|&(vm, u)| {
+                        self.entry(vm, u).map(|e| e.img.raw_len() as u64).unwrap_or(0)
+                    })
+                    .sum();
+                let done = self.nvme_op(now, bytes, IoKind::Write, nvme);
+                for &(vm, u) in &victims[i..j] {
+                    let mut freed_now = 0;
+                    if let Some(e) = self.slot_mut(vm, u).as_mut() {
+                        freed_now = e.img.stored_bytes();
+                        e.tier = SwapTier::Nvme;
+                        e.nvme_ready_at = done;
+                    }
+                    self.metrics.pool_bytes -= freed_now;
+                }
+                i = j;
+            }
+            all_drained.extend_from_slice(&victims);
+        }
+        all_drained
+    }
+}
+
+impl SwapBackend for TieredBackend {
+    #[allow(clippy::too_many_arguments)]
+    fn write(
+        &mut self,
+        vm: VmId,
+        unit: UnitId,
+        data: &[u8],
+        hint: TierHint,
+        now: Time,
+        nvme: &mut Nvme,
+        rng: &mut Rng,
+    ) -> IoReceipt {
+        let token = self.next_token;
+        self.next_token += 1;
+        let raw = data.len() as u64;
+        // Poll-loop pickup jitter (one draw, flat-backend compatible).
+        let pickup = now + rng.below(self.poll_ns.max(1));
+        self.remove_entry(vm, unit);
+
+        let mut cpu = 0;
+        let mut writeback = Vec::new();
+        let mut nvme_img = None;
+        if self.cfg.pool_enabled() && hint != TierHint::Nvme {
+            cpu = self.scaled(self.compress_4k_ns, raw);
+            let img = codec::compress(data);
+            let stored = img.stored_bytes();
+            let admit =
+                hint == TierHint::Pool || stored * 100 < raw * self.cfg.reject_pct as u64;
+            if admit && self.metrics.pool_bytes + stored > self.cfg.high_watermark_bytes() {
+                // Make room before inserting.
+                writeback = self.drain(now, nvme);
+            }
+            // Admission must never push occupancy past capacity — an
+            // image that still doesn't fit after draining (e.g. a raw
+            // 2MB unit in a tiny pool) falls through to NVMe.
+            if admit && self.metrics.pool_bytes + stored <= self.cfg.pool_capacity_bytes {
+                let is_zero = matches!(img, Compressed::Zero { .. });
+                let stamp = self.next_stamp;
+                self.next_stamp = self.next_stamp.wrapping_add(1);
+                *self.slot_mut(vm, unit) = Some(Entry {
+                    img,
+                    tier: SwapTier::Pool,
+                    stamp,
+                    nvme_ready_at: 0,
+                });
+                if !is_zero {
+                    // Zero pages occupy no bytes: nothing to ever drain.
+                    self.drain_fifo.push_back((vm, unit, stamp));
+                } else {
+                    self.metrics.pool_zero_pages += 1;
+                }
+                self.metrics.pool_stores += 1;
+                self.metrics.pool_bytes += stored;
+                self.metrics.pool_peak_bytes =
+                    self.metrics.pool_peak_bytes.max(self.metrics.pool_bytes);
+                self.metrics.raw_bytes_stored += raw;
+                self.metrics.compressed_bytes_stored += stored;
+                return IoReceipt {
+                    token,
+                    completes_at: pickup + cpu,
+                    tier: SwapTier::Pool,
+                    writeback,
+                };
+            }
+            self.metrics.pool_rejects += 1;
+            // Keep the compressed image: NVMe-tier entries in a
+            // pool-enabled backend store their content compressed
+            // (simulation fidelity, not timing).
+            nvme_img = Some(img);
+        }
+
+        // NVMe path (flat mode, explicit routing, or pool reject):
+        // identical cost structure to the PR 1 backend (pickup + device
+        // + bounce). Flat mode is accounting-only — no content kept.
+        let done = self.nvme_op(pickup + cpu, raw, IoKind::Write, nvme);
+        let img = nvme_img.unwrap_or_else(|| {
+            if self.cfg.pool_enabled() {
+                codec::compress(data)
+            } else {
+                Compressed::Zero { len: raw as u32 }
+            }
+        });
+        let stamp = self.next_stamp;
+        self.next_stamp = self.next_stamp.wrapping_add(1);
+        *self.slot_mut(vm, unit) = Some(Entry {
+            img,
+            tier: SwapTier::Nvme,
+            stamp,
+            nvme_ready_at: done,
+        });
+        IoReceipt { token, completes_at: done, tier: SwapTier::Nvme, writeback }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn read(
+        &mut self,
+        vm: VmId,
+        unit: UnitId,
+        bytes: u64,
+        out: &mut Vec<u8>,
+        now: Time,
+        nvme: &mut Nvme,
+        rng: &mut Rng,
+    ) -> IoReceipt {
+        let token = self.next_token;
+        self.next_token += 1;
+        let pickup = now + rng.below(self.poll_ns.max(1));
+        match self.entry(vm, unit) {
+            Some(e) if e.tier == SwapTier::Pool => {
+                codec::decompress(&e.img, out);
+                let cpu = self.scaled(self.decompress_4k_ns, e.img.raw_len() as u64);
+                self.metrics.pool_hits += 1;
+                IoReceipt {
+                    token,
+                    completes_at: pickup + cpu,
+                    tier: SwapTier::Pool,
+                    writeback: vec![],
+                }
+            }
+            Some(e) => {
+                // NVMe tier: wait out any in-flight writeback of this
+                // unit — the data is not on the device before then.
+                let ready = e.nvme_ready_at;
+                let len = e.img.raw_len() as u64;
+                debug_assert_eq!(len, bytes, "unit {unit} stored {len} read {bytes}");
+                if self.cfg.pool_enabled() {
+                    codec::decompress(&e.img, out);
+                    self.metrics.pool_fallthrough += 1;
+                }
+                let done = self.nvme_op(pickup.max(ready), len, IoKind::Read, nvme);
+                IoReceipt { token, completes_at: done, tier: SwapTier::Nvme, writeback: vec![] }
+            }
+            None => {
+                // Never written: cold pre-existing swap-file content
+                // (zero-filled). Flat mode is accounting-only and leaves
+                // `out` untouched.
+                if self.cfg.pool_enabled() {
+                    out.clear();
+                    out.resize(bytes as usize, 0);
+                    self.metrics.pool_fallthrough += 1;
+                }
+                let done = self.nvme_op(pickup, bytes, IoKind::Read, nvme);
+                IoReceipt { token, completes_at: done, tier: SwapTier::Nvme, writeback: vec![] }
+            }
+        }
+    }
+
+    fn discard(&mut self, vm: VmId, unit: UnitId) {
+        if self.remove_entry(vm, unit) {
+            self.metrics.discards += 1;
+        }
+    }
+
+    fn tier_of(&self, vm: VmId, unit: UnitId) -> Option<SwapTier> {
+        self.entry(vm, unit).map(|e| e.tier)
+    }
+
+    fn metrics(&self) -> &TierMetrics {
+        &self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::types::HUGE_BYTES;
+
+    fn setup(cfg: TierConfig) -> (TieredBackend, Nvme, Rng) {
+        (
+            TieredBackend::new(&cfg, &SwCost::default()),
+            Nvme::new(&HwConfig::default()),
+            Rng::new(3),
+        )
+    }
+
+    fn pattern_page(n: usize, v: u8) -> Vec<u8> {
+        vec![v; n]
+    }
+
+    fn random_page(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    // ---- flat-mode behavior (PR 1 backend parity) ----
+
+    #[test]
+    fn flat_huge_is_zero_copy_small_is_bounced() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::flat());
+        b.write(0, 1, &random_page(HUGE_BYTES as usize, 1), TierHint::Auto, 0, &mut n, &mut rng);
+        b.write(0, 2, &random_page(FRAME_BYTES as usize, 2), TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(b.metrics().zero_copy_ops, 1);
+        assert_eq!(b.metrics().bounced_ops, 1);
+        assert_eq!(b.metrics().nvme_write_reqs, 2);
+        assert_eq!(b.metrics().pool_stores, 0);
+    }
+
+    #[test]
+    fn flat_write_read_accounting_only() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::flat());
+        let page = random_page(FRAME_BYTES as usize, 9);
+        let w = b.write(0, 1, &page, TierHint::Auto, 100, &mut n, &mut rng);
+        assert!(w.completes_at > 100);
+        assert_eq!(w.tier, SwapTier::Nvme);
+        let mut out = Vec::new();
+        let r = b.read(0, 1, FRAME_BYTES, &mut out, w.completes_at, &mut n, &mut rng);
+        // Flat mode (PR 1 parity) keeps no content and leaves `out`
+        // untouched — accounting and timing only.
+        assert!(out.is_empty());
+        assert_eq!(r.tier, SwapTier::Nvme);
+        assert_eq!(b.metrics().nvme_bytes_written, FRAME_BYTES);
+        assert_eq!(b.metrics().nvme_bytes_read, FRAME_BYTES);
+    }
+
+    #[test]
+    fn pool_enabled_nvme_reject_still_roundtrips_content() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let page = random_page(FRAME_BYTES as usize, 9);
+        let w = b.write(0, 1, &page, TierHint::Auto, 100, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Nvme); // incompressible -> rejected
+        let mut out = Vec::new();
+        let r = b.read(0, 1, FRAME_BYTES, &mut out, w.completes_at, &mut n, &mut rng);
+        assert_eq!(out, page);
+        assert_eq!(r.tier, SwapTier::Nvme);
+    }
+
+    #[test]
+    fn oversized_image_falls_through_to_nvme_even_with_pool_hint() {
+        // Pool smaller than a single raw page: admission must not
+        // overshoot capacity — the write lands on NVMe instead.
+        let cfg = TierConfig {
+            pool_capacity_bytes: 1024,
+            ..TierConfig::default()
+        };
+        let (mut b, mut n, mut rng) = setup(cfg);
+        let w = b.write(0, 1, &random_page(4096, 3), TierHint::Pool, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Nvme);
+        assert_eq!(b.metrics().pool_bytes, 0);
+        assert_eq!(b.metrics().pool_rejects, 1);
+    }
+
+    #[test]
+    fn tokens_unique() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::flat());
+        let p = random_page(FRAME_BYTES as usize, 4);
+        let a = b.write(0, 1, &p, TierHint::Auto, 0, &mut n, &mut rng);
+        let mut out = Vec::new();
+        let c = b.read(0, 1, FRAME_BYTES, &mut out, 0, &mut n, &mut rng);
+        assert_ne!(a.token, c.token);
+    }
+
+    #[test]
+    fn cold_read_of_unwritten_unit_is_nvme_zero_fill() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let mut out = Vec::new();
+        let r = b.read(0, 77, FRAME_BYTES, &mut out, 0, &mut n, &mut rng);
+        assert_eq!(r.tier, SwapTier::Nvme);
+        assert_eq!(out, vec![0u8; FRAME_BYTES as usize]);
+        assert_eq!(b.metrics().nvme_reads, 1);
+        assert_eq!(b.tier_of(0, 77), None);
+    }
+
+    // ---- pool behavior ----
+
+    #[test]
+    fn compressible_write_absorbed_by_pool_no_nvme() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let w = b.write(0, 5, &pattern_page(4096, 0xAA), TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Pool);
+        assert_eq!(b.metrics().nvme_write_reqs, 0);
+        assert_eq!(b.tier_of(0, 5), Some(SwapTier::Pool));
+
+        // Hit: decompress only, no NVMe I/O, content intact.
+        let mut out = Vec::new();
+        let r = b.read(0, 5, 4096, &mut out, w.completes_at, &mut n, &mut rng);
+        assert_eq!(r.tier, SwapTier::Pool);
+        assert_eq!(out, pattern_page(4096, 0xAA));
+        assert_eq!(b.metrics().nvme_reads, 0);
+        assert_eq!(b.metrics().pool_hits, 1);
+        // Non-destructive: copy survives the read.
+        assert_eq!(b.tier_of(0, 5), Some(SwapTier::Pool));
+    }
+
+    #[test]
+    fn zero_page_stores_zero_bytes() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(0, 1, &[0u8; 4096], TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(b.metrics().pool_zero_pages, 1);
+        assert_eq!(b.metrics().pool_bytes, 0);
+        let mut out = Vec::new();
+        let r = b.read(0, 1, 4096, &mut out, 0, &mut n, &mut rng);
+        assert_eq!(r.tier, SwapTier::Pool);
+        assert!(out.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn incompressible_write_rejected_to_nvme() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let page = random_page(4096, 11);
+        let w = b.write(0, 2, &page, TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Nvme);
+        assert_eq!(b.metrics().pool_rejects, 1);
+        assert_eq!(b.metrics().nvme_write_reqs, 1);
+        // Content still readable.
+        let mut out = Vec::new();
+        b.read(0, 2, 4096, &mut out, w.completes_at, &mut n, &mut rng);
+        assert_eq!(out, page);
+    }
+
+    #[test]
+    fn explicit_nvme_hint_bypasses_pool() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let w = b.write(0, 3, &pattern_page(4096, 1), TierHint::Nvme, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Nvme);
+        assert_eq!(b.metrics().pool_stores, 0);
+    }
+
+    #[test]
+    fn pool_hint_admits_incompressible() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let w = b.write(0, 3, &random_page(4096, 5), TierHint::Pool, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Pool);
+        assert_eq!(b.metrics().pool_bytes, 4096);
+    }
+
+    #[test]
+    fn rewrite_replaces_pool_copy() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(0, 4, &pattern_page(4096, 1), TierHint::Auto, 0, &mut n, &mut rng);
+        let bytes1 = b.metrics().pool_bytes;
+        b.write(0, 4, &pattern_page(4096, 2), TierHint::Auto, 10, &mut n, &mut rng);
+        // Replacement: occupancy does not double.
+        assert_eq!(b.metrics().pool_bytes, bytes1);
+        let mut out = Vec::new();
+        b.read(0, 4, 4096, &mut out, 20, &mut n, &mut rng);
+        assert_eq!(out, pattern_page(4096, 2));
+    }
+
+    #[test]
+    fn discard_releases_pool_space_and_is_idempotent() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(0, 4, &pattern_page(4096, 3), TierHint::Auto, 0, &mut n, &mut rng);
+        assert!(b.metrics().pool_bytes > 0);
+        b.discard(0, 4);
+        assert_eq!(b.metrics().pool_bytes, 0);
+        assert_eq!(b.tier_of(0, 4), None);
+        b.discard(0, 4); // no-op
+        assert_eq!(b.metrics().discards, 1);
+    }
+
+    // ---- watermark writeback ----
+
+    /// Small pool that admits raw (hint Pool) 4k pages: capacity 100
+    /// pages with exact page-sized watermarks — high at 8 pages (8%),
+    /// low at 4 pages (4%). The write that would push occupancy past 8
+    /// pages (the 9th) triggers a drain of the 4 oldest entries.
+    fn small_pool() -> TierConfig {
+        TierConfig {
+            pool_capacity_bytes: 100 * 4096,
+            high_watermark_pct: 8,
+            low_watermark_pct: 4,
+            writeback_batch: 64,
+            max_coalesce_units: 4,
+            reject_pct: 101, // admit everything compressible-or-not
+            ..TierConfig::default()
+        }
+    }
+
+    #[test]
+    fn watermark_drain_is_sorted_batched_and_coalesced() {
+        let (mut b, mut n, mut rng) = setup(small_pool());
+        // Write 9 raw pages in shuffled unit order; the 9th write
+        // crosses the 8-page high watermark and drains the 4
+        // oldest-admitted entries (down to the 4-page low watermark).
+        let order = [3u64, 2, 9, 4, 1, 8, 7, 6, 5];
+        let mut last =
+            IoReceipt { token: 0, completes_at: 0, tier: SwapTier::Pool, writeback: vec![] };
+        for (i, &u) in order.iter().enumerate() {
+            let at = i as u64 * 1000;
+            last = b.write(0, u, &random_page(4096, u), TierHint::Pool, at, &mut n, &mut rng);
+        }
+        let wb = &last.writeback;
+        assert!(!wb.is_empty(), "drain did not trigger");
+        // 4 drained + (8 - 4 + 1 new) admitted = 5 pages resident.
+        assert_eq!(b.metrics().pool_bytes, 5 * 4096);
+        // Sorted ascending by (vm, unit).
+        let mut sorted = wb.clone();
+        sorted.sort_unstable();
+        assert_eq!(*wb, sorted, "writeback not sorted");
+        // Oldest-admitted entries went out (first 4 of the write order,
+        // as units): {3,2,9,4} sorted = [2,3,4,9].
+        assert_eq!(wb, &[(0, 2), (0, 3), (0, 4), (0, 9)]);
+        // Coalescing: run [2,3,4] is one request; 9 stands alone ->
+        // 2 NVMe write requests for 4 units.
+        assert_eq!(b.metrics().nvme_write_reqs, 2);
+        assert_eq!(b.metrics().writeback_units, 4);
+        assert_eq!(b.metrics().writeback_batches, 1);
+        assert_eq!(b.metrics().nvme_bytes_written, 4 * 4096);
+        // Drained units now read from NVMe; undrained stay pooled.
+        assert_eq!(b.tier_of(0, 2), Some(SwapTier::Nvme));
+        assert_eq!(b.tier_of(0, 5), Some(SwapTier::Pool));
+    }
+
+    #[test]
+    fn coalesce_cap_splits_long_runs() {
+        let cfg = TierConfig { max_coalesce_units: 2, ..small_pool() };
+        let (mut b, mut n, mut rng) = setup(cfg);
+        let mut last_wb = vec![];
+        for u in 0..9u64 {
+            let page = random_page(4096, u);
+            let r = b.write(0, u, &page, TierHint::Pool, u * 1000, &mut n, &mut rng);
+            if !r.writeback.is_empty() {
+                last_wb = r.writeback;
+            }
+        }
+        // Units 0..4 drained as a contiguous run, split at the cap:
+        // [0,1] [2,3] = 2 requests for 4 units.
+        assert_eq!(last_wb, vec![(0, 0), (0, 1), (0, 2), (0, 3)]);
+        assert_eq!(b.metrics().nvme_write_reqs, 2);
+    }
+
+    /// Regression: a fault hitting a unit whose writeback is in flight
+    /// must serialize behind the writeback and return intact content.
+    #[test]
+    fn fault_during_writeback_race() {
+        let (mut b, mut n, mut rng) = setup(small_pool());
+        let page0 = random_page(4096, 0);
+        b.write(0, 0, &page0, TierHint::Pool, 0, &mut n, &mut rng);
+        // Fill until unit 0 is drained.
+        let mut drained_at = 0;
+        for u in 1..9u64 {
+            let r = b.write(0, u, &random_page(4096, u), TierHint::Pool, 100, &mut n, &mut rng);
+            if r.writeback.contains(&(0, 0)) {
+                drained_at = r.completes_at;
+            }
+        }
+        assert_eq!(b.tier_of(0, 0), Some(SwapTier::Nvme), "unit 0 not drained");
+        let ready = b.entry(0, 0).unwrap().nvme_ready_at;
+        assert!(ready > 0);
+        // Read immediately (virtual now=100, writeback still in flight).
+        let mut out = Vec::new();
+        let r = b.read(0, 0, 4096, &mut out, 100, &mut n, &mut rng);
+        assert_eq!(out, page0, "content corrupted across writeback");
+        assert!(
+            r.completes_at >= ready,
+            "read completed at {} before writeback at {ready}",
+            r.completes_at
+        );
+        let _ = drained_at;
+    }
+
+    // ---- acceptance: tiering strictly reduces NVMe requests ----
+
+    /// Reclaiming a zero/compressible-heavy working set through the
+    /// tiered backend issues strictly fewer NVMe I/O requests than the
+    /// flat backend, and compressed-pool fault hits perform no NVMe I/O.
+    #[test]
+    fn compressible_reclaim_beats_flat_on_nvme_requests() {
+        let run = |cfg: TierConfig| {
+            let (mut b, mut n, mut rng) = setup(cfg);
+            // 64-unit working set: half zero, rest constant-pattern.
+            for u in 0..64u64 {
+                let page = if u % 2 == 0 {
+                    vec![0u8; 4096]
+                } else {
+                    pattern_page(4096, u as u8)
+                };
+                b.write(0, u, &page, TierHint::Auto, u * 10_000, &mut n, &mut rng);
+            }
+            // Fault half of them back in.
+            let mut out = Vec::new();
+            for u in 0..32u64 {
+                b.read(0, u, 4096, &mut out, 1_000_000 + u * 10_000, &mut n, &mut rng);
+            }
+            (b.metrics().nvme_io_reqs(), b.metrics().pool_hits, b.metrics().nvme_reads)
+        };
+        let (flat_reqs, flat_hits, _) = run(TierConfig::flat());
+        let (tier_reqs, tier_hits, tier_nvme_reads) = run(TierConfig::default());
+        assert_eq!(flat_hits, 0);
+        assert_eq!(flat_reqs, 64 + 32);
+        // Strictly fewer NVMe requests end to end.
+        assert!(
+            tier_reqs < flat_reqs,
+            "tiered {tier_reqs} not < flat {flat_reqs}"
+        );
+        // Everything compressible stayed in the pool: all 32 faults were
+        // pool hits and no NVMe read happened at all.
+        assert_eq!(tier_hits, 32);
+        assert_eq!(tier_nvme_reads, 0);
+    }
+
+    #[test]
+    fn compression_ratio_reported() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(0, 0, &pattern_page(4096, 7), TierHint::Auto, 0, &mut n, &mut rng);
+        assert!(b.metrics().compression_ratio() > 10.0);
+        assert!(b.metrics().pool_hit_rate() == 0.0);
+        let mut out = Vec::new();
+        b.read(0, 0, 4096, &mut out, 10, &mut n, &mut rng);
+        assert_eq!(b.metrics().pool_hit_rate(), 1.0);
+    }
+}

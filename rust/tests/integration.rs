@@ -10,6 +10,7 @@ use flexswap::policies::{
     DtReclaimer, LinearPf, LruReclaimer, NativeAnalytics, PfMode, WsrPolicy,
 };
 use flexswap::sim::Rng;
+use flexswap::storage::ContentMix;
 use flexswap::types::{PageSize, UnitState, MS, SEC};
 use flexswap::workloads::{cloud_preset, CloudWorkload, SeqScan, UniformRandom};
 
@@ -305,6 +306,59 @@ fn locked_units_never_swapped() {
     // unit was swapped while the locked ones survived.
     assert_ne!(mm.core.states[1400], UnitState::Resident, "cold unit kept");
     assert!(mm.core.locks.denied_swapouts > 0, "lock never exercised");
+}
+
+/// Tiered storage end to end: a zero-page-only VM under memory pressure
+/// swaps entirely through the compressed pool — swap traffic happens,
+/// yet the NVMe device never sees a single byte (zero pages store no
+/// payload and are never written back).
+#[test]
+fn zero_heavy_vm_reclaims_without_any_nvme_io() {
+    let mut m = Machine::new(HostConfig::default());
+    let mm_cfg = MmConfig {
+        memory_limit: Some(1024 * 4096),
+        scan_interval: 3600 * SEC, // limit-driven reclaim only (Auto hints)
+        ..Default::default()
+    };
+    let vmid = m.sys_vm(
+        vm_cfg(8192, PageSize::Small),
+        &mm_cfg,
+        vec![Box::new(UniformRandom::new(0, 4096, 80_000))],
+    );
+    m.set_content_mix(vmid, ContentMix::all_zero());
+    let res = m.run();
+    let c = &res[0].counters;
+    assert!(c.swapout_ops > 100, "no reclaim happened: {c:?}");
+    assert!(c.faults_major > 100, "no fault-back happened: {c:?}");
+    let bm = m.backend_metrics();
+    assert_eq!(bm.nvme_bytes_written, 0, "{bm:?}");
+    assert_eq!(bm.nvme_reads, 0, "{bm:?}");
+    assert_eq!(c.swapin_pool_hits, bm.pool_hits);
+    assert!(bm.pool_zero_pages > 0);
+}
+
+/// The same pressure with incompressible content degrades gracefully to
+/// the NVMe tier (pool rejects), still completing the workload.
+#[test]
+fn random_content_falls_through_to_nvme() {
+    let mut m = Machine::new(HostConfig::default());
+    let mm_cfg = MmConfig {
+        memory_limit: Some(1024 * 4096),
+        scan_interval: 3600 * SEC,
+        ..Default::default()
+    };
+    let vmid = m.sys_vm(
+        vm_cfg(8192, PageSize::Small),
+        &mm_cfg,
+        vec![Box::new(UniformRandom::new(0, 4096, 60_000))],
+    );
+    m.set_content_mix(vmid, ContentMix::all_random());
+    let res = m.run();
+    assert_eq!(res[0].work_ops, 60_000);
+    let bm = m.backend_metrics();
+    assert!(bm.pool_rejects > 0, "{bm:?}");
+    assert!(bm.nvme_write_reqs > 0);
+    assert_eq!(bm.pool_stores, 0); // nothing compressible to absorb
 }
 
 /// Multi-VM fleet shares one device without interference bugs.
