@@ -35,13 +35,15 @@ fn main() {
             vcpus: 1,
             sla,
             workloads: vec![Box::new(CloudWorkload::new(spec))],
+            initial_limit_bytes: None,
         });
     }
 
     // Control plane: after 2s, squeeze the bronze VM (kafka) to 40% —
-    // its cold log makes that nearly free.
+    // its cold log makes that nearly free. The change applies from a
+    // control tick inside the event loop (PR 3).
     let kafka_limit = (cloud_preset("kafka", 0.08).pages * 4096) * 2 / 5;
-    daemon.plan_limit(0, 2 * SEC, Some(kafka_limit));
+    daemon.schedule_limit(0, 2 * SEC, Some(kafka_limit), false, false);
 
     let results = daemon.machine.run();
 
@@ -69,10 +71,11 @@ fn main() {
     );
 
     println!("\ncontrol-plane cold-memory report:");
-    for rep in daemon.report() {
+    let reports: Vec<_> = daemon.report().to_vec();
+    for rep in reports {
         println!(
             "  {:8} usage {:>9} cold~{:>9} pf={}",
-            rep.name,
+            daemon.vm_name(rep.vm),
             fmt_bytes(rep.usage_bytes),
             fmt_bytes(rep.cold_estimate_bytes),
             rep.pf_count

@@ -177,6 +177,65 @@ impl TierConfig {
     }
 }
 
+/// Which arbitration policy the control-plane daemon runs each tick
+/// (see [`crate::daemon::Arbiter`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArbiterKind {
+    /// No closed-loop arbitration: limits stay as registered; only
+    /// scheduled one-shot changes are applied.
+    #[default]
+    Static,
+    /// Every tick, re-divide the host budget by SLA weight with
+    /// per-VM WSS floors (Gold squeezed below WSS only after Bronze
+    /// and Silver slack is exhausted).
+    ProportionalShare,
+    /// Act only on watermark crossings: squeeze to proportional
+    /// targets above the high watermark, release in stages (with the
+    /// recovery boost) below the low one.
+    Watermark,
+}
+
+/// Control-plane configuration: the daemon's in-simulation feedback
+/// loop ([`crate::daemon::ControlPlane`], scheduled as a `ControlTick`
+/// actor inside [`crate::coordinator::Machine`]).
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// Control-tick cadence.
+    pub interval: Time,
+    /// Host physical-memory budget: Σ(resident + compressed-pool)
+    /// bytes the fleet may occupy. None = accounting only (no
+    /// arbitration pressure).
+    pub host_budget_bytes: Option<u64>,
+    pub kind: ArbiterKind,
+    /// How long [`crate::mm::PolicyApi::recovery_mode`] stays raised
+    /// after a boost-flagged hard-limit release (0 disables the hint).
+    pub recovery_boost_window: Time,
+    /// A staged hard-limit release doubles the limit per tick, reaching
+    /// the target in at most this many steps.
+    pub release_stages: u32,
+    /// Share of the compressed pool reserved per SLA class
+    /// (Gold/Silver/Bronze, percent; applied when the pool is enabled).
+    pub pool_split_pct: [u8; 3],
+    /// Watermark-arbiter trigger points, percent of the host budget.
+    pub high_watermark_pct: u8,
+    pub low_watermark_pct: u8,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            interval: 100 * MS,
+            host_budget_bytes: None,
+            kind: ArbiterKind::Static,
+            recovery_boost_window: 400 * MS,
+            release_stages: 4,
+            pool_split_pct: [20, 30, 50],
+            high_watermark_pct: 90,
+            low_watermark_pct: 75,
+        }
+    }
+}
+
 /// Shape and behaviour of one simulated VM.
 #[derive(Debug, Clone)]
 pub struct VmConfig {

@@ -5,17 +5,18 @@
 
 
 use crate::baseline::{EnhancedReclaim, LinuxSwap};
-use crate::config::{HostConfig, LinuxConfig, MmConfig, VmConfig};
+use crate::config::{ControlConfig, HostConfig, LinuxConfig, MmConfig, VmConfig};
+use crate::daemon::{ControlPlane, HostView, Sla, VmReport};
 use crate::hw::Nvme;
 use crate::introspect::FaultCtx;
-use crate::metrics::{Counters, LatencyHist, Series};
+use crate::metrics::{ControlStats, Counters, LatencyHist, Series};
 use crate::mm::{Mm, WorkOutcome};
 use crate::scanner::EptScanner;
 use crate::sim::{EventQueue, Rng};
 use crate::storage::{
     ContentMix, ContentModel, SwapBackend, SwapTier, TierMetrics, TieredBackend,
 };
-use crate::types::{Bitmap, Time, UnitId, VmId, MS, SEC};
+use crate::types::{Bitmap, Time, UnitId, VmId, FRAME_BYTES, MS, SEC};
 use crate::vm::{AccessResult, Vm};
 use crate::workloads::{Op, Workload};
 
@@ -75,7 +76,10 @@ enum Ev {
     PolicyTimer { vm: usize },
     PoolRefill { vm: usize },
     Metrics { vm: usize },
-    SetLimit { vm: usize, bytes_plus_one: u64 }, // 0 = None
+    /// Control-plane tick: rebuild reports, arbitrate, apply limits.
+    /// `periodic` ticks re-arm themselves; one-shot ticks land exactly
+    /// on a scheduled limit change.
+    ControlTick { periodic: bool },
     /// Kernel-mode fault resolved: unblock the vCPU.
     KernelResume { vm: usize, vcpu: usize },
     /// Staged (prefetched) unit mapped after a minor fault.
@@ -115,8 +119,9 @@ pub struct Machine {
     batch: u32,
     max_time: Time,
     metrics_interval: Time,
-    /// Scheduled limit changes (vm, at, bytes).
-    limit_plan: Vec<(usize, Time, Option<u64>)>,
+    /// The in-simulation control plane (None until installed: a
+    /// machine without one runs no control ticks at all).
+    control: Option<ControlPlane>,
 }
 
 impl Machine {
@@ -134,7 +139,7 @@ impl Machine {
             batch: 64,
             max_time: 600 * SEC,
             metrics_interval: 20 * MS,
-            limit_plan: vec![],
+            control: None,
         }
     }
 
@@ -142,9 +147,150 @@ impl Machine {
         self.max_time = t;
     }
 
-    /// Schedule a control-plane memory-limit change at virtual time `at`.
-    pub fn plan_limit_change(&mut self, vm: usize, at: Time, bytes: Option<u64>) {
-        self.limit_plan.push((vm, at, bytes));
+    /// Install the control plane: the daemon's feedback loop becomes a
+    /// scheduled `ControlTick` actor inside this machine's event loop.
+    /// The pool stays a shared arena until the first SLA registration
+    /// partitions it (a machine that only schedules one-shot limit
+    /// changes must behave exactly like the old `plan_limit_change`
+    /// path, pool included).
+    pub fn install_control(&mut self, cfg: ControlConfig) {
+        self.control = Some(ControlPlane::new(cfg));
+    }
+
+    pub fn control(&self) -> Option<&ControlPlane> {
+        self.control.as_ref()
+    }
+
+    pub fn control_mut(&mut self) -> Option<&mut ControlPlane> {
+        self.control.as_mut()
+    }
+
+    /// Host control-plane gauges (None until a control plane is
+    /// installed).
+    pub fn control_stats(&self) -> Option<&ControlStats> {
+        self.control.as_ref().map(|c| &c.stats)
+    }
+
+    /// Register a VM with the control plane (daemon boot handshake):
+    /// fleet bookkeeping plus the backend's SLA pool-partition class.
+    /// The first registration partitions the compressed pool by the
+    /// configured per-SLA split (enforced quotas).
+    pub fn register_control_vm(&mut self, vm: usize, name: String, sla: Sla) {
+        self.backend.set_vm_class(vm, sla.class_index() as u8);
+        if self.control.is_none() {
+            self.install_control(ControlConfig::default());
+        }
+        let cp = self.control.as_mut().unwrap();
+        if cp.vms.is_empty() && self.host.tier.pool_enabled() {
+            let cap = self.host.tier.pool_capacity_bytes;
+            let quotas: Vec<u64> = cp
+                .cfg
+                .pool_split_pct
+                .iter()
+                .map(|&p| cap / 100 * p as u64)
+                .collect();
+            self.backend.set_class_quotas(&quotas);
+        }
+        cp.register(vm, name, sla);
+    }
+
+    /// Schedule a one-shot control-plane limit change at virtual time
+    /// `at` (the migration of the old external `plan_limit_change`
+    /// path: the change now applies from a control tick *inside* the
+    /// event loop). Installs a static control plane if none is present.
+    pub fn schedule_limit(&mut self, vm: usize, at: Time, bytes: Option<u64>) {
+        self.schedule_limit_release(vm, at, bytes, false, false);
+    }
+
+    /// Scheduled limit change with release semantics: `boost` opens the
+    /// prefetchers' recovery window, `staged` spreads the release over
+    /// several control ticks instead of one jump.
+    pub fn schedule_limit_release(
+        &mut self,
+        vm: usize,
+        at: Time,
+        bytes: Option<u64>,
+        boost: bool,
+        staged: bool,
+    ) {
+        if self.control.is_none() {
+            self.install_control(ControlConfig::default());
+        }
+        self.control.as_mut().unwrap().schedule(vm, at, bytes, boost, staged);
+    }
+
+    /// Σ resident bytes over every VM on the host (the control plane's
+    /// physical-memory accounting input).
+    pub fn host_resident_bytes(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| match &s.mech {
+                Mechanism::Sys(mm) => mm.core.usage_bytes(),
+                Mechanism::Kernel(k, _) => k.usage_bytes(),
+            })
+            .sum()
+    }
+
+    /// Rebuild the control plane's per-VM reports in place (reused
+    /// buffer, borrowed names — nothing allocated per tick).
+    #[allow(clippy::needless_range_loop)]
+    fn build_reports(&mut self, advance_pf_baseline: bool) {
+        let Some(cp) = self.control.as_mut() else { return };
+        cp.begin_reports();
+        for idx in 0..cp.vms.len() {
+            let (vm, sla) = (cp.vms[idx].vm, cp.vms[idx].sla);
+            let slot = &self.slots[vm];
+            let (usage, pf, wss_est, limit, unit_bytes, allowance) = match &slot.mech {
+                Mechanism::Sys(mm) => {
+                    let wss_units =
+                        mm.core.params.get("dt.wss_units").copied().unwrap_or(0.0);
+                    (
+                        mm.core.usage_bytes(),
+                        mm.core.pf_count,
+                        (wss_units as u64) * mm.core.unit_bytes,
+                        mm.core.limit_units.map(|l| l * mm.core.unit_bytes),
+                        mm.core.unit_bytes,
+                        mm.swapper.threads() as u64 * mm.core.unit_bytes,
+                    )
+                }
+                Mechanism::Kernel(k, _) => (
+                    k.usage_bytes(),
+                    k.counters.faults_major + k.counters.faults_minor,
+                    k.usage_bytes(),
+                    k.limit_frames.map(|f| f * FRAME_BYTES),
+                    FRAME_BYTES,
+                    0,
+                ),
+            };
+            // No analytics estimate yet: conservatively treat the whole
+            // residency as working set (nothing provably cold).
+            let wss = if wss_est == 0 { usage } else { wss_est.min(usage) };
+            cp.push_report(
+                VmReport {
+                    vm,
+                    sla,
+                    usage_bytes: usage,
+                    wss_bytes: wss,
+                    cold_estimate_bytes: usage - wss,
+                    pf_count: pf,
+                    pf_delta: 0, // derived by push_report
+                    limit_bytes: limit,
+                    unit_bytes,
+                    inflight_allowance: allowance,
+                },
+                idx,
+                advance_pf_baseline,
+            );
+        }
+    }
+
+    /// Refresh and expose the control-plane reports (daemon/harness
+    /// external view; same reused buffer the control ticks use).
+    pub fn control_reports(&mut self) -> &[VmReport] {
+        // External refresh: leave the pf_delta baseline untouched so
+        // the next control tick still sees the full inter-tick delta.
+        self.build_reports(false);
+        self.control.as_ref().map_or(&[], |c| c.reports.as_slice())
     }
 
     /// Add a VM (and its MM / kernel swap) to the host. Returns its id.
@@ -218,10 +364,20 @@ impl Machine {
             self.events.push(10 * MS, Ev::PoolRefill { vm: vmid });
             self.events.push(self.metrics_interval, Ev::Metrics { vm: vmid });
         }
-        let plan = std::mem::take(&mut self.limit_plan);
-        for (vm, at, bytes) in plan {
-            let enc = bytes.map(|b| b + 1).unwrap_or(0);
-            self.events.push(at, Ev::SetLimit { vm, bytes_plus_one: enc });
+        if let Some(cp) = &self.control {
+            // One-shot ticks land scheduled changes exactly on time;
+            // the periodic chain runs only when it would do work
+            // (budget accounting, arbitration or staged releases).
+            let mut one_shots: Vec<Time> = cp.scheduled_times().collect();
+            one_shots.sort_unstable();
+            one_shots.dedup();
+            for at in one_shots {
+                self.events.push(at, Ev::ControlTick { periodic: false });
+            }
+            if cp.needs_periodic() {
+                let at = cp.cfg.interval;
+                self.events.push(at, Ev::ControlTick { periodic: true });
+            }
         }
     }
 
@@ -264,10 +420,7 @@ impl Machine {
             Ev::PolicyTimer { vm } => self.policy_timer(vm),
             Ev::PoolRefill { vm } => self.pool_refill(vm),
             Ev::Metrics { vm } => self.metrics_tick(vm),
-            Ev::SetLimit { vm, bytes_plus_one } => {
-                let bytes = if bytes_plus_one == 0 { None } else { Some(bytes_plus_one - 1) };
-                self.set_limit(vm, bytes)
-            }
+            Ev::ControlTick { periodic } => self.control_tick(periodic),
             Ev::KernelResume { vm, vcpu } => {
                 self.slots[vm].vcpus[vcpu].blocked = false;
                 self.vcpu_run(vm, vcpu);
@@ -678,11 +831,62 @@ impl Machine {
             .push(now + self.metrics_interval, Ev::Metrics { vm: vmid });
     }
 
-    fn set_limit(&mut self, vmid: usize, bytes: Option<u64>) {
+    /// One control tick (paper §4.1: the daemon's feedback loop, now an
+    /// event inside the simulation): rebuild reports, snapshot host
+    /// accounting, collect scheduled/staged/arbitrated limit actions
+    /// and apply them.
+    fn control_tick(&mut self, periodic: bool) {
+        let now = self.clock;
+        if self.control.is_none() {
+            return;
+        }
+        self.build_reports(true);
+        let resident = self.host_resident_bytes();
+        let pool_bytes = self.backend.metrics().pool_bytes;
+        let pool_by_class = [
+            self.backend.class_pool_bytes(0),
+            self.backend.class_pool_bytes(1),
+            self.backend.class_pool_bytes(2),
+        ];
+        let cp = self.control.as_mut().unwrap();
+        let budget = cp.cfg.host_budget_bytes;
+        let host = HostView {
+            budget_bytes: budget.unwrap_or(0),
+            resident_bytes: resident,
+            pool_bytes,
+            // With a budget set, the whole pool capacity is reserved
+            // off the top so pool growth between ticks cannot break
+            // the budget invariant.
+            pool_reserved_bytes: if budget.is_some() {
+                self.host.tier.pool_capacity_bytes
+            } else {
+                0
+            },
+        };
+        let boost_window = cp.cfg.recovery_boost_window;
+        let interval = cp.cfg.interval;
+        let mut actions = std::mem::take(&mut cp.actions);
+        actions.clear();
+        cp.collect_actions(now, periodic, host, pool_by_class, &mut actions);
+        for a in &actions {
+            self.apply_limit(a.vm, a.bytes, if a.boost { boost_window } else { 0 });
+        }
+        let cp = self.control.as_mut().unwrap();
+        cp.actions = actions;
+        if periodic {
+            self.events.push(now + interval, Ev::ControlTick { periodic: true });
+        }
+    }
+
+    /// Apply one limit change to a VM's mechanism. `boost_window > 0`
+    /// opens the prefetchers' recovery-mode window on a release.
+    fn apply_limit(&mut self, vmid: usize, bytes: Option<u64>, boost_window: Time) {
         let now = self.clock;
         let slot = &mut self.slots[vmid];
         match &mut slot.mech {
-            Mechanism::Sys(mm) => mm.set_memory_limit(&slot.vm, bytes, now),
+            Mechanism::Sys(mm) => {
+                mm.set_memory_limit_with_boost(&slot.vm, bytes, now, boost_window)
+            }
             Mechanism::Kernel(k, _) => {
                 k.set_limit(bytes);
                 k.kswapd_tick(&mut slot.vm, now, &mut self.nvme);

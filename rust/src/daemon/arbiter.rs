@@ -1,0 +1,415 @@
+//! Host-wide pressure arbitration (the control-plane feedback loop the
+//! paper's daemon closes in §4.1/§6.8, informed by Memtrade-style
+//! per-consumer harvesting limits).
+//!
+//! Every control tick the [`crate::daemon::ControlPlane`] hands the
+//! arbiter one [`VmReport`] per managed VM plus a [`HostView`] of the
+//! physical-memory budget; the arbiter answers with per-VM limit
+//! actions. Three policies ([`crate::config::ArbiterKind`]):
+//!
+//! * **Static** — never re-arbitrates; limits stay as registered.
+//! * **Proportional share** — re-divides the usable budget every tick:
+//!   each VM is floored at its *demand* (reported WSS + headroom) when
+//!   feasible, and surplus is distributed by SLA weight. Under
+//!   infeasible demand, cold slack is squeezed class by class —
+//!   Bronze first, Gold last — so a Gold VM is never pushed below its
+//!   reported WSS while a Bronze VM still has reclaimable slack.
+//! * **Watermark** — leaves the fleet alone inside the band; squeezes
+//!   to proportional targets when Σ(resident+pool) crosses the high
+//!   watermark and releases limits in boost-flagged stages below the
+//!   low one.
+
+use crate::config::{ArbiterKind, ControlConfig};
+
+use super::Sla;
+
+/// Control-plane view of one VM at a tick (paper: "inform the control
+/// plane about the number of cold memory pages"). Built into a reused
+/// buffer — no per-tick allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct VmReport {
+    /// Machine slot id (name lookup via [`super::Daemon::vm_name`]).
+    pub vm: usize,
+    pub sla: Sla,
+    /// Resident bytes.
+    pub usage_bytes: u64,
+    /// dt-reclaimer working-set estimate (bytes; `dt.wss_units`).
+    pub wss_bytes: u64,
+    /// Reported cold memory: usage minus the WSS estimate.
+    pub cold_estimate_bytes: u64,
+    /// Cumulative fault count.
+    pub pf_count: u64,
+    /// Faults since the previous control tick.
+    pub pf_delta: u64,
+    /// Current memory limit (None = unlimited).
+    pub limit_bytes: Option<u64>,
+    /// Reclaim granularity (4k or 2M).
+    pub unit_bytes: u64,
+    /// In-flight slack the engine may transiently hold above its limit
+    /// (one unit per swapper worker).
+    pub inflight_allowance: u64,
+}
+
+/// Host-wide physical-memory accounting at a tick.
+#[derive(Debug, Clone, Copy)]
+pub struct HostView {
+    pub budget_bytes: u64,
+    /// Σ resident bytes over all managed VMs.
+    pub resident_bytes: u64,
+    /// Compressed-pool occupancy (bytes actually stored).
+    pub pool_bytes: u64,
+    /// Pool *capacity*, reserved off the top of the budget so pool
+    /// growth between ticks can never break the budget invariant.
+    pub pool_reserved_bytes: u64,
+}
+
+impl HostView {
+    /// Budget headroom right now (negative = invariant violated).
+    pub fn headroom(&self) -> i64 {
+        self.budget_bytes as i64 - self.resident_bytes as i64 - self.pool_bytes as i64
+    }
+}
+
+/// One arbitration decision: set `vm`'s limit to `bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LimitAction {
+    pub vm: usize,
+    pub bytes: Option<u64>,
+    /// Raise the recovery-mode hint for the prefetchers.
+    pub boost: bool,
+}
+
+/// Pluggable arbitration engine (one per [`crate::daemon::ControlPlane`]).
+#[derive(Debug)]
+pub struct Arbiter {
+    pub kind: ArbiterKind,
+    /// Watermark policy: currently squeezing (true between a
+    /// high-watermark crossing and the staged release completing).
+    engaged: bool,
+    /// Scratch for the proportional solver, reused across ticks.
+    limits: Vec<u64>,
+    floors: Vec<u64>,
+}
+
+impl Arbiter {
+    pub fn new(kind: ArbiterKind) -> Self {
+        Arbiter { kind, engaged: false, limits: vec![], floors: vec![] }
+    }
+
+    /// Minimum viable limit for a VM: a handful of units plus the
+    /// in-flight allowance, so the engine can always make progress.
+    pub fn floor_of(r: &VmReport) -> u64 {
+        8 * r.unit_bytes + r.inflight_allowance
+    }
+
+    /// Demand: the reported WSS plus fault headroom. Keeping every VM
+    /// at demand (not usage) is what converts reported cold memory
+    /// into host density.
+    pub fn demand_of(r: &VmReport) -> u64 {
+        let headroom = (r.wss_bytes / 8).max(4 * r.unit_bytes);
+        (r.wss_bytes + headroom).max(Self::floor_of(r))
+    }
+
+    /// Bytes of the budget the fleet may actually occupy as resident
+    /// memory: budget minus the reserved pool capacity minus every
+    /// VM's in-flight slack.
+    pub fn usable_budget(reports: &[VmReport], host: &HostView) -> u64 {
+        let inflight: u64 = reports.iter().map(|r| r.inflight_allowance).sum();
+        host.budget_bytes
+            .saturating_sub(host.pool_reserved_bytes)
+            .saturating_sub(inflight)
+    }
+
+    /// Proportional-share solve: per-VM limits with Σ ≤ `usable`.
+    /// Exposed for the arbitration property tests.
+    pub fn proportional_limits(&mut self, reports: &[VmReport], usable: u64) -> &[u64] {
+        let n = reports.len();
+        self.limits.clear();
+        self.floors.clear();
+        self.limits.extend(reports.iter().map(Self::demand_of));
+        self.floors.extend(reports.iter().map(Self::floor_of));
+        let total_demand: u64 = self.limits.iter().sum();
+        if total_demand <= usable {
+            // Feasible: everyone gets demand; surplus by SLA weight.
+            let surplus = usable - total_demand;
+            let total_w: u64 = reports.iter().map(|r| r.sla.weight()).sum();
+            if total_w > 0 {
+                for (l, r) in self.limits.iter_mut().zip(reports) {
+                    *l += (surplus as u128 * r.sla.weight() as u128 / total_w as u128) as u64;
+                }
+            }
+            return &self.limits;
+        }
+        // Infeasible: squeeze below demand class by class, Bronze
+        // first, proportionally to each VM's reducible span.
+        let mut deficit = total_demand - usable;
+        for class in [Sla::Bronze, Sla::Silver, Sla::Gold] {
+            if deficit == 0 {
+                break;
+            }
+            let reducible: u64 = (0..n)
+                .filter(|&i| reports[i].sla == class)
+                .map(|i| self.limits[i].saturating_sub(self.floors[i]))
+                .sum();
+            if reducible == 0 {
+                continue;
+            }
+            let take = deficit.min(reducible);
+            let mut taken = 0u64;
+            for i in 0..n {
+                if reports[i].sla != class {
+                    continue;
+                }
+                let span = self.limits[i].saturating_sub(self.floors[i]);
+                let cut = (take as u128 * span as u128 / reducible as u128) as u64;
+                self.limits[i] -= cut;
+                taken += cut;
+            }
+            // Flooring under-takes by < #VMs bytes; settle the residue
+            // from the first reducible VM so Σ limits ≤ usable holds.
+            let mut residue = take - taken;
+            for i in 0..n {
+                if residue == 0 {
+                    break;
+                }
+                if reports[i].sla != class {
+                    continue;
+                }
+                let span = self.limits[i].saturating_sub(self.floors[i]);
+                let cut = residue.min(span);
+                self.limits[i] -= cut;
+                residue -= cut;
+            }
+            deficit -= take;
+        }
+        &self.limits
+    }
+
+    /// One arbitration round: append limit actions to `out`. `cfg`
+    /// supplies the watermark band; staged releases are expanded by the
+    /// control plane, not here.
+    pub fn arbitrate(
+        &mut self,
+        reports: &[VmReport],
+        host: &HostView,
+        cfg: &ControlConfig,
+        out: &mut Vec<LimitAction>,
+    ) {
+        if reports.is_empty() {
+            return;
+        }
+        match self.kind {
+            ArbiterKind::Static => {}
+            ArbiterKind::ProportionalShare => {
+                let usable = Self::usable_budget(reports, host);
+                self.proportional_limits(reports, usable);
+                // Transition safety: a tightened VM sheds memory only as
+                // its swap-outs complete, so until then it *holds* up to
+                // min(usage, old limit). Raises are therefore granted
+                // only from measured headroom — Σ(transient holds) +
+                // Σ(raised limits) stays ≤ usable at every instant, and
+                // the loop self-paces: as squeezed VMs shed, the next
+                // tick's reserve shrinks and the raises complete.
+                let mut reserved: u64 = 0;
+                for (i, r) in reports.iter().enumerate() {
+                    let t = self.limits[i];
+                    let cur = r.limit_bytes.unwrap_or(r.usage_bytes.max(t));
+                    if t <= cur {
+                        reserved += t.max(r.usage_bytes.min(cur));
+                    }
+                }
+                let mut avail = usable.saturating_sub(reserved);
+                for (i, r) in reports.iter().enumerate() {
+                    let t = self.limits[i];
+                    if let Some(cur) = r.limit_bytes {
+                        if t > cur {
+                            // Raised VMs keep holding up to their old
+                            // limit regardless of the grant.
+                            avail = avail.saturating_sub(cur);
+                        }
+                    }
+                }
+                for (i, r) in reports.iter().enumerate() {
+                    let t = self.limits[i];
+                    let Some(cur) = r.limit_bytes else {
+                        // Unlimited VM entering arbitration: always cap.
+                        out.push(LimitAction { vm: r.vm, bytes: Some(t), boost: false });
+                        continue;
+                    };
+                    if t < cur {
+                        // Tightenings always apply — skipping one would
+                        // let per-VM drift accumulate past the budget.
+                        out.push(LimitAction { vm: r.vm, bytes: Some(t), boost: false });
+                    } else if t > cur {
+                        let grant = (t - cur).min(avail);
+                        // Hysteresis on raises only: a withheld raise
+                        // leaves the VM below target, which is safe.
+                        if grant >= r.unit_bytes {
+                            avail -= grant;
+                            out.push(LimitAction {
+                                vm: r.vm,
+                                bytes: Some(cur + grant),
+                                boost: true,
+                            });
+                        }
+                    }
+                }
+            }
+            ArbiterKind::Watermark => {
+                let occupied = host.resident_bytes + host.pool_bytes;
+                let high = host.budget_bytes / 100 * cfg.high_watermark_pct as u64;
+                let low = host.budget_bytes / 100 * cfg.low_watermark_pct as u64;
+                if occupied > high {
+                    self.engaged = true;
+                    let usable = Self::usable_budget(reports, host)
+                        .min(low.saturating_sub(host.pool_bytes));
+                    self.proportional_limits(reports, usable);
+                    for (i, r) in reports.iter().enumerate() {
+                        out.push(LimitAction { vm: r.vm, bytes: Some(self.limits[i]), boost: false });
+                    }
+                } else if self.engaged && occupied < low {
+                    // Staged release: raise every squeezed limit by 25%
+                    // per tick (boost-flagged) until the band clears.
+                    let usable = Self::usable_budget(reports, host);
+                    let mut total: u64 = reports.iter().filter_map(|r| r.limit_bytes).sum();
+                    let mut any = false;
+                    for r in reports {
+                        let Some(cur) = r.limit_bytes else { continue };
+                        let step = (cur / 4).max(r.unit_bytes);
+                        if total + step > usable {
+                            continue;
+                        }
+                        total += step;
+                        any = true;
+                        out.push(LimitAction { vm: r.vm, bytes: Some(cur + step), boost: true });
+                    }
+                    if !any {
+                        self.engaged = false;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(vm: usize, sla: Sla, usage_mb: u64, wss_mb: u64) -> VmReport {
+        const MB: u64 = 1024 * 1024;
+        VmReport {
+            vm,
+            sla,
+            usage_bytes: usage_mb * MB,
+            wss_bytes: wss_mb * MB,
+            cold_estimate_bytes: (usage_mb - wss_mb) * MB,
+            pf_count: 0,
+            pf_delta: 0,
+            limit_bytes: Some(usage_mb * MB),
+            unit_bytes: 4096,
+            inflight_allowance: 4 * 4096,
+        }
+    }
+
+    #[test]
+    fn feasible_demand_gets_floor_plus_weighted_surplus() {
+        const MB: u64 = 1024 * 1024;
+        let reports = vec![
+            report(0, Sla::Gold, 100, 50),
+            report(1, Sla::Bronze, 100, 50),
+        ];
+        let mut a = Arbiter::new(ArbiterKind::ProportionalShare);
+        let limits = a.proportional_limits(&reports, 400 * MB).to_vec();
+        // Both above demand; Gold's surplus 4x Bronze's.
+        for (l, r) in limits.iter().zip(&reports) {
+            assert!(*l >= r.wss_bytes, "limit below WSS");
+        }
+        let (g, b) = (limits[0] - 57 * MB, limits[1] - 57 * MB); // demand ≈ 56.25MB
+        assert!(g > 3 * b, "gold surplus {g} vs bronze {b}");
+    }
+
+    #[test]
+    fn infeasible_squeezes_bronze_before_gold() {
+        const MB: u64 = 1024 * 1024;
+        let reports = vec![
+            report(0, Sla::Gold, 100, 80),
+            report(1, Sla::Bronze, 100, 80),
+        ];
+        let mut a = Arbiter::new(ArbiterKind::ProportionalShare);
+        // Usable covers Gold's demand plus a little: Bronze absorbs the
+        // whole squeeze, Gold stays at (or above) its WSS.
+        let usable = 120 * MB;
+        let limits = a.proportional_limits(&reports, usable).to_vec();
+        assert!(limits.iter().sum::<u64>() <= usable);
+        assert!(limits[0] >= reports[0].wss_bytes, "gold below wss");
+        assert!(limits[1] < reports[1].wss_bytes, "bronze not squeezed");
+    }
+
+    #[test]
+    fn sum_never_exceeds_usable() {
+        const MB: u64 = 1024 * 1024;
+        let mut a = Arbiter::new(ArbiterKind::ProportionalShare);
+        for usable_mb in [10u64, 50, 150, 400, 1000] {
+            let reports = vec![
+                report(0, Sla::Gold, 120, 90),
+                report(1, Sla::Silver, 80, 40),
+                report(2, Sla::Bronze, 200, 30),
+            ];
+            let limits = a.proportional_limits(&reports, usable_mb * MB);
+            assert!(
+                limits.iter().sum::<u64>() <= usable_mb * MB,
+                "sum over budget at usable {usable_mb}MB"
+            );
+        }
+    }
+
+    #[test]
+    fn watermark_squeezes_then_releases_in_stages() {
+        const MB: u64 = 1024 * 1024;
+        let cfg = ControlConfig::default(); // band: high 90%, low 75%
+        let mut a = Arbiter::new(ArbiterKind::Watermark);
+        let mut reports = vec![report(0, Sla::Bronze, 950, 100)];
+        let host = |resident_mb: u64| HostView {
+            budget_bytes: 1000 * MB,
+            resident_bytes: resident_mb * MB,
+            pool_bytes: 0,
+            pool_reserved_bytes: 0,
+        };
+        let mut out = vec![];
+        // Inside the band: leave the fleet alone.
+        a.arbitrate(&reports, &host(800), &cfg, &mut out);
+        assert!(out.is_empty());
+        // Above the 900MB high watermark: squeeze to ≤ low watermark.
+        a.arbitrate(&reports, &host(950), &cfg, &mut out);
+        assert!(!out.is_empty(), "no squeeze above high watermark");
+        let squeezed = out.last().unwrap().bytes.unwrap();
+        assert!(squeezed <= 750 * MB, "squeeze target {squeezed}");
+        // Back below the low watermark: staged, boost-flagged release.
+        out.clear();
+        reports[0].limit_bytes = Some(squeezed);
+        a.arbitrate(&reports, &host(600), &cfg, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].boost, "release not boost-flagged");
+        assert!(out[0].bytes.unwrap() > squeezed, "limit not raised");
+    }
+
+    #[test]
+    fn static_kind_emits_nothing() {
+        let reports = vec![report(0, Sla::Gold, 100, 50)];
+        let host = HostView {
+            budget_bytes: 1 << 30,
+            resident_bytes: 100 << 20,
+            pool_bytes: 0,
+            pool_reserved_bytes: 0,
+        };
+        let mut out = vec![];
+        Arbiter::new(ArbiterKind::Static).arbitrate(
+            &reports,
+            &host,
+            &ControlConfig::default(),
+            &mut out,
+        );
+        assert!(out.is_empty());
+    }
+}

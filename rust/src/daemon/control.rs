@@ -1,0 +1,319 @@
+//! The in-simulation control plane: the daemon's feedback loop as a
+//! scheduled `ControlTick` actor inside the event-driven machine.
+//!
+//! Each tick the [`crate::coordinator::Machine`] rebuilds the per-VM
+//! [`VmReport`]s into this plane's reused buffer, snapshots host-wide
+//! accounting (Σ resident + compressed-pool bytes vs the configured
+//! budget), and asks the plane for limit actions:
+//!
+//! 1. **Scheduled one-shots** — `schedule()`d limit changes due at or
+//!    before this tick (the migration target for the old external
+//!    `Machine::plan_limit_change` path). A change flagged *staged*
+//!    becomes a staged release that doubles the limit per periodic
+//!    tick instead of jumping, and *boost*-flagged raises arm the
+//!    [`crate::mm::PolicyApi::recovery_mode`] prefetcher hint.
+//! 2. **Arbitration** — the pluggable [`Arbiter`]
+//!    (static / proportional-share / watermark) closes the loop from
+//!    the reports.
+//!
+//! Host gauges ([`ControlStats`]) are recorded before actions apply, so
+//! `budget_exceeded_ticks` audits the state the previous decisions
+//! actually produced.
+
+use crate::config::ControlConfig;
+use crate::metrics::ControlStats;
+use crate::types::Time;
+
+use super::arbiter::{Arbiter, HostView, LimitAction, VmReport};
+use super::Sla;
+
+/// Per-VM control metadata held by the plane (names owned once here;
+/// reports borrow them by slot id — nothing per tick).
+#[derive(Debug)]
+pub struct ManagedVm {
+    pub vm: usize,
+    pub name: String,
+    pub sla: Sla,
+    /// Fault count at the previous tick (for pf_delta).
+    last_pf: u64,
+}
+
+/// A one-shot limit change scheduled at a virtual time.
+#[derive(Debug, Clone, Copy)]
+struct ScheduledLimit {
+    vm: usize,
+    at: Time,
+    bytes: Option<u64>,
+    boost: bool,
+    staged: bool,
+    fired: bool,
+}
+
+/// An in-progress staged hard-limit release.
+#[derive(Debug, Clone, Copy)]
+struct StagedRelease {
+    vm: usize,
+    target: Option<u64>,
+    steps_left: u32,
+    boost: bool,
+}
+
+/// The control plane: fleet bookkeeping + arbitration + gauges.
+#[derive(Debug)]
+pub struct ControlPlane {
+    pub cfg: ControlConfig,
+    pub vms: Vec<ManagedVm>,
+    sched: Vec<ScheduledLimit>,
+    staging: Vec<StagedRelease>,
+    pub arbiter: Arbiter,
+    /// Reused per-tick report buffer (one entry per managed VM, in
+    /// registration order).
+    pub reports: Vec<VmReport>,
+    /// Reused action buffer.
+    pub actions: Vec<LimitAction>,
+    pub stats: ControlStats,
+}
+
+impl ControlPlane {
+    pub fn new(cfg: ControlConfig) -> Self {
+        ControlPlane {
+            arbiter: Arbiter::new(cfg.kind),
+            stats: ControlStats::new(cfg.host_budget_bytes.unwrap_or(0)),
+            cfg,
+            vms: vec![],
+            sched: vec![],
+            staging: vec![],
+            reports: vec![],
+            actions: vec![],
+        }
+    }
+
+    /// Register a VM with the plane (called at daemon registration).
+    pub fn register(&mut self, vm: usize, name: String, sla: Sla) {
+        self.vms.push(ManagedVm { vm, name, sla, last_pf: 0 });
+    }
+
+    pub fn vm_name(&self, vm: usize) -> Option<&str> {
+        self.vms.iter().find(|m| m.vm == vm).map(|m| m.name.as_str())
+    }
+
+    /// Schedule a one-shot limit change at virtual time `at`.
+    pub fn schedule(&mut self, vm: usize, at: Time, bytes: Option<u64>, boost: bool, staged: bool) {
+        self.sched.push(ScheduledLimit { vm, at, bytes, boost, staged, fired: false });
+    }
+
+    /// Times the machine must fire extra (non-periodic) control ticks
+    /// at, so scheduled changes land exactly on time.
+    pub fn scheduled_times(&self) -> impl Iterator<Item = Time> + '_ {
+        self.sched.iter().filter(|s| !s.fired).map(|s| s.at)
+    }
+
+    /// Whether the plane needs the periodic tick chain at all: pure
+    /// one-shot plans (the legacy `plan_limit_change` migration) run
+    /// without it, keeping those event sequences byte-identical.
+    pub fn needs_periodic(&self) -> bool {
+        self.cfg.host_budget_bytes.is_some()
+            || self.arbiter.kind != crate::config::ArbiterKind::Static
+            || self.sched.iter().any(|s| s.staged)
+    }
+
+    /// Start a report rebuild; the machine pushes one raw report per
+    /// managed VM in registration order via [`ControlPlane::push_report`].
+    pub fn begin_reports(&mut self) {
+        self.reports.clear();
+    }
+
+    /// Finalize one VM's report: pf_delta is derived here from the
+    /// previous *tick*'s count. `advance_baseline` is true only on real
+    /// control ticks — an external `Daemon::report()` refresh must not
+    /// move the baseline, or the next tick's delta would under-report.
+    pub fn push_report(&mut self, mut r: VmReport, idx: usize, advance_baseline: bool) {
+        let mv = &mut self.vms[idx];
+        debug_assert_eq!(mv.vm, r.vm);
+        r.pf_delta = r.pf_count - mv.last_pf;
+        if advance_baseline {
+            mv.last_pf = r.pf_count;
+        }
+        self.reports.push(r);
+    }
+
+    /// One control tick: record gauges, expand due one-shots and staged
+    /// releases, then arbitrate. Actions are appended to `out`.
+    pub fn collect_actions(
+        &mut self,
+        now: Time,
+        periodic: bool,
+        host: HostView,
+        pool_by_class: [u64; 3],
+        out: &mut Vec<LimitAction>,
+    ) {
+        let out_before = out.len();
+        // Gauges on periodic ticks only (they are unique per interval;
+        // one-shot ticks would double-sample the host series): audit
+        // the state the *previous* actions produced.
+        if periodic {
+            self.stats.observe(now, host.resident_bytes, host.pool_bytes);
+            self.stats.pool_by_class = pool_by_class;
+            self.stats.resident_by_class = [0; 3];
+            for r in &self.reports {
+                self.stats.resident_by_class[r.sla.class_index()] += r.usage_bytes;
+            }
+        }
+
+        // Due one-shots (exact-time ticks are scheduled for these).
+        for s in self.sched.iter_mut() {
+            if s.fired || s.at > now {
+                continue;
+            }
+            s.fired = true;
+            if s.staged {
+                self.stats.staged_releases += 1;
+                self.staging.push(StagedRelease {
+                    vm: s.vm,
+                    target: s.bytes,
+                    steps_left: self.cfg.release_stages.max(1),
+                    boost: s.boost,
+                });
+            } else {
+                out.push(LimitAction { vm: s.vm, bytes: s.bytes, boost: s.boost });
+            }
+        }
+
+        // Staged releases advance on periodic ticks: double the limit
+        // each step, landing on the target in the final one.
+        if periodic && !self.staging.is_empty() {
+            let reports = &self.reports;
+            self.staging.retain_mut(|st| {
+                let cur = reports
+                    .iter()
+                    .find(|r| r.vm == st.vm)
+                    .and_then(|r| r.limit_bytes);
+                let Some(cur) = cur else {
+                    return false; // already unlimited: nothing to stage
+                };
+                st.steps_left -= 1;
+                let next = match st.target {
+                    Some(t) => {
+                        if st.steps_left == 0 {
+                            Some(t)
+                        } else {
+                            Some(t.min(cur.saturating_mul(2)))
+                        }
+                    }
+                    None => {
+                        if st.steps_left == 0 {
+                            None
+                        } else {
+                            Some(cur.saturating_mul(2))
+                        }
+                    }
+                };
+                out.push(LimitAction { vm: st.vm, bytes: next, boost: st.boost });
+                st.steps_left > 0 && next != st.target
+            });
+        }
+
+        // Closed-loop arbitration: periodic ticks only, and only with a
+        // configured budget — `host_budget_bytes: None` is documented
+        // as accounting-only, and arbitrating against a zero budget
+        // would squeeze every VM to its floor.
+        if periodic && self.cfg.host_budget_bytes.is_some() {
+            self.arbiter.arbitrate(&self.reports, &host, &self.cfg, out);
+        }
+        self.stats.limit_changes += (out.len() - out_before) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArbiterKind;
+
+    fn plane(kind: ArbiterKind, budget: Option<u64>) -> ControlPlane {
+        let cfg = ControlConfig { kind, host_budget_bytes: budget, ..Default::default() };
+        let mut cp = ControlPlane::new(cfg);
+        cp.register(0, "vm0".into(), Sla::Gold);
+        cp
+    }
+
+    fn report(vm: usize, limit: Option<u64>) -> VmReport {
+        VmReport {
+            vm,
+            sla: Sla::Gold,
+            usage_bytes: 64 << 20,
+            wss_bytes: 32 << 20,
+            cold_estimate_bytes: 32 << 20,
+            pf_count: 10,
+            pf_delta: 0,
+            limit_bytes: limit,
+            unit_bytes: 4096,
+            inflight_allowance: 16384,
+        }
+    }
+
+    fn host() -> HostView {
+        HostView {
+            budget_bytes: 1 << 30,
+            resident_bytes: 64 << 20,
+            pool_bytes: 0,
+            pool_reserved_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn one_shot_fires_once_at_its_time() {
+        let mut cp = plane(ArbiterKind::Static, None);
+        cp.schedule(0, 100, None, false, false);
+        assert!(!cp.needs_periodic());
+        let mut out = vec![];
+        cp.begin_reports();
+        cp.push_report(report(0, Some(1 << 20)), 0, true);
+        cp.collect_actions(50, false, host(), [0; 3], &mut out);
+        assert!(out.is_empty(), "fired early");
+        cp.collect_actions(100, false, host(), [0; 3], &mut out);
+        assert_eq!(out, vec![LimitAction { vm: 0, bytes: None, boost: false }]);
+        out.clear();
+        cp.collect_actions(200, false, host(), [0; 3], &mut out);
+        assert!(out.is_empty(), "fired twice");
+    }
+
+    #[test]
+    fn staged_release_doubles_then_lands_on_target() {
+        let mut cp = plane(ArbiterKind::Static, None);
+        cp.cfg.release_stages = 3;
+        cp.schedule(0, 100, Some(100 << 20), true, true);
+        assert!(cp.needs_periodic());
+        let mut out = vec![];
+        let mut limit = Some(10u64 << 20);
+        for step in 0..4 {
+            cp.begin_reports();
+            cp.push_report(report(0, limit), 0, true);
+            cp.collect_actions(100 + step * 10, true, host(), [0; 3], &mut out);
+            if let Some(a) = out.last() {
+                limit = a.bytes;
+                assert!(a.boost);
+            }
+        }
+        // 10 -> 20 -> 40 -> 100 (final step lands on target).
+        assert_eq!(limit, Some(100 << 20));
+        out.clear();
+        cp.begin_reports();
+        cp.push_report(report(0, limit), 0, true);
+        cp.collect_actions(200, true, host(), [0; 3], &mut out);
+        assert!(out.is_empty(), "staging did not terminate");
+        assert_eq!(cp.stats.staged_releases, 1);
+    }
+
+    #[test]
+    fn pf_delta_derived_from_previous_tick() {
+        let mut cp = plane(ArbiterKind::Static, None);
+        cp.begin_reports();
+        cp.push_report(report(0, None), 0, true);
+        assert_eq!(cp.reports[0].pf_delta, 10);
+        cp.begin_reports();
+        let mut r = report(0, None);
+        r.pf_count = 25;
+        cp.push_report(r, 0, true);
+        assert_eq!(cp.reports[0].pf_delta, 15);
+    }
+}

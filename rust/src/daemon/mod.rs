@@ -1,9 +1,28 @@
 //! The daemon (paper §4.1): launched at host startup; spawns and
 //! configures one MM per VM according to the VM's registration (desired
-//! page size + SLA), and exposes the control-plane feedback loop
-//! (per-VM cold-memory estimates, runtime-tunable parameters).
+//! page size + SLA), and runs the control-plane feedback loop — per-VM
+//! cold-memory reports, host-wide physical-memory accounting and
+//! SLA-weighted limit arbitration — as a scheduled `ControlTick` actor
+//! *inside* the machine's event loop.
+//!
+//! Layer split:
+//! * [`arbiter`] — the pure arbitration engine: [`VmReport`]s +
+//!   [`HostView`] in, [`LimitAction`]s out (static / proportional-share
+//!   / watermark policies).
+//! * [`control`] — the [`ControlPlane`] actor state: fleet bookkeeping,
+//!   scheduled one-shots, staged hard-limit releases with the
+//!   recovery-boost hint, and the host gauges
+//!   ([`crate::metrics::ControlStats`]).
+//! * [`Daemon`] — the boot-time registration facade the CLI, examples
+//!   and harness drive.
 
-use crate::config::{HostConfig, MmConfig, VmConfig};
+pub mod arbiter;
+pub mod control;
+
+pub use arbiter::{Arbiter, HostView, LimitAction, VmReport};
+pub use control::{ControlPlane, ManagedVm};
+
+use crate::config::{ControlConfig, HostConfig, MmConfig, VmConfig};
 use crate::coordinator::Machine;
 use crate::types::{PageSize, Time, MS, SEC};
 use crate::workloads::Workload;
@@ -49,6 +68,25 @@ impl Sla {
             Sla::Bronze => PageSize::Small,
         }
     }
+
+    /// Arbitration weight: how much of the budget surplus (and how
+    /// little of the squeeze) this class attracts.
+    pub fn weight(self) -> u64 {
+        match self {
+            Sla::Gold => 4,
+            Sla::Silver => 2,
+            Sla::Bronze => 1,
+        }
+    }
+
+    /// Index into per-class arrays (pool partitions, gauge splits).
+    pub fn class_index(self) -> usize {
+        match self {
+            Sla::Gold => 0,
+            Sla::Silver => 1,
+            Sla::Bronze => 2,
+        }
+    }
 }
 
 /// A VM registration request (QEMU boot-time handshake).
@@ -58,32 +96,39 @@ pub struct VmRegistration {
     pub vcpus: usize,
     pub sla: Sla,
     pub workloads: Vec<Box<dyn Workload>>,
+    /// Boot-time memory limit (None: unlimited until the arbiter — if
+    /// any — places one). With a host budget, registrations should
+    /// carry limits so the budget invariant holds from t = 0.
+    pub initial_limit_bytes: Option<u64>,
 }
 
-/// The daemon: owns the machine and the fleet bookkeeping.
+/// The daemon: registration facade over the machine-resident control
+/// plane.
 pub struct Daemon {
     pub machine: Machine,
-    names: Vec<String>,
-}
-
-/// Control-plane view of one VM (paper: "inform the control plane about
-/// the number of cold memory pages").
-#[derive(Debug, Clone)]
-pub struct VmReport {
-    pub name: String,
-    pub usage_bytes: u64,
-    pub cold_estimate_bytes: u64,
-    pub pf_count: u64,
 }
 
 impl Daemon {
+    /// Daemon with the default (static, accounting-only) control plane.
     pub fn new(host: HostConfig) -> Self {
-        Daemon { machine: Machine::new(host), names: vec![] }
+        Self::with_control(host, ControlConfig::default())
     }
 
-    /// Boot-time registration: spawn + configure an MM for the VM.
+    /// Daemon with an explicit control-plane configuration (budget,
+    /// arbitration policy, tick cadence, pool split).
+    pub fn with_control(host: HostConfig, ctrl: ControlConfig) -> Self {
+        let mut machine = Machine::new(host);
+        machine.install_control(ctrl);
+        Daemon { machine }
+    }
+
+    /// Boot-time registration: spawn + configure an MM for the VM and
+    /// enroll it with the control plane (SLA pool class included).
     pub fn register(&mut self, reg: VmRegistration) -> usize {
-        let mm_cfg = reg.sla.mm_config();
+        let mm_cfg = MmConfig {
+            memory_limit: reg.initial_limit_bytes,
+            ..reg.sla.mm_config()
+        };
         let vm_cfg = VmConfig {
             frames: reg.frames,
             vcpus: reg.vcpus,
@@ -92,33 +137,37 @@ impl Daemon {
             guest_thp_coverage: 1.0,
         };
         let id = self.machine.sys_vm(vm_cfg, &mm_cfg, reg.workloads);
-        self.names.push(reg.name);
+        self.machine.register_control_vm(id, reg.name, reg.sla);
         id
     }
 
-    /// Control-plane report for every VM.
-    pub fn report(&self) -> Vec<VmReport> {
-        (0..self.names.len())
-            .map(|i| {
-                let mm = self.machine.mm(i).expect("daemon VMs are sys VMs");
-                let wss_units =
-                    mm.core.params.get("dt.wss_units").copied().unwrap_or(0.0);
-                let usage = mm.core.usage_bytes();
-                let cold = usage
-                    .saturating_sub((wss_units as u64) * mm.core.unit_bytes);
-                VmReport {
-                    name: self.names[i].clone(),
-                    usage_bytes: usage,
-                    cold_estimate_bytes: cold,
-                    pf_count: mm.core.pf_count,
-                }
-            })
-            .collect()
+    /// Control-plane report for every VM: rebuilt into the plane's
+    /// reused buffer — no per-call `String`/`Vec` allocation. Names
+    /// stay owned by the plane; look them up with [`Daemon::vm_name`].
+    pub fn report(&mut self) -> &[VmReport] {
+        self.machine.control_reports()
     }
 
-    /// Control-plane action: set a VM's memory limit at time `at`.
-    pub fn plan_limit(&mut self, vm: usize, at: Time, bytes: Option<u64>) {
-        self.machine.plan_limit_change(vm, at, bytes);
+    pub fn vm_name(&self, vm: usize) -> &str {
+        self.machine
+            .control()
+            .and_then(|c| c.vm_name(vm))
+            .unwrap_or("?")
+    }
+
+    /// Schedule a one-shot control-plane limit change (applied from a
+    /// control tick inside the event loop; replaces the old external
+    /// `plan_limit` path). `boost` opens the recovery window on a
+    /// release; `staged` spreads the release over several ticks.
+    pub fn schedule_limit(
+        &mut self,
+        vm: usize,
+        at: Time,
+        bytes: Option<u64>,
+        boost: bool,
+        staged: bool,
+    ) {
+        self.machine.schedule_limit_release(vm, at, bytes, boost, staged);
     }
 }
 
@@ -137,6 +186,7 @@ mod tests {
                 vcpus: 1,
                 sla: *sla,
                 workloads: vec![Box::new(UniformRandom::new(0, 2048, 20_000))],
+                initial_limit_bytes: None,
             });
         }
         let res = d.machine.run();
@@ -144,9 +194,12 @@ mod tests {
         for r in &res {
             assert_eq!(r.work_ops, 20_000);
         }
-        let reports = d.report();
+        let reports = d.report().to_vec();
         assert_eq!(reports.len(), 3);
         assert!(reports.iter().all(|r| r.pf_count > 0));
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(d.vm_name(r.vm), format!("vm{i}"));
+        }
     }
 
     #[test]
@@ -155,5 +208,23 @@ mod tests {
         assert_eq!(Sla::Bronze.page_size(), PageSize::Small);
         assert!(Sla::Bronze.mm_config().target_promotion_rate
             > Sla::Gold.mm_config().target_promotion_rate);
+        assert!(Sla::Gold.weight() > Sla::Silver.weight());
+        assert_ne!(Sla::Gold.class_index(), Sla::Bronze.class_index());
+    }
+
+    #[test]
+    fn registration_applies_initial_limit_and_pool_class() {
+        let mut d = Daemon::new(HostConfig::default());
+        let id = d.register(VmRegistration {
+            name: "capped".into(),
+            frames: 4096,
+            vcpus: 1,
+            sla: Sla::Bronze,
+            workloads: vec![Box::new(UniformRandom::new(0, 2048, 5_000))],
+            initial_limit_bytes: Some(1024 * 4096),
+        });
+        let mm = d.machine.mm(id).unwrap();
+        assert_eq!(mm.core.limit_units, Some(1024));
+        assert_eq!(d.machine.control().unwrap().vms.len(), 1);
     }
 }

@@ -677,7 +677,9 @@ fn fig13_one(config: &str, pages: u64, ops: u64) -> (Time, Time, u64) {
             })
         }
     };
-    m.plan_limit_change(vmid, lift_at, None);
+    // One-shot release through the in-loop control plane (the old
+    // external plan_limit_change path, migrated in PR 3).
+    m.schedule_limit(vmid, lift_at, None);
     let res = m.run();
     let r = &res[0];
     // Recovery: time after the lift until the PF rate falls below 5% of

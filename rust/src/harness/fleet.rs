@@ -1,0 +1,328 @@
+//! The `fleet` experiment: a 64–128 VM mixed-SLA host driven by the
+//! event-driven control plane.
+//!
+//! Two questions, two tables:
+//!
+//! 1. **Density/latency** — the same heterogeneous fleet (three SLA
+//!    classes × four VM sizes, phase-churning working sets, staggered
+//!    boots) under *static* weighted-share limits vs the *closed-loop*
+//!    proportional-share arbiter. The closed loop tracks reported WSS,
+//!    so it should beat static on memory saved and/or p99 fault stall
+//!    while Σ(resident + pool) never exceeds the host budget at any
+//!    control tick.
+//! 2. **Release recovery** (fig13-style) — a thrashing VM whose hard
+//!    limit is released mid-run, with and without the recovery-boost
+//!    hint to the prefetchers; recovery with the boost must be no
+//!    slower.
+
+use crate::config::{
+    ArbiterKind, ControlConfig, HostConfig, MmConfig, TierConfig, VmConfig,
+};
+use crate::coordinator::{Machine, Mechanism, VmSetup};
+use crate::daemon::Sla;
+use crate::metrics::{LatencyHist, Table};
+use crate::mm::Mm;
+use crate::policies::{DtReclaimer, LruReclaimer, NativeAnalytics, WsrPolicy};
+use crate::types::{PageSize, Time, MS, SEC};
+use crate::workloads::{BootDelay, PhasedWss, UniformRandom, Workload};
+
+use super::Scale;
+
+/// Aggregate outcome of one fleet run (public: the control-plane tests
+/// re-run fleets for determinism and budget-invariant checks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSummary {
+    pub vms: usize,
+    pub budget_bytes: u64,
+    pub nominal_bytes: u64,
+    /// Mean Σ(resident + pool) over all control ticks.
+    pub avg_host_bytes: f64,
+    pub peak_host_bytes: u64,
+    pub budget_exceeded_ticks: u64,
+    pub min_headroom_bytes: i64,
+    pub limit_changes: u64,
+    pub p99_stall_ns: u64,
+    pub mean_stall_ns: f64,
+    pub majors: u64,
+    pub total_ops: u64,
+    /// Latest VM finish time.
+    pub runtime_ns: Time,
+    /// 1 - avg_host/nominal: the host-density win.
+    pub saved_frac: f64,
+}
+
+/// Shape of one fleet VM: SLA and size class are deliberately
+/// decorrelated (period 12) so weight-blind static shares starve some
+/// big-WSS Bronze VMs — the misallocation the arbiter fixes.
+fn vm_shape(i: usize) -> (Sla, u64) {
+    let sla = [Sla::Gold, Sla::Silver, Sla::Bronze][i % 3];
+    let frames = [4096u64, 8192, 12288, 16384][(i / 3) % 4];
+    (sla, frames)
+}
+
+/// Build and run one fleet. Deterministic in `seed`.
+pub fn run_fleet(n: usize, ops_per_vm: u64, kind: ArbiterKind, seed: u64) -> FleetSummary {
+    let host = HostConfig {
+        seed,
+        tier: TierConfig { pool_capacity_bytes: 64 * 1024 * 1024, ..Default::default() },
+        ..Default::default()
+    };
+
+    // Shapes first: the budget and the initial static shares need the
+    // whole fleet.
+    let shapes: Vec<(Sla, u64)> = (0..n).map(vm_shape).collect();
+    let nominal: u64 = shapes.iter().map(|&(_, f)| f * 4096).sum();
+    let budget = nominal / 100 * 72;
+    let total_weight: u64 = shapes.iter().map(|&(s, _)| s.weight()).sum();
+    let inflight: u64 = shapes
+        .iter()
+        .map(|&(s, _)| swapper_threads(s) as u64 * s.page_size().unit_bytes())
+        .sum();
+    let usable = budget - host.tier.pool_capacity_bytes - inflight;
+
+    let mut m = Machine::new(host);
+    m.set_max_time(30 * SEC);
+    m.install_control(ControlConfig {
+        interval: 25 * MS,
+        host_budget_bytes: Some(budget),
+        kind,
+        recovery_boost_window: 300 * MS,
+        ..Default::default()
+    });
+
+    for (i, &(sla, frames)) in shapes.iter().enumerate() {
+        let share = usable * sla.weight() / total_weight;
+        let mm_cfg = MmConfig {
+            swapper_threads: swapper_threads(sla),
+            memory_limit: Some(share),
+            scan_interval: scan_interval(sla),
+            history: 6,
+            target_promotion_rate: match sla {
+                Sla::Gold => 0.005,
+                Sla::Silver => 0.02,
+                Sla::Bronze => 0.08,
+            },
+            ..Default::default()
+        };
+        let vm_cfg = VmConfig {
+            frames,
+            vcpus: 1,
+            page_size: sla.page_size(),
+            scramble: 0.05,
+            guest_thp_coverage: 1.0,
+        };
+        let pages = frames - 1024;
+        // Phase churn: half the fleet expands its working set mid-run,
+        // half contracts — the time-varying demand the closed loop
+        // tracks and static shares cannot.
+        let phases = if i % 2 == 0 {
+            vec![(pages / 3, ops_per_vm / 2), (pages, ops_per_vm / 2)]
+        } else {
+            vec![(pages, ops_per_vm / 2), (pages / 3, ops_per_vm / 2)]
+        };
+        let w: Box<dyn Workload> = Box::new(BootDelay::new(
+            (i as u64 % 8) * 10 * MS,
+            Box::new(PhasedWss::with_cost(phases, 40_000)),
+        ));
+        let id = m.sys_vm(vm_cfg, &mm_cfg, vec![w]);
+        m.register_control_vm(id, format!("vm{i}"), sla);
+    }
+
+    let results = m.run();
+    let mut hist = LatencyHist::default();
+    let mut majors = 0;
+    let mut total_ops = 0;
+    let mut runtime = 0;
+    for r in &results {
+        hist.merge(&r.fault_hist);
+        majors += r.counters.faults_major;
+        total_ops += r.work_ops;
+        runtime = runtime.max(r.runtime);
+    }
+    let stats = m.control_stats().expect("fleet has a control plane");
+    let avg_host = if stats.host_series.is_empty() {
+        0.0
+    } else {
+        stats.host_series.iter().map(|(_, r, p)| r + p).sum::<f64>()
+            / stats.host_series.len() as f64
+    };
+    FleetSummary {
+        vms: n,
+        budget_bytes: budget,
+        nominal_bytes: nominal,
+        avg_host_bytes: avg_host,
+        peak_host_bytes: stats.peak_host_bytes,
+        budget_exceeded_ticks: stats.budget_exceeded_ticks,
+        min_headroom_bytes: stats.min_headroom_bytes,
+        limit_changes: stats.limit_changes,
+        p99_stall_ns: hist.quantile(0.99),
+        mean_stall_ns: hist.mean(),
+        majors,
+        total_ops,
+        runtime_ns: runtime,
+        saved_frac: 1.0 - avg_host / nominal as f64,
+    }
+}
+
+fn swapper_threads(sla: Sla) -> usize {
+    // Huge-unit VMs get fewer workers: each worker's in-flight unit is
+    // 2MB of budget reservation.
+    match sla.page_size() {
+        PageSize::Huge => 2,
+        PageSize::Small => 4,
+    }
+}
+
+fn scan_interval(sla: Sla) -> Time {
+    match sla {
+        Sla::Gold => 100 * MS,
+        Sla::Silver => 60 * MS,
+        Sla::Bronze => 40 * MS,
+    }
+}
+
+/// Outcome of one release-recovery run (fig13-style).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoverySummary {
+    pub runtime_ns: Time,
+    /// Work remaining after the release: runtime - lift time. The
+    /// recovery metric — lower is faster.
+    pub after_lift_ns: Time,
+    pub majors: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_timely: u64,
+}
+
+/// One VM thrashing under a 30% hard limit; at 1.2s the control plane
+/// releases the limit to 85% of the working set — enough to recover,
+/// tight enough that the one-shot WSR restore cannot cover everything
+/// (so the boost's re-restores have majors left to convert).
+pub fn recovery_release(boost: bool, ops: u64, seed: u64) -> RecoverySummary {
+    let pages = 6_000u64;
+    let frames = pages + 1024;
+    let tight = pages * 4096 * 3 / 10;
+    let released = pages * 4096 * 85 / 100;
+    let lift_at = 1_200 * MS;
+
+    let mut m = Machine::new(HostConfig { seed, ..Default::default() });
+    m.set_max_time(60 * SEC);
+    m.install_control(ControlConfig {
+        recovery_boost_window: 600 * MS,
+        ..Default::default()
+    });
+    let mm_cfg = MmConfig {
+        scan_interval: 30 * MS,
+        history: 8,
+        memory_limit: Some(tight),
+        ..Default::default()
+    };
+    let vm_cfg = VmConfig {
+        frames,
+        vcpus: 1,
+        page_size: PageSize::Small,
+        scramble: 0.05,
+        guest_thp_coverage: 1.0,
+    };
+    let units = vm_cfg.units();
+    let mut mm = Mm::new(&mm_cfg, units, 4096, &m.host.sw, m.host.hw.zero_2m_ns);
+    mm.add_policy(Box::new(DtReclaimer::new(
+        Box::new(NativeAnalytics::new()),
+        mm_cfg.history,
+        mm_cfg.target_promotion_rate,
+    )));
+    mm.add_policy(Box::new(WsrPolicy::new(units)));
+    mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
+    let vmid = m.add_vm(VmSetup {
+        vm_cfg,
+        mech: Mechanism::Sys(Box::new(mm)),
+        workloads: vec![Box::new(UniformRandom::new(0, pages, ops))],
+        scan_interval: Some(30 * MS),
+    });
+    m.schedule_limit_release(vmid, lift_at, Some(released), boost, false);
+    let res = m.run();
+    let r = &res[0];
+    RecoverySummary {
+        runtime_ns: r.runtime,
+        after_lift_ns: r.runtime.saturating_sub(lift_at),
+        majors: r.counters.faults_major,
+        prefetch_issued: r.counters.prefetch_issued,
+        prefetch_timely: r.counters.prefetch_timely,
+    }
+}
+
+/// The registered experiment driver.
+pub fn fleet(scale: Scale) -> Vec<Table> {
+    let n = scale.u(64, 128) as usize;
+    let ops = scale.u(12_000, 40_000);
+    let mut t = Table::new(
+        "fleet density: closed-loop arbitration vs static limits",
+        &[
+            "config",
+            "vms",
+            "budget_mb",
+            "avg_host_mb",
+            "peak_host_mb",
+            "budget_exceeded_ticks",
+            "saved_pct",
+            "p99_stall_us",
+            "mean_stall_us",
+            "major_faults",
+            "limit_changes",
+            "runtime_ms",
+        ],
+    );
+    for (label, kind) in
+        [("static", ArbiterKind::Static), ("closed-loop", ArbiterKind::ProportionalShare)]
+    {
+        let s = run_fleet(n, ops, kind, 7);
+        assert_eq!(
+            s.total_ops,
+            n as u64 * ops,
+            "{label}: fleet did not complete its work"
+        );
+        assert_eq!(
+            s.budget_exceeded_ticks, 0,
+            "{label}: host budget exceeded ({} min headroom)",
+            s.min_headroom_bytes
+        );
+        t.row(vec![
+            label.into(),
+            s.vms.to_string(),
+            format!("{:.0}", s.budget_bytes as f64 / 1e6),
+            format!("{:.0}", s.avg_host_bytes / 1e6),
+            format!("{:.0}", s.peak_host_bytes as f64 / 1e6),
+            s.budget_exceeded_ticks.to_string(),
+            format!("{:.1}", s.saved_frac * 100.0),
+            format!("{:.0}", s.p99_stall_ns as f64 / 1e3),
+            format!("{:.1}", s.mean_stall_ns / 1e3),
+            s.majors.to_string(),
+            s.limit_changes.to_string(),
+            format!("{:.0}", s.runtime_ns as f64 / 1e6),
+        ]);
+    }
+
+    let rec_ops = scale.u(150_000, 400_000);
+    let mut t2 = Table::new(
+        "release recovery: boost hint on vs off",
+        &[
+            "config",
+            "runtime_ms",
+            "post_release_ms",
+            "major_faults",
+            "prefetch_issued",
+            "prefetch_timely",
+        ],
+    );
+    for (label, boost) in [("no-boost", false), ("boost", true)] {
+        let r = recovery_release(boost, rec_ops, 11);
+        t2.row(vec![
+            label.into(),
+            format!("{:.0}", r.runtime_ns as f64 / 1e6),
+            format!("{:.0}", r.after_lift_ns as f64 / 1e6),
+            r.majors.to_string(),
+            r.prefetch_issued.to_string(),
+            r.prefetch_timely.to_string(),
+        ]);
+    }
+    vec![t, t2]
+}

@@ -5,6 +5,7 @@
 
 pub mod analysis;
 pub mod eval;
+pub mod fleet;
 
 use crate::metrics::Table;
 
@@ -109,6 +110,12 @@ pub fn registry() -> Vec<Experiment> {
             run: eval::fig_tiers,
         },
         Experiment {
+            id: "fleet",
+            title: "Fleet control plane: 64-128 mixed-SLA VMs, closed-loop vs static limits (PR 3 extension)",
+            expectation: "budget never exceeded at any control tick; closed-loop beats static on memory saved and/or p99 fault stall; release recovery with the boost hint no slower than without",
+            run: fleet::fleet,
+        },
+        Experiment {
             id: "fig12",
             title: "Fig 12: g500 memory usage over time (SYS-Agg vs default)",
             expectation: "aggressive policy reclaims phase memory much faster",
@@ -156,7 +163,7 @@ mod tests {
         let ids: Vec<_> = registry().iter().map(|e| e.id).collect();
         for want in [
             "fig1", "fig2", "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "figpf",
-            "tiers", "fig12", "fig13",
+            "tiers", "fleet", "fig12", "fig13",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -1,11 +1,10 @@
-//! flexswap CLI: run paper experiments, individual figures, or a demo
-//! fleet under the daemon.
+//! flexswap CLI: run paper experiments or individual figures.
 //!
 //! Usage:
 //!   flexswap list                 # list experiments
 //!   flexswap fig9 [--full]        # run one experiment
+//!   flexswap fleet [--full]       # 64-128 VM control-plane experiment
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
-//!   flexswap fleet                # daemon + 3-VM demo fleet
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
 
 use flexswap::harness::{registry, run_by_id, Scale};
@@ -33,7 +32,6 @@ fn main() {
                 }
             }
         }
-        "fleet" => fleet_demo(),
         "selfcheck" => selfcheck(),
         id => match run_by_id(id, scale) {
             Some(md) => println!("{md}"),
@@ -42,50 +40,6 @@ fn main() {
                 std::process::exit(2);
             }
         },
-    }
-}
-
-/// Daemon demo: a 3-VM fleet with different SLAs sharing the NVMe swap
-/// device; prints the control-plane report.
-fn fleet_demo() {
-    use flexswap::config::HostConfig;
-    use flexswap::daemon::{Daemon, Sla, VmRegistration};
-    use flexswap::workloads::{cloud_preset, CloudWorkload};
-
-    let mut d = Daemon::new(HostConfig::default());
-    for (name, sla) in
-        [("kafka", Sla::Bronze), ("redis", Sla::Gold), ("nginx", Sla::Silver)]
-    {
-        let spec = cloud_preset(name, 0.05);
-        d.register(VmRegistration {
-            name: name.to_string(),
-            frames: spec.pages + 2048,
-            vcpus: 1,
-            sla,
-            workloads: vec![Box::new(CloudWorkload::new(spec))],
-        });
-    }
-    let results = d.machine.run();
-    println!("fleet results:");
-    for r in &results {
-        println!(
-            "  {:8} runtime={:8.1}ms usage(avg)={:8.1}MB majors={:6} minors={:6}",
-            r.label,
-            r.runtime as f64 / 1e6,
-            r.avg_usage_bytes / 1e6,
-            r.counters.faults_major,
-            r.counters.faults_minor
-        );
-    }
-    println!("\ncontrol-plane report:");
-    for rep in d.report() {
-        println!(
-            "  {:8} usage={:8.1}MB cold~{:8.1}MB pf={}",
-            rep.name,
-            rep.usage_bytes as f64 / 1e6,
-            rep.cold_estimate_bytes as f64 / 1e6,
-            rep.pf_count
-        );
     }
 }
 

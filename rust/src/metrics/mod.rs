@@ -72,6 +72,16 @@ impl LatencyHist {
         self.max = self.max.max(v);
     }
 
+    /// Fold another histogram into this one (fleet-wide percentiles).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -103,6 +113,61 @@ impl LatencyHist {
             }
         }
         self.max
+    }
+}
+
+/// Host-level control-plane gauges, maintained at every control tick by
+/// [`crate::daemon::ControlPlane`]: budget headroom, per-SLA splits and
+/// limit-change counts (the paper's §4.1 daemon telemetry).
+#[derive(Debug, Clone, Default)]
+pub struct ControlStats {
+    /// Periodic control ticks executed.
+    pub ticks: u64,
+    /// Limit changes applied (arbitration + scheduled + staged).
+    pub limit_changes: u64,
+    /// Staged hard-limit releases started.
+    pub staged_releases: u64,
+    /// Configured host budget (0 = accounting only).
+    pub budget_bytes: u64,
+    /// Peak Σ(resident + pool) observed at any tick.
+    pub peak_host_bytes: u64,
+    /// Ticks at which Σ(resident + pool) exceeded the budget (must stay
+    /// 0 — the fleet acceptance invariant).
+    pub budget_exceeded_ticks: u64,
+    /// Smallest budget headroom seen at a tick (bytes; negative means
+    /// the invariant broke).
+    pub min_headroom_bytes: i64,
+    /// (t, Σ resident bytes, pool bytes) per tick.
+    pub host_series: Vec<(Time, f64, f64)>,
+    /// Resident bytes per SLA class (Gold/Silver/Bronze) at the last
+    /// tick.
+    pub resident_by_class: [u64; 3],
+    /// Compressed-pool bytes per SLA class at the last tick.
+    pub pool_by_class: [u64; 3],
+}
+
+impl ControlStats {
+    pub fn new(budget_bytes: u64) -> Self {
+        ControlStats {
+            budget_bytes,
+            min_headroom_bytes: i64::MAX,
+            ..Default::default()
+        }
+    }
+
+    /// Record one tick's host occupancy.
+    pub fn observe(&mut self, t: Time, resident: u64, pool: u64) {
+        self.ticks += 1;
+        let occupied = resident + pool;
+        self.peak_host_bytes = self.peak_host_bytes.max(occupied);
+        self.host_series.push((t, resident as f64, pool as f64));
+        if self.budget_bytes > 0 {
+            let headroom = self.budget_bytes as i64 - occupied as i64;
+            self.min_headroom_bytes = self.min_headroom_bytes.min(headroom);
+            if headroom < 0 {
+                self.budget_exceeded_ticks += 1;
+            }
+        }
     }
 }
 
@@ -258,6 +323,32 @@ mod tests {
         let h = LatencyHist::default();
         assert_eq!(h.quantile(0.5), 0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn hist_merge_combines_counts() {
+        let mut a = LatencyHist::default();
+        let mut b = LatencyHist::default();
+        for v in [100u64, 200, 300] {
+            a.record(v);
+        }
+        b.record(50_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max(), 50_000);
+        assert!(a.quantile(0.99) >= 16_384);
+    }
+
+    #[test]
+    fn control_stats_tracks_headroom_and_violations() {
+        let mut s = ControlStats::new(1000);
+        s.observe(1, 600, 100); // headroom 300
+        s.observe(2, 900, 200); // headroom -100: violation
+        assert_eq!(s.ticks, 2);
+        assert_eq!(s.peak_host_bytes, 1100);
+        assert_eq!(s.budget_exceeded_ticks, 1);
+        assert_eq!(s.min_headroom_bytes, -100);
+        assert_eq!(s.host_series.len(), 2);
     }
 
     #[test]

@@ -128,6 +128,14 @@ impl<'a> PolicyApi<'a> {
     pub fn set_scan_interval(&mut self, interval: Time) {
         self.core.requested_scan_interval = Some(interval);
     }
+
+    /// `recovery_mode()`: true while the control plane's recovery-boost
+    /// window after a hard-limit release is open. Prefetchers use this
+    /// hint to restore the working set more aggressively (§6.8); it is
+    /// advisory — the engine still validates every request.
+    pub fn recovery_mode(&self) -> bool {
+        self.now < self.core.recovery_until
+    }
 }
 
 /// A policy module (optional, paper §4.3). Policies only see
@@ -269,6 +277,9 @@ pub struct EngineCore {
     pub staged_at: Vec<Time>,
     /// Set when a policy asks for a different scan cadence.
     pub requested_scan_interval: Option<Time>,
+    /// Recovery-boost window: [`PolicyApi::recovery_mode`] reads true
+    /// until this virtual time (set by boost-flagged limit releases).
+    pub recovery_until: Time,
     /// Per-unit reclaim tier routing (encoded [`TierHint`]), set by
     /// `reclaim_to`, consumed at swap-out pickup.
     tier_hint: Vec<u8>,
@@ -320,6 +331,7 @@ impl EngineCore {
             prefetched_untouched: Bitmap::new(units as usize),
             staged_at: vec![0; units as usize],
             requested_scan_interval: None,
+            recovery_until: 0,
             tier_hint: vec![0; units as usize],
             backend_tier: vec![0; units as usize],
             clock_hand: 0,
@@ -614,9 +626,33 @@ impl Mm {
 
     /// Change the memory limit at runtime (control-plane action).
     pub fn set_memory_limit(&mut self, vm: &Vm, bytes: Option<u64>, now: Time) {
+        self.set_memory_limit_with_boost(vm, bytes, now, 0);
+    }
+
+    /// Limit change with an optional recovery boost: when the change is
+    /// a *release* (raise or lift) and `boost_window > 0`, the engine's
+    /// recovery window opens for that long, so prefetchers observing
+    /// [`PolicyApi::recovery_mode`] can restore the working set harder.
+    pub fn set_memory_limit_with_boost(
+        &mut self,
+        vm: &Vm,
+        bytes: Option<u64>,
+        now: Time,
+        boost_window: Time,
+    ) {
         let old = self.core.limit_units;
         let new = bytes.map(|b| b / self.core.unit_bytes);
         self.core.limit_units = new;
+        let released = match (old, new) {
+            (Some(_), None) => true,
+            (Some(o), Some(n)) => n > o,
+            _ => false,
+        };
+        if released && boost_window > 0 {
+            // Open before LimitChanged dispatches, so policies already
+            // see recovery_mode() while handling the release itself.
+            self.core.recovery_until = now + boost_window;
+        }
         self.dispatch_event(vm, &|now2| PolicyEvent::LimitChanged { old, new, now: now2 }, now);
         // Under a tightened limit, force reclamation down to the limit.
         if let Some(l) = new {

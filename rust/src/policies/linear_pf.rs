@@ -81,6 +81,12 @@ impl Policy for LinearPf {
                 if next < api.units() {
                     self.emit(next, api);
                 }
+                // Recovery boost: prefetch one unit deeper while the
+                // post-release window is open (the working set is
+                // coming back wholesale — §6.8).
+                if api.recovery_mode() && unit + 2 < api.units() {
+                    self.emit(unit + 2, api);
+                }
             }
             PfMode::Gva => {
                 // Paper §4.3 example, verbatim logic:
@@ -101,6 +107,14 @@ impl Policy for LinearPf {
                         self.emit(next_unit, api);
                     }
                     None => self.translation_failed += 1,
+                }
+                // Recovery boost: one GVA-successor deeper in-window.
+                if api.recovery_mode() {
+                    let second = next_gva_page + unit_frames;
+                    if let Some(hva_frame) = api.gva_to_hva(second, ctx.cr3) {
+                        let u2: UnitId = api.unit_of_frame(hva_frame);
+                        self.emit(u2, api);
+                    }
                 }
             }
         }

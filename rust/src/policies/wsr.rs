@@ -15,11 +15,34 @@ pub struct WsrPolicy {
     seen: Vec<Time>,
     pub restored: u64,
     pub recordings: u64,
+    /// Prefetches re-issued under the recovery-boost hint.
+    pub boost_restored: u64,
 }
 
 impl WsrPolicy {
     pub fn new(units: u64) -> Self {
-        WsrPolicy { seen: vec![0; units as usize], restored: 0, recordings: 0 }
+        WsrPolicy { seen: vec![0; units as usize], restored: 0, recordings: 0, boost_restored: 0 }
+    }
+
+    /// Prefetch the recorded working set, most recently used first.
+    /// Returns how many prefetches were issued.
+    fn restore(&mut self, api: &mut PolicyApi) -> u64 {
+        let mut order: Vec<(Time, UnitId)> = self
+            .seen
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t > 0)
+            .map(|(u, &t)| (t, u as UnitId))
+            .collect();
+        order.sort_unstable_by(|a, b| b.cmp(a));
+        let mut issued = 0;
+        for (_, u) in order {
+            if api.page_state(u) == UnitState::Swapped {
+                api.prefetch(u);
+                issued += 1;
+            }
+        }
+        issued
     }
 }
 
@@ -37,6 +60,15 @@ impl Policy for WsrPolicy {
                         self.recordings += 1;
                     }
                 }
+                // Recovery boost: while the control plane's release
+                // window is open, keep re-issuing the restore each
+                // scan — prefetches dropped at the (still finite)
+                // limit or conflated away get another chance, so the
+                // remaining recovery majors turn minor.
+                if api.recovery_mode() {
+                    let n = self.restore(api);
+                    self.boost_restored += n;
+                }
             }
             PolicyEvent::PageFault { unit, now, .. } => {
                 if api.memory_limit().is_some() {
@@ -53,20 +85,8 @@ impl Policy for WsrPolicy {
                     return;
                 }
                 // Prefetch the recorded WS, most recently used first.
-                let mut order: Vec<(Time, UnitId)> = self
-                    .seen
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, &t)| t > 0)
-                    .map(|(u, &t)| (t, u as UnitId))
-                    .collect();
-                order.sort_unstable_by(|a, b| b.cmp(a));
-                for (_, u) in order {
-                    if api.page_state(u) == UnitState::Swapped {
-                        api.prefetch(u);
-                        self.restored += 1;
-                    }
-                }
+                let n = self.restore(api);
+                self.restored += n;
             }
             _ => {}
         }
@@ -120,6 +140,35 @@ mod tests {
         let queued = (0..12u64).filter(|&u| mm.core.queue.contains(u)).count();
         assert_eq!(queued, 12);
         assert_eq!(mm.core.counters.prefetch_issued, 12);
+    }
+
+    #[test]
+    fn recovery_boost_reissues_restore_on_scans() {
+        let (mut mm, vm) = setup(32, 8);
+        let mut bm = Bitmap::new(32);
+        for u in 0..6 {
+            bm.set(u);
+        }
+        mm.on_scan(&vm, &bm, SEC);
+        for u in 0..6 {
+            mm.core.states[u] = UnitState::Swapped;
+        }
+        // Boost-flagged release: recovery window opens.
+        mm.set_memory_limit_with_boost(&vm, None, 2 * SEC, SEC);
+        assert!(mm.core.recovery_until > 2 * SEC);
+        let first_issued = mm.core.counters.prefetch_issued;
+        assert_eq!(first_issued, 6);
+        // Drain the queue, then swap one WS unit back out: without the
+        // boost it would fault major; the in-window scan re-restores it.
+        while mm.pick_work(2 * SEC + 1).is_some() {}
+        mm.core.states[3] = UnitState::Swapped;
+        mm.on_scan(&vm, &Bitmap::new(32), 2 * SEC + 100);
+        assert!(mm.core.queue.contains(3), "boost did not re-restore");
+        // Window closed: no further re-restores.
+        while mm.pick_work(2 * SEC + 200).is_some() {}
+        mm.core.states[3] = UnitState::Swapped;
+        mm.on_scan(&vm, &Bitmap::new(32), 4 * SEC);
+        assert!(!mm.core.queue.contains(3), "restored outside the window");
     }
 
     #[test]

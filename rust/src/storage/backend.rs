@@ -192,4 +192,21 @@ pub trait SwapBackend {
 
     /// Aggregate counters.
     fn metrics(&self) -> &TierMetrics;
+
+    /// Assign a VM to a pool-partition class (SLA-driven; see
+    /// [`SwapBackend::set_class_quotas`]). Default: ignored — backends
+    /// without partitions treat the pool as one shared arena.
+    fn set_vm_class(&mut self, _vm: VmId, _class: u8) {}
+
+    /// Partition the compressed pool: `quotas[c]` bytes reserved for
+    /// class `c`. Admission and watermark writeback are then enforced
+    /// per class, so one SLA class can never evict another's pool
+    /// residency. An empty slice restores the shared arena.
+    fn set_class_quotas(&mut self, _quotas: &[u64]) {}
+
+    /// Compressed-pool bytes currently held by a partition class
+    /// (0 for backends without partitions).
+    fn class_pool_bytes(&self, _class: u8) -> u64 {
+        0
+    }
 }

@@ -44,6 +44,8 @@ struct Entry {
     /// Completion time of the writeback (or direct write) that put the
     /// copy on NVMe; reads of this unit cannot start earlier.
     nvme_ready_at: Time,
+    /// Pool-partition class the entry's bytes are accounted to.
+    class: u8,
 }
 
 /// Two-tier swap store: compressed pool + NVMe writeback.
@@ -56,9 +58,16 @@ pub struct TieredBackend {
     decompress_4k_ns: Time,
     /// Per-VM unit stores, grown lazily.
     stores: Vec<Vec<Option<Entry>>>,
-    /// Pool admission order: `(vm, unit, stamp)`, lazily invalidated
-    /// (same tombstone idiom as the Swapper queue).
-    drain_fifo: VecDeque<(VmId, UnitId, u32)>,
+    /// Pool admission order per partition class: `(vm, unit, stamp)`,
+    /// lazily invalidated (same tombstone idiom as the Swapper queue).
+    /// Index 0 is the shared arena when no quotas are configured.
+    drain_fifo: Vec<VecDeque<(VmId, UnitId, u32)>>,
+    /// SLA pool partitions: `class_quota[c]` bytes reserved for class
+    /// `c` (empty = one shared arena); `class_bytes[c]` tracks
+    /// occupancy; `vm_class` maps VMs to classes.
+    class_quota: Vec<u64>,
+    class_bytes: Vec<u64>,
+    vm_class: Vec<u8>,
     /// Globally monotonic entry stamp: a replaced entry always gets a
     /// fresh stamp, so stale FIFO references can never match it.
     next_stamp: u32,
@@ -75,7 +84,10 @@ impl TieredBackend {
             compress_4k_ns: sw.compress_4k_ns,
             decompress_4k_ns: sw.decompress_4k_ns,
             stores: vec![],
-            drain_fifo: VecDeque::new(),
+            drain_fifo: vec![VecDeque::new()],
+            class_quota: vec![],
+            class_bytes: vec![0],
+            vm_class: vec![],
             next_stamp: 1,
             next_token: 0,
             metrics: TierMetrics::default(),
@@ -107,6 +119,34 @@ impl TieredBackend {
         per_4k * bytes.div_ceil(FRAME_BYTES)
     }
 
+    /// Partition class of a VM (always 0 in the shared arena).
+    fn class_of(&self, vm: VmId) -> usize {
+        if self.class_quota.is_empty() {
+            return 0;
+        }
+        let c = self.vm_class.get(vm).copied().unwrap_or(0) as usize;
+        c.min(self.class_quota.len() - 1)
+    }
+
+    /// (quota, high watermark, low watermark) bytes of a class — the
+    /// whole-pool figures when unpartitioned.
+    fn class_limits(&self, class: usize) -> (u64, u64, u64) {
+        if self.class_quota.is_empty() {
+            (
+                self.cfg.pool_capacity_bytes,
+                self.cfg.high_watermark_bytes(),
+                self.cfg.low_watermark_bytes(),
+            )
+        } else {
+            let q = self.class_quota[class];
+            (
+                q,
+                q / 100 * self.cfg.high_watermark_pct as u64,
+                q / 100 * self.cfg.low_watermark_pct as u64,
+            )
+        }
+    }
+
     /// Release a unit's previous copy (write replacement / discard).
     fn remove_entry(&mut self, vm: VmId, unit: UnitId) -> bool {
         let slot = self.slot_mut(vm, unit);
@@ -114,6 +154,7 @@ impl TieredBackend {
             Some(e) => {
                 if e.tier == SwapTier::Pool {
                     self.metrics.pool_bytes -= e.img.stored_bytes();
+                    self.class_bytes[e.class as usize] -= e.img.stored_bytes();
                 }
                 true
             }
@@ -143,21 +184,23 @@ impl TieredBackend {
         nvme.submit(start, bytes, kind) + extra
     }
 
-    /// Drain the pool down to the low watermark: oldest-admitted first,
-    /// sorted by `(vm, unit)` per batch, adjacent units coalesced into
-    /// single NVMe requests. Returns the drained units in sorted order.
-    fn drain(&mut self, now: Time, nvme: &mut Nvme) -> Vec<(VmId, UnitId)> {
-        let low = self.cfg.low_watermark_bytes();
+    /// Drain one partition class down to its low watermark:
+    /// oldest-admitted first, sorted by `(vm, unit)` per batch,
+    /// adjacent units coalesced into single NVMe requests. Returns the
+    /// drained units in sorted order. In the shared arena, class 0
+    /// covers the whole pool — identical to the pre-partition behavior.
+    fn drain(&mut self, class: usize, now: Time, nvme: &mut Nvme) -> Vec<(VmId, UnitId)> {
+        let (_, _, low) = self.class_limits(class);
         let mut all_drained = Vec::new();
-        while self.metrics.pool_bytes > low {
+        while self.class_bytes[class] > low {
             // Collect one batch of live FIFO entries.
             let mut victims: Vec<(VmId, UnitId)> = Vec::new();
             let mut freed = 0u64;
             while victims.len() < self.cfg.writeback_batch {
-                if self.metrics.pool_bytes - freed <= low {
+                if self.class_bytes[class] - freed <= low {
                     break;
                 }
-                let Some((vm, unit, stamp)) = self.drain_fifo.pop_front() else { break };
+                let Some((vm, unit, stamp)) = self.drain_fifo[class].pop_front() else { break };
                 let Some(e) = self.entry(vm, unit) else { continue };
                 if e.stamp != stamp || e.tier != SwapTier::Pool {
                     continue; // stale reference (replaced or already drained)
@@ -193,12 +236,15 @@ impl TieredBackend {
                 let done = self.nvme_op(now, bytes, IoKind::Write, nvme);
                 for &(vm, u) in &victims[i..j] {
                     let mut freed_now = 0;
+                    let mut freed_class = 0;
                     if let Some(e) = self.slot_mut(vm, u).as_mut() {
                         freed_now = e.img.stored_bytes();
+                        freed_class = e.class as usize;
                         e.tier = SwapTier::Nvme;
                         e.nvme_ready_at = done;
                     }
                     self.metrics.pool_bytes -= freed_now;
+                    self.class_bytes[freed_class] -= freed_now;
                 }
                 i = j;
             }
@@ -231,19 +277,30 @@ impl SwapBackend for TieredBackend {
         let mut writeback = Vec::new();
         let mut nvme_img = None;
         if self.cfg.pool_enabled() && hint != TierHint::Nvme {
+            let class = self.class_of(vm);
+            let (quota, high, _) = self.class_limits(class);
             cpu = self.scaled(self.compress_4k_ns, raw);
             let img = codec::compress(data);
             let stored = img.stored_bytes();
             let admit =
                 hint == TierHint::Pool || stored * 100 < raw * self.cfg.reject_pct as u64;
-            if admit && self.metrics.pool_bytes + stored > self.cfg.high_watermark_bytes() {
-                // Make room before inserting.
-                writeback = self.drain(now, nvme);
+            if admit
+                && (self.class_bytes[class] + stored > high
+                    || self.metrics.pool_bytes + stored > self.cfg.high_watermark_bytes())
+            {
+                // Make room before inserting — draining only this
+                // class's entries (quota enforcement: one SLA class
+                // never evicts another's pool residency).
+                writeback = self.drain(class, now, nvme);
             }
-            // Admission must never push occupancy past capacity — an
-            // image that still doesn't fit after draining (e.g. a raw
-            // 2MB unit in a tiny pool) falls through to NVMe.
-            if admit && self.metrics.pool_bytes + stored <= self.cfg.pool_capacity_bytes {
+            // Admission must never push occupancy past the class quota
+            // or pool capacity — an image that still doesn't fit after
+            // draining (e.g. a raw 2MB unit in a tiny partition) falls
+            // through to NVMe.
+            if admit
+                && self.metrics.pool_bytes + stored <= self.cfg.pool_capacity_bytes
+                && self.class_bytes[class] + stored <= quota
+            {
                 let is_zero = matches!(img, Compressed::Zero { .. });
                 let stamp = self.next_stamp;
                 self.next_stamp = self.next_stamp.wrapping_add(1);
@@ -252,15 +309,17 @@ impl SwapBackend for TieredBackend {
                     tier: SwapTier::Pool,
                     stamp,
                     nvme_ready_at: 0,
+                    class: class as u8,
                 });
                 if !is_zero {
                     // Zero pages occupy no bytes: nothing to ever drain.
-                    self.drain_fifo.push_back((vm, unit, stamp));
+                    self.drain_fifo[class].push_back((vm, unit, stamp));
                 } else {
                     self.metrics.pool_zero_pages += 1;
                 }
                 self.metrics.pool_stores += 1;
                 self.metrics.pool_bytes += stored;
+                self.class_bytes[class] += stored;
                 self.metrics.pool_peak_bytes =
                     self.metrics.pool_peak_bytes.max(self.metrics.pool_bytes);
                 self.metrics.raw_bytes_stored += raw;
@@ -292,11 +351,13 @@ impl SwapBackend for TieredBackend {
         });
         let stamp = self.next_stamp;
         self.next_stamp = self.next_stamp.wrapping_add(1);
+        let class = self.class_of(vm) as u8;
         *self.slot_mut(vm, unit) = Some(Entry {
             img,
             tier: SwapTier::Nvme,
             stamp,
             nvme_ready_at: done,
+            class,
         });
         IoReceipt { token, completes_at: done, tier: SwapTier::Nvme, writeback }
     }
@@ -367,6 +428,26 @@ impl SwapBackend for TieredBackend {
 
     fn metrics(&self) -> &TierMetrics {
         &self.metrics
+    }
+
+    fn set_vm_class(&mut self, vm: VmId, class: u8) {
+        if self.vm_class.len() <= vm {
+            self.vm_class.resize(vm + 1, 0);
+        }
+        self.vm_class[vm] = class;
+    }
+
+    /// Configure partitions *before* traffic: existing occupancy stays
+    /// accounted to the classes it was admitted under.
+    fn set_class_quotas(&mut self, quotas: &[u64]) {
+        self.class_quota = quotas.to_vec();
+        let n = quotas.len().max(1);
+        self.class_bytes.resize(n, 0);
+        self.drain_fifo.resize_with(n, VecDeque::new);
+    }
+
+    fn class_pool_bytes(&self, class: u8) -> u64 {
+        self.class_bytes.get(class as usize).copied().unwrap_or(0)
     }
 }
 
@@ -698,6 +779,81 @@ mod tests {
         // pool hits and no NVMe read happened at all.
         assert_eq!(tier_hits, 32);
         assert_eq!(tier_nvme_reads, 0);
+    }
+
+    // ---- per-SLA pool partitions ----
+
+    /// Two classes with page-sized quotas: class 1's overflow drains
+    /// only class-1 entries; class 0's residency is untouched, and
+    /// neither class ever exceeds its quota.
+    #[test]
+    fn class_quotas_enforced_and_drains_stay_in_class() {
+        let cfg = TierConfig {
+            pool_capacity_bytes: 100 * 4096,
+            high_watermark_pct: 50,
+            low_watermark_pct: 25,
+            writeback_batch: 64,
+            max_coalesce_units: 4,
+            reject_pct: 101, // admit everything
+            ..TierConfig::default()
+        };
+        let (mut b, mut n, mut rng) = setup(cfg);
+        // Quotas: class 0 = 16 pages, class 1 = 8 pages. Watermarks per
+        // class: high 50%, low 25% of the quota.
+        b.set_class_quotas(&[16 * 4096, 8 * 4096]);
+        b.set_vm_class(0, 0);
+        b.set_vm_class(1, 1);
+        // Class 0: 6 pages — under its 8-page high watermark, no drain.
+        for u in 0..6u64 {
+            b.write(0, u, &random_page(4096, u), TierHint::Pool, u * 1000, &mut n, &mut rng);
+        }
+        assert_eq!(b.class_pool_bytes(0), 6 * 4096);
+        // Class 1: its high watermark is 4 pages; the 5th write drains
+        // class 1 down to 2 pages (25% of 8) before inserting.
+        let mut wb = vec![];
+        for u in 0..5u64 {
+            let r = b.write(1, u, &random_page(4096, 100 + u), TierHint::Pool, u * 1000, &mut n, &mut rng);
+            if !r.writeback.is_empty() {
+                wb = r.writeback;
+            }
+        }
+        assert!(!wb.is_empty(), "class-1 drain did not trigger");
+        assert!(wb.iter().all(|&(vm, _)| vm == 1), "drained foreign class: {wb:?}");
+        // Class 0 untouched by class 1's pressure.
+        assert_eq!(b.class_pool_bytes(0), 6 * 4096);
+        assert!(b.class_pool_bytes(1) <= 8 * 4096, "quota exceeded");
+        for u in 0..6u64 {
+            assert_eq!(b.tier_of(0, u), Some(SwapTier::Pool), "class-0 unit {u} evicted");
+        }
+    }
+
+    /// An image that cannot fit its class quota falls through to NVMe
+    /// even when another class has room.
+    #[test]
+    fn quota_overflow_falls_through_to_nvme() {
+        let (mut b, mut n, mut rng) = setup(TierConfig {
+            pool_capacity_bytes: 100 * 4096,
+            reject_pct: 101,
+            ..TierConfig::default()
+        });
+        b.set_class_quotas(&[50 * 4096, 2048]); // class 1: half a page
+        b.set_vm_class(0, 1);
+        let w = b.write(0, 1, &random_page(4096, 9), TierHint::Pool, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Nvme);
+        assert_eq!(b.class_pool_bytes(1), 0);
+        // Class 0 admission unaffected.
+        b.set_vm_class(1, 0);
+        let w2 = b.write(1, 1, &random_page(4096, 10), TierHint::Pool, 0, &mut n, &mut rng);
+        assert_eq!(w2.tier, SwapTier::Pool);
+        assert_eq!(b.class_pool_bytes(0), 4096);
+    }
+
+    #[test]
+    fn shared_arena_reports_all_bytes_as_class_zero() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(3, 1, &random_page(4096, 1), TierHint::Pool, 0, &mut n, &mut rng);
+        assert_eq!(b.class_pool_bytes(0), b.metrics().pool_bytes);
+        assert_eq!(b.class_pool_bytes(2), 0);
     }
 
     #[test]

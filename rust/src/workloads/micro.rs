@@ -170,12 +170,21 @@ pub struct PhasedWss {
     phase: usize,
     done_in_phase: u64,
     total: u64,
+    cost_ns: Time,
 }
 
 impl PhasedWss {
     pub fn new(phases: Vec<(u64, u64)>) -> Self {
+        // 500ns/touch: slow enough that WSS dynamics are visible.
+        Self::with_cost(phases, 500)
+    }
+
+    /// Same phase structure with an explicit per-touch cost — the fleet
+    /// experiment stretches virtual time so reclamation and control
+    /// ticks see many rounds within few simulated ops.
+    pub fn with_cost(phases: Vec<(u64, u64)>, cost_ns: Time) -> Self {
         let total = phases.iter().map(|p| p.1).sum();
-        PhasedWss { phases, phase: 0, done_in_phase: 0, total }
+        PhasedWss { phases, phase: 0, done_in_phase: 0, total, cost_ns }
     }
 
     /// Ground-truth WSS for the phase active after `ops_done` accesses.
@@ -207,7 +216,7 @@ impl Workload for PhasedWss {
                 gva_page: rng.below(wss),
                 write: rng.chance(0.5),
                 ip: 0x405000 + self.phase as u64,
-                cost_ns: 500, // slower touch rate: WSS dynamics visible
+                cost_ns: self.cost_ns,
             };
         }
     }
@@ -219,9 +228,54 @@ impl Workload for PhasedWss {
     }
 }
 
+/// Boot-churn wrapper: the VM "boots" `delay` ns into the run (one big
+/// think), then runs the wrapped workload — the fleet experiment
+/// staggers VM start times with this.
+pub struct BootDelay {
+    delay: Time,
+    emitted: bool,
+    inner: Box<dyn Workload>,
+}
+
+impl BootDelay {
+    pub fn new(delay: Time, inner: Box<dyn Workload>) -> Self {
+        BootDelay { delay, emitted: delay == 0, inner }
+    }
+}
+
+impl Workload for BootDelay {
+    fn next(&mut self, rng: &mut Rng) -> Op {
+        if !self.emitted {
+            self.emitted = true;
+            return Op::Think(self.delay);
+        }
+        self.inner.next(rng)
+    }
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+    fn total_ops(&self) -> u64 {
+        self.inner.total_ops()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn boot_delay_thinks_once_then_delegates() {
+        let mut rng = Rng::new(5);
+        let mut w = BootDelay::new(1000, Box::new(UniformRandom::new(0, 10, 3)));
+        assert_eq!(w.next(&mut rng), Op::Think(1000));
+        let mut n = 0;
+        while let Op::Access { .. } = w.next(&mut rng) {
+            n += 1;
+        }
+        assert_eq!(n, 3);
+        assert_eq!(w.total_ops(), 3);
+        assert_eq!(w.label(), "uniform");
+    }
 
     #[test]
     fn cold_ratio_splits_regions() {

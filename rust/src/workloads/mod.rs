@@ -7,7 +7,7 @@ pub mod cloud;
 pub mod micro;
 
 pub use cloud::{cloud_preset, CloudSpec, CloudWorkload, CLOUD_NAMES};
-pub use micro::{AlternatingHalves, ColdRatio, PhasedWss, SeqScan, UniformRandom};
+pub use micro::{AlternatingHalves, BootDelay, ColdRatio, PhasedWss, SeqScan, UniformRandom};
 
 use crate::sim::Rng;
 use crate::types::Time;

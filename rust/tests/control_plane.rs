@@ -1,0 +1,201 @@
+//! Control-plane integration tests: full-fleet determinism, the host
+//! budget invariant, the SLA arbitration property, pool-partition
+//! plumbing and the release-recovery boost (randomized where useful,
+//! driven by the crate's own deterministic RNG — failures print the
+//! offending seed).
+
+use flexswap::config::{ArbiterKind, ControlConfig, HostConfig, MmConfig};
+use flexswap::coordinator::Machine;
+use flexswap::daemon::{Arbiter, Daemon, Sla, VmRegistration, VmReport};
+use flexswap::harness::fleet::{recovery_release, run_fleet};
+use flexswap::sim::Rng;
+use flexswap::types::MS;
+use flexswap::workloads::UniformRandom;
+
+/// Satellite: same-seed determinism across a full 64-VM fleet run, and
+/// the acceptance invariant — Σ(resident + pool) never exceeds the
+/// configured host budget at any control tick.
+#[test]
+fn fleet_determinism_and_budget_invariant() {
+    let a = run_fleet(64, 4_000, ArbiterKind::ProportionalShare, 3);
+    let b = run_fleet(64, 4_000, ArbiterKind::ProportionalShare, 3);
+    assert_eq!(a, b, "same-seed fleet runs diverged");
+    assert_eq!(a.vms, 64);
+    assert_eq!(a.total_ops, 64 * 4_000, "fleet did not complete");
+    assert!(a.limit_changes > 0, "closed loop never acted");
+    assert_eq!(a.budget_exceeded_ticks, 0, "budget exceeded: {a:?}");
+    assert!(a.min_headroom_bytes >= 0, "negative headroom: {a:?}");
+
+    // Static limits obey the invariant too (shares are budget-derived).
+    let s = run_fleet(64, 4_000, ArbiterKind::Static, 3);
+    assert_eq!(s.budget_exceeded_ticks, 0, "static fleet exceeded: {s:?}");
+}
+
+/// Arbitration property (randomized): the proportional solver never
+/// hands out more than the usable budget, and never squeezes a Gold VM
+/// below its reported WSS while any Bronze VM still has reclaimable
+/// slack (limit above its floor).
+#[test]
+fn arbitration_property_gold_floor_and_budget() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed * 13 + 1);
+        let n = 2 + rng.below(14) as usize;
+        let mut reports = Vec::new();
+        for vm in 0..n {
+            let sla = [Sla::Gold, Sla::Silver, Sla::Bronze][rng.below(3) as usize];
+            let usage = (1 + rng.below(256)) << 20; // up to 256MB
+            let wss = usage / (1 + rng.below(4));
+            reports.push(VmReport {
+                vm,
+                sla,
+                usage_bytes: usage,
+                wss_bytes: wss,
+                cold_estimate_bytes: usage - wss,
+                pf_count: 0,
+                pf_delta: 0,
+                limit_bytes: Some(usage),
+                unit_bytes: if rng.chance(0.5) { 4096 } else { 2 << 20 },
+                inflight_allowance: 4 * 4096,
+            });
+        }
+        let total_demand: u64 = reports.iter().map(Arbiter::demand_of).sum();
+        // Sweep from starvation to surplus.
+        for frac in [10u64, 40, 80, 120] {
+            let usable = total_demand / 100 * frac;
+            let mut arb = Arbiter::new(ArbiterKind::ProportionalShare);
+            let limits = arb.proportional_limits(&reports, usable).to_vec();
+            assert!(
+                limits.iter().sum::<u64>() <= usable,
+                "seed {seed} frac {frac}: over budget"
+            );
+            let bronze_has_slack = reports.iter().enumerate().any(|(i, r)| {
+                r.sla == Sla::Bronze && limits[i] > Arbiter::floor_of(r)
+            });
+            for (i, r) in reports.iter().enumerate() {
+                if r.sla == Sla::Gold && limits[i] < r.wss_bytes {
+                    assert!(
+                        !bronze_has_slack,
+                        "seed {seed} frac {frac}: gold {i} below WSS \
+                         while bronze has slack: {limits:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: the closed loop beats static limits on at least one of
+/// memory saved / p99 fault stall on the same fleet.
+#[test]
+fn closed_loop_beats_static_on_density_or_p99() {
+    let st = run_fleet(48, 10_000, ArbiterKind::Static, 7);
+    let cl = run_fleet(48, 10_000, ArbiterKind::ProportionalShare, 7);
+    assert_eq!(st.total_ops, cl.total_ops);
+    let saved_win = cl.saved_frac > st.saved_frac;
+    let p99_win = cl.p99_stall_ns < st.p99_stall_ns;
+    assert!(
+        saved_win || p99_win,
+        "closed loop won on neither axis: static {st:?} vs closed {cl:?}"
+    );
+}
+
+/// Acceptance: fig13-style recovery after a hard-limit release with the
+/// recovery-boost hint is no slower than without it (and converts major
+/// faults into prefetched minors).
+#[test]
+fn recovery_boost_is_no_slower() {
+    let plain = recovery_release(false, 120_000, 11);
+    let boosted = recovery_release(true, 120_000, 11);
+    assert!(
+        boosted.prefetch_issued > plain.prefetch_issued,
+        "boost issued nothing extra: {boosted:?} vs {plain:?}"
+    );
+    assert!(
+        boosted.majors <= plain.majors,
+        "boost increased majors: {boosted:?} vs {plain:?}"
+    );
+    assert!(
+        boosted.after_lift_ns <= plain.after_lift_ns,
+        "boost recovery slower: {boosted:?} vs {plain:?}"
+    );
+}
+
+/// Pool-partition plumbing end to end: daemon registration assigns SLA
+/// classes, `install_control` pushes the quota split, and per-class
+/// occupancy stays within quota while summing to the pool total.
+#[test]
+fn daemon_fleet_partitions_pool_by_sla() {
+    let host = HostConfig::default(); // compressed pool enabled
+    let cap = host.tier.pool_capacity_bytes;
+    let ctrl = ControlConfig {
+        pool_split_pct: [20, 30, 50],
+        ..Default::default()
+    };
+    let mut d = Daemon::with_control(host, ctrl);
+    for (i, sla) in [Sla::Gold, Sla::Silver, Sla::Bronze].iter().enumerate() {
+        d.register(VmRegistration {
+            name: format!("vm{i}"),
+            frames: 8192,
+            vcpus: 1,
+            sla: *sla,
+            workloads: vec![Box::new(UniformRandom::new(0, 4096, 60_000))],
+            // A tight limit on the 4k-unit Bronze VM forces swap
+            // traffic through its pool partition; the huge-unit VMs
+            // run unlimited (a 4MB limit on 2MB units would thrash).
+            initial_limit_bytes: if *sla == Sla::Bronze {
+                Some(1024 * 4096)
+            } else {
+                None
+            },
+        });
+    }
+    let res = d.machine.run();
+    assert_eq!(res.len(), 3);
+    let quotas = [cap / 100 * 20, cap / 100 * 30, cap / 100 * 50];
+    let mut sum = 0;
+    for c in 0..3u8 {
+        let bytes = d.machine.backend.class_pool_bytes(c);
+        assert!(
+            bytes <= quotas[c as usize],
+            "class {c} over quota: {bytes} > {}",
+            quotas[c as usize]
+        );
+        sum += bytes;
+    }
+    assert_eq!(sum, d.machine.backend.metrics().pool_bytes);
+    // The Bronze (4k, aggressive) VM definitely produced pool stores.
+    assert!(
+        d.machine.backend.metrics().pool_stores > 0,
+        "no pool traffic at all"
+    );
+}
+
+/// The migrated one-shot path: a scheduled limit change applies from a
+/// control tick at exactly its virtual time, without a periodic chain.
+#[test]
+fn scheduled_limit_applies_in_loop() {
+    let mut m = Machine::new(HostConfig::default());
+    let mm_cfg = MmConfig { scan_interval: 3600 * flexswap::types::SEC, ..Default::default() };
+    let vmid = m.sys_vm(
+        flexswap::config::VmConfig {
+            frames: 4096,
+            vcpus: 1,
+            page_size: flexswap::types::PageSize::Small,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        },
+        &mm_cfg,
+        vec![Box::new(UniformRandom::new(0, 2048, 100_000))],
+    );
+    m.schedule_limit(vmid, 50 * MS, Some(512 * 4096));
+    let res = m.run();
+    assert_eq!(res[0].work_ops, 100_000);
+    let mm = m.mm(vmid).unwrap();
+    assert_eq!(mm.core.limit_units, Some(512));
+    assert!(res[0].counters.swapout_ops > 0, "limit never bit");
+    assert!(
+        mm.core.usage_units <= 512 + mm.swapper.threads() as u64,
+        "limit not enforced: {}",
+        mm.core.usage_units
+    );
+}

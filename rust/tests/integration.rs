@@ -217,7 +217,7 @@ fn wsr_speeds_up_recovery() {
             workloads: vec![Box::new(UniformRandom::new(0, pages, 400_000))],
             scan_interval: Some(100 * MS),
         });
-        m.plan_limit_change(vmid, 1 * SEC, None);
+        m.schedule_limit(vmid, 1 * SEC, None);
         let r = m.run();
         r[0].runtime
     };
