@@ -236,6 +236,102 @@ impl Default for ControlConfig {
     }
 }
 
+/// How the fleet scheduler picks a host shard for a newly admitted VM
+/// (see [`crate::daemon::FleetScheduler`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Fill shards in order: a VM lands on the first shard whose
+    /// SLA-weighted committed demand still fits under the shard budget
+    /// times [`FleetConfig::fit_overcommit_pct`]; falls back to the
+    /// least-committed shard when nothing fits.
+    #[default]
+    FirstFitBySla,
+    /// Place on the shard with the lowest projected fault pressure:
+    /// committed bytes scaled up for low-weight SLAs (a Bronze byte
+    /// attracts more squeeze — and therefore more faults — than a Gold
+    /// byte under pressure).
+    SpreadByFaultRate,
+}
+
+/// Fleet-scheduler configuration: how many host shards, their budgets,
+/// VM placement, and the fault-rate-delta migration thresholds
+/// ([`crate::daemon::FleetScheduler`]).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of host shards (one arbiter + control plane + tiered
+    /// backend each).
+    pub hosts: usize,
+    /// Per-host physical-memory budgets; entry `i % len` applies to
+    /// host `i`, so a single entry means a homogeneous fleet.
+    pub host_budgets: Vec<u64>,
+    pub placement: PlacementPolicy,
+    /// Fleet-tick cadence: migration decisions and staged-lease chunk
+    /// transfers happen at multiples of this virtual time.
+    pub interval: Time,
+    /// Enable the fault-rate-delta rebalancer (off = static placement:
+    /// admission-time shard choice is final, no cross-host migration).
+    pub migration: bool,
+    /// A VM is migration-eligible only when its `pf_delta` (faults
+    /// since the shard's previous control tick) reaches this.
+    pub migrate_pf_delta_min: u64,
+    /// A shard counts as pressured when Σ demand exceeds this percent
+    /// of its usable budget (demand = WSS + fault headroom, the
+    /// arbiter's own infeasibility criterion).
+    pub pressure_demand_pct: u32,
+    /// A shard may donate only while Σ demand stays below this percent
+    /// of its usable budget — donors never become infeasible.
+    pub donor_demand_pct: u32,
+    /// Per-migration total size cap.
+    pub migration_max_bytes: u64,
+    /// Chunks and migrations smaller than this are not worth moving.
+    pub migration_min_chunk: u64,
+    /// Headroom the donor keeps on every chunk transfer (absorbs
+    /// between-tick drift so the audited budget is never overshot).
+    pub migration_margin_bytes: u64,
+    /// Abort a migration that moved nothing for this many fleet ticks.
+    pub migration_stall_ticks: u32,
+    /// Concurrent in-flight migrations across the whole fleet.
+    pub max_active_migrations: usize,
+    /// First-fit admission: committed demand may exceed the shard
+    /// budget by this percentage before the shard counts as full.
+    pub fit_overcommit_pct: u32,
+    /// Per-shard control-plane template; `host_budget_bytes` is
+    /// overwritten with the shard's entry from `host_budgets`.
+    pub control: ControlConfig,
+    /// Virtual-time horizon for [`crate::daemon::FleetScheduler::run`].
+    pub max_time: Time,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            hosts: 4,
+            host_budgets: vec![512 * 1024 * 1024],
+            placement: PlacementPolicy::default(),
+            interval: 100 * MS,
+            migration: true,
+            migrate_pf_delta_min: 16,
+            pressure_demand_pct: 104,
+            donor_demand_pct: 90,
+            migration_max_bytes: 64 * 1024 * 1024,
+            migration_min_chunk: 512 * 1024,
+            migration_margin_bytes: 256 * 1024,
+            migration_stall_ticks: 8,
+            max_active_migrations: 1,
+            fit_overcommit_pct: 140,
+            control: ControlConfig::default(),
+            max_time: 600 * SEC,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Budget of host shard `i` (budgets cycle when fewer are given).
+    pub fn budget_of(&self, i: usize) -> u64 {
+        self.host_budgets[i % self.host_budgets.len()]
+    }
+}
+
 /// Shape and behaviour of one simulated VM.
 #[derive(Debug, Clone)]
 pub struct VmConfig {
@@ -382,6 +478,24 @@ mod tests {
         assert_eq!(vm.units(), 1024);
         vm.page_size = PageSize::Huge;
         assert_eq!(vm.units(), 2);
+    }
+
+    #[test]
+    fn fleet_config_budget_cycles() {
+        let f = FleetConfig {
+            hosts: 4,
+            host_budgets: vec![100, 200],
+            ..Default::default()
+        };
+        assert_eq!(f.budget_of(0), 100);
+        assert_eq!(f.budget_of(1), 200);
+        assert_eq!(f.budget_of(2), 100);
+        assert_eq!(f.budget_of(3), 200);
+        // Donors must be strictly stricter than the pressure trigger,
+        // or one shard could count as both at once.
+        let d = FleetConfig::default();
+        assert!(d.donor_demand_pct < d.pressure_demand_pct);
+        assert!(d.migration_min_chunk > d.migration_margin_bytes);
     }
 
     #[test]

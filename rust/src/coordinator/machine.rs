@@ -119,6 +119,9 @@ pub struct Machine {
     batch: u32,
     max_time: Time,
     metrics_interval: Time,
+    /// Whether `start()` has seeded the initial events (set once; the
+    /// fleet scheduler starts machines explicitly and then steps them).
+    started: bool,
     /// The in-simulation control plane (None until installed: a
     /// machine without one runs no control ticks at all).
     control: Option<ControlPlane>,
@@ -139,6 +142,7 @@ impl Machine {
             batch: 64,
             max_time: 600 * SEC,
             metrics_interval: 20 * MS,
+            started: false,
             control: None,
         }
     }
@@ -229,6 +233,12 @@ impl Machine {
                 Mechanism::Kernel(k, _) => k.usage_bytes(),
             })
             .sum()
+    }
+
+    /// Σ(resident + compressed-pool) bytes — the occupancy the budget
+    /// invariant bounds (fleet-scheduler headroom probe).
+    pub fn host_occupied_bytes(&self) -> u64 {
+        self.host_resident_bytes() + self.backend.metrics().pool_bytes
     }
 
     /// Rebuild the control plane's per-VM reports in place (reused
@@ -387,15 +397,49 @@ impl Machine {
             .all(|s| s.vcpus.iter().all(|v| v.done))
     }
 
+    /// Seed the initial events (idempotent). `run()` calls this; the
+    /// fleet scheduler calls it directly before interleaved stepping.
+    pub fn start(&mut self) {
+        if !self.started {
+            self.started = true;
+            self.schedule_initial();
+        }
+    }
+
+    /// Virtual time of this machine's earliest pending event — the
+    /// fleet scheduler's merge key for deterministic multi-machine
+    /// interleave (ties across machines break on shard index).
+    pub fn peek_time(&self) -> Option<Time> {
+        self.events.peek_time()
+    }
+
+    /// Handle exactly one event. Returns false when the queue is empty
+    /// or the next event lies beyond `max_time` (same termination rule
+    /// as `run()`: the over-horizon event is consumed, not handled).
+    pub fn step_one(&mut self) -> bool {
+        let Some((t, ev)) = self.events.pop() else { return false };
+        if t > self.max_time {
+            return false;
+        }
+        self.clock = t;
+        self.handle(ev);
+        true
+    }
+
+    /// All vCPUs of all VMs finished their workloads.
+    pub fn done(&self) -> bool {
+        self.all_done()
+    }
+
+    /// Finalize and collect per-VM results (after stepping manually).
+    pub fn finish(&mut self) -> Vec<RunResult> {
+        self.collect_results()
+    }
+
     /// Run to completion (all workloads done) or `max_time`.
     pub fn run(&mut self) -> Vec<RunResult> {
-        self.schedule_initial();
-        while let Some((t, ev)) = self.events.pop() {
-            if t > self.max_time {
-                break;
-            }
-            self.clock = t;
-            self.handle(ev);
+        self.start();
+        while self.step_one() {
             if self.all_done() {
                 break;
             }
@@ -851,7 +895,11 @@ impl Machine {
         let cp = self.control.as_mut().unwrap();
         let budget = cp.cfg.host_budget_bytes;
         let host = HostView {
-            budget_bytes: budget.unwrap_or(0),
+            // The arbiter divides the audited budget minus any
+            // outbound migration lease: the squeeze is what frees the
+            // leased memory for hand-over. Gauges still audit against
+            // the full budget (`stats.budget_bytes`).
+            budget_bytes: cp.arbitration_budget().unwrap_or(0),
             resident_bytes: resident,
             pool_bytes,
             // With a budget set, the whole pool capacity is reserved

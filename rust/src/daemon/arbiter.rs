@@ -68,6 +68,11 @@ impl HostView {
     pub fn headroom(&self) -> i64 {
         self.budget_bytes as i64 - self.resident_bytes as i64 - self.pool_bytes as i64
     }
+
+    /// Σ(resident + pool): the occupancy the budget invariant bounds.
+    pub fn occupied(&self) -> u64 {
+        self.resident_bytes + self.pool_bytes
+    }
 }
 
 /// One arbitration decision: set `vm`'s limit to `bytes`.
@@ -256,7 +261,7 @@ impl Arbiter {
                 }
             }
             ArbiterKind::Watermark => {
-                let occupied = host.resident_bytes + host.pool_bytes;
+                let occupied = host.occupied();
                 let high = host.budget_bytes / 100 * cfg.high_watermark_pct as u64;
                 let low = host.budget_bytes / 100 * cfg.low_watermark_pct as u64;
                 if occupied > high {

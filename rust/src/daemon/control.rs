@@ -72,6 +72,13 @@ pub struct ControlPlane {
     /// Reused action buffer.
     pub actions: Vec<LimitAction>,
     pub stats: ControlStats,
+    /// Bytes this host is migrating away (a fleet-scheduler cold-memory
+    /// lease in flight): subtracted from the budget the *arbiter*
+    /// divides — squeezing the fleet makes the leased memory free —
+    /// while the *audited* budget (`cfg.host_budget_bytes`, the
+    /// invariant the stats check) follows only as chunks are actually
+    /// handed over via [`ControlPlane::complete_lease`].
+    lease_reserved: u64,
 }
 
 impl ControlPlane {
@@ -85,6 +92,50 @@ impl ControlPlane {
             staging: vec![],
             reports: vec![],
             actions: vec![],
+            lease_reserved: 0,
+        }
+    }
+
+    /// The budget the arbiter divides this tick: the audited budget
+    /// minus any in-flight outbound migration lease.
+    pub fn arbitration_budget(&self) -> Option<u64> {
+        self.cfg
+            .host_budget_bytes
+            .map(|b| b.saturating_sub(self.lease_reserved))
+    }
+
+    /// Start leasing `bytes` away: the arbiter immediately plans around
+    /// the smaller budget (tightenings apply next tick and the fleet
+    /// sheds), but the audited budget is untouched until the memory is
+    /// actually free and handed over.
+    pub fn begin_lease(&mut self, bytes: u64) {
+        self.lease_reserved += bytes;
+    }
+
+    /// Return an undelivered lease remainder (migration aborted).
+    pub fn cancel_lease(&mut self, bytes: u64) {
+        self.lease_reserved = self.lease_reserved.saturating_sub(bytes);
+    }
+
+    /// Hand over `bytes` of a lease: the audited budget drops by
+    /// exactly the amount the reservation already excluded from
+    /// arbitration, so the bound the arbiter enforces
+    /// (Σ limits ≤ usable) is unchanged and the budget invariant holds
+    /// through the transfer.
+    pub fn complete_lease(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.lease_reserved, "lease underflow");
+        self.lease_reserved = self.lease_reserved.saturating_sub(bytes);
+        if let Some(b) = self.cfg.host_budget_bytes.as_mut() {
+            *b = b.saturating_sub(bytes);
+            self.stats.budget_bytes = *b;
+        }
+    }
+
+    /// Receive `bytes` of budget migrated from another shard.
+    pub fn grow_budget(&mut self, bytes: u64) {
+        if let Some(b) = self.cfg.host_budget_bytes.as_mut() {
+            *b += bytes;
+            self.stats.budget_bytes = *b;
         }
     }
 
@@ -302,6 +353,29 @@ mod tests {
         cp.collect_actions(200, true, host(), [0; 3], &mut out);
         assert!(out.is_empty(), "staging did not terminate");
         assert_eq!(cp.stats.staged_releases, 1);
+    }
+
+    #[test]
+    fn lease_squeezes_arbitration_before_the_audited_budget_moves() {
+        let mut cp = plane(ArbiterKind::ProportionalShare, Some(1 << 30));
+        assert_eq!(cp.arbitration_budget(), Some(1 << 30));
+        // Begin: arbiter plans around the smaller budget, audit as-is.
+        cp.begin_lease(256 << 20);
+        assert_eq!(cp.arbitration_budget(), Some((1 << 30) - (256 << 20)));
+        assert_eq!(cp.cfg.host_budget_bytes, Some(1 << 30));
+        // Complete half: audited budget follows, arbitration unchanged
+        // (reservation and budget drop by the same amount).
+        cp.complete_lease(128 << 20);
+        assert_eq!(cp.cfg.host_budget_bytes, Some((1 << 30) - (128 << 20)));
+        assert_eq!(cp.stats.budget_bytes, (1 << 30) - (128 << 20));
+        assert_eq!(cp.arbitration_budget(), Some((1 << 30) - (256 << 20)));
+        // Abort the rest: arbitration returns to the audited budget.
+        cp.cancel_lease(128 << 20);
+        assert_eq!(cp.arbitration_budget(), cp.cfg.host_budget_bytes);
+        // Inbound migration grows both views together.
+        cp.grow_budget(128 << 20);
+        assert_eq!(cp.cfg.host_budget_bytes, Some(1 << 30));
+        assert_eq!(cp.arbitration_budget(), Some(1 << 30));
     }
 
     #[test]

@@ -18,9 +18,11 @@
 
 pub mod arbiter;
 pub mod control;
+pub mod scheduler;
 
 pub use arbiter::{Arbiter, HostView, LimitAction, VmReport};
 pub use control::{ControlPlane, ManagedVm};
+pub use scheduler::{FleetRun, FleetScheduler, FleetVmSpec, HostShard, Placement};
 
 use crate::config::{ControlConfig, HostConfig, MmConfig, VmConfig};
 use crate::coordinator::Machine;
@@ -125,20 +127,17 @@ impl Daemon {
     /// Boot-time registration: spawn + configure an MM for the VM and
     /// enroll it with the control plane (SLA pool class included).
     pub fn register(&mut self, reg: VmRegistration) -> usize {
-        let mm_cfg = MmConfig {
-            memory_limit: reg.initial_limit_bytes,
-            ..reg.sla.mm_config()
-        };
-        let vm_cfg = VmConfig {
-            frames: reg.frames,
-            vcpus: reg.vcpus,
-            page_size: reg.sla.page_size(),
-            scramble: 0.05,
-            guest_thp_coverage: 1.0,
-        };
-        let id = self.machine.sys_vm(vm_cfg, &mm_cfg, reg.workloads);
-        self.machine.register_control_vm(id, reg.name, reg.sla);
-        id
+        let mm_base = reg.sla.mm_config();
+        register_vm_on(
+            &mut self.machine,
+            reg.name,
+            reg.sla,
+            reg.frames,
+            reg.vcpus,
+            reg.workloads,
+            reg.initial_limit_bytes,
+            mm_base,
+        )
     }
 
     /// Control-plane report for every VM: rebuilt into the plane's
@@ -155,6 +154,11 @@ impl Daemon {
             .unwrap_or("?")
     }
 
+    /// Fleet control-plane gauges shortcut.
+    pub fn control_stats(&self) -> Option<&crate::metrics::ControlStats> {
+        self.machine.control_stats()
+    }
+
     /// Schedule a one-shot control-plane limit change (applied from a
     /// control tick inside the event loop; replaces the old external
     /// `plan_limit` path). `boost` opens the recovery window on a
@@ -169,6 +173,34 @@ impl Daemon {
     ) {
         self.machine.schedule_limit_release(vm, at, bytes, boost, staged);
     }
+}
+
+/// Spawn + configure one VM on `machine` per its registration (the
+/// paper's boot handshake: desired page size + SLA → MM config) and
+/// enroll it with the machine's control plane. Shared by the
+/// single-host [`Daemon`] and the fleet scheduler's shard admission.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn register_vm_on(
+    machine: &mut Machine,
+    name: String,
+    sla: Sla,
+    frames: u64,
+    vcpus: usize,
+    workloads: Vec<Box<dyn Workload>>,
+    initial_limit_bytes: Option<u64>,
+    mm_base: MmConfig,
+) -> usize {
+    let mm_cfg = MmConfig { memory_limit: initial_limit_bytes, ..mm_base };
+    let vm_cfg = VmConfig {
+        frames,
+        vcpus,
+        page_size: sla.page_size(),
+        scramble: 0.05,
+        guest_thp_coverage: 1.0,
+    };
+    let id = machine.sys_vm(vm_cfg, &mm_cfg, workloads);
+    machine.register_control_vm(id, name, sla);
+    id
 }
 
 #[cfg(test)]

@@ -1,0 +1,599 @@
+//! The fleet scheduler: the sharding layer *above* per-host control
+//! planes. One [`HostShard`] per simulated host — each an independent
+//! [`Machine`] carrying its own [`super::Arbiter`] +
+//! [`super::ControlPlane`] + tiered storage backend — plus the two
+//! things only a fleet-level view can do:
+//!
+//! 1. **Placement** ([`crate::config::PlacementPolicy`]): VM admission
+//!    picks a shard — first-fit by SLA-weighted demand (pack shards in
+//!    order) or spread by projected fault pressure (balance it). A VM
+//!    is placed exactly once and never split across shards.
+//! 2. **Cross-host rebalancing**: every fleet tick the scheduler reads
+//!    the per-shard [`super::VmReport`]s (the fault-rate deltas the control
+//!    plane already carries) and, when a VM's fault rate spikes on a
+//!    shard whose Σ demand exceeds its usable budget, stages a
+//!    **cold-memory migration** from the slackest shard — modeled
+//!    Memtrade-style as a budget lease. The donor's control plane
+//!    reserves the leased bytes out of its *arbitration* budget
+//!    ([`super::ControlPlane::begin_lease`]): its proportional-share
+//!    arbiter squeezes cold slack out of the fleet, and as headroom
+//!    actually materializes, chunks are handed over
+//!    ([`super::ControlPlane::complete_lease`] +
+//!    [`super::ControlPlane::grow_budget`]) — the same
+//!    shed-first-then-release pacing as the staged hard-limit release
+//!    machinery, applied across hosts. The audited per-shard budget
+//!    therefore only ever drops *after* the occupancy is below it, so
+//!    Σ(resident + pool) ≤ budget holds on every shard at every tick,
+//!    and Σ budgets over the fleet is exactly conserved (bytes leaving
+//!    a shard equal bytes arriving — no unit lost or duplicated).
+//!
+//! Multi-machine stepping is deterministic: the scheduler merges the
+//! shards' event queues by (virtual time, shard index) — a stable
+//! round-robin interleave in which equal timestamps always resolve
+//! lowest-shard-first — and fires fleet ticks at fixed virtual times
+//! before any shard steps past them.
+
+use crate::config::{ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig};
+use crate::coordinator::{Machine, RunResult};
+use crate::metrics::FleetStats;
+use crate::types::{Time, FRAME_BYTES};
+use crate::workloads::Workload;
+
+use super::arbiter::{Arbiter, HostView};
+use super::Sla;
+
+/// One host shard: an independent machine (control plane, arbiter,
+/// backend, NVMe) plus the scheduler's admission bookkeeping.
+pub struct HostShard {
+    pub id: usize,
+    pub machine: Machine,
+    /// Σ nominal bytes of VMs placed here.
+    pub committed_bytes: u64,
+    /// SLA-weighted committed demand: nominal bytes scaled by
+    /// `max_weight / weight`, so a Bronze byte (squeezed first, faults
+    /// most under pressure) counts heavier than a Gold byte.
+    pub committed_pressure: u64,
+}
+
+/// Where one admitted VM lives. The invariant suite asserts every VM
+/// appears in exactly one shard's control plane (never split).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub name: String,
+    pub sla: Sla,
+    pub shard: usize,
+    /// Machine slot id inside the shard.
+    pub vm: usize,
+}
+
+/// A VM admission request to the fleet (the multi-host analogue of
+/// [`super::VmRegistration`], plus an optional MM-config override the
+/// experiments use for tighter scan cadences).
+pub struct FleetVmSpec {
+    pub name: String,
+    pub sla: Sla,
+    pub frames: u64,
+    pub vcpus: usize,
+    pub workloads: Vec<Box<dyn Workload>>,
+    pub initial_limit_bytes: Option<u64>,
+    /// MM configuration base; None uses the SLA default
+    /// ([`Sla::mm_config`]), exactly like single-host registration.
+    pub mm: Option<MmConfig>,
+}
+
+/// An in-flight staged cold-memory migration (budget lease).
+#[derive(Debug, Clone, Copy)]
+struct Migration {
+    from: usize,
+    to: usize,
+    /// Machine slot id of the pressured VM on `to`.
+    vm: usize,
+    total: u64,
+    moved: u64,
+    /// Consecutive fleet ticks that transferred nothing.
+    stalled: u32,
+    /// Static-receiver path: the VM's limit when the first chunk
+    /// landed. Later chunks target `base + moved` so an in-flight
+    /// staged raise from a previous chunk is never clobbered by a
+    /// re-read of the intermediate limit.
+    base_limit: Option<u64>,
+}
+
+/// Everything a finished fleet run returns: per-shard per-VM results in
+/// shard order (stats stay on the scheduler).
+pub type FleetRun = Vec<Vec<RunResult>>;
+
+/// The fleet scheduler (see module docs).
+pub struct FleetScheduler {
+    pub cfg: FleetConfig,
+    pub shards: Vec<HostShard>,
+    /// Admission log, in admission order.
+    pub placements: Vec<Placement>,
+    migrations: Vec<Migration>,
+    pub stats: FleetStats,
+}
+
+impl FleetScheduler {
+    /// Build the fleet: one machine per shard from the host template
+    /// (per-shard seeds derived deterministically), each with its own
+    /// control plane carrying that shard's budget.
+    pub fn new(template: &HostConfig, cfg: FleetConfig) -> Self {
+        assert!(cfg.hosts > 0, "fleet needs at least one host");
+        assert!(cfg.interval > 0, "fleet tick interval must be positive");
+        assert!(
+            !cfg.host_budgets.is_empty(),
+            "fleet needs at least one host budget (they cycle per host)"
+        );
+        let mut shards = Vec::with_capacity(cfg.hosts);
+        let mut total_budget = 0u64;
+        for i in 0..cfg.hosts {
+            let budget = cfg.budget_of(i);
+            total_budget += budget;
+            let host = HostConfig {
+                seed: template
+                    .seed
+                    .wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+                ..template.clone()
+            };
+            let mut machine = Machine::new(host);
+            machine.set_max_time(cfg.max_time);
+            machine.install_control(ControlConfig {
+                host_budget_bytes: Some(budget),
+                ..cfg.control.clone()
+            });
+            shards.push(HostShard {
+                id: i,
+                machine,
+                committed_bytes: 0,
+                committed_pressure: 0,
+            });
+        }
+        FleetScheduler {
+            stats: FleetStats::new(cfg.hosts, total_budget),
+            cfg,
+            shards,
+            placements: vec![],
+            migrations: vec![],
+        }
+    }
+
+    /// Admit one VM: pick a shard per the placement policy, spawn +
+    /// register it there. Returns (shard, machine slot id).
+    pub fn admit(&mut self, spec: FleetVmSpec) -> (usize, usize) {
+        let nominal = spec.frames * FRAME_BYTES;
+        let pressure = nominal * Sla::Gold.weight() / spec.sla.weight();
+        let shard = self.place(pressure);
+        let mm_base = spec.mm.unwrap_or_else(|| spec.sla.mm_config());
+        let s = &mut self.shards[shard];
+        let vm = super::register_vm_on(
+            &mut s.machine,
+            spec.name.clone(),
+            spec.sla,
+            spec.frames,
+            spec.vcpus,
+            spec.workloads,
+            spec.initial_limit_bytes,
+            mm_base,
+        );
+        s.committed_bytes += nominal;
+        s.committed_pressure += pressure;
+        self.placements.push(Placement { name: spec.name, sla: spec.sla, shard, vm });
+        (shard, vm)
+    }
+
+    /// Placement decision (pure; ties always break on the lowest shard
+    /// id so admission is deterministic).
+    fn place(&self, pressure: u64) -> usize {
+        match self.cfg.placement {
+            crate::config::PlacementPolicy::FirstFitBySla => {
+                for s in &self.shards {
+                    let cap = self.cfg.budget_of(s.id) as u128
+                        * self.cfg.fit_overcommit_pct as u128
+                        / 100;
+                    if (s.committed_pressure + pressure) as u128 <= cap {
+                        return s.id;
+                    }
+                }
+                // Nothing fits under the overcommit cap: least loaded.
+                self.least_pressured()
+            }
+            crate::config::PlacementPolicy::SpreadByFaultRate => self.least_pressured(),
+        }
+    }
+
+    fn least_pressured(&self) -> usize {
+        self.shards
+            .iter()
+            .min_by_key(|s| (s.committed_pressure, s.id))
+            .map(|s| s.id)
+            .expect("fleet has shards")
+    }
+
+    /// Run the whole fleet to completion (or the horizon): merge the
+    /// shards' event queues by (time, shard index) and fire fleet ticks
+    /// at fixed virtual times before any shard steps past them.
+    pub fn run(&mut self) -> FleetRun {
+        for s in &mut self.shards {
+            s.machine.start();
+        }
+        let mut next_tick = self.cfg.interval;
+        loop {
+            let next = self
+                .shards
+                .iter()
+                .filter(|s| !s.machine.done())
+                .filter_map(|s| s.machine.peek_time().map(|t| (t, s.id)))
+                .min();
+            let Some((t, idx)) = next else { break };
+            if t > self.cfg.max_time {
+                break;
+            }
+            while next_tick <= t {
+                let now = next_tick;
+                self.fleet_tick(now);
+                next_tick += self.cfg.interval;
+            }
+            self.shards[idx].machine.step_one();
+        }
+        // Copy the per-shard invariant tallies out for the test suite.
+        for (i, s) in self.shards.iter().enumerate() {
+            if let Some(cs) = s.machine.control_stats() {
+                self.stats.budget_exceeded_ticks[i] = cs.budget_exceeded_ticks;
+            }
+        }
+        self.shards.iter_mut().map(|s| s.machine.finish()).collect()
+    }
+
+    /// Re-shape shard `i`'s budget before the run starts (experiments
+    /// size budgets from the actually admitted mix). Re-baselines the
+    /// conservation audit to the new Σ.
+    pub fn set_shard_budget(&mut self, i: usize, bytes: u64) {
+        let cp = self.shards[i]
+            .machine
+            .control_mut()
+            .expect("shard has a control plane");
+        cp.cfg.host_budget_bytes = Some(bytes);
+        cp.stats.budget_bytes = bytes;
+        self.stats.total_budget_bytes =
+            (0..self.shards.len()).map(|j| self.shard_budget(j)).sum();
+    }
+
+    /// Audited budget of shard `i` right now (migrations move it).
+    pub fn shard_budget(&self, i: usize) -> u64 {
+        self.shards[i]
+            .machine
+            .control()
+            .and_then(|c| c.cfg.host_budget_bytes)
+            .unwrap_or(0)
+    }
+
+    /// One fleet tick: advance in-flight migrations chunk by chunk,
+    /// consider starting a new one, audit budget conservation.
+    fn fleet_tick(&mut self, now: Time) {
+        self.stats.fleet_ticks += 1;
+        self.advance_migrations(now);
+        if self.cfg.migration && self.migrations.len() < self.cfg.max_active_migrations {
+            self.consider_migration();
+        }
+        let sum: u64 = (0..self.shards.len()).map(|i| self.shard_budget(i)).sum();
+        self.stats.audit_budgets(sum);
+    }
+
+    /// Move what each migration's donor can *prove* free: a chunk is
+    /// bounded by the donor's measured headroom minus the margin, so
+    /// the audited budget never drops below current occupancy. The
+    /// squeeze that frees the memory is the arbiter's, planning around
+    /// `budget - lease` since `begin_lease` — this is the staged
+    /// shed-then-release pacing, fleet edition.
+    fn advance_migrations(&mut self, now: Time) {
+        for m in self.migrations.iter_mut() {
+            let donor = &self.shards[m.from];
+            let budget = donor
+                .machine
+                .control()
+                .and_then(|c| c.cfg.host_budget_bytes)
+                .unwrap_or(0);
+            let headroom = budget.saturating_sub(donor.machine.host_occupied_bytes());
+            let avail = headroom.saturating_sub(self.cfg.migration_margin_bytes);
+            let remaining = m.total - m.moved;
+            let chunk = remaining.min(avail);
+            if chunk == 0 || chunk < self.cfg.migration_min_chunk.min(remaining) {
+                m.stalled += 1;
+                continue;
+            }
+            self.shards[m.from]
+                .machine
+                .control_mut()
+                .expect("shard has a control plane")
+                .complete_lease(chunk);
+            self.shards[m.to]
+                .machine
+                .control_mut()
+                .expect("shard has a control plane")
+                .grow_budget(chunk);
+            // A proportional-share receiver converts the new headroom
+            // into a boost-flagged raise on its own; a static one needs
+            // the explicit staged release to act at all. Targets are
+            // cumulative off the limit seen at the first chunk — a
+            // later chunk must not re-read a mid-staging intermediate
+            // limit and drop the unfinished part of the prior raise.
+            let receiver = &self.shards[m.to].machine;
+            if receiver.control().map(|c| c.cfg.kind) == Some(ArbiterKind::Static) {
+                let cur = receiver
+                    .mm(m.vm)
+                    .and_then(|mm| mm.core.limit_units.map(|l| l * mm.core.unit_bytes));
+                if let Some(cur) = cur {
+                    let base = *m.base_limit.get_or_insert(cur);
+                    self.shards[m.to].machine.schedule_limit_release(
+                        m.vm,
+                        now,
+                        Some(base + m.moved + chunk),
+                        true,
+                        true,
+                    );
+                }
+            }
+            m.moved += chunk;
+            m.stalled = 0;
+            self.stats.record_transfer(m.from, m.to, chunk);
+        }
+        // Retire completed migrations; abort stalled ones (their
+        // undelivered remainder returns to the donor's arbitration
+        // budget — never lost, never duplicated).
+        let mut i = 0;
+        while i < self.migrations.len() {
+            let m = self.migrations[i];
+            if m.moved == m.total {
+                self.stats.migrations_completed += 1;
+                self.migrations.remove(i);
+            } else if m.stalled > self.cfg.migration_stall_ticks {
+                self.shards[m.from]
+                    .machine
+                    .control_mut()
+                    .expect("shard has a control plane")
+                    .cancel_lease(m.total - m.moved);
+                self.stats.migrations_aborted += 1;
+                self.migrations.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Per-shard pressure snapshot for one migration decision. Works on
+    /// the control plane's reused report buffer in place — only four
+    /// scalars leave this function, nothing is allocated per tick.
+    fn snapshot(&mut self, i: usize) -> ShardSnap {
+        let pf_delta_min = self.cfg.migrate_pf_delta_min;
+        let s = &mut self.shards[i];
+        // Host-view inputs first (immutable probes), then the report
+        // rebuild borrow, consumed before this function returns.
+        let cp = s.machine.control().expect("shard has a control plane");
+        let arb_budget = cp.arbitration_budget().unwrap_or(0);
+        let pool_reserved = if cp.cfg.host_budget_bytes.is_some() {
+            s.machine.host.tier.pool_capacity_bytes
+        } else {
+            0
+        };
+        let host = HostView {
+            budget_bytes: arb_budget,
+            resident_bytes: s.machine.host_resident_bytes(),
+            pool_bytes: s.machine.backend_metrics().pool_bytes,
+            pool_reserved_bytes: pool_reserved,
+        };
+        let reports = s.machine.control_reports();
+        let usable = Arbiter::usable_budget(reports, &host);
+        let demand: u64 = reports.iter().map(Arbiter::demand_of).sum();
+        let cold: u64 = reports.iter().map(|r| r.cold_estimate_bytes).sum();
+        // Hottest eligible VM: max fault-rate delta, ties to the lowest
+        // slot id; `want` is its demand shortfall vs its current limit.
+        let hot = reports
+            .iter()
+            .filter(|r| r.pf_delta >= pf_delta_min)
+            .max_by_key(|r| (r.pf_delta, std::cmp::Reverse(r.vm)))
+            .map(|r| {
+                let cur = r.limit_bytes.unwrap_or(r.usage_bytes);
+                (r.vm, Arbiter::demand_of(r).saturating_sub(cur))
+            });
+        ShardSnap { usable, demand, cold, hot }
+    }
+
+    /// Start at most one new migration: the most demand-overloaded
+    /// shard with a fault-spiking VM leases cold memory from the
+    /// slackest feasible shard.
+    fn consider_migration(&mut self) {
+        let n = self.shards.len();
+        if n < 2 {
+            return;
+        }
+        let snaps: Vec<ShardSnap> = (0..n).map(|i| self.snapshot(i)).collect();
+        let busy = |i: usize| self.migrations.iter().any(|m| m.from == i || m.to == i);
+        // Pressured: Σ demand above the trigger fraction of usable,
+        // with an eligible hot VM. Pick the worst ratio, ties low id.
+        let pressured = (0..n)
+            .filter(|&i| !busy(i) && snaps[i].hot.is_some())
+            .filter(|&i| {
+                snaps[i].demand as u128 * 100
+                    > snaps[i].usable as u128 * self.cfg.pressure_demand_pct as u128
+            })
+            .max_by_key(|&i| {
+                let ratio = if snaps[i].usable == 0 {
+                    u128::MAX
+                } else {
+                    snaps[i].demand as u128 * 1_000_000 / snaps[i].usable as u128
+                };
+                (ratio, std::cmp::Reverse(i))
+            });
+        let Some(src) = pressured else { return };
+        // Donor: stays comfortably feasible after the lease, has cold
+        // slack to shed. Pick the most spare, ties low id.
+        let spare_of = |i: usize| -> u64 {
+            (snaps[i].usable as u128 * self.cfg.donor_demand_pct as u128 / 100)
+                .saturating_sub(snaps[i].demand as u128) as u64
+        };
+        let donor = (0..n)
+            .filter(|&i| i != src && !busy(i))
+            .filter(|&i| spare_of(i) > 0 && snaps[i].cold > 0)
+            .max_by_key(|&i| (spare_of(i), std::cmp::Reverse(i)));
+        let Some(dst) = donor else { return };
+        let (vm, deficit) = snaps[src].hot.expect("pressured shard has a hot VM");
+        let want = deficit
+            .min(self.cfg.migration_max_bytes)
+            .min(spare_of(dst))
+            .min(snaps[dst].cold);
+        if want < self.cfg.migration_min_chunk {
+            return;
+        }
+        self.shards[dst]
+            .machine
+            .control_mut()
+            .expect("shard has a control plane")
+            .begin_lease(want);
+        self.migrations.push(Migration {
+            from: dst,
+            to: src,
+            vm,
+            total: want,
+            moved: 0,
+            stalled: 0,
+            base_limit: None,
+        });
+        self.stats.migrations_started += 1;
+    }
+}
+
+/// Decision inputs for one shard at a fleet tick.
+struct ShardSnap {
+    usable: u64,
+    demand: u64,
+    cold: u64,
+    /// (machine slot id, demand shortfall) of the hottest eligible VM.
+    hot: Option<(usize, u64)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlacementPolicy;
+    use crate::workloads::UniformRandom;
+
+    fn spec(i: usize, sla: Sla, frames: u64, ops: u64) -> FleetVmSpec {
+        FleetVmSpec {
+            name: format!("vm{i}"),
+            sla,
+            frames,
+            vcpus: 1,
+            workloads: vec![Box::new(UniformRandom::new(0, frames / 2, ops))],
+            initial_limit_bytes: None,
+            mm: None,
+        }
+    }
+
+    fn cfg(hosts: usize, placement: PlacementPolicy) -> FleetConfig {
+        FleetConfig {
+            hosts,
+            host_budgets: vec![64 << 20],
+            placement,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn spread_placement_round_robins_equal_vms() {
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            cfg(3, PlacementPolicy::SpreadByFaultRate),
+        );
+        for i in 0..6 {
+            f.admit(spec(i, Sla::Silver, 4096, 10));
+        }
+        let shards: Vec<usize> = f.placements.iter().map(|p| p.shard).collect();
+        assert_eq!(shards, vec![0, 1, 2, 0, 1, 2]);
+        for s in &f.shards {
+            assert_eq!(s.machine.control().unwrap().vms.len(), 2);
+        }
+    }
+
+    #[test]
+    fn first_fit_packs_in_order_and_overflows() {
+        // Budget 64MB x 140% fit cap; Bronze 16MB VMs weigh 4x = 64MB
+        // of pressure each: one per shard fits, the second overflows to
+        // the next shard.
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            cfg(2, PlacementPolicy::FirstFitBySla),
+        );
+        for i in 0..3 {
+            f.admit(spec(i, Sla::Bronze, 4096, 10));
+        }
+        let shards: Vec<usize> = f.placements.iter().map(|p| p.shard).collect();
+        assert_eq!(shards, vec![0, 1, 0], "fallback goes least-loaded");
+    }
+
+    #[test]
+    fn admission_never_splits_and_bookkeeps() {
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            cfg(4, PlacementPolicy::SpreadByFaultRate),
+        );
+        for i in 0..8 {
+            f.admit(spec(i, [Sla::Gold, Sla::Bronze][i % 2], 4096, 10));
+        }
+        let total_vms: usize = f
+            .shards
+            .iter()
+            .map(|s| s.machine.control().unwrap().vms.len())
+            .sum();
+        assert_eq!(total_vms, f.placements.len());
+        for p in &f.placements {
+            // The placement's shard really owns that VM under its name.
+            let cp = f.shards[p.shard].machine.control().unwrap();
+            assert_eq!(cp.vm_name(p.vm), Some(p.name.as_str()));
+            // ... and no *other* shard knows the name.
+            for s in &f.shards {
+                if s.id != p.shard {
+                    assert!(s
+                        .machine
+                        .control()
+                        .unwrap()
+                        .vms
+                        .iter()
+                        .all(|m| m.name != p.name));
+                }
+            }
+        }
+        let committed: u64 = f.shards.iter().map(|s| s.committed_bytes).sum();
+        assert_eq!(committed, 8 * 4096 * FRAME_BYTES);
+    }
+
+    #[test]
+    fn two_shard_fleet_runs_to_completion_conserving_budget() {
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            FleetConfig {
+                hosts: 2,
+                host_budgets: vec![32 << 20],
+                placement: PlacementPolicy::SpreadByFaultRate,
+                interval: crate::types::MS * 5,
+                ..Default::default()
+            },
+        );
+        for i in 0..4 {
+            f.admit(spec(i, Sla::Bronze, 2048, 4_000));
+        }
+        let results = f.run();
+        assert_eq!(results.len(), 2);
+        let ops: u64 = results
+            .iter()
+            .flatten()
+            .map(|r| r.work_ops)
+            .sum();
+        assert_eq!(ops, 4 * 4_000, "fleet did not complete its work");
+        assert!(f.stats.fleet_ticks > 0, "fleet ticks never fired");
+        assert_eq!(f.stats.conservation_violations, 0);
+        assert_eq!(
+            f.shard_budget(0) + f.shard_budget(1),
+            f.stats.total_budget_bytes
+        );
+    }
+}

@@ -14,16 +14,24 @@
 //!    limit is released mid-run, with and without the recovery-boost
 //!    hint to the prefetchers; recovery with the boost must be no
 //!    slower.
+//! 3. **Fleet sharding** (PR 4) — the same mixed-SLA population spread
+//!    over 4 host shards by the [`FleetScheduler`], with one host's
+//!    budget deliberately short of its working-set demand. Static
+//!    placement leaves that host thrashing; the fault-rate-delta
+//!    rebalancer stages cold-memory migrations from the slackest
+//!    shards, so total major faults drop while Σ saved memory holds
+//!    (every shard stays limit-bound, and Σ budgets is conserved).
 
 use crate::config::{
-    ArbiterKind, ControlConfig, HostConfig, MmConfig, TierConfig, VmConfig,
+    ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig, PlacementPolicy,
+    TierConfig, VmConfig,
 };
 use crate::coordinator::{Machine, Mechanism, VmSetup};
-use crate::daemon::Sla;
+use crate::daemon::{FleetScheduler, FleetVmSpec, Sla};
 use crate::metrics::{LatencyHist, Table};
 use crate::mm::Mm;
 use crate::policies::{DtReclaimer, LruReclaimer, NativeAnalytics, WsrPolicy};
-use crate::types::{PageSize, Time, MS, SEC};
+use crate::types::{PageSize, Time, FRAME_BYTES, MS, SEC};
 use crate::workloads::{BootDelay, PhasedWss, UniformRandom, Workload};
 
 use super::Scale;
@@ -250,8 +258,244 @@ pub fn recovery_release(boost: bool, ops: u64, seed: u64) -> RecoverySummary {
     }
 }
 
-/// The registered experiment driver.
+/// Per-host outcome of one sharded fleet run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostRow {
+    pub host: usize,
+    pub vms: usize,
+    /// Audited budget at admission / after the run (migration moves it).
+    pub budget_start: u64,
+    pub budget_end: u64,
+    pub avg_host_bytes: f64,
+    pub peak_host_bytes: u64,
+    pub budget_exceeded_ticks: u64,
+    pub min_headroom_bytes: i64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub majors: u64,
+}
+
+/// Aggregate outcome of one 4-host sharded fleet run (public: the
+/// invariant suite re-runs these for determinism / conservation /
+/// rebalancer-beats-static checks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedSummary {
+    pub hosts: usize,
+    pub vms: usize,
+    pub migrate: bool,
+    pub per_host: Vec<HostRow>,
+    pub total_majors: u64,
+    pub total_ops: u64,
+    /// Σ over hosts of mean Σ(resident + pool) — fleet occupancy.
+    pub avg_fleet_bytes: f64,
+    pub nominal_bytes: u64,
+    /// 1 - avg_fleet/nominal: the fleet-wide density win.
+    pub saved_frac: f64,
+    pub migrations_started: u64,
+    pub migrations_completed: u64,
+    pub migrations_aborted: u64,
+    pub migrated_bytes: u64,
+    pub conservation_violations: u64,
+    /// Σ audited budgets after the run (must equal the initial Σ).
+    pub budget_total_end: u64,
+    pub budget_total_start: u64,
+    pub p99_stall_ns: u64,
+    pub runtime_ns: Time,
+}
+
+/// Build and run one sharded fleet: `hosts` shards × `per_host` VMs,
+/// host 0's budget deliberately short of its hot-phase demand (the
+/// sustained-pressure host), the rest comfortable. Every VM touches a
+/// footprint three times its hot set once, then works in the hot third
+/// — so every shard is limit-bound and holds real cold memory the
+/// rebalancer can lease (the regime where leasing budget *moves*
+/// occupancy instead of inflating it). All VMs are Bronze: 4k units
+/// keep the arbiter's reclaim granularity fine enough that limits bind
+/// tightly on every host. Deterministic in `seed`.
+pub fn run_sharded_fleet(
+    hosts: usize,
+    per_host: usize,
+    ops_per_vm: u64,
+    migrate: bool,
+    seed: u64,
+) -> ShardedSummary {
+    let n = hosts * per_host;
+    let frames = 4096u64;
+    let pages = frames - 1024;
+    let nominal: u64 = n as u64 * frames * FRAME_BYTES;
+    let pool_cap = 8 * 1024 * 1024;
+
+    let template = HostConfig {
+        seed,
+        tier: TierConfig { pool_capacity_bytes: pool_cap, ..Default::default() },
+        ..Default::default()
+    };
+    let cfg = FleetConfig {
+        hosts,
+        // Placeholder; real budgets are sized from the admitted mix
+        // below via `set_shard_budget`.
+        host_budgets: vec![1 << 40],
+        placement: PlacementPolicy::SpreadByFaultRate,
+        interval: 50 * MS,
+        migration: migrate,
+        migrate_pf_delta_min: 16,
+        pressure_demand_pct: 104,
+        donor_demand_pct: 90,
+        migration_max_bytes: 32 * 1024 * 1024,
+        migration_min_chunk: 256 * 1024,
+        migration_margin_bytes: 128 * 1024,
+        migration_stall_ticks: 10,
+        max_active_migrations: 1,
+        control: ControlConfig {
+            interval: 25 * MS,
+            kind: ArbiterKind::ProportionalShare,
+            recovery_boost_window: 300 * MS,
+            ..Default::default()
+        },
+        max_time: 60 * SEC,
+        ..Default::default()
+    };
+    let mut f = FleetScheduler::new(&template, cfg);
+
+    for i in 0..n {
+        // Touch the whole footprint once, then work in the hottest
+        // third: real cold memory everywhere, hot-set thrash only where
+        // the budget is short.
+        let phases = vec![(pages, ops_per_vm / 4), (pages / 3, ops_per_vm * 3 / 4)];
+        let w: Box<dyn Workload> = Box::new(BootDelay::new(
+            (i as u64 % 8) * 10 * MS,
+            Box::new(PhasedWss::with_cost(phases, 20_000)),
+        ));
+        f.admit(FleetVmSpec {
+            name: format!("vm{i}"),
+            sla: Sla::Bronze,
+            frames,
+            vcpus: 1,
+            workloads: vec![w],
+            initial_limit_bytes: None, // set per shard below
+            mm: Some(MmConfig {
+                swapper_threads: swapper_threads(Sla::Bronze),
+                scan_interval: 60 * MS,
+                history: 6,
+                // Lazy proactive reclaim: cold pages are shed by the
+                // *limit* (arbiter pressure), which keeps every shard
+                // limit-bound.
+                target_promotion_rate: 0.002,
+                ..Default::default()
+            }),
+        });
+    }
+
+    // Size each shard's budget from its actually admitted members: the
+    // arbiter's own hot-phase demand (WSS + WSS/8) plus the pool
+    // reservation and in-flight slack. Host 0: usable ≈ 78% of demand
+    // (sustained pressure); the rest: ≈ 120% — feasible with spare, and
+    // comfortably under the 90% donor-eligibility line.
+    let hot_demand = {
+        let wss = pages / 3 * FRAME_BYTES;
+        wss + wss / 8
+    };
+    let mut budgets = vec![0u64; hosts];
+    for h in 0..hosts {
+        let members: Vec<usize> = f
+            .placements
+            .iter()
+            .filter(|p| p.shard == h)
+            .map(|p| p.vm)
+            .collect();
+        let inflight: u64 = members
+            .iter()
+            .map(|&v| {
+                let mm = f.shards[h].machine.mm(v).expect("sys VM");
+                mm.swapper.threads() as u64 * mm.core.unit_bytes
+            })
+            .sum();
+        let demand = hot_demand * members.len() as u64;
+        let pct = if h == 0 { 78 } else { 120 };
+        let budget = demand * pct / 100 + pool_cap + inflight;
+        budgets[h] = budget;
+        f.set_shard_budget(h, budget);
+        // Everyone starts at an equal share of its shard's usable
+        // budget, so Σ(resident + pool) ≤ budget holds from t = 0.
+        let usable = budget - pool_cap - inflight;
+        let share = usable / members.len().max(1) as u64;
+        for &v in &members {
+            let mm = f.shards[h].machine.mm_mut(v).expect("sys VM");
+            mm.core.limit_units = Some((share / mm.core.unit_bytes).max(1));
+        }
+    }
+    let budget_total_start: u64 = budgets.iter().sum();
+
+    let results = f.run();
+    let mut hist = LatencyHist::default();
+    let mut per_host = Vec::with_capacity(hosts);
+    let mut total_majors = 0;
+    let mut total_ops = 0;
+    let mut runtime = 0;
+    let mut avg_fleet = 0.0;
+    for (h, rs) in results.iter().enumerate() {
+        let mut majors = 0;
+        for r in rs {
+            hist.merge(&r.fault_hist);
+            majors += r.counters.faults_major;
+            total_ops += r.work_ops;
+            runtime = runtime.max(r.runtime);
+        }
+        total_majors += majors;
+        let cs = f.shards[h]
+            .machine
+            .control_stats()
+            .expect("shard has a control plane");
+        let avg = if cs.host_series.is_empty() {
+            0.0
+        } else {
+            cs.host_series.iter().map(|(_, r, p)| r + p).sum::<f64>()
+                / cs.host_series.len() as f64
+        };
+        avg_fleet += avg;
+        per_host.push(HostRow {
+            host: h,
+            vms: rs.len(),
+            budget_start: budgets[h],
+            budget_end: f.shard_budget(h),
+            avg_host_bytes: avg,
+            peak_host_bytes: cs.peak_host_bytes,
+            budget_exceeded_ticks: cs.budget_exceeded_ticks,
+            min_headroom_bytes: cs.min_headroom_bytes,
+            bytes_in: f.stats.bytes_in[h],
+            bytes_out: f.stats.bytes_out[h],
+            majors,
+        });
+    }
+    ShardedSummary {
+        hosts,
+        vms: n,
+        migrate,
+        per_host,
+        total_majors,
+        total_ops,
+        avg_fleet_bytes: avg_fleet,
+        nominal_bytes: nominal,
+        saved_frac: 1.0 - avg_fleet / nominal as f64,
+        migrations_started: f.stats.migrations_started,
+        migrations_completed: f.stats.migrations_completed,
+        migrations_aborted: f.stats.migrations_aborted,
+        migrated_bytes: f.stats.migrated_bytes,
+        conservation_violations: f.stats.conservation_violations,
+        budget_total_end: (0..hosts).map(|i| f.shard_budget(i)).sum(),
+        budget_total_start,
+        p99_stall_ns: hist.quantile(0.99),
+        runtime_ns: runtime,
+    }
+}
+
+/// The registered experiment driver (4 host shards by default; the CLI
+/// overrides via `flexswap fleet --hosts N`).
 pub fn fleet(scale: Scale) -> Vec<Table> {
+    fleet_with_hosts(scale, 4)
+}
+
+pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
     let n = scale.u(64, 128) as usize;
     let ops = scale.u(12_000, 40_000);
     let mut t = Table::new(
@@ -324,5 +568,93 @@ pub fn fleet(scale: Scale) -> Vec<Table> {
             r.prefetch_timely.to_string(),
         ]);
     }
-    vec![t, t2]
+
+    // Sharded fleet: static placement vs the fault-rate-delta
+    // rebalancer, one host budget-starved (PR 4 extension).
+    let per_host = scale.u(8, 32) as usize;
+    let shard_ops = scale.u(16_000, 28_000);
+    let mut t3 = Table::new(
+        "fleet sharding: fault-rate-delta rebalancer vs static placement",
+        &[
+            "config",
+            "host",
+            "vms",
+            "budget_start_mb",
+            "budget_end_mb",
+            "avg_host_mb",
+            "budget_exceeded_ticks",
+            "migr_in_mb",
+            "migr_out_mb",
+            "major_faults",
+            "migrations",
+            "migrated_mb",
+            "saved_pct",
+            "p99_stall_us",
+        ],
+    );
+    for (label, migrate) in [("static-placement", false), ("rebalancer", true)] {
+        let s = run_sharded_fleet(hosts, per_host, shard_ops, migrate, 7);
+        assert_eq!(
+            s.total_ops,
+            s.vms as u64 * shard_ops,
+            "{label}: sharded fleet did not complete its work"
+        );
+        assert_eq!(
+            s.conservation_violations, 0,
+            "{label}: fleet budget not conserved"
+        );
+        assert_eq!(
+            s.budget_total_end, s.budget_total_start,
+            "{label}: Σ budgets drifted"
+        );
+        for h in &s.per_host {
+            assert_eq!(
+                h.budget_exceeded_ticks, 0,
+                "{label}: host {} exceeded its budget ({} min headroom)",
+                h.host, h.min_headroom_bytes
+            );
+        }
+        for h in &s.per_host {
+            t3.row(vec![
+                label.into(),
+                h.host.to_string(),
+                h.vms.to_string(),
+                format!("{:.0}", h.budget_start as f64 / 1e6),
+                format!("{:.0}", h.budget_end as f64 / 1e6),
+                format!("{:.0}", h.avg_host_bytes / 1e6),
+                h.budget_exceeded_ticks.to_string(),
+                format!("{:.1}", h.bytes_in as f64 / 1e6),
+                format!("{:.1}", h.bytes_out as f64 / 1e6),
+                h.majors.to_string(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]);
+        }
+        t3.row(vec![
+            label.into(),
+            "all".into(),
+            s.vms.to_string(),
+            format!("{:.0}", s.budget_total_start as f64 / 1e6),
+            format!("{:.0}", s.budget_total_end as f64 / 1e6),
+            format!("{:.0}", s.avg_fleet_bytes / 1e6),
+            s.per_host
+                .iter()
+                .map(|h| h.budget_exceeded_ticks)
+                .sum::<u64>()
+                .to_string(),
+            format!("{:.1}", s.migrated_bytes as f64 / 1e6),
+            format!("{:.1}", s.migrated_bytes as f64 / 1e6),
+            s.total_majors.to_string(),
+            format!(
+                "{}/{}/{}",
+                s.migrations_started, s.migrations_completed, s.migrations_aborted
+            ),
+            format!("{:.1}", s.migrated_bytes as f64 / 1e6),
+            format!("{:.1}", s.saved_frac * 100.0),
+            format!("{:.0}", s.p99_stall_ns as f64 / 1e3),
+        ]);
+    }
+    vec![t, t2, t3]
 }

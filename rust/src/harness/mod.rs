@@ -111,8 +111,8 @@ pub fn registry() -> Vec<Experiment> {
         },
         Experiment {
             id: "fleet",
-            title: "Fleet control plane: 64-128 mixed-SLA VMs, closed-loop vs static limits (PR 3 extension)",
-            expectation: "budget never exceeded at any control tick; closed-loop beats static on memory saved and/or p99 fault stall; release recovery with the boost hint no slower than without",
+            title: "Fleet control plane: mixed-SLA VMs under closed-loop limits, plus a 4-host sharded fleet (PR 3/4 extension)",
+            expectation: "per-host budget never exceeded at any control tick and Σ budgets conserved under migration; closed-loop beats static limits on memory saved and/or p99 stall; the fault-rate-delta rebalancer cuts total major faults on the pressure-skewed 4-host fleet without losing Σ saved memory",
             run: fleet::fleet,
         },
         Experiment {
@@ -130,19 +130,19 @@ pub fn registry() -> Vec<Experiment> {
     ]
 }
 
-/// Run one experiment by id and render its tables as markdown.
-pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
-    let exp = registry().into_iter().find(|e| e.id == id)?;
-    let tables = (exp.run)(scale);
-    let mut out = format!("## {}\n\n*Paper expectation:* {}\n\n", exp.title, exp.expectation);
-    for t in &tables {
+/// Render tables as markdown under a header and persist each as
+/// `results/<id>_<slug>.csv` (shared by `run_by_id` and the CLI's
+/// parameterized runs like `fleet --hosts N`).
+pub fn emit_tables(id: &str, header: String, tables: &[Table]) -> String {
+    let mut out = header;
+    for t in tables {
         out.push_str(&t.markdown());
         out.push('\n');
         // Also persist CSV for plotting.
         let _ = std::fs::create_dir_all("results");
         let file = format!(
             "results/{}_{}.csv",
-            exp.id,
+            id,
             t.title
                 .to_lowercase()
                 .chars()
@@ -151,7 +151,29 @@ pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
         );
         let _ = std::fs::write(file, t.csv());
     }
-    Some(out)
+    out
+}
+
+/// Run one experiment by id and render its tables as markdown.
+pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
+    let exp = registry().into_iter().find(|e| e.id == id)?;
+    let tables = (exp.run)(scale);
+    let header =
+        format!("## {}\n\n*Paper expectation:* {}\n\n", exp.title, exp.expectation);
+    Some(emit_tables(exp.id, header, &tables))
+}
+
+/// The `fleet` experiment with an explicit shard count (the
+/// `flexswap fleet --hosts N` CLI path; tables land in the same
+/// `results/fleet_*.csv` files as the registered run).
+pub fn run_fleet_with_hosts(scale: Scale, hosts: usize) -> String {
+    let tables = fleet::fleet_with_hosts(scale, hosts);
+    let header = format!(
+        "## Fleet control plane ({hosts} host shards)\n\n*Expectation:* \
+         per-host budget held at every tick, Σ budgets conserved under \
+         migration, rebalancer cuts major faults on the pressured host\n\n"
+    );
+    emit_tables("fleet", header, &tables)
 }
 
 #[cfg(test)]

@@ -3,17 +3,36 @@
 //! Usage:
 //!   flexswap list                 # list experiments
 //!   flexswap fig9 [--full]        # run one experiment
-//!   flexswap fleet [--full]       # 64-128 VM control-plane experiment
+//!   flexswap fleet [--full]       # control-plane fleet (incl. 4-host shards)
+//!   flexswap fleet --hosts 4      # sharded fleet with an explicit shard count
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
 
-use flexswap::harness::{registry, run_by_id, Scale};
+use flexswap::harness::{registry, run_by_id, run_fleet_with_hosts, Scale};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let full = args.iter().any(|a| a == "--full");
     let scale = if full { Scale::Full } else { Scale::Quick };
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("list");
+    // `--hosts N`: shard-count override for the fleet experiment. A
+    // malformed or missing value is an error, not a silent fallback.
+    let hosts = args.iter().position(|a| a == "--hosts").map(|i| {
+        match args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+            Some(h) if h > 0 => h,
+            _ => {
+                eprintln!("--hosts needs a positive integer (e.g. `flexswap fleet --hosts 4`)");
+                std::process::exit(2);
+            }
+        }
+    });
+
+    if cmd == "fleet" {
+        if let Some(h) = hosts {
+            println!("{}", run_fleet_with_hosts(scale, h));
+            return;
+        }
+    }
 
     match cmd {
         "list" => {

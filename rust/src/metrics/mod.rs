@@ -171,6 +171,65 @@ impl ControlStats {
     }
 }
 
+/// Fleet-wide accounting gauges, maintained by
+/// [`crate::daemon::FleetScheduler`] across all host shards: the
+/// budget-conservation audit, migration counts/bytes and the per-shard
+/// invariant tallies the test suite asserts on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetStats {
+    pub hosts: usize,
+    /// Fleet ticks executed (migration decision points).
+    pub fleet_ticks: u64,
+    /// Σ audited per-host budgets at fleet construction. Migration
+    /// moves budget between shards but never creates or destroys it,
+    /// so the per-tick audit below must always see exactly this.
+    pub total_budget_bytes: u64,
+    /// Fleet ticks at which Σ per-host budgets differed from
+    /// `total_budget_bytes` (must stay 0 — the conservation invariant).
+    pub conservation_violations: u64,
+    pub migrations_started: u64,
+    pub migrations_completed: u64,
+    /// Migrations cancelled after stalling (their undelivered remainder
+    /// was returned to the donor's lease, not lost).
+    pub migrations_aborted: u64,
+    /// Total bytes actually handed between shards (Σ over chunks).
+    pub migrated_bytes: u64,
+    /// Per-shard bytes received from / donated to other shards.
+    /// Σ `bytes_in` == Σ `bytes_out` == `migrated_bytes`.
+    pub bytes_in: Vec<u64>,
+    pub bytes_out: Vec<u64>,
+    /// Per-shard `budget_exceeded_ticks`, copied out of each shard's
+    /// [`ControlStats`] when the run finishes (must all stay 0).
+    pub budget_exceeded_ticks: Vec<u64>,
+}
+
+impl FleetStats {
+    pub fn new(hosts: usize, total_budget_bytes: u64) -> Self {
+        FleetStats {
+            hosts,
+            total_budget_bytes,
+            bytes_in: vec![0; hosts],
+            bytes_out: vec![0; hosts],
+            budget_exceeded_ticks: vec![0; hosts],
+            ..Default::default()
+        }
+    }
+
+    /// Record one chunk handed from shard `from` to shard `to`.
+    pub fn record_transfer(&mut self, from: usize, to: usize, bytes: u64) {
+        self.migrated_bytes += bytes;
+        self.bytes_out[from] += bytes;
+        self.bytes_in[to] += bytes;
+    }
+
+    /// Audit budget conservation at a fleet tick.
+    pub fn audit_budgets(&mut self, sum: u64) {
+        if sum != self.total_budget_bytes {
+            self.conservation_violations += 1;
+        }
+    }
+}
+
 /// A (virtual-time, value) series with uniform-bucket downsampling.
 #[derive(Debug, Clone, Default)]
 pub struct Series {
@@ -349,6 +408,21 @@ mod tests {
         assert_eq!(s.budget_exceeded_ticks, 1);
         assert_eq!(s.min_headroom_bytes, -100);
         assert_eq!(s.host_series.len(), 2);
+    }
+
+    #[test]
+    fn fleet_stats_transfer_and_conservation() {
+        let mut s = FleetStats::new(3, 1000);
+        s.record_transfer(0, 2, 100);
+        s.record_transfer(0, 1, 50);
+        assert_eq!(s.migrated_bytes, 150);
+        assert_eq!(s.bytes_out, vec![150, 0, 0]);
+        assert_eq!(s.bytes_in, vec![0, 50, 100]);
+        assert_eq!(s.bytes_in.iter().sum::<u64>(), s.bytes_out.iter().sum());
+        s.audit_budgets(1000);
+        assert_eq!(s.conservation_violations, 0);
+        s.audit_budgets(999);
+        assert_eq!(s.conservation_violations, 1);
     }
 
     #[test]

@@ -1,0 +1,544 @@
+//! Fleet-scheduler invariant/property suite (PR 4): across ≥40 seeds
+//! the sharded control plane must (a) hold every shard's budget at
+//! every control tick, (b) never split a VM across shards, (c) be
+//! bit-identical for the same seed, and (d) conserve migrated bytes —
+//! bytes leaving a shard equal bytes arriving, Σ budgets constant.
+//! Plus: the proportional-share arbiter against a brute-force reference
+//! solver (the PR 1 LRU-oracle pattern), the recovery-mode window
+//! regression, and the rebalancer-beats-static acceptance.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use flexswap::config::{
+    ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig, PlacementPolicy,
+    TierConfig, VmConfig,
+};
+use flexswap::coordinator::{Machine, Mechanism, VmSetup};
+use flexswap::daemon::{Arbiter, FleetScheduler, FleetVmSpec, Sla, VmReport};
+use flexswap::harness::fleet::run_sharded_fleet;
+use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
+use flexswap::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
+use flexswap::sim::Rng;
+use flexswap::types::{PageSize, MS, SEC};
+use flexswap::workloads::{PhasedWss, UniformRandom, Workload};
+
+// ---------------------------------------------------------------------
+// Shared invariant checks
+// ---------------------------------------------------------------------
+
+/// (a) Per-shard budget held at every tick, (b) no VM split across
+/// shards, (d) migration byte-conservation.
+fn assert_fleet_invariants(f: &FleetScheduler, label: &str) {
+    // (a) Σ(resident + pool) ≤ budget on every shard at every tick.
+    for s in &f.shards {
+        let cs = s.machine.control_stats().expect("shard has a control plane");
+        assert_eq!(
+            cs.budget_exceeded_ticks, 0,
+            "{label}: shard {} exceeded its budget",
+            s.id
+        );
+        assert!(
+            cs.ticks == 0 || cs.min_headroom_bytes >= 0,
+            "{label}: shard {} saw negative headroom {}",
+            s.id,
+            cs.min_headroom_bytes
+        );
+    }
+    // (b) every admitted VM lives in exactly one shard's control plane.
+    let mut names = std::collections::BTreeSet::new();
+    for p in &f.placements {
+        assert!(names.insert(p.name.clone()), "{label}: duplicate admission {}", p.name);
+        let cp = f.shards[p.shard].machine.control().expect("control plane");
+        assert_eq!(
+            cp.vm_name(p.vm),
+            Some(p.name.as_str()),
+            "{label}: placement record does not match shard {}",
+            p.shard
+        );
+        for s in &f.shards {
+            if s.id != p.shard {
+                assert!(
+                    s.machine
+                        .control()
+                        .expect("control plane")
+                        .vms
+                        .iter()
+                        .all(|m| m.name != p.name),
+                    "{label}: VM {} split across shards {} and {}",
+                    p.name,
+                    p.shard,
+                    s.id
+                );
+            }
+        }
+    }
+    let managed: usize = f
+        .shards
+        .iter()
+        .map(|s| s.machine.control().expect("control plane").vms.len())
+        .sum();
+    assert_eq!(managed, f.placements.len(), "{label}: managed-VM count mismatch");
+    // (d) conservation: Σ budgets audited equal at every fleet tick,
+    // and migration bytes balance exactly.
+    assert_eq!(
+        f.stats.conservation_violations, 0,
+        "{label}: Σ budgets drifted during the run"
+    );
+    let total_now: u64 = (0..f.shards.len()).map(|i| f.shard_budget(i)).sum();
+    assert_eq!(
+        total_now, f.stats.total_budget_bytes,
+        "{label}: final Σ budgets differs from the baseline"
+    );
+    let bytes_in: u64 = f.stats.bytes_in.iter().sum();
+    let bytes_out: u64 = f.stats.bytes_out.iter().sum();
+    assert_eq!(bytes_in, bytes_out, "{label}: migration bytes not conserved");
+    assert_eq!(bytes_in, f.stats.migrated_bytes, "{label}: transfer ledger drift");
+}
+
+// ---------------------------------------------------------------------
+// Randomized invariant suite (≥40 seeds)
+// ---------------------------------------------------------------------
+
+/// A randomized small fleet: 4 hosts, Bronze VMs with contraction-phase
+/// workloads, budget-derived initial limits, arbiter kind and placement
+/// cycling with the seed. Returns the scheduler (stats + shards) plus
+/// total completed ops and the expected total.
+fn run_random_fleet(seed: u64) -> (FleetScheduler, u64, u64) {
+    let hosts = 4;
+    let mut rng = Rng::new(seed.wrapping_mul(31).wrapping_add(7));
+    let kind = [
+        ArbiterKind::ProportionalShare,
+        ArbiterKind::Watermark,
+        ArbiterKind::Static,
+    ][(seed % 3) as usize];
+    let placement = if seed % 2 == 0 {
+        PlacementPolicy::SpreadByFaultRate
+    } else {
+        PlacementPolicy::FirstFitBySla
+    };
+    let pool_cap = 2 * 1024 * 1024;
+    let template = HostConfig {
+        seed,
+        tier: TierConfig { pool_capacity_bytes: pool_cap, ..Default::default() },
+        ..Default::default()
+    };
+    let budgets: Vec<u64> = (0..hosts).map(|_| (8 + rng.below(10)) << 20).collect();
+    let cfg = FleetConfig {
+        hosts,
+        host_budgets: budgets.clone(),
+        placement,
+        interval: 20 * MS,
+        migration: true,
+        migrate_pf_delta_min: 8,
+        pressure_demand_pct: 102,
+        donor_demand_pct: 90,
+        migration_max_bytes: 8 << 20,
+        migration_min_chunk: 128 << 10,
+        migration_margin_bytes: 64 << 10,
+        migration_stall_ticks: 5,
+        max_active_migrations: 2,
+        control: ControlConfig { interval: 10 * MS, kind, ..Default::default() },
+        max_time: 30 * SEC,
+        ..Default::default()
+    };
+    let mut f = FleetScheduler::new(&template, cfg);
+    let n = 8 + rng.below(5) as usize;
+    let mut expected_ops = 0u64;
+    for i in 0..n {
+        let frames = 1024u64 << rng.below(2); // 4 or 8 MB VMs
+        let pages = frames - 256;
+        // Even, so the two phases sum to exactly `ops`.
+        let ops = 2 * (1_250 + rng.below(1_250));
+        expected_ops += ops;
+        let w: Box<dyn Workload> = Box::new(PhasedWss::with_cost(
+            vec![(pages, ops / 2), (pages / 4, ops / 2)],
+            15_000,
+        ));
+        f.admit(FleetVmSpec {
+            name: format!("vm{i}"),
+            sla: Sla::Bronze,
+            frames,
+            vcpus: 1,
+            workloads: vec![w],
+            initial_limit_bytes: None, // budget-safe fix-up below
+            mm: Some(MmConfig {
+                swapper_threads: 4,
+                scan_interval: 40 * MS,
+                history: 6,
+                target_promotion_rate: 0.002,
+                ..Default::default()
+            }),
+        });
+    }
+    // Budget-derived initial limits: Σ limits ≤ usable per shard, so
+    // invariant (a) holds from t = 0 under every arbiter kind.
+    let by_shard: Vec<(usize, usize)> =
+        f.placements.iter().map(|p| (p.shard, p.vm)).collect();
+    for h in 0..hosts {
+        let members: Vec<usize> =
+            by_shard.iter().filter(|&&(s, _)| s == h).map(|&(_, v)| v).collect();
+        if members.is_empty() {
+            continue;
+        }
+        let inflight: u64 = members
+            .iter()
+            .map(|&v| {
+                let mm = f.shards[h].machine.mm(v).expect("sys VM");
+                mm.swapper.threads() as u64 * mm.core.unit_bytes
+            })
+            .sum();
+        let usable = budgets[h].saturating_sub(pool_cap).saturating_sub(inflight);
+        let share = usable / members.len() as u64;
+        for &v in &members {
+            let mm = f.shards[h].machine.mm_mut(v).expect("sys VM");
+            mm.core.limit_units = Some((share / mm.core.unit_bytes).max(1));
+        }
+    }
+    let results = f.run();
+    let done_ops: u64 = results.iter().flatten().map(|r| r.work_ops).sum();
+    (f, done_ops, expected_ops)
+}
+
+/// The ≥40-seed sweep: half the seeds run the pressure-skewed harness
+/// scenario (migration on/off alternating), half run the randomized
+/// fleets with arbiter-kind and placement cycling. Invariants (a), (b)
+/// and (d) must hold on every one.
+#[test]
+fn invariants_hold_across_forty_seeds() {
+    for seed in 0..40u64 {
+        if seed % 2 == 0 {
+            // Harness scenario, shrunk: 4 hosts × 3 VMs.
+            let migrate = seed % 4 == 0;
+            let s = run_sharded_fleet(4, 3, 6_000, migrate, seed);
+            assert_eq!(
+                s.total_ops,
+                s.vms as u64 * 6_000,
+                "seed {seed}: sharded fleet incomplete"
+            );
+            for h in &s.per_host {
+                assert_eq!(
+                    h.budget_exceeded_ticks, 0,
+                    "seed {seed}: host {} exceeded its budget ({} min headroom)",
+                    h.host, h.min_headroom_bytes
+                );
+            }
+            assert_eq!(s.conservation_violations, 0, "seed {seed}: budgets drifted");
+            assert_eq!(
+                s.budget_total_end, s.budget_total_start,
+                "seed {seed}: Σ budgets changed"
+            );
+            let b_in: u64 = s.per_host.iter().map(|h| h.bytes_in).sum();
+            let b_out: u64 = s.per_host.iter().map(|h| h.bytes_out).sum();
+            assert_eq!(b_in, b_out, "seed {seed}: migration bytes not conserved");
+            assert_eq!(b_in, s.migrated_bytes, "seed {seed}: transfer ledger drift");
+            if !migrate {
+                assert_eq!(s.migrated_bytes, 0, "seed {seed}: static arm migrated");
+            }
+        } else {
+            let (f, done, expected) = run_random_fleet(seed);
+            assert_eq!(done, expected, "seed {seed}: random fleet incomplete");
+            assert_fleet_invariants(&f, &format!("seed {seed}"));
+        }
+    }
+}
+
+/// (c) Determinism: the same-seed 4-host fleet is bit-identical — the
+/// whole summary (per-host occupancy averages, migration ledger, fault
+/// counts, stall percentiles) compares equal, and since the experiment
+/// CSV is a pure function of the summary, the CSV is identical too.
+#[test]
+fn same_seed_four_host_fleet_is_bit_identical() {
+    let a = run_sharded_fleet(4, 8, 10_000, true, 42);
+    let b = run_sharded_fleet(4, 8, 10_000, true, 42);
+    assert_eq!(a, b, "same-seed sharded fleet runs diverged");
+    assert_eq!(a.hosts, 4);
+    assert_eq!(a.vms, 32);
+    // And a second seed on the static arm, for the no-migration path.
+    let c = run_sharded_fleet(4, 4, 6_000, false, 9);
+    let d = run_sharded_fleet(4, 4, 6_000, false, 9);
+    assert_eq!(c, d, "same-seed static-placement runs diverged");
+}
+
+/// Acceptance: on the pressure-skewed fleet, the fault-rate-delta
+/// rebalancer completes real migrations and yields fewer total major
+/// faults than static placement, with no loss in Σ saved memory
+/// (occupancy tracks the conserved Σ budgets because every shard stays
+/// limit-bound; 0.5% covers measurement noise).
+#[test]
+fn rebalancer_beats_static_placement() {
+    let st = run_sharded_fleet(4, 8, 16_000, false, 7);
+    let rb = run_sharded_fleet(4, 8, 16_000, true, 7);
+    assert_eq!(st.total_ops, rb.total_ops, "arms did different work");
+    assert_eq!(st.migrated_bytes, 0);
+    assert!(
+        rb.migrations_completed >= 1 && rb.migrated_bytes > 0,
+        "rebalancer never migrated: {rb:?}"
+    );
+    assert!(
+        rb.total_majors < st.total_majors,
+        "rebalancer did not cut major faults: {} vs {}",
+        rb.total_majors,
+        st.total_majors
+    );
+    assert!(
+        rb.avg_fleet_bytes <= st.avg_fleet_bytes * 1.005,
+        "rebalancer lost saved memory: {:.0} vs {:.0}",
+        rb.avg_fleet_bytes,
+        st.avg_fleet_bytes
+    );
+    // The pressured host is where the migrated budget landed.
+    assert!(
+        rb.per_host[0].budget_end > rb.per_host[0].budget_start,
+        "host 0 received no budget: {:?}",
+        rb.per_host[0]
+    );
+}
+
+// ---------------------------------------------------------------------
+// Arbiter oracle (brute-force reference solver, ≤6 VMs)
+// ---------------------------------------------------------------------
+
+/// Reference proportional-share solver: the spec recomputed the
+/// straightforward way with fresh allocations per call — floors and
+/// demands first, weighted surplus when feasible, class-by-class
+/// squeeze (Bronze → Silver → Gold) with largest-remainder settling
+/// when not. Asserted equal to the incremental solver, which reuses
+/// scratch buffers across calls (the bug class this oracle hunts).
+fn oracle_proportional(reports: &[VmReport], usable: u64) -> Vec<u64> {
+    let n = reports.len();
+    let demands: Vec<u64> = reports.iter().map(Arbiter::demand_of).collect();
+    let floors: Vec<u64> = reports.iter().map(Arbiter::floor_of).collect();
+    let total_demand: u64 = demands.iter().sum();
+    if total_demand <= usable {
+        let surplus = usable - total_demand;
+        let total_w: u64 = reports.iter().map(|r| r.sla.weight()).sum();
+        return (0..n)
+            .map(|i| {
+                let extra = if total_w == 0 {
+                    0
+                } else {
+                    (surplus as u128 * reports[i].sla.weight() as u128
+                        / total_w as u128) as u64
+                };
+                demands[i] + extra
+            })
+            .collect();
+    }
+    let mut limits = demands;
+    let mut deficit = total_demand - usable;
+    for class in [Sla::Bronze, Sla::Silver, Sla::Gold] {
+        if deficit == 0 {
+            break;
+        }
+        let idx: Vec<usize> = (0..n).filter(|&i| reports[i].sla == class).collect();
+        let reducible: u64 =
+            idx.iter().map(|&i| limits[i].saturating_sub(floors[i])).sum();
+        if reducible == 0 {
+            continue;
+        }
+        let take = deficit.min(reducible);
+        let mut taken = 0u64;
+        for &i in &idx {
+            let span = limits[i].saturating_sub(floors[i]);
+            let cut = (take as u128 * span as u128 / reducible as u128) as u64;
+            limits[i] -= cut;
+            taken += cut;
+        }
+        let mut residue = take - taken;
+        for &i in &idx {
+            if residue == 0 {
+                break;
+            }
+            let span = limits[i].saturating_sub(floors[i]);
+            let cut = residue.min(span);
+            limits[i] -= cut;
+            residue -= cut;
+        }
+        deficit -= take;
+    }
+    limits
+}
+
+fn random_report(vm: usize, rng: &mut Rng) -> VmReport {
+    let sla = [Sla::Gold, Sla::Silver, Sla::Bronze][rng.below(3) as usize];
+    let unit_bytes = if rng.chance(0.5) { 4096 } else { 2 << 20 };
+    let usage = (1 + rng.below(256)) << 20;
+    let wss = usage / (1 + rng.below(4));
+    VmReport {
+        vm,
+        sla,
+        usage_bytes: usage,
+        wss_bytes: wss,
+        cold_estimate_bytes: usage - wss,
+        pf_count: rng.below(10_000),
+        pf_delta: rng.below(500),
+        limit_bytes: if rng.chance(0.8) { Some(usage) } else { None },
+        unit_bytes,
+        inflight_allowance: (1 + rng.below(8)) * unit_bytes,
+    }
+}
+
+/// Oracle test (the PR 1 pattern): randomized WSS/SLA mixes on ≤6 VMs,
+/// swept from starvation to surplus, against ONE reused arbiter
+/// instance — stale scratch state from any previous solve would show up
+/// as a mismatch.
+#[test]
+fn proportional_solver_matches_bruteforce_oracle() {
+    let mut arb = Arbiter::new(ArbiterKind::ProportionalShare);
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(97).wrapping_add(3));
+        let n = 1 + rng.below(6) as usize;
+        let reports: Vec<VmReport> = (0..n).map(|vm| random_report(vm, &mut rng)).collect();
+        let total_demand: u64 = reports.iter().map(Arbiter::demand_of).sum();
+        for frac in [5u64, 25, 50, 75, 100, 130] {
+            let usable = total_demand / 100 * frac;
+            let got = arb.proportional_limits(&reports, usable).to_vec();
+            let want = oracle_proportional(&reports, usable);
+            assert_eq!(
+                got, want,
+                "seed {seed} frac {frac}: incremental solve diverged from oracle"
+            );
+            // Reference sanity: the oracle itself obeys the spec.
+            assert!(
+                want.iter().sum::<u64>() <= usable,
+                "seed {seed} frac {frac}: oracle over budget"
+            );
+            if total_demand <= usable {
+                for (i, r) in reports.iter().enumerate() {
+                    assert!(
+                        want[i] >= Arbiter::demand_of(r),
+                        "seed {seed} frac {frac}: feasible solve below demand"
+                    );
+                }
+            } else {
+                // Independent closed-form identity: the squeeze removes
+                // exactly min(deficit, total reducible slack), so
+                // Σ limits == max(usable, Σ floors) — derivable from
+                // the spec without mirroring the algorithm.
+                let floors_sum: u64 = reports.iter().map(Arbiter::floor_of).sum();
+                assert_eq!(
+                    want.iter().sum::<u64>(),
+                    usable.max(floors_sum),
+                    "seed {seed} frac {frac}: squeeze total off the closed form"
+                );
+                for (i, r) in reports.iter().enumerate() {
+                    assert!(
+                        want[i] >= Arbiter::floor_of(r),
+                        "seed {seed} frac {frac}: VM {i} squeezed below its floor"
+                    );
+                }
+                // Class ordering: a Gold VM below its demand means no
+                // Bronze VM retains reducible slack.
+                let bronze_slack = reports.iter().enumerate().any(|(i, r)| {
+                    r.sla == Sla::Bronze && want[i] > Arbiter::floor_of(r)
+                });
+                for (i, r) in reports.iter().enumerate() {
+                    if r.sla == Sla::Gold && want[i] < Arbiter::demand_of(r) {
+                        assert!(
+                            !bronze_slack,
+                            "seed {seed} frac {frac}: gold squeezed before bronze"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Recovery-mode window regression (PR 3 boost-hint path, end to end)
+// ---------------------------------------------------------------------
+
+/// Probe policy: samples `PolicyApi::recovery_mode()` at every scan
+/// tick into a shared log.
+struct RecoveryProbe {
+    log: Rc<RefCell<Vec<(u64, bool)>>>,
+}
+
+impl Policy for RecoveryProbe {
+    fn name(&self) -> &'static str {
+        "recovery-probe"
+    }
+    fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
+        if let PolicyEvent::ScanBitmap { now, .. } = ev {
+            self.log.borrow_mut().push((*now, api.recovery_mode()));
+        }
+    }
+}
+
+/// `recovery_mode` must read true strictly inside the boost window,
+/// false again by the first tick after `recovery_until` expires, and a
+/// later non-boost release must NOT re-open the window.
+#[test]
+fn recovery_window_expires_and_non_boost_release_does_not_reopen() {
+    let boost_at = 210 * MS; // off the 20ms scan grid: no tie-order reliance
+    let window = 300 * MS;
+    let plain_at = 910 * MS;
+
+    let mut m = Machine::new(HostConfig { seed: 5, ..Default::default() });
+    m.install_control(ControlConfig {
+        recovery_boost_window: window,
+        ..Default::default()
+    });
+    let mm_cfg = MmConfig {
+        scan_interval: 20 * MS,
+        history: 8,
+        memory_limit: Some(1024 * 4096),
+        ..Default::default()
+    };
+    let vm_cfg = VmConfig {
+        frames: 4096,
+        vcpus: 1,
+        page_size: PageSize::Small,
+        scramble: 0.0,
+        guest_thp_coverage: 1.0,
+    };
+    let units = vm_cfg.units();
+    let mut mm = Mm::new(&mm_cfg, units, 4096, &m.host.sw, m.host.hw.zero_2m_ns);
+    mm.add_policy(Box::new(DtReclaimer::new(Box::new(NativeAnalytics::new()), 8, 0.02)));
+    let log = Rc::new(RefCell::new(Vec::new()));
+    mm.add_policy(Box::new(RecoveryProbe { log: log.clone() }));
+    mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
+    let vmid = m.add_vm(VmSetup {
+        vm_cfg,
+        mech: Mechanism::Sys(Box::new(mm)),
+        workloads: vec![Box::new(UniformRandom::new(0, 3000, 90_000))],
+        scan_interval: Some(20 * MS),
+    });
+    // Boost-flagged release at 210ms opens (210ms, 510ms); the plain
+    // release at 910ms raises the limit again but must not re-open it.
+    m.schedule_limit_release(vmid, boost_at, Some(2048 * 4096), true, false);
+    m.schedule_limit_release(vmid, plain_at, Some(3000 * 4096), false, false);
+    m.run();
+
+    let closes = boost_at + window;
+    assert_eq!(
+        m.mm(vmid).expect("sys VM").core.recovery_until,
+        closes,
+        "non-boost release moved the recovery window"
+    );
+    let samples = log.borrow().clone();
+    assert!(
+        samples.iter().any(|&(t, _)| t > boost_at && t < closes),
+        "no scan sample inside the boost window"
+    );
+    assert!(
+        samples.iter().any(|&(t, _)| t >= closes),
+        "run ended before the window expired"
+    );
+    assert!(
+        samples.iter().any(|&(t, _)| t > plain_at),
+        "run ended before the non-boost release"
+    );
+    for &(t, on) in &samples {
+        if t > boost_at && t < closes {
+            assert!(on, "recovery_mode false at {t} inside the boost window");
+        } else {
+            assert!(
+                !on,
+                "recovery_mode true at {t} outside the ({boost_at}, {closes}) window"
+            );
+        }
+    }
+}
