@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Bench-regression guard for the flexswap-bench-v1 trajectory.
+
+Compares a freshly generated BENCH_hotpath.json against the committed
+baseline and fails (exit 1) when any named series regressed by more
+than the threshold on mean ns/iter, or when a baseline series vanished.
+
+Stdlib only — no pip installs in CI.
+
+Usage:
+    python3 ci/bench_guard.py <baseline.json> <fresh.json> [--threshold PCT]
+
+States handled:
+  * baseline has no results (the pending-measurement placeholder the
+    repo shipped before the first toolchain-bearing CI run): the guard
+    passes and prints the fresh numbers with a reminder to commit them
+    as the first real baseline.
+  * series present in both: fail on > threshold% mean_ns regression.
+  * series only in the baseline: fail (a benchmark silently vanished).
+  * series only in the fresh run: informational (new benchmarks are
+    committed with the next baseline update).
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA = "flexswap-bench-v1"
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        sys.exit(f"{path}: unexpected schema {doc.get('schema')!r} (want {SCHEMA!r})")
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=25.0,
+        help="max allowed mean_ns regression, percent (default 25)",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+
+    if not fresh:
+        sys.exit(f"{args.fresh}: no results — did the bench run?")
+
+    if not base:
+        print("bench guard: baseline is in pending-measurement state; nothing to compare.")
+        print("Fresh numbers (commit BENCH_hotpath.json to make them the baseline):")
+        for name, r in sorted(fresh.items()):
+            print(f"  {name:<44} {r['mean_ns']:>12.1f} ns/iter")
+        return
+
+    regressions = []
+    missing = []
+    for name, b in sorted(base.items()):
+        f = fresh.get(name)
+        if f is None:
+            missing.append(name)
+            continue
+        b_ns, f_ns = float(b["mean_ns"]), float(f["mean_ns"])
+        delta_pct = (f_ns - b_ns) / b_ns * 100.0 if b_ns > 0 else 0.0
+        marker = "REGRESSION" if delta_pct > args.threshold else "ok"
+        print(
+            f"  {name:<44} {b_ns:>12.1f} -> {f_ns:>12.1f} ns/iter "
+            f"({delta_pct:+7.1f}%)  {marker}"
+        )
+        if delta_pct > args.threshold:
+            regressions.append((name, delta_pct))
+
+    new = sorted(set(fresh) - set(base))
+    for name in new:
+        print(f"  {name:<44} {'(new series)':>12} {fresh[name]['mean_ns']:>12.1f} ns/iter")
+
+    if missing:
+        print(f"bench guard: series missing from the fresh run: {', '.join(missing)}")
+    if regressions:
+        worst = ", ".join(f"{n} ({d:+.1f}%)" for n, d in regressions)
+        print(f"bench guard: FAIL — >{args.threshold:.0f}% regression in: {worst}")
+    if missing or regressions:
+        sys.exit(1)
+    print(f"bench guard: OK — {len(base)} series within {args.threshold:.0f}% of baseline")
+
+
+if __name__ == "__main__":
+    main()

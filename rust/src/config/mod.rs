@@ -292,6 +292,27 @@ pub struct FleetConfig {
     pub migration_stall_ticks: u32,
     /// Concurrent in-flight migrations across the whole fleet.
     pub max_active_migrations: usize,
+    /// Enable full **VM state migration**: when a feasible target shard
+    /// exists, the rebalancer moves the pressured VM itself (engine/MM
+    /// state, tier map, pool entries, NVMe receipts) instead of leasing
+    /// budget toward it. Falls back to the budget lease when no shard
+    /// can absorb the whole VM. Requires `migration`.
+    pub state_migration: bool,
+    /// Cold-phase (pre-copy) transfer cap per fleet tick: at most this
+    /// many raw bytes of pool entries + NVMe receipts are staged to the
+    /// target while the VM keeps running on the donor.
+    pub state_chunk_bytes: u64,
+    /// Attempt the stop-and-copy flip once the not-yet-copied swapped
+    /// bytes drop to this threshold (re-dirtied entries count again).
+    pub state_flip_threshold_bytes: u64,
+    /// Force a flip attempt after this many pre-copy fleet ticks even
+    /// if the threshold was never reached (churny VMs converge here).
+    pub state_max_precopy_ticks: u32,
+    /// Modeled transfer bandwidth for the stop-and-copy bytes (the
+    /// brief pause the migrated VM observes at the flip).
+    pub state_stop_bytes_per_sec: u64,
+    /// Fixed stop-and-copy overhead (hand-off, EPT rebuild, adopt).
+    pub state_stop_fixed_ns: Time,
     /// First-fit admission: committed demand may exceed the shard
     /// budget by this percentage before the shard counts as full.
     pub fit_overcommit_pct: u32,
@@ -318,6 +339,12 @@ impl Default for FleetConfig {
             migration_margin_bytes: 256 * 1024,
             migration_stall_ticks: 8,
             max_active_migrations: 1,
+            state_migration: false,
+            state_chunk_bytes: 8 * 1024 * 1024,
+            state_flip_threshold_bytes: 2 * 1024 * 1024,
+            state_max_precopy_ticks: 16,
+            state_stop_bytes_per_sec: 10_000_000_000,
+            state_stop_fixed_ns: 200 * US,
             fit_overcommit_pct: 140,
             control: ControlConfig::default(),
             max_time: 600 * SEC,

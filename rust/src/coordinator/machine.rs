@@ -86,6 +86,86 @@ enum Ev {
     WorkerStagedDone { vm: usize, worker: usize, unit: UnitId },
 }
 
+impl Ev {
+    /// VM slot this event targets (None for host-wide events). The
+    /// state-migration flip uses this to pull one VM's pending events
+    /// out of the donor's queue.
+    fn vm_of(&self) -> Option<usize> {
+        match *self {
+            Ev::VcpuRun { vm, .. }
+            | Ev::FaultDeliver { vm }
+            | Ev::WorkerMapDone { vm, .. }
+            | Ev::WorkerIoRead { vm, .. }
+            | Ev::WorkerOutDone { vm, .. }
+            | Ev::ScanTick { vm }
+            | Ev::PolicyTimer { vm }
+            | Ev::PoolRefill { vm }
+            | Ev::Metrics { vm }
+            | Ev::KernelResume { vm, .. }
+            | Ev::WorkerStagedDone { vm, .. } => Some(vm),
+            Ev::ControlTick { .. } => None,
+        }
+    }
+
+    /// The same event retargeted at another slot id (implant remap).
+    fn with_vm(mut self, new: usize) -> Ev {
+        match &mut self {
+            Ev::VcpuRun { vm, .. }
+            | Ev::FaultDeliver { vm }
+            | Ev::WorkerMapDone { vm, .. }
+            | Ev::WorkerIoRead { vm, .. }
+            | Ev::WorkerOutDone { vm, .. }
+            | Ev::ScanTick { vm }
+            | Ev::PolicyTimer { vm }
+            | Ev::PoolRefill { vm }
+            | Ev::Metrics { vm }
+            | Ev::KernelResume { vm, .. }
+            | Ev::WorkerStagedDone { vm, .. } => *vm = new,
+            Ev::ControlTick { .. } => {}
+        }
+        self
+    }
+}
+
+/// A whole VM lifted out of one machine for implantation into another
+/// (fleet state migration): the slot — engine/MM and policy state, the
+/// guest `Vm` with its page tables and EPT, vCPU/workload positions,
+/// metric series — plus every event the donor still had queued for it
+/// and its control-plane identity. The swap copies travel separately
+/// through the [`SwapBackend`] export/import path; together the two
+/// make the hand-off atomic: after [`Machine::extract_vm`] the donor
+/// holds nothing of the VM, and after [`Machine::implant_vm`] the
+/// target holds all of it.
+pub struct VmImage {
+    slot: VmSlot,
+    /// Pending events at their absolute virtual times (all ≥ the flip
+    /// time, because flips happen at fleet ticks that precede every
+    /// pending event).
+    events: Vec<(Time, Ev)>,
+    /// Control-plane identity — name, SLA, and the donor's fault-delta
+    /// baseline (carried so the target's first tick reports only
+    /// post-flip faults). None when the donor never registered the VM:
+    /// it stays unmanaged on the target too.
+    control: Option<(String, Sla, u64)>,
+}
+
+impl VmImage {
+    /// Control-plane name (None for an unmanaged VM).
+    pub fn name(&self) -> Option<&str> {
+        self.control.as_ref().map(|(n, _, _)| n.as_str())
+    }
+
+    /// SLA class (None for an unmanaged VM).
+    pub fn sla(&self) -> Option<Sla> {
+        self.control.as_ref().map(|&(_, s, _)| s)
+    }
+
+    /// Nominal guest size (admission bookkeeping moves with the VM).
+    pub fn nominal_bytes(&self) -> u64 {
+        self.slot.vm.cfg.bytes()
+    }
+}
+
 /// Result of a completed run for one VM.
 #[derive(Debug, Clone)]
 pub struct RunResult {
@@ -111,7 +191,10 @@ pub struct Machine {
     pub clock: Time,
     rng: Rng,
     events: EventQueue<Ev>,
-    slots: Vec<VmSlot>,
+    /// VM slots by id. `None` marks a slot whose VM was extracted by a
+    /// state migration (or reserved for one arriving): ids are never
+    /// reused, so queued events and control-plane records stay valid.
+    slots: Vec<Option<VmSlot>>,
     pub nvme: Nvme,
     pub backend: Box<dyn SwapBackend>,
     scanner: EptScanner,
@@ -180,6 +263,21 @@ impl Machine {
     /// The first registration partitions the compressed pool by the
     /// configured per-SLA split (enforced quotas).
     pub fn register_control_vm(&mut self, vm: usize, name: String, sla: Sla) {
+        self.enroll_control_vm(vm, sla);
+        self.control.as_mut().unwrap().register(vm, name, sla);
+    }
+
+    /// Adopt a VM implanted by a state migration: identical to
+    /// [`Machine::register_control_vm`] except the fault-delta baseline
+    /// carries over from the donor's control plane.
+    pub fn adopt_control_vm(&mut self, vm: usize, name: String, sla: Sla, last_pf: u64) {
+        self.enroll_control_vm(vm, sla);
+        self.control.as_mut().unwrap().adopt(vm, name, sla, last_pf);
+    }
+
+    /// Shared enrollment: SLA pool class, control-plane presence, and
+    /// the one-shot pool partitioning at the first managed VM.
+    fn enroll_control_vm(&mut self, vm: usize, sla: Sla) {
         self.backend.set_vm_class(vm, sla.class_index() as u8);
         if self.control.is_none() {
             self.install_control(ControlConfig::default());
@@ -195,7 +293,72 @@ impl Machine {
                 .collect();
             self.backend.set_class_quotas(&quotas);
         }
-        cp.register(vm, name, sla);
+    }
+
+    /// Reserve a fresh slot id for a VM arriving by state migration.
+    /// The slot stays empty (and harmless) until [`Machine::implant_vm`]
+    /// fills it — or forever, if the migration aborts; ids are never
+    /// reused, so nothing can alias it.
+    pub fn reserve_slot(&mut self) -> usize {
+        self.slots.push(None);
+        self.slots.len() - 1
+    }
+
+    /// Pre-flip enrollment for a reserved slot: assign its SLA pool
+    /// class *and* partition the pool if this machine never managed a
+    /// VM before — pre-copied pool entries must land in (and be
+    /// accounted to) the VM's partition from the very first chunk,
+    /// even when the migration target is an empty shard whose pool
+    /// would otherwise only be partitioned at the flip's adoption.
+    pub fn prepare_adoption(&mut self, vm: usize, sla: Sla) {
+        self.enroll_control_vm(vm, sla);
+    }
+
+    /// Lift a VM out of this machine (the donor half of a
+    /// state-migration flip): removes the slot, pulls every pending
+    /// event the VM owns out of the queue, deregisters it from the
+    /// control plane (dropping its scheduled/staged limit changes) and
+    /// forgets its swap copies. Export the backend entries you still
+    /// need *before* calling this. Returns None for an already-empty
+    /// slot.
+    pub fn extract_vm(&mut self, vm: usize) -> Option<VmImage> {
+        let slot = self.slots[vm].take()?;
+        let events = self.events.extract_if(|e| e.vm_of() == Some(vm));
+        let control = self.control.as_mut().and_then(|cp| cp.deregister(vm));
+        self.backend.forget_vm(vm);
+        Some(VmImage { slot, events, control })
+    }
+
+    /// Implant a migrated VM into the reserved slot (the target half of
+    /// the flip). Its pending events are re-queued at their original
+    /// virtual times shifted by `stop_ns` — the modeled stop-and-copy
+    /// pause — and its per-unit tier map is re-synced from this
+    /// machine's backend (imported pool copies may have been demoted to
+    /// NVMe on arrival). Import the swap copies *before* calling this.
+    pub fn implant_vm(&mut self, slot_id: usize, image: VmImage, stop_ns: Time) {
+        assert!(
+            self.slots[slot_id].is_none(),
+            "implant target slot {slot_id} is occupied"
+        );
+        assert!(
+            self.started,
+            "implant requires a started machine: the migrated events are \
+             the VM's whole schedule, and a later start() would seed a \
+             second one"
+        );
+        let VmImage { mut slot, events, control } = image;
+        if let Mechanism::Sys(mm) = &mut slot.mech {
+            mm.core
+                .resync_backend_tiers(|u| self.backend.tier_of(slot_id, u));
+        }
+        self.slots[slot_id] = Some(slot);
+        for (t, ev) in events {
+            self.events.push(t + stop_ns, ev.with_vm(slot_id));
+        }
+        // A VM the donor never managed stays unmanaged here too.
+        if let Some((name, sla, last_pf)) = control {
+            self.adopt_control_vm(slot_id, name, sla, last_pf);
+        }
     }
 
     /// Schedule a one-shot control-plane limit change at virtual time
@@ -228,11 +391,24 @@ impl Machine {
     pub fn host_resident_bytes(&self) -> u64 {
         self.slots
             .iter()
+            .flatten()
             .map(|s| match &s.mech {
                 Mechanism::Sys(mm) => mm.core.usage_bytes(),
                 Mechanism::Kernel(k, _) => k.usage_bytes(),
             })
             .sum()
+    }
+
+    /// Resident bytes of one VM (0 for an empty/reserved slot) — the
+    /// fleet scheduler's stop-and-copy sizing probe.
+    pub fn vm_resident_bytes(&self, vm: usize) -> u64 {
+        self.slots[vm]
+            .as_ref()
+            .map(|s| match &s.mech {
+                Mechanism::Sys(mm) => mm.core.usage_bytes(),
+                Mechanism::Kernel(k, _) => k.usage_bytes(),
+            })
+            .unwrap_or(0)
     }
 
     /// Σ(resident + compressed-pool) bytes — the occupancy the budget
@@ -249,7 +425,7 @@ impl Machine {
         cp.begin_reports();
         for idx in 0..cp.vms.len() {
             let (vm, sla) = (cp.vms[idx].vm, cp.vms[idx].sla);
-            let slot = &self.slots[vm];
+            let slot = self.slots[vm].as_ref().expect("managed VM has a live slot");
             let (usage, pf, wss_est, limit, unit_bytes, allowance) = match &slot.mech {
                 Mechanism::Sys(mm) => {
                     let wss_units =
@@ -330,7 +506,7 @@ impl Machine {
             .collect();
         let scan_interval = setup.scan_interval.unwrap_or(SEC);
         let content = ContentModel::new(self.content_seed(id), ContentMix::default());
-        self.slots.push(VmSlot {
+        self.slots.push(Some(VmSlot {
             vm,
             mech: setup.mech,
             vcpus,
@@ -343,7 +519,7 @@ impl Machine {
             last_pf_count: 0,
             content,
             scratch: Vec::new(),
-        });
+        }));
         id
     }
 
@@ -355,7 +531,9 @@ impl Machine {
 
     /// Override a VM's guest-content mix (tests / tier experiments).
     pub fn set_content_mix(&mut self, vm: usize, mix: ContentMix) {
-        self.slots[vm].content = ContentModel::new(self.content_seed(vm), mix);
+        let seed = self.content_seed(vm);
+        let slot = self.slots[vm].as_mut().expect("vm slot");
+        slot.content = ContentModel::new(seed, mix);
     }
 
     /// Aggregate storage-backend counters (per-tier hits, occupancy,
@@ -366,6 +544,7 @@ impl Machine {
 
     fn schedule_initial(&mut self) {
         for (vmid, slot) in self.slots.iter().enumerate() {
+            let Some(slot) = slot else { continue };
             for v in 0..slot.vcpus.len() {
                 self.events.push(0, Ev::VcpuRun { vm: vmid, vcpu: v });
             }
@@ -394,6 +573,7 @@ impl Machine {
     fn all_done(&self) -> bool {
         self.slots
             .iter()
+            .flatten()
             .all(|s| s.vcpus.iter().all(|v| v.done))
     }
 
@@ -466,12 +646,14 @@ impl Machine {
             Ev::Metrics { vm } => self.metrics_tick(vm),
             Ev::ControlTick { periodic } => self.control_tick(periodic),
             Ev::KernelResume { vm, vcpu } => {
-                self.slots[vm].vcpus[vcpu].blocked = false;
+                if let Some(slot) = self.slots[vm].as_mut() {
+                    slot.vcpus[vcpu].blocked = false;
+                }
                 self.vcpu_run(vm, vcpu);
             }
             Ev::WorkerStagedDone { vm, worker, unit } => {
                 let now = self.clock;
-                let slot = &mut self.slots[vm];
+                let Some(slot) = self.slots[vm].as_mut() else { return };
                 if let Mechanism::Sys(mm) = &mut slot.mech {
                     let (cost, wake) = mm.core_map_staged(&mut slot.vm, unit, now);
                     mm.swapper.release(worker);
@@ -484,7 +666,7 @@ impl Machine {
 
     fn vcpu_run(&mut self, vmid: usize, vcpu: usize) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         if slot.vcpus[vcpu].done || slot.vcpus[vcpu].blocked {
             return;
         }
@@ -564,7 +746,7 @@ impl Machine {
                 }
             }
         }
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         match &mut slot.mech {
             Mechanism::Sys(mm) => mm.core.counters.work_ns += elapsed,
             Mechanism::Kernel(k, _) => k.counters.work_ns += elapsed,
@@ -594,7 +776,7 @@ impl Machine {
 
     fn fault_deliver(&mut self, vmid: usize) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         let Mechanism::Sys(mm) = &mut slot.mech else { return };
         while let Some(ev) = mm.uffd.poll(now) {
             mm.on_fault(&slot.vm, &ev, now);
@@ -612,7 +794,7 @@ impl Machine {
         // Tier-map updates for *other* VMs whose pool entries a
         // writeback drained (applied after the current slot borrow ends).
         let mut cross_vm_writeback: Vec<(VmId, UnitId)> = Vec::new();
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         let Mechanism::Sys(mm) = &mut slot.mech else { return };
         while let Some(worker) = mm.swapper.claim() {
             match mm.pick_work(now) {
@@ -737,14 +919,16 @@ impl Machine {
             }
         }
         for (wvm, wunit) in cross_vm_writeback {
-            if let Mechanism::Sys(other) = &mut self.slots[wvm].mech {
-                other.core.set_backend_tier(wunit, Some(SwapTier::Nvme));
+            if let Some(s) = self.slots[wvm].as_mut() {
+                if let Mechanism::Sys(other) = &mut s.mech {
+                    other.core.set_backend_tier(wunit, Some(SwapTier::Nvme));
+                }
             }
         }
     }
 
     fn wake_vcpus(&mut self, vmid: usize, wake: Vec<usize>, at: Time) {
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         for v in wake {
             if v >= slot.vcpus.len() {
                 continue;
@@ -761,7 +945,7 @@ impl Machine {
 
     fn worker_map_done(&mut self, vmid: usize, worker: usize, unit: UnitId, from_disk: bool) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         let Mechanism::Sys(mm) = &mut slot.mech else { return };
         let (cost, wake) = mm.finish_swapin(&mut slot.vm, unit, from_disk, now);
         mm.swapper.release(worker);
@@ -775,7 +959,7 @@ impl Machine {
 
     fn worker_out_done(&mut self, vmid: usize, worker: usize, unit: UnitId, wrote: bool) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         let Mechanism::Sys(mm) = &mut slot.mech else { return };
         mm.finish_swapout(&mut slot.vm, unit, wrote, now);
         mm.swapper.release(worker);
@@ -784,7 +968,7 @@ impl Machine {
 
     fn scan_tick(&mut self, vmid: usize) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         // Borrow the host-client bitmap in place and word-clear it after
         // the scan — no per-tick Bitmap allocation.
         let out = self.scanner.scan(&mut slot.vm, Some(&slot.qemu_bits), now);
@@ -834,7 +1018,7 @@ impl Machine {
 
     fn policy_timer(&mut self, vmid: usize) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         if let Mechanism::Sys(mm) = &mut slot.mech {
             mm.on_timer(&slot.vm, now);
             if let Some(req) = mm.core.requested_scan_interval.take() {
@@ -848,7 +1032,7 @@ impl Machine {
 
     fn pool_refill(&mut self, vmid: usize) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         if let Mechanism::Sys(mm) = &mut slot.mech {
             mm.zero_pool.refill(2);
         }
@@ -857,7 +1041,7 @@ impl Machine {
 
     fn metrics_tick(&mut self, vmid: usize) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         let (usage, pf) = match &slot.mech {
             Mechanism::Sys(mm) => (mm.core.usage_bytes(), mm.core.pf_count),
             Mechanism::Kernel(k, _) => {
@@ -930,7 +1114,7 @@ impl Machine {
     /// opens the prefetchers' recovery-mode window on a release.
     fn apply_limit(&mut self, vmid: usize, bytes: Option<u64>, boost_window: Time) {
         let now = self.clock;
-        let slot = &mut self.slots[vmid];
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
         match &mut slot.mech {
             Mechanism::Sys(mm) => {
                 mm.set_memory_limit_with_boost(&slot.vm, bytes, now, boost_window)
@@ -946,7 +1130,10 @@ impl Machine {
     fn collect_results(&mut self) -> Vec<RunResult> {
         let clock = self.clock;
         // Final usage sample so short runs still get a sane average.
-        for slot in self.slots.iter_mut() {
+        // Slots emptied by a state migration produce no row here — the
+        // VM's whole history (counters, series, histogram) moved with
+        // it and is reported by the machine that owns it at the end.
+        for slot in self.slots.iter_mut().flatten() {
             let usage = match &slot.mech {
                 Mechanism::Sys(mm) => mm.core.usage_bytes(),
                 Mechanism::Kernel(k, _) => k.usage_bytes(),
@@ -955,6 +1142,7 @@ impl Machine {
         }
         self.slots
             .iter_mut()
+            .flatten()
             .map(|slot| {
                 let (counters, tlb) = match &slot.mech {
                     Mechanism::Sys(mm) => (mm.core.counters.clone(), slot.vm.tlb_stats()),
@@ -998,7 +1186,7 @@ impl Machine {
     /// Warm-start helper: make gva pages [0, gva_pages) resident and
     /// mapped (guest mapping + EPT leaf + MM/kernel accounting).
     pub fn prime_resident(&mut self, vmid: usize, gva_pages: u64) {
-        let slot = &mut self.slots[vmid];
+        let slot = self.slots[vmid].as_mut().expect("vm slot");
         let uf = slot.vm.unit_frames();
         for g in 0..gva_pages {
             let Some(frame) = slot.vm.ensure_mapped(slot.proc, g) else { continue };
@@ -1029,7 +1217,7 @@ impl Machine {
     /// Warm-start helper: make gva pages [lo, hi) swapped out (content
     /// on the backing store, not mapped).
     pub fn prime_swapped(&mut self, vmid: usize, lo: u64, hi: u64) {
-        let slot = &mut self.slots[vmid];
+        let slot = self.slots[vmid].as_mut().expect("vm slot");
         let uf = slot.vm.unit_frames();
         for g in lo..hi {
             let Some(frame) = slot.vm.ensure_mapped(slot.proc, g) else { continue };
@@ -1054,21 +1242,22 @@ impl Machine {
         }
     }
 
-    /// Direct access to a VM's MM (tests / harness).
+    /// Direct access to a VM's MM (tests / harness; None for kernel
+    /// VMs and for slots emptied by a state migration).
     pub fn mm(&self, vm: usize) -> Option<&Mm> {
-        match &self.slots[vm].mech {
+        match &self.slots[vm].as_ref()?.mech {
             Mechanism::Sys(mm) => Some(mm),
             _ => None,
         }
     }
     pub fn mm_mut(&mut self, vm: usize) -> Option<&mut Mm> {
-        match &mut self.slots[vm].mech {
+        match &mut self.slots[vm].as_mut()?.mech {
             Mechanism::Sys(mm) => Some(mm),
             _ => None,
         }
     }
     pub fn vm_ref(&self, vm: usize) -> &Vm {
-        &self.slots[vm].vm
+        &self.slots[vm].as_ref().expect("vm slot").vm
     }
 }
 
@@ -1240,6 +1429,74 @@ mod tests {
             bm.nvme_io_reqs(),
             bf.nvme_io_reqs()
         );
+    }
+
+    /// A VM lifted out of one machine mid-run and implanted into
+    /// another finishes its workload there, with its swap copies moved
+    /// through the backend export/import path and the donor left empty.
+    #[test]
+    fn extract_implant_moves_a_running_vm_between_machines() {
+        let mut donor = Machine::new(HostConfig { seed: 11, ..Default::default() });
+        let cfg = small_vm_cfg(4096, PageSize::Small);
+        let mm_cfg = MmConfig {
+            memory_limit: Some(512 * 4096), // force swap traffic
+            scan_interval: 50 * MS,
+            ..Default::default()
+        };
+        let ops = 60_000u64;
+        let vmid = donor.sys_vm(
+            cfg,
+            &mm_cfg,
+            vec![Box::new(UniformRandom::new(0, 2048, ops))],
+        );
+        donor.register_control_vm(vmid, "mover".into(), crate::daemon::Sla::Bronze);
+
+        // Run the donor partway: plenty of swapped-out state exists.
+        donor.start();
+        for _ in 0..200_000 {
+            if !donor.step_one() {
+                break;
+            }
+            if donor.mm(vmid).is_some_and(|m| m.core.counters.swapout_ops > 50) {
+                break;
+            }
+        }
+        let flip_at = donor.peek_time().expect("donor still has events");
+        assert!(
+            donor.mm(vmid).unwrap().core.counters.swapout_ops > 0,
+            "scenario never swapped"
+        );
+
+        // Move the swap copies, then the VM itself. The target is
+        // started (empty) first, exactly like a fleet shard: implanted
+        // events are the VM's only schedule — never double-seeded.
+        let mut target = Machine::new(HostConfig { seed: 12, ..Default::default() });
+        target.start();
+        let new_id = target.reserve_slot();
+        for s in donor.backend.list_units(vmid) {
+            let u = donor.backend.export_unit(vmid, s.unit).unwrap();
+            target.backend.import_unit(new_id, u);
+        }
+        let done_before = donor.mm(vmid).unwrap().stats().counters;
+        let image = donor.extract_vm(vmid).expect("vm extractable");
+        assert_eq!(image.name(), Some("mover"));
+        assert!(donor.backend.list_units(vmid).is_empty(), "donor kept copies");
+        assert!(donor.mm(vmid).is_none(), "donor kept the slot");
+        assert!(donor.control().unwrap().vms.is_empty(), "donor kept the record");
+        assert!(donor.peek_time().is_none(), "donor kept the VM's events");
+
+        let stop_ns = 500_000;
+        target.implant_vm(new_id, image, stop_ns);
+        assert_eq!(target.control().unwrap().vm_name(new_id), Some("mover"));
+        assert!(target.peek_time().unwrap() >= flip_at + stop_ns);
+
+        // The target finishes the workload; counters continued, not reset.
+        let res = target.run();
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].work_ops, ops);
+        assert!(res[0].counters.swapout_ops >= done_before.swapout_ops);
+        // Donor's result collection reports nothing for the moved VM.
+        assert!(donor.finish().is_empty());
     }
 
     #[test]

@@ -4,4 +4,4 @@
 
 pub mod machine;
 
-pub use machine::{Machine, Mechanism, RunResult, VmSetup};
+pub use machine::{Machine, Mechanism, RunResult, VmImage, VmSetup};

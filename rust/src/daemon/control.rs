@@ -144,6 +144,27 @@ impl ControlPlane {
         self.vms.push(ManagedVm { vm, name, sla, last_pf: 0 });
     }
 
+    /// Adopt a VM migrated in from another shard: like
+    /// [`ControlPlane::register`], but the fault-delta baseline carries
+    /// over so the first post-flip tick does not see the VM's whole
+    /// fault history as one spike (which would immediately re-trigger
+    /// the rebalancer against the fresh arrival).
+    pub fn adopt(&mut self, vm: usize, name: String, sla: Sla, last_pf: u64) {
+        self.vms.push(ManagedVm { vm, name, sla, last_pf });
+    }
+
+    /// Forget a VM migrated away (the donor side of the flip): drops
+    /// its management record plus any scheduled one-shots and in-flight
+    /// staged releases — the target shard's arbiter owns the VM's limit
+    /// from here on. Returns `(name, sla, pf_baseline)` for the adopt.
+    pub fn deregister(&mut self, vm: usize) -> Option<(String, Sla, u64)> {
+        let idx = self.vms.iter().position(|m| m.vm == vm)?;
+        let m = self.vms.remove(idx);
+        self.sched.retain(|s| s.vm != vm);
+        self.staging.retain(|s| s.vm != vm);
+        Some((m.name, m.sla, m.last_pf))
+    }
+
     pub fn vm_name(&self, vm: usize) -> Option<&str> {
         self.vms.iter().find(|m| m.vm == vm).map(|m| m.name.as_str())
     }
@@ -376,6 +397,34 @@ mod tests {
         cp.grow_budget(128 << 20);
         assert_eq!(cp.cfg.host_budget_bytes, Some(1 << 30));
         assert_eq!(cp.arbitration_budget(), Some(1 << 30));
+    }
+
+    #[test]
+    fn deregister_purges_schedule_and_adopt_carries_pf_baseline() {
+        let mut cp = plane(ArbiterKind::Static, None);
+        cp.schedule(0, 100, Some(1 << 20), false, false);
+        cp.schedule(0, 200, Some(2 << 20), true, true);
+        // Advance the baseline so there is something to carry.
+        cp.begin_reports();
+        cp.push_report(report(0, Some(1 << 20)), 0, true);
+        let (name, sla, last_pf) = cp.deregister(0).expect("vm 0 managed");
+        assert_eq!(name, "vm0");
+        assert_eq!(sla, Sla::Gold);
+        assert_eq!(last_pf, 10);
+        assert!(cp.vms.is_empty());
+        assert_eq!(cp.scheduled_times().count(), 0, "one-shots survived");
+        assert!(cp.deregister(0).is_none(), "double deregister");
+
+        // Adoption on another plane: the first tick's delta counts only
+        // faults since the donor's last tick, not the whole history.
+        let mut target = plane(ArbiterKind::Static, None);
+        target.vms.clear();
+        target.adopt(7, name, sla, last_pf);
+        target.begin_reports();
+        let mut r = report(7, None);
+        r.pf_count = 25;
+        target.push_report(r, 0, true);
+        assert_eq!(target.reports[0].pf_delta, 15);
     }
 
     #[test]

@@ -27,16 +27,48 @@
 //!    and Σ budgets over the fleet is exactly conserved (bytes leaving
 //!    a shard equal bytes arriving — no unit lost or duplicated).
 //!
+//! 3. **VM state migration** ([`crate::config::FleetConfig::state_migration`]):
+//!    when a whole VM is worth moving, the rebalancer migrates *the VM
+//!    itself* instead of leasing budget toward it — engine/MM state,
+//!    policy state, the per-unit tier map, compressed-pool entries and
+//!    NVMe receipts. The transfer is staged **cold-first**, post-copy
+//!    style: while the VM keeps running on the donor, pre-copy ticks
+//!    stage its swapped-out state to the target (NVMe receipts first —
+//!    the coldest bytes — then pool entries, which land in the target's
+//!    SLA partition or demote to NVMe when it is full). Each staged
+//!    unit carries the backend's replacement stamp; a unit rewritten
+//!    after its pre-copy is detected by the stamp mismatch and re-sent.
+//!    When the not-yet-copied remainder is small (or pre-copy stops
+//!    converging), a brief **stop-and-copy flip** moves the hot
+//!    resident set and every stale unit at once: the donor machine
+//!    extracts the VM (slot, pending events, control registration,
+//!    backend copies — [`Machine::extract_vm`]), the target implants it
+//!    with the modeled pause added to its event times
+//!    ([`Machine::implant_vm`]), and the target's control plane /
+//!    arbiter / pool partition adopt it while the donor forgets it —
+//!    the hand-off is atomic at the flip. The PR 4 budget lease is
+//!    reused as the **headroom escrow**: the target's arbitration
+//!    budget is docked by the VM's expected resident arrival
+//!    ([`super::ControlPlane::begin_lease`]) so its fleet sheds ahead
+//!    of the flip, the flip itself is gated on *measured* headroom, and
+//!    the escrow is returned once the VM has landed (budgets never move
+//!    — Σ budgets is trivially conserved and still audited every tick).
+//!
 //! Multi-machine stepping is deterministic: the scheduler merges the
 //! shards' event queues by (virtual time, shard index) — a stable
 //! round-robin interleave in which equal timestamps always resolve
 //! lowest-shard-first — and fires fleet ticks at fixed virtual times
-//! before any shard steps past them.
+//! before any shard steps past them. Because a fleet tick at `now`
+//! precedes every pending event (≥ `now`), the flip can move a VM's
+//! queued events between machines without ever reordering the past.
+
+use std::collections::BTreeMap;
 
 use crate::config::{ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig};
 use crate::coordinator::{Machine, RunResult};
 use crate::metrics::FleetStats;
-use crate::types::{Time, FRAME_BYTES};
+use crate::storage::{SwapBackend, SwapTier};
+use crate::types::{Time, FRAME_BYTES, SEC};
 use crate::workloads::Workload;
 
 use super::arbiter::{Arbiter, HostView};
@@ -99,17 +131,44 @@ struct Migration {
     base_limit: Option<u64>,
 }
 
+/// An in-flight **VM state migration** (see module docs): the whole VM
+/// moves from the pressured shard `from` to the slack shard `to`,
+/// cold-first, with an atomic stop-and-copy flip at the end.
+#[derive(Debug)]
+struct StateMigration {
+    from: usize,
+    to: usize,
+    /// Donor-side machine slot of the migrating VM.
+    vm: usize,
+    /// Target-side slot reserved for the arrival (never reused; left
+    /// empty forever if the migration aborts).
+    reserved: usize,
+    /// Headroom escrow taken on the target's arbitration budget
+    /// (returned at flip or abort; the audited budget never moves).
+    escrow: u64,
+    /// Pre-copied units and the backend stamp each was copied at; a
+    /// donor rewrite bumps the stamp and re-queues the unit.
+    copied: BTreeMap<crate::types::UnitId, u32>,
+    precopy_ticks: u32,
+    /// Consecutive flip attempts blocked on target headroom.
+    stalled: u32,
+}
+
 /// Everything a finished fleet run returns: per-shard per-VM results in
-/// shard order (stats stay on the scheduler).
+/// shard order (stats stay on the scheduler). A VM that migrated
+/// mid-run is reported by the shard that owned it at the end.
 pub type FleetRun = Vec<Vec<RunResult>>;
 
 /// The fleet scheduler (see module docs).
 pub struct FleetScheduler {
     pub cfg: FleetConfig,
     pub shards: Vec<HostShard>,
-    /// Admission log, in admission order.
+    /// Admission log, in admission order. A state migration updates the
+    /// moved VM's record at the flip, so the log always names the one
+    /// shard owning each VM.
     pub placements: Vec<Placement>,
     migrations: Vec<Migration>,
+    state_migrations: Vec<StateMigration>,
     pub stats: FleetStats,
 }
 
@@ -154,6 +213,7 @@ impl FleetScheduler {
             shards,
             placements: vec![],
             migrations: vec![],
+            state_migrations: vec![],
         }
     }
 
@@ -235,6 +295,14 @@ impl FleetScheduler {
             }
             self.shards[idx].machine.step_one();
         }
+        // A state migration still in flight at the horizon aborts
+        // cleanly: the VM never left its donor, the staged copies are
+        // dropped and the escrow returns — end-of-run audits see no
+        // half-moved VM.
+        for idx in (0..self.state_migrations.len()).rev() {
+            self.abort_state_migration(idx);
+        }
+        self.state_migrations.clear();
         // Copy the per-shard invariant tallies out for the test suite.
         for (i, s) in self.shards.iter().enumerate() {
             if let Some(cs) = s.machine.control_stats() {
@@ -267,12 +335,15 @@ impl FleetScheduler {
             .unwrap_or(0)
     }
 
-    /// One fleet tick: advance in-flight migrations chunk by chunk,
-    /// consider starting a new one, audit budget conservation.
+    /// One fleet tick: advance in-flight migrations chunk by chunk
+    /// (budget leases and VM state migrations), consider starting a new
+    /// one, audit budget conservation.
     fn fleet_tick(&mut self, now: Time) {
         self.stats.fleet_ticks += 1;
         self.advance_migrations(now);
-        if self.cfg.migration && self.migrations.len() < self.cfg.max_active_migrations {
+        self.advance_state_migrations(now);
+        let active = self.migrations.len() + self.state_migrations.len();
+        if self.cfg.migration && active < self.cfg.max_active_migrations {
             self.consider_migration();
         }
         let sum: u64 = (0..self.shards.len()).map(|i| self.shard_budget(i)).sum();
@@ -386,28 +457,44 @@ impl FleetScheduler {
         let demand: u64 = reports.iter().map(Arbiter::demand_of).sum();
         let cold: u64 = reports.iter().map(|r| r.cold_estimate_bytes).sum();
         // Hottest eligible VM: max fault-rate delta, ties to the lowest
-        // slot id; `want` is its demand shortfall vs its current limit.
+        // slot id; `deficit` is its demand shortfall vs its current
+        // limit, the rest sizes a potential whole-VM move.
         let hot = reports
             .iter()
             .filter(|r| r.pf_delta >= pf_delta_min)
             .max_by_key(|r| (r.pf_delta, std::cmp::Reverse(r.vm)))
             .map(|r| {
                 let cur = r.limit_bytes.unwrap_or(r.usage_bytes);
-                (r.vm, Arbiter::demand_of(r).saturating_sub(cur))
+                HotVm {
+                    vm: r.vm,
+                    deficit: Arbiter::demand_of(r).saturating_sub(cur),
+                    demand: Arbiter::demand_of(r),
+                    usage: r.usage_bytes,
+                    limit: r.limit_bytes,
+                    inflight: r.inflight_allowance,
+                }
             });
         ShardSnap { usable, demand, cold, hot }
     }
 
     /// Start at most one new migration: the most demand-overloaded
-    /// shard with a fault-spiking VM leases cold memory from the
-    /// slackest feasible shard.
+    /// shard with a fault-spiking VM either ships that VM to the
+    /// slackest shard that can absorb it whole (full state migration,
+    /// when enabled) or leases cold memory from the slackest feasible
+    /// shard (the PR 4 budget lease).
     fn consider_migration(&mut self) {
         let n = self.shards.len();
         if n < 2 {
             return;
         }
         let snaps: Vec<ShardSnap> = (0..n).map(|i| self.snapshot(i)).collect();
-        let busy = |i: usize| self.migrations.iter().any(|m| m.from == i || m.to == i);
+        let busy = |i: usize| {
+            self.migrations.iter().any(|m| m.from == i || m.to == i)
+                || self
+                    .state_migrations
+                    .iter()
+                    .any(|m| m.from == i || m.to == i)
+        };
         // Pressured: Σ demand above the trigger fraction of usable,
         // with an eligible hot VM. Pick the worst ratio, ties low id.
         let pressured = (0..n)
@@ -425,19 +512,39 @@ impl FleetScheduler {
                 (ratio, std::cmp::Reverse(i))
             });
         let Some(src) = pressured else { return };
-        // Donor: stays comfortably feasible after the lease, has cold
-        // slack to shed. Pick the most spare, ties low id.
+        // Spare capacity: how far a shard sits below the donor line.
         let spare_of = |i: usize| -> u64 {
             (snaps[i].usable as u128 * self.cfg.donor_demand_pct as u128 / 100)
                 .saturating_sub(snaps[i].demand as u128) as u64
         };
+        let hot = snaps[src].hot.expect("pressured shard has a hot VM");
+
+        // Full state migration first (when enabled): the slackest shard
+        // that can absorb the VM's *whole* demand and still sit under
+        // the donor line. Moving the VM removes its entire demand from
+        // the pressured shard — strictly stronger relief than any lease
+        // — so it is preferred whenever feasible.
+        if self.cfg.state_migration {
+            let target = (0..n)
+                .filter(|&i| i != src && !busy(i))
+                .filter(|&i| spare_of(i) >= hot.demand)
+                .max_by_key(|&i| (spare_of(i), std::cmp::Reverse(i)));
+            if let Some(dst) = target {
+                self.start_state_migration(src, dst, hot);
+                return;
+            }
+        }
+
+        // Budget lease fallback: a donor stays comfortably feasible
+        // after the lease and has cold slack to shed. Most spare wins,
+        // ties low id.
         let donor = (0..n)
             .filter(|&i| i != src && !busy(i))
             .filter(|&i| spare_of(i) > 0 && snaps[i].cold > 0)
             .max_by_key(|&i| (spare_of(i), std::cmp::Reverse(i)));
         let Some(dst) = donor else { return };
-        let (vm, deficit) = snaps[src].hot.expect("pressured shard has a hot VM");
-        let want = deficit
+        let want = hot
+            .deficit
             .min(self.cfg.migration_max_bytes)
             .min(spare_of(dst))
             .min(snaps[dst].cold);
@@ -452,7 +559,7 @@ impl FleetScheduler {
         self.migrations.push(Migration {
             from: dst,
             to: src,
-            vm,
+            vm: hot.vm,
             total: want,
             moved: 0,
             stalled: 0,
@@ -460,6 +567,267 @@ impl FleetScheduler {
         });
         self.stats.migrations_started += 1;
     }
+
+    /// Begin a full VM state migration `src → dst`: reserve the target
+    /// slot, take the headroom escrow on the target's arbitration
+    /// budget (the resident set that will arrive at the flip, plus the
+    /// configured margin — its fleet starts shedding immediately), and
+    /// enter the pre-copy phase.
+    fn start_state_migration(&mut self, src: usize, dst: usize, hot: HotVm) {
+        // Expected resident arrival: capped by the limit the donor's
+        // arbiter enforces (plus in-flight slack), or current usage for
+        // an unlimited VM. The escrow also covers the flip threshold —
+        // the pool bytes a converged flip may still have to import —
+        // plus a double margin, so the measured-headroom gate is
+        // *strictly* implied by the escrow once the target's fleet has
+        // shed to its escrowed limits: a converged migration cannot
+        // stall indefinitely.
+        let expect_resident = hot.limit.unwrap_or(hot.usage).max(hot.usage) + hot.inflight;
+        let escrow = expect_resident
+            + self.cfg.state_flip_threshold_bytes
+            + 2 * self.cfg.migration_margin_bytes;
+        self.shards[dst]
+            .machine
+            .control_mut()
+            .expect("shard has a control plane")
+            .begin_lease(escrow);
+        let reserved = self.shards[dst].machine.reserve_slot();
+        // Pre-copied pool entries must land in the VM's SLA partition
+        // from the first chunk, not in class 0's — and an empty target
+        // shard's pool must be partitioned *now*, not at the flip.
+        let sla = self
+            .placements
+            .iter()
+            .find(|p| p.shard == src && p.vm == hot.vm)
+            .map(|p| p.sla)
+            .unwrap_or(Sla::Silver);
+        self.shards[dst].machine.prepare_adoption(reserved, sla);
+        self.state_migrations.push(StateMigration {
+            from: src,
+            to: dst,
+            vm: hot.vm,
+            reserved,
+            escrow,
+            copied: BTreeMap::new(),
+            precopy_ticks: 0,
+            stalled: 0,
+        });
+        self.stats.state_migrations_started += 1;
+    }
+
+    /// Advance every in-flight state migration by one fleet tick:
+    /// stage a cold chunk, and once the un-copied remainder is small
+    /// (or pre-copy stops converging), attempt the stop-and-copy flip —
+    /// gated on *measured* target headroom, so Σ(resident + pool) ≤
+    /// budget holds on the target through the hand-off by construction.
+    fn advance_state_migrations(&mut self, _now: Time) {
+        let mut i = 0;
+        while i < self.state_migrations.len() {
+            match self.step_state_migration(i) {
+                StateStep::InFlight => i += 1,
+                StateStep::Done | StateStep::Aborted => {
+                    self.state_migrations.remove(i);
+                }
+            }
+        }
+    }
+
+    fn step_state_migration(&mut self, idx: usize) -> StateStep {
+        let (from, to, vm, reserved) = {
+            let m = &self.state_migrations[idx];
+            (m.from, m.to, m.vm, m.reserved)
+        };
+        // Snapshot the donor's stored units (ascending by unit id).
+        // Nothing steps between here and the flip below, so the listing
+        // stays exact for the whole tick.
+        let listing = self.shards[from].machine.backend.list_units(vm);
+
+        // Pre-copy one chunk: coldest first — NVMe receipts, then pool
+        // entries — skipping units whose copied stamp still matches.
+        let mut chunk = self.cfg.state_chunk_bytes;
+        let mut staged: Vec<crate::types::UnitId> = Vec::new();
+        let mut precopied = 0u64;
+        {
+            let m = &self.state_migrations[idx];
+            let mut pending: Vec<_> = listing
+                .iter()
+                .filter(|s| m.copied.get(&s.unit) != Some(&s.stamp))
+                .collect();
+            pending.sort_by_key(|s| (s.tier == SwapTier::Pool, s.unit));
+            for s in pending {
+                if s.raw_bytes > chunk {
+                    break;
+                }
+                chunk -= s.raw_bytes;
+                precopied += s.raw_bytes;
+                staged.push(s.unit);
+            }
+        }
+        for &unit in &staged {
+            let u = self.shards[from]
+                .machine
+                .backend
+                .export_unit(vm, unit)
+                .expect("listed unit exports");
+            let stamp = u.stamp;
+            self.shards[to].machine.backend.import_unit(reserved, u);
+            self.state_migrations[idx].copied.insert(unit, stamp);
+        }
+        if precopied > 0 {
+            self.stats.state_precopy_bytes += precopied;
+            self.stats.record_transfer(from, to, precopied);
+        }
+        self.state_migrations[idx].precopy_ticks += 1;
+
+        // Remaining un-copied swapped bytes after this tick's staging.
+        let m = &self.state_migrations[idx];
+        let remaining: u64 = listing
+            .iter()
+            .filter(|s| m.copied.get(&s.unit) != Some(&s.stamp))
+            .map(|s| s.raw_bytes)
+            .sum();
+        let converged = remaining <= self.cfg.state_flip_threshold_bytes
+            || m.precopy_ticks >= self.cfg.state_max_precopy_ticks;
+        if !converged {
+            return StateStep::InFlight;
+        }
+
+        // Flip gate: measured target headroom must cover the arriving
+        // resident set plus the pool bytes still to import.
+        let resident = self.shards[from].machine.vm_resident_bytes(vm);
+        let pending_pool: u64 = listing
+            .iter()
+            .filter(|s| m.copied.get(&s.unit) != Some(&s.stamp))
+            .map(|s| s.stored_bytes)
+            .sum();
+        let headroom = self
+            .shard_budget(to)
+            .saturating_sub(self.shards[to].machine.host_occupied_bytes());
+        if headroom < resident + pending_pool + self.cfg.migration_margin_bytes {
+            let m = &mut self.state_migrations[idx];
+            m.stalled += 1;
+            if m.stalled > self.cfg.migration_stall_ticks {
+                return self.abort_state_migration(idx);
+            }
+            return StateStep::InFlight;
+        }
+
+        self.flip_state_migration(idx, listing, resident)
+    }
+
+    /// The stop-and-copy flip: final copy of every stale unit, atomic
+    /// hand-off of the VM (slot + events + control registration), tier
+    /// map re-sync, escrow return, ledger update.
+    fn flip_state_migration(
+        &mut self,
+        idx: usize,
+        listing: Vec<crate::storage::UnitSummary>,
+        resident: u64,
+    ) -> StateStep {
+        let (from, to, vm, reserved, escrow) = {
+            let m = &self.state_migrations[idx];
+            (m.from, m.to, m.vm, m.reserved, m.escrow)
+        };
+        // Final copy: units never staged or rewritten since staging.
+        let mut flip_bytes = 0u64;
+        let stale: Vec<_> = {
+            let m = &self.state_migrations[idx];
+            listing
+                .iter()
+                .filter(|s| m.copied.get(&s.unit) != Some(&s.stamp))
+                .map(|s| (s.unit, s.raw_bytes))
+                .collect()
+        };
+        for &(unit, raw) in &stale {
+            let u = self.shards[from]
+                .machine
+                .backend
+                .export_unit(vm, unit)
+                .expect("listed unit exports");
+            self.shards[to].machine.backend.import_unit(reserved, u);
+            flip_bytes += raw;
+        }
+        // Drop target copies of units the donor no longer stores (the
+        // guest faulted them back in and dirtied them after pre-copy).
+        {
+            let live: std::collections::BTreeSet<_> =
+                listing.iter().map(|s| s.unit).collect();
+            let dead: Vec<_> = self.state_migrations[idx]
+                .copied
+                .keys()
+                .filter(|u| !live.contains(*u))
+                .copied()
+                .collect();
+            for unit in dead {
+                self.shards[to].machine.backend.discard(reserved, unit);
+            }
+        }
+        flip_bytes += resident;
+
+        // The brief pause the VM observes: fixed hand-off overhead plus
+        // the stop-and-copy bytes over the modeled transfer bandwidth.
+        let stop_ns = self.cfg.state_stop_fixed_ns
+            + (flip_bytes as u128 * SEC as u128
+                / self.cfg.state_stop_bytes_per_sec.max(1) as u128) as Time;
+
+        let image = self.shards[from]
+            .machine
+            .extract_vm(vm)
+            .expect("migrating VM occupies its donor slot");
+        // Atomic-handoff audit: the donor must hold nothing of the VM.
+        if !self.shards[from].machine.backend.list_units(vm).is_empty()
+            || self.shards[from].machine.mm(vm).is_some()
+        {
+            self.stats.handoff_violations += 1;
+        }
+        let nominal = image.nominal_bytes();
+        let sla = image.sla().unwrap_or(Sla::Silver);
+        self.shards[to].machine.implant_vm(reserved, image, stop_ns);
+        self.shards[to]
+            .machine
+            .control_mut()
+            .expect("shard has a control plane")
+            .cancel_lease(escrow);
+
+        // Admission bookkeeping and the placement log follow the VM.
+        let pressure = nominal * Sla::Gold.weight() / sla.weight();
+        self.shards[from].committed_bytes -= nominal;
+        self.shards[from].committed_pressure -= pressure;
+        self.shards[to].committed_bytes += nominal;
+        self.shards[to].committed_pressure += pressure;
+        for p in self.placements.iter_mut() {
+            if p.shard == from && p.vm == vm {
+                p.shard = to;
+                p.vm = reserved;
+            }
+        }
+        self.stats.record_transfer(from, to, flip_bytes);
+        self.stats.record_state_flip(from, to, flip_bytes, resident, stop_ns);
+        StateStep::Done
+    }
+
+    /// Abort a state migration that cannot land: the target forgets the
+    /// staged copies and returns the escrow; the VM never stopped
+    /// running on the donor, so nothing else changes.
+    fn abort_state_migration(&mut self, idx: usize) -> StateStep {
+        let m = &self.state_migrations[idx];
+        let (to, reserved, escrow) = (m.to, m.reserved, m.escrow);
+        self.shards[to].machine.backend.forget_vm(reserved);
+        self.shards[to]
+            .machine
+            .control_mut()
+            .expect("shard has a control plane")
+            .cancel_lease(escrow);
+        self.stats.state_migrations_aborted += 1;
+        StateStep::Aborted
+    }
+}
+
+/// Outcome of stepping one state migration at a fleet tick.
+enum StateStep {
+    InFlight,
+    Done,
+    Aborted,
 }
 
 /// Decision inputs for one shard at a fleet tick.
@@ -467,8 +835,23 @@ struct ShardSnap {
     usable: u64,
     demand: u64,
     cold: u64,
-    /// (machine slot id, demand shortfall) of the hottest eligible VM.
-    hot: Option<(usize, u64)>,
+    /// The hottest migration-eligible VM (max fault-rate delta).
+    hot: Option<HotVm>,
+}
+
+/// The fault-spiking VM one migration decision is about: enough of its
+/// report to size either a lease (deficit) or a whole-VM move (demand +
+/// expected resident arrival).
+#[derive(Debug, Clone, Copy)]
+struct HotVm {
+    /// Machine slot id on the pressured shard.
+    vm: usize,
+    /// Demand shortfall vs its current limit (lease sizing).
+    deficit: u64,
+    demand: u64,
+    usage: u64,
+    limit: Option<u64>,
+    inflight: u64,
 }
 
 #[cfg(test)]

@@ -258,12 +258,36 @@ pub fn recovery_release(boost: bool, ops: u64, seed: u64) -> RecoverySummary {
     }
 }
 
+/// Which rebalancing tools one sharded-fleet arm runs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetMode {
+    /// Admission-time placement is final: no cross-host rebalancing.
+    StaticPlacement,
+    /// The PR 4 budget lease only: cold memory's budget moves, the VM
+    /// itself never does.
+    LeaseOnly,
+    /// Full VM state migration, with the lease as fallback when no
+    /// shard can absorb a whole VM.
+    StateMigration,
+}
+
+impl FleetMode {
+    fn label(self) -> &'static str {
+        match self {
+            FleetMode::StaticPlacement => "static-placement",
+            FleetMode::LeaseOnly => "lease-only",
+            FleetMode::StateMigration => "state-migration",
+        }
+    }
+}
+
 /// Per-host outcome of one sharded fleet run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostRow {
     pub host: usize,
     pub vms: usize,
-    /// Audited budget at admission / after the run (migration moves it).
+    /// Audited budget at admission / after the run (a lease moves it; a
+    /// state migration does not).
     pub budget_start: u64,
     pub budget_end: u64,
     pub avg_host_bytes: f64,
@@ -272,6 +296,9 @@ pub struct HostRow {
     pub min_headroom_bytes: i64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    /// Whole VMs this host received / shipped via state migration.
+    pub vms_in: u64,
+    pub vms_out: u64,
     pub majors: u64,
 }
 
@@ -282,7 +309,7 @@ pub struct HostRow {
 pub struct ShardedSummary {
     pub hosts: usize,
     pub vms: usize,
-    pub migrate: bool,
+    pub mode: FleetMode,
     pub per_host: Vec<HostRow>,
     pub total_majors: u64,
     pub total_ops: u64,
@@ -295,6 +322,14 @@ pub struct ShardedSummary {
     pub migrations_completed: u64,
     pub migrations_aborted: u64,
     pub migrated_bytes: u64,
+    /// VM state-migration ledger (zero outside `StateMigration` mode).
+    pub state_migrations_started: u64,
+    pub state_migrations_completed: u64,
+    pub state_migrations_aborted: u64,
+    pub state_precopy_bytes: u64,
+    pub state_flip_bytes: u64,
+    pub state_stop_ns_max: u64,
+    pub handoff_violations: u64,
     pub conservation_violations: u64,
     /// Σ audited budgets after the run (must equal the initial Σ).
     pub budget_total_end: u64,
@@ -308,15 +343,16 @@ pub struct ShardedSummary {
 /// sustained-pressure host), the rest comfortable. Every VM touches a
 /// footprint three times its hot set once, then works in the hot third
 /// — so every shard is limit-bound and holds real cold memory the
-/// rebalancer can lease (the regime where leasing budget *moves*
-/// occupancy instead of inflating it). All VMs are Bronze: 4k units
-/// keep the arbiter's reclaim granularity fine enough that limits bind
-/// tightly on every host. Deterministic in `seed`.
+/// rebalancer can lease or migrate (the regime where moving budget or
+/// VMs *moves* occupancy instead of inflating it). All VMs are Bronze:
+/// 4k units keep the arbiter's reclaim granularity fine enough that
+/// limits bind tightly on every host. `mode` picks the rebalancing
+/// tools. Deterministic in `seed`.
 pub fn run_sharded_fleet(
     hosts: usize,
     per_host: usize,
     ops_per_vm: u64,
-    migrate: bool,
+    mode: FleetMode,
     seed: u64,
 ) -> ShardedSummary {
     let n = hosts * per_host;
@@ -337,7 +373,8 @@ pub fn run_sharded_fleet(
         host_budgets: vec![1 << 40],
         placement: PlacementPolicy::SpreadByFaultRate,
         interval: 50 * MS,
-        migration: migrate,
+        migration: mode != FleetMode::StaticPlacement,
+        state_migration: mode == FleetMode::StateMigration,
         migrate_pf_delta_min: 16,
         pressure_demand_pct: 104,
         donor_demand_pct: 90,
@@ -389,8 +426,9 @@ pub fn run_sharded_fleet(
     // Size each shard's budget from its actually admitted members: the
     // arbiter's own hot-phase demand (WSS + WSS/8) plus the pool
     // reservation and in-flight slack. Host 0: usable ≈ 78% of demand
-    // (sustained pressure); the rest: ≈ 120% — feasible with spare, and
-    // comfortably under the 90% donor-eligibility line.
+    // (sustained pressure); the rest: ≈ 130% — feasible with enough
+    // spare under the 90% donor-eligibility line both to lease from
+    // and to absorb one whole migrated VM.
     let hot_demand = {
         let wss = pages / 3 * FRAME_BYTES;
         wss + wss / 8
@@ -411,7 +449,7 @@ pub fn run_sharded_fleet(
             })
             .sum();
         let demand = hot_demand * members.len() as u64;
-        let pct = if h == 0 { 78 } else { 120 };
+        let pct = if h == 0 { 78 } else { 130 };
         let budget = demand * pct / 100 + pool_cap + inflight;
         budgets[h] = budget;
         f.set_shard_budget(h, budget);
@@ -464,13 +502,15 @@ pub fn run_sharded_fleet(
             min_headroom_bytes: cs.min_headroom_bytes,
             bytes_in: f.stats.bytes_in[h],
             bytes_out: f.stats.bytes_out[h],
+            vms_in: f.stats.vms_migrated_in[h],
+            vms_out: f.stats.vms_migrated_out[h],
             majors,
         });
     }
     ShardedSummary {
         hosts,
         vms: n,
-        migrate,
+        mode,
         per_host,
         total_majors,
         total_ops,
@@ -481,6 +521,13 @@ pub fn run_sharded_fleet(
         migrations_completed: f.stats.migrations_completed,
         migrations_aborted: f.stats.migrations_aborted,
         migrated_bytes: f.stats.migrated_bytes,
+        state_migrations_started: f.stats.state_migrations_started,
+        state_migrations_completed: f.stats.state_migrations_completed,
+        state_migrations_aborted: f.stats.state_migrations_aborted,
+        state_precopy_bytes: f.stats.state_precopy_bytes,
+        state_flip_bytes: f.stats.state_flip_bytes,
+        state_stop_ns_max: f.stats.state_stop_ns_max,
+        handoff_violations: f.stats.handoff_violations,
         conservation_violations: f.stats.conservation_violations,
         budget_total_end: (0..hosts).map(|i| f.shard_budget(i)).sum(),
         budget_total_start,
@@ -493,6 +540,86 @@ pub fn run_sharded_fleet(
 /// overrides via `flexswap fleet --hosts N`).
 pub fn fleet(scale: Scale) -> Vec<Table> {
     fleet_with_hosts(scale, 4)
+}
+
+/// The nightly soak: the sharded lease-vs-state comparison swept over
+/// many seeds at larger scale (`flexswap fleet --hosts 8 --seeds N`).
+/// Kept out of the PR-gating CI path — the `schedule:`-triggered
+/// workflow runs it and uploads the per-seed CSV. Every run must hold
+/// the budget / conservation / atomic-hand-off invariants; migration
+/// activity is reported, not asserted (a seed whose fleet never
+/// pressures a VM is data, not a failure).
+pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64) -> Vec<Table> {
+    let per_host = scale.u(8, 16) as usize;
+    let ops = scale.u(16_000, 48_000);
+    let mut t = Table::new(
+        "fleet soak: per-seed sharded comparison (lease-only vs state-migration)",
+        &[
+            "seed",
+            "config",
+            "hosts",
+            "vms",
+            "major_faults",
+            "saved_pct",
+            "migrations",
+            "state_migrations",
+            "precopy_mb",
+            "flip_mb",
+            "stop_max_us",
+            "p99_stall_us",
+            "runtime_ms",
+        ],
+    );
+    for seed in 0..seeds {
+        for mode in [FleetMode::LeaseOnly, FleetMode::StateMigration] {
+            let label = mode.label();
+            let s = run_sharded_fleet(hosts, per_host, ops, mode, seed);
+            assert_eq!(
+                s.total_ops,
+                s.vms as u64 * ops,
+                "soak seed {seed} {label}: fleet incomplete"
+            );
+            assert_eq!(
+                s.conservation_violations, 0,
+                "soak seed {seed} {label}: budgets drifted"
+            );
+            assert_eq!(
+                s.handoff_violations, 0,
+                "soak seed {seed} {label}: non-atomic hand-off"
+            );
+            for h in &s.per_host {
+                assert_eq!(
+                    h.budget_exceeded_ticks, 0,
+                    "soak seed {seed} {label}: host {} over budget",
+                    h.host
+                );
+            }
+            t.row(vec![
+                seed.to_string(),
+                label.into(),
+                s.hosts.to_string(),
+                s.vms.to_string(),
+                s.total_majors.to_string(),
+                format!("{:.1}", s.saved_frac * 100.0),
+                format!(
+                    "{}/{}/{}",
+                    s.migrations_started, s.migrations_completed, s.migrations_aborted
+                ),
+                format!(
+                    "{}/{}/{}",
+                    s.state_migrations_started,
+                    s.state_migrations_completed,
+                    s.state_migrations_aborted
+                ),
+                format!("{:.1}", s.state_precopy_bytes as f64 / 1e6),
+                format!("{:.1}", s.state_flip_bytes as f64 / 1e6),
+                format!("{:.0}", s.state_stop_ns_max as f64 / 1e3),
+                format!("{:.0}", s.p99_stall_ns as f64 / 1e3),
+                format!("{:.0}", s.runtime_ns as f64 / 1e6),
+            ]);
+        }
+    }
+    vec![t]
 }
 
 pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
@@ -569,12 +696,16 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
         ]);
     }
 
-    // Sharded fleet: static placement vs the fault-rate-delta
-    // rebalancer, one host budget-starved (PR 4 extension).
+    // Sharded fleet: static placement vs the budget-lease rebalancer
+    // vs full VM state migration, one host budget-starved (PR 4/5
+    // extension). The state-migration arm must beat lease-only on
+    // major faults or on saved memory — moving the whole VM removes
+    // its entire demand from the pressured host, where a lease can
+    // only move as much budget as donors can prove free.
     let per_host = scale.u(8, 32) as usize;
     let shard_ops = scale.u(16_000, 28_000);
     let mut t3 = Table::new(
-        "fleet sharding: fault-rate-delta rebalancer vs static placement",
+        "fleet sharding: lease-only vs full VM state migration vs static placement",
         &[
             "config",
             "host",
@@ -585,15 +716,23 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
             "budget_exceeded_ticks",
             "migr_in_mb",
             "migr_out_mb",
+            "vms_in/out",
             "major_faults",
             "migrations",
-            "migrated_mb",
+            "state_migrations",
+            "stop_max_us",
             "saved_pct",
             "p99_stall_us",
         ],
     );
-    for (label, migrate) in [("static-placement", false), ("rebalancer", true)] {
-        let s = run_sharded_fleet(hosts, per_host, shard_ops, migrate, 7);
+    let mut lease: Option<ShardedSummary> = None;
+    for mode in [
+        FleetMode::StaticPlacement,
+        FleetMode::LeaseOnly,
+        FleetMode::StateMigration,
+    ] {
+        let label = mode.label();
+        let s = run_sharded_fleet(hosts, per_host, shard_ops, mode, 7);
         assert_eq!(
             s.total_ops,
             s.vms as u64 * shard_ops,
@@ -607,11 +746,34 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
             s.budget_total_end, s.budget_total_start,
             "{label}: Σ budgets drifted"
         );
+        assert_eq!(s.handoff_violations, 0, "{label}: non-atomic VM hand-off");
         for h in &s.per_host {
             assert_eq!(
                 h.budget_exceeded_ticks, 0,
                 "{label}: host {} exceeded its budget ({} min headroom)",
                 h.host, h.min_headroom_bytes
+            );
+        }
+        // The acceptance comparison is pinned to the canonical 4-host
+        // topology (the CI smoke and the test suite's
+        // `state_migration_beats_lease_only` both run it there). Other
+        // `--hosts` values are exploratory: a shape where no flip can
+        // even occur (e.g. `--hosts 1`) must report, not abort.
+        if mode == FleetMode::StateMigration && hosts == 4 {
+            let l = lease.as_ref().expect("lease arm ran first");
+            assert!(
+                s.state_migrations_completed >= 1,
+                "{label}: no VM ever migrated: {s:?}"
+            );
+            assert!(
+                s.total_majors < l.total_majors
+                    || s.avg_fleet_bytes < l.avg_fleet_bytes,
+                "{label}: full migration beat lease-only on neither majors \
+                 ({} vs {}) nor occupancy ({:.0} vs {:.0})",
+                s.total_majors,
+                l.total_majors,
+                s.avg_fleet_bytes,
+                l.avg_fleet_bytes
             );
         }
         for h in &s.per_host {
@@ -625,7 +787,9 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
                 h.budget_exceeded_ticks.to_string(),
                 format!("{:.1}", h.bytes_in as f64 / 1e6),
                 format!("{:.1}", h.bytes_out as f64 / 1e6),
+                format!("{}/{}", h.vms_in, h.vms_out),
                 h.majors.to_string(),
+                String::new(),
                 String::new(),
                 String::new(),
                 String::new(),
@@ -646,15 +810,29 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
                 .to_string(),
             format!("{:.1}", s.migrated_bytes as f64 / 1e6),
             format!("{:.1}", s.migrated_bytes as f64 / 1e6),
+            format!(
+                "{}/{}",
+                s.per_host.iter().map(|h| h.vms_in).sum::<u64>(),
+                s.per_host.iter().map(|h| h.vms_out).sum::<u64>()
+            ),
             s.total_majors.to_string(),
             format!(
                 "{}/{}/{}",
                 s.migrations_started, s.migrations_completed, s.migrations_aborted
             ),
-            format!("{:.1}", s.migrated_bytes as f64 / 1e6),
+            format!(
+                "{}/{}/{}",
+                s.state_migrations_started,
+                s.state_migrations_completed,
+                s.state_migrations_aborted
+            ),
+            format!("{:.0}", s.state_stop_ns_max as f64 / 1e3),
             format!("{:.1}", s.saved_frac * 100.0),
             format!("{:.0}", s.p99_stall_ns as f64 / 1e3),
         ]);
+        if mode == FleetMode::LeaseOnly {
+            lease = Some(s);
+        }
     }
     vec![t, t2, t3]
 }

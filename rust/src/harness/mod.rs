@@ -111,8 +111,8 @@ pub fn registry() -> Vec<Experiment> {
         },
         Experiment {
             id: "fleet",
-            title: "Fleet control plane: mixed-SLA VMs under closed-loop limits, plus a 4-host sharded fleet (PR 3/4 extension)",
-            expectation: "per-host budget never exceeded at any control tick and Σ budgets conserved under migration; closed-loop beats static limits on memory saved and/or p99 stall; the fault-rate-delta rebalancer cuts total major faults on the pressure-skewed 4-host fleet without losing Σ saved memory",
+            title: "Fleet control plane: mixed-SLA VMs under closed-loop limits, plus a 4-host sharded fleet with budget leases and live VM state migration (PR 3/4/5 extension)",
+            expectation: "per-host budget never exceeded at any control tick — mid-migration included — and Σ budgets conserved; closed-loop beats static limits on memory saved and/or p99 stall; the lease rebalancer cuts total major faults on the pressure-skewed 4-host fleet without losing Σ saved memory; full VM state migration beats lease-only on majors or occupancy, with atomic hand-off at every flip",
             run: fleet::fleet,
         },
         Experiment {
@@ -170,10 +170,25 @@ pub fn run_fleet_with_hosts(scale: Scale, hosts: usize) -> String {
     let tables = fleet::fleet_with_hosts(scale, hosts);
     let header = format!(
         "## Fleet control plane ({hosts} host shards)\n\n*Expectation:* \
-         per-host budget held at every tick, Σ budgets conserved under \
-         migration, rebalancer cuts major faults on the pressured host\n\n"
+         per-host budget held at every tick (mid-migration included), \
+         Σ budgets conserved, rebalancer cuts major faults on the \
+         pressured host, full VM migration beats lease-only\n\n"
     );
     emit_tables("fleet", header, &tables)
+}
+
+/// The nightly fleet soak (`flexswap fleet --hosts N --seeds K`): the
+/// sharded comparison swept over `seeds` seeds, CSV per seed under
+/// `results/fleet_soak_*.csv`. Scheduled CI runs this off the
+/// PR-gating path.
+pub fn run_fleet_soak(scale: Scale, hosts: usize, seeds: u64) -> String {
+    let tables = fleet::fleet_soak(scale, hosts, seeds);
+    let header = format!(
+        "## Fleet soak ({hosts} host shards × {seeds} seeds)\n\n*Expectation:* \
+         every seed holds the budget / conservation / atomic-hand-off \
+         invariants; migration activity is reported per seed\n\n"
+    );
+    emit_tables("fleet_soak", header, &tables)
 }
 
 #[cfg(test)]

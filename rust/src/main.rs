@@ -5,10 +5,11 @@
 //!   flexswap fig9 [--full]        # run one experiment
 //!   flexswap fleet [--full]       # control-plane fleet (incl. 4-host shards)
 //!   flexswap fleet --hosts 4      # sharded fleet with an explicit shard count
+//!   flexswap fleet --hosts 8 --seeds 6   # nightly soak: many seeds, CSV per seed
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
 
-use flexswap::harness::{registry, run_by_id, run_fleet_with_hosts, Scale};
+use flexswap::harness::{registry, run_by_id, run_fleet_soak, run_fleet_with_hosts, Scale};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -26,8 +27,25 @@ fn main() {
             }
         }
     });
+    // `--seeds K`: run the fleet soak (per-seed sharded comparison, the
+    // nightly job's entry point) instead of the single-seed experiment.
+    let seeds = args.iter().position(|a| a == "--seeds").map(|i| {
+        match args.get(i + 1).and_then(|v| v.parse::<u64>().ok()) {
+            Some(s) if s > 0 => s,
+            _ => {
+                eprintln!(
+                    "--seeds needs a positive integer (e.g. `flexswap fleet --hosts 8 --seeds 6`)"
+                );
+                std::process::exit(2);
+            }
+        }
+    });
 
     if cmd == "fleet" {
+        if let Some(k) = seeds {
+            println!("{}", run_fleet_soak(scale, hosts.unwrap_or(4), k));
+            return;
+        }
         if let Some(h) = hosts {
             println!("{}", run_fleet_with_hosts(scale, h));
             return;

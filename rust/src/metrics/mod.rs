@@ -201,6 +201,29 @@ pub struct FleetStats {
     /// Per-shard `budget_exceeded_ticks`, copied out of each shard's
     /// [`ControlStats`] when the run finishes (must all stay 0).
     pub budget_exceeded_ticks: Vec<u64>,
+
+    // ---- VM state-migration ledger (full VM moves, not budget) ----
+    /// Full VM state migrations started / flipped / aborted.
+    pub state_migrations_started: u64,
+    pub state_migrations_completed: u64,
+    pub state_migrations_aborted: u64,
+    /// Raw bytes staged cold-first (pool entries + NVMe receipts copied
+    /// while the VM kept running on the donor).
+    pub state_precopy_bytes: u64,
+    /// Raw bytes moved inside the stop-and-copy window (hot resident
+    /// set + entries re-dirtied after their pre-copy).
+    pub state_flip_bytes: u64,
+    /// Portion of `state_flip_bytes` that was the resident set.
+    pub state_flip_resident_bytes: u64,
+    /// Σ and max modeled stop-and-copy pause observed by migrated VMs.
+    pub state_stop_ns_total: Time,
+    pub state_stop_ns_max: Time,
+    /// Flips after which the donor still held state for the VM (must
+    /// stay 0 — the atomic-handoff invariant).
+    pub handoff_violations: u64,
+    /// Per-shard whole-VM arrivals / departures.
+    pub vms_migrated_in: Vec<u64>,
+    pub vms_migrated_out: Vec<u64>,
 }
 
 impl FleetStats {
@@ -211,8 +234,28 @@ impl FleetStats {
             bytes_in: vec![0; hosts],
             bytes_out: vec![0; hosts],
             budget_exceeded_ticks: vec![0; hosts],
+            vms_migrated_in: vec![0; hosts],
+            vms_migrated_out: vec![0; hosts],
             ..Default::default()
         }
+    }
+
+    /// Record one completed stop-and-copy flip of a whole VM.
+    pub fn record_state_flip(
+        &mut self,
+        from: usize,
+        to: usize,
+        flip_bytes: u64,
+        resident_bytes: u64,
+        stop_ns: Time,
+    ) {
+        self.state_migrations_completed += 1;
+        self.state_flip_bytes += flip_bytes;
+        self.state_flip_resident_bytes += resident_bytes;
+        self.state_stop_ns_total += stop_ns;
+        self.state_stop_ns_max = self.state_stop_ns_max.max(stop_ns);
+        self.vms_migrated_out[from] += 1;
+        self.vms_migrated_in[to] += 1;
     }
 
     /// Record one chunk handed from shard `from` to shard `to`.
@@ -423,6 +466,21 @@ mod tests {
         assert_eq!(s.conservation_violations, 0);
         s.audit_budgets(999);
         assert_eq!(s.conservation_violations, 1);
+    }
+
+    #[test]
+    fn fleet_stats_state_flip_ledger() {
+        let mut s = FleetStats::new(2, 1000);
+        s.record_state_flip(0, 1, 500, 300, 2_000);
+        s.record_state_flip(1, 0, 100, 100, 5_000);
+        assert_eq!(s.state_migrations_completed, 2);
+        assert_eq!(s.state_flip_bytes, 600);
+        assert_eq!(s.state_flip_resident_bytes, 400);
+        assert_eq!(s.state_stop_ns_total, 7_000);
+        assert_eq!(s.state_stop_ns_max, 5_000);
+        assert_eq!(s.vms_migrated_out, vec![1, 1]);
+        assert_eq!(s.vms_migrated_in, vec![1, 1]);
+        assert_eq!(s.handoff_violations, 0);
     }
 
     #[test]

@@ -357,6 +357,17 @@ impl EngineCore {
         }
     }
 
+    /// Rebuild the whole backend-tier mirror from an authoritative
+    /// probe (VM state migration: after the implant, the target
+    /// backend is the authority — imported pool copies may have been
+    /// demoted to NVMe on arrival, and policies must not keep routing
+    /// on the donor's stale map).
+    pub fn resync_backend_tiers(&mut self, tier_of: impl Fn(UnitId) -> Option<SwapTier>) {
+        for u in 0..self.backend_tier.len() as UnitId {
+            self.set_backend_tier(u, tier_of(u));
+        }
+    }
+
     /// Planned usage if every queued request were processed: the paper's
     /// "correct ratio of swap-in and swap-out requests" invariant.
     pub fn planned_usage(&self) -> i64 {
@@ -1095,6 +1106,24 @@ mod tests {
             Some(WorkOutcome::Drop { .. }) => {} // clean elision also fine
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn resync_backend_tiers_overwrites_stale_mirror() {
+        let mut m = mm(4, None);
+        m.core.set_backend_tier(0, Some(SwapTier::Pool));
+        m.core.set_backend_tier(1, Some(SwapTier::Nvme));
+        // Authority: unit 0 was demoted on import, unit 2 appeared,
+        // unit 1 vanished.
+        m.core.resync_backend_tiers(|u| match u {
+            0 => Some(SwapTier::Nvme),
+            2 => Some(SwapTier::Pool),
+            _ => None,
+        });
+        assert_eq!(m.core.swap_tier(0), Some(SwapTier::Nvme));
+        assert_eq!(m.core.swap_tier(1), None);
+        assert_eq!(m.core.swap_tier(2), Some(SwapTier::Pool));
+        assert_eq!(m.core.swap_tier(3), None);
     }
 
     #[test]

@@ -329,6 +329,40 @@ mod tests {
         assert_eq!(evicted, n, "drain did not reach every unit");
     }
 
+    /// Pins the documented out-of-band nuance (see module docs and the
+    /// ROADMAP note): a unit made Resident *without* a touch
+    /// notification is invisible to the incremental list — even when it
+    /// is the globally oldest — and only re-enters eviction order at
+    /// the rebuild fallback, once the list has no eligible unit left.
+    /// Every engine path routes through `Mm::note_touch`, so this can
+    /// only happen to direct state pokes; this test keeps the behavior
+    /// from regressing silently in either direction.
+    #[test]
+    fn out_of_band_resident_units_only_reenter_at_rebuild_fallback() {
+        let mut core = EngineCore::new(3, 4096, None);
+        let mut r = LruReclaimer::new();
+        for (u, t) in [(0usize, 10u64), (1, 20)] {
+            core.states[u] = UnitState::Resident;
+            core.last_touch[u] = t;
+            r.touch(u as UnitId, t);
+        }
+        // Out-of-band poke: Resident and globally oldest, no touch.
+        core.states[2] = UnitState::Resident;
+        core.last_touch[2] = 5;
+        // The incremental list serves its known units first; unit 2
+        // stays invisible despite being the LRU-oldest.
+        assert_eq!(r.victim(&core, 100), Some(0));
+        core.want_out.set(0);
+        assert_eq!(r.victim(&core, 100), Some(1));
+        core.want_out.set(1);
+        assert_eq!(r.rankings, 0, "rebuilt while the list still had units");
+        // Only the rebuild fallback discovers it.
+        assert_eq!(r.victim(&core, 100), Some(2));
+        assert_eq!(r.rankings, 1, "unit 2 re-entered without a rebuild");
+        core.want_out.set(2);
+        assert_eq!(r.victim(&core, 100), None);
+    }
+
     /// Randomized oracle: 10k mixed touch/reclaim/lock/swap events; the
     /// incremental list must produce exactly the old sort-based victim
     /// order. Event times are strictly increasing (as simulation time

@@ -72,6 +72,26 @@ impl<E> EventQueue<E> {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Remove every pending event matching `pred` and return them
+    /// sorted by `(time, scheduling order)` — the exact order they
+    /// would have popped in. Kept events retain their original
+    /// sequence numbers, so their relative FIFO tie order is
+    /// unchanged (the VM state-migration flip moves one VM's events
+    /// to another machine without perturbing the rest).
+    pub fn extract_if(&mut self, mut pred: impl FnMut(&E) -> bool) -> Vec<(Time, E)> {
+        let drained = std::mem::take(&mut self.heap).into_vec();
+        let mut out: Vec<Entry<E>> = Vec::new();
+        for Reverse(e) in drained {
+            if pred(&e.ev) {
+                out.push(e);
+            } else {
+                self.heap.push(Reverse(e));
+            }
+        }
+        out.sort_by_key(|e| (e.at, e.seq));
+        out.into_iter().map(|e| (e.at, e.ev)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -99,6 +119,22 @@ mod tests {
         for i in 0..100 {
             assert_eq!(q.pop(), Some((5, i)));
         }
+    }
+
+    #[test]
+    fn extract_if_pops_matching_in_order_and_keeps_ties() {
+        let mut q = EventQueue::new();
+        q.push(10, 1);
+        q.push(5, 2);
+        q.push(5, 3);
+        q.push(7, 4);
+        q.push(5, 5);
+        let odd = q.extract_if(|&e| e % 2 == 1);
+        assert_eq!(odd, vec![(5, 3), (5, 5), (10, 1)]);
+        // Kept events pop in the original tie order.
+        assert_eq!(q.pop(), Some((5, 2)));
+        assert_eq!(q.pop(), Some((7, 4)));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -42,6 +42,7 @@
 
 use crate::hw::Nvme;
 use crate::sim::Rng;
+use crate::storage::codec::Compressed;
 use crate::types::{Time, UnitId, VmId};
 
 /// Token identifying an in-flight I/O (paired with its completion event).
@@ -150,6 +151,34 @@ impl TierMetrics {
     }
 }
 
+/// Lightweight listing of one stored unit (no payload): what the fleet
+/// scheduler's VM state migration iterates when staging cold transfers.
+/// The `stamp` is the backend's per-entry replacement generation — a
+/// pre-copied unit whose stamp no longer matches was rewritten on the
+/// donor and must be re-copied at the stop-and-copy flip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnitSummary {
+    pub unit: UnitId,
+    pub stamp: u32,
+    pub tier: SwapTier,
+    /// Raw (uncompressed) length — the bytes a migration transfers.
+    pub raw_bytes: u64,
+    /// Pool bytes the stored image occupies (0 on the NVMe tier).
+    pub stored_bytes: u64,
+}
+
+/// A self-contained exported swap copy of one unit, portable between
+/// backends (VM state migration). Carries the actual page image so the
+/// hand-off is content-preserving, plus the donor-side stamp for the
+/// pre-copy invalidation check.
+#[derive(Debug, Clone)]
+pub struct PortableUnit {
+    pub unit: UnitId,
+    pub stamp: u32,
+    pub tier: SwapTier,
+    pub img: Compressed,
+}
+
 /// Swap storage behind the Swapper workers. See the module docs for the
 /// ordering / idempotence / fallthrough contract.
 pub trait SwapBackend {
@@ -207,6 +236,49 @@ pub trait SwapBackend {
     /// Compressed-pool bytes currently held by a partition class
     /// (0 for backends without partitions).
     fn class_pool_bytes(&self, _class: u8) -> u64 {
+        0
+    }
+
+    // ---- VM state migration (fleet scheduler hand-off) ----
+    //
+    // Contract: `list_units` is a cheap, payload-free snapshot in
+    // ascending unit order; `export_unit` clones one unit's copy
+    // (non-destructive — the donor keeps serving faults until the
+    // flip); `import_unit` places an exported copy under the target's
+    // VM id, demoting a pool-tier image to NVMe when the target pool /
+    // class quota cannot absorb it (returns where it landed);
+    // `forget_vm` drops every copy a VM left behind, releasing pool
+    // space (the donor side of the atomic hand-off). Imported entries
+    // are immediately readable (any writeback serialization was the
+    // donor's; the transfer itself is accounted by the migration
+    // ledger, not by backend timing).
+
+    /// Snapshot of every stored unit of a VM, ascending by unit id.
+    fn list_units(&self, _vm: VmId) -> Vec<UnitSummary> {
+        Vec::new()
+    }
+
+    /// Clone one unit's stored copy for transfer (None if absent).
+    fn export_unit(&self, _vm: VmId, _unit: UnitId) -> Option<PortableUnit> {
+        None
+    }
+
+    /// Place an exported copy under `vm`, replacing any previous copy.
+    /// Returns the tier that actually absorbed it. Backends that can
+    /// receive migrations MUST override this: the default refuses
+    /// (panics) rather than silently dropping a migrated VM's swap
+    /// copy and reporting success.
+    fn import_unit(&mut self, _vm: VmId, u: PortableUnit) -> SwapTier {
+        panic!(
+            "SwapBackend::import_unit not implemented by this backend; \
+             refusing to drop the migrated copy of unit {}",
+            u.unit
+        );
+    }
+
+    /// Drop every stored copy of `vm` (releasing pool space). Returns
+    /// how many entries were dropped.
+    fn forget_vm(&mut self, _vm: VmId) -> usize {
         0
     }
 }

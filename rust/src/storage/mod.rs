@@ -61,7 +61,9 @@ pub mod content;
 pub mod locks;
 pub mod tiered;
 
-pub use backend::{IoReceipt, IoToken, SwapBackend, SwapTier, TierHint, TierMetrics};
+pub use backend::{
+    IoReceipt, IoToken, PortableUnit, SwapBackend, SwapTier, TierHint, TierMetrics, UnitSummary,
+};
 pub use codec::{compress, decompress, is_zero_page, Compressed};
 pub use content::{ContentClass, ContentMix, ContentModel};
 pub use locks::LockBitmap;

@@ -31,7 +31,9 @@ use std::collections::VecDeque;
 use crate::config::{SwCost, TierConfig};
 use crate::hw::{IoKind, Nvme};
 use crate::sim::Rng;
-use crate::storage::backend::{IoReceipt, IoToken, SwapBackend, SwapTier, TierHint, TierMetrics};
+use crate::storage::backend::{
+    IoReceipt, IoToken, PortableUnit, SwapBackend, SwapTier, TierHint, TierMetrics, UnitSummary,
+};
 use crate::storage::codec::{self, Compressed};
 use crate::types::{Time, UnitId, VmId, FRAME_BYTES};
 
@@ -449,6 +451,87 @@ impl SwapBackend for TieredBackend {
     fn class_pool_bytes(&self, class: u8) -> u64 {
         self.class_bytes.get(class as usize).copied().unwrap_or(0)
     }
+
+    fn list_units(&self, vm: VmId) -> Vec<UnitSummary> {
+        let Some(store) = self.stores.get(vm) else { return Vec::new() };
+        store
+            .iter()
+            .enumerate()
+            .filter_map(|(u, e)| {
+                e.as_ref().map(|e| UnitSummary {
+                    unit: u as UnitId,
+                    stamp: e.stamp,
+                    tier: e.tier,
+                    raw_bytes: e.img.raw_len() as u64,
+                    stored_bytes: if e.tier == SwapTier::Pool {
+                        e.img.stored_bytes()
+                    } else {
+                        0
+                    },
+                })
+            })
+            .collect()
+    }
+
+    fn export_unit(&self, vm: VmId, unit: UnitId) -> Option<PortableUnit> {
+        self.entry(vm, unit).map(|e| PortableUnit {
+            unit,
+            stamp: e.stamp,
+            tier: e.tier,
+            img: e.img.clone(),
+        })
+    }
+
+    fn import_unit(&mut self, vm: VmId, u: PortableUnit) -> SwapTier {
+        self.remove_entry(vm, u.unit);
+        let stored = u.img.stored_bytes();
+        let class = self.class_of(vm);
+        let (quota, _, _) = self.class_limits(class);
+        // Pool copies stay pooled only while the target has room;
+        // otherwise they land on NVMe (the migration modeled the
+        // arrival as a writeback — no drain is triggered here, so one
+        // import can never evict a resident class's entries).
+        let tier = if u.tier == SwapTier::Pool
+            && self.cfg.pool_enabled()
+            && self.metrics.pool_bytes + stored <= self.cfg.pool_capacity_bytes
+            && self.class_bytes[class] + stored <= quota
+        {
+            SwapTier::Pool
+        } else {
+            SwapTier::Nvme
+        };
+        let stamp = self.next_stamp;
+        self.next_stamp = self.next_stamp.wrapping_add(1);
+        let is_zero = matches!(u.img, Compressed::Zero { .. });
+        *self.slot_mut(vm, u.unit) = Some(Entry {
+            img: u.img,
+            tier,
+            stamp,
+            nvme_ready_at: 0,
+            class: class as u8,
+        });
+        if tier == SwapTier::Pool {
+            self.metrics.pool_bytes += stored;
+            self.class_bytes[class] += stored;
+            self.metrics.pool_peak_bytes =
+                self.metrics.pool_peak_bytes.max(self.metrics.pool_bytes);
+            if !is_zero {
+                self.drain_fifo[class].push_back((vm, u.unit, stamp));
+            }
+        }
+        tier
+    }
+
+    fn forget_vm(&mut self, vm: VmId) -> usize {
+        let Some(store) = self.stores.get(vm) else { return 0 };
+        let units: Vec<UnitId> = (0..store.len() as UnitId)
+            .filter(|&u| store[u as usize].is_some())
+            .collect();
+        for &u in &units {
+            self.remove_entry(vm, u);
+        }
+        units.len()
+    }
 }
 
 #[cfg(test)]
@@ -812,7 +895,8 @@ mod tests {
         // class 1 down to 2 pages (25% of 8) before inserting.
         let mut wb = vec![];
         for u in 0..5u64 {
-            let r = b.write(1, u, &random_page(4096, 100 + u), TierHint::Pool, u * 1000, &mut n, &mut rng);
+            let page = random_page(4096, 100 + u);
+            let r = b.write(1, u, &page, TierHint::Pool, u * 1000, &mut n, &mut rng);
             if !r.writeback.is_empty() {
                 wb = r.writeback;
             }
@@ -854,6 +938,74 @@ mod tests {
         b.write(3, 1, &random_page(4096, 1), TierHint::Pool, 0, &mut n, &mut rng);
         assert_eq!(b.class_pool_bytes(0), b.metrics().pool_bytes);
         assert_eq!(b.class_pool_bytes(2), 0);
+    }
+
+    // ---- VM state migration: export / import / forget ----
+
+    /// Export from one backend, import into another: content survives
+    /// the hand-off, the donor's copies are released by `forget_vm`,
+    /// and pool occupancy accounting follows the entries.
+    #[test]
+    fn export_import_roundtrips_content_across_backends() {
+        let (mut donor, mut n, mut rng) = setup(TierConfig::default());
+        let zero = vec![0u8; 4096];
+        let patt = pattern_page(4096, 0x5A);
+        let rand = random_page(4096, 77);
+        donor.write(0, 1, &zero, TierHint::Auto, 0, &mut n, &mut rng);
+        donor.write(0, 2, &patt, TierHint::Auto, 0, &mut n, &mut rng);
+        donor.write(0, 3, &rand, TierHint::Auto, 0, &mut n, &mut rng); // NVMe reject
+        let listing = donor.list_units(0);
+        assert_eq!(listing.len(), 3);
+        assert!(listing.windows(2).all(|w| w[0].unit < w[1].unit));
+
+        let (mut target, mut n2, mut rng2) = setup(TierConfig::default());
+        for s in &listing {
+            let u = donor.export_unit(0, s.unit).expect("listed unit exports");
+            assert_eq!(u.stamp, s.stamp);
+            let tier = target.import_unit(5, u);
+            assert_eq!(tier, s.tier, "tier preserved when the pool has room");
+        }
+        assert_eq!(donor.forget_vm(0), 3);
+        assert_eq!(donor.metrics().pool_bytes, 0);
+        assert!(donor.list_units(0).is_empty());
+
+        let mut out = Vec::new();
+        target.read(5, 2, 4096, &mut out, 100, &mut n2, &mut rng2);
+        assert_eq!(out, patt);
+        target.read(5, 3, 4096, &mut out, 200, &mut n2, &mut rng2);
+        assert_eq!(out, rand);
+        target.read(5, 1, 4096, &mut out, 300, &mut n2, &mut rng2);
+        assert_eq!(out, zero);
+    }
+
+    /// A pool-tier import that does not fit the target's quota is
+    /// demoted to NVMe instead of evicting resident entries.
+    #[test]
+    fn import_demotes_to_nvme_when_pool_has_no_room() {
+        let (mut donor, mut n, mut rng) = setup(TierConfig::default());
+        donor.write(0, 1, &pattern_page(4096, 1), TierHint::Pool, 0, &mut n, &mut rng);
+        let u = donor.export_unit(0, 1).unwrap();
+        let (mut target, mut n2, mut rng2) = setup(TierConfig {
+            pool_capacity_bytes: 2, // nothing fits
+            ..TierConfig::default()
+        });
+        assert_eq!(target.import_unit(0, u), SwapTier::Nvme);
+        assert_eq!(target.metrics().pool_bytes, 0);
+        let mut out = Vec::new();
+        target.read(0, 1, 4096, &mut out, 0, &mut n2, &mut rng2);
+        assert_eq!(out, pattern_page(4096, 1));
+    }
+
+    /// A rewrite after export changes the stamp — the pre-copy
+    /// invalidation signal the migration flip keys on.
+    #[test]
+    fn rewrite_invalidates_exported_stamp() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(0, 1, &pattern_page(4096, 1), TierHint::Pool, 0, &mut n, &mut rng);
+        let before = b.export_unit(0, 1).unwrap().stamp;
+        b.write(0, 1, &pattern_page(4096, 2), TierHint::Pool, 10, &mut n, &mut rng);
+        let after = b.list_units(0)[0].stamp;
+        assert_ne!(before, after);
     }
 
     #[test]

@@ -9,6 +9,9 @@ use flexswap::coordinator::Machine;
 use flexswap::daemon::{Arbiter, Daemon, Sla, VmRegistration, VmReport};
 use flexswap::harness::fleet::{recovery_release, run_fleet};
 use flexswap::sim::Rng;
+// Trait in scope for the `machine.backend.*` probes below (latent PR 3
+// omission, surfaced by the first toolchain-bearing CI run).
+use flexswap::storage::SwapBackend;
 use flexswap::types::MS;
 use flexswap::workloads::UniformRandom;
 

@@ -1,11 +1,16 @@
-//! Fleet-scheduler invariant/property suite (PR 4): across ≥40 seeds
-//! the sharded control plane must (a) hold every shard's budget at
-//! every control tick, (b) never split a VM across shards, (c) be
-//! bit-identical for the same seed, and (d) conserve migrated bytes —
-//! bytes leaving a shard equal bytes arriving, Σ budgets constant.
-//! Plus: the proportional-share arbiter against a brute-force reference
-//! solver (the PR 1 LRU-oracle pattern), the recovery-mode window
-//! regression, and the rebalancer-beats-static acceptance.
+//! Fleet-scheduler invariant/property suite (PR 4, extended in PR 5):
+//! across ≥40 seeds the sharded control plane must (a) hold every
+//! shard's budget at every control tick — including mid-migration,
+//! (b) never split a VM across shards outside an in-flight migration
+//! window (atomic hand-off at the flip), (c) be bit-identical for the
+//! same seed, and (d) conserve migrated bytes — bytes leaving a shard
+//! equal bytes arriving, Σ budgets constant. PR 5 extends the sweep to
+//! runs with completed **VM state migrations** (the whole VM moves,
+//! cold-first, stop-and-copy flip). Plus: the proportional-share
+//! arbiter against a brute-force reference solver (the PR 1
+//! LRU-oracle pattern), the recovery-mode window regression, the
+//! rebalancer-beats-static acceptance and the full-migration-beats-
+//! lease acceptance.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -16,7 +21,7 @@ use flexswap::config::{
 };
 use flexswap::coordinator::{Machine, Mechanism, VmSetup};
 use flexswap::daemon::{Arbiter, FleetScheduler, FleetVmSpec, Sla, VmReport};
-use flexswap::harness::fleet::run_sharded_fleet;
+use flexswap::harness::fleet::{run_sharded_fleet, FleetMode, ShardedSummary};
 use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
 use flexswap::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
 use flexswap::sim::Rng;
@@ -94,6 +99,44 @@ fn assert_fleet_invariants(f: &FleetScheduler, label: &str) {
     let bytes_out: u64 = f.stats.bytes_out.iter().sum();
     assert_eq!(bytes_in, bytes_out, "{label}: migration bytes not conserved");
     assert_eq!(bytes_in, f.stats.migrated_bytes, "{label}: transfer ledger drift");
+    // Atomic hand-off: no flip ever left VM state behind on the donor,
+    // and whole-VM arrivals balance departures.
+    assert_eq!(f.stats.handoff_violations, 0, "{label}: non-atomic hand-off");
+    assert_eq!(
+        f.stats.vms_migrated_in.iter().sum::<u64>(),
+        f.stats.vms_migrated_out.iter().sum::<u64>(),
+        "{label}: whole-VM ledger drift"
+    );
+    assert_eq!(
+        f.stats.vms_migrated_in.iter().sum::<u64>(),
+        f.stats.state_migrations_completed,
+        "{label}: state-migration count drift"
+    );
+}
+
+/// The summary-level version of the same checks (harness scenarios).
+fn assert_summary_invariants(s: &ShardedSummary, label: &str) {
+    assert_eq!(s.conservation_violations, 0, "{label}: budgets drifted");
+    assert_eq!(
+        s.budget_total_end, s.budget_total_start,
+        "{label}: Σ budgets changed"
+    );
+    assert_eq!(s.handoff_violations, 0, "{label}: non-atomic hand-off");
+    for h in &s.per_host {
+        assert_eq!(
+            h.budget_exceeded_ticks, 0,
+            "{label}: host {} exceeded its budget ({} min headroom)",
+            h.host, h.min_headroom_bytes
+        );
+    }
+    let b_in: u64 = s.per_host.iter().map(|h| h.bytes_in).sum();
+    let b_out: u64 = s.per_host.iter().map(|h| h.bytes_out).sum();
+    assert_eq!(b_in, b_out, "{label}: migration bytes not conserved");
+    assert_eq!(b_in, s.migrated_bytes, "{label}: transfer ledger drift");
+    let v_in: u64 = s.per_host.iter().map(|h| h.vms_in).sum();
+    let v_out: u64 = s.per_host.iter().map(|h| h.vms_out).sum();
+    assert_eq!(v_in, v_out, "{label}: whole-VM ledger drift");
+    assert_eq!(v_in, s.state_migrations_completed, "{label}: flip count drift");
 }
 
 // ---------------------------------------------------------------------
@@ -130,6 +173,10 @@ fn run_random_fleet(seed: u64) -> (FleetScheduler, u64, u64) {
         placement,
         interval: 20 * MS,
         migration: true,
+        // A quarter of the random fleets also arm full VM migration:
+        // their tight random budgets mostly exercise the infeasible /
+        // abort paths, which must hold the invariants too.
+        state_migration: seed % 4 == 3,
         migrate_pf_delta_min: 8,
         pressure_demand_pct: 102,
         donor_demand_pct: 90,
@@ -200,41 +247,55 @@ fn run_random_fleet(seed: u64) -> (FleetScheduler, u64, u64) {
     (f, done_ops, expected_ops)
 }
 
-/// The ≥40-seed sweep: half the seeds run the pressure-skewed harness
-/// scenario (migration on/off alternating), half run the randomized
-/// fleets with arbiter-kind and placement cycling. Invariants (a), (b)
-/// and (d) must hold on every one.
+/// The ≥40-seed sweep: odd seeds run the randomized fleets with
+/// arbiter-kind / placement / state-migration cycling; even seeds run
+/// the pressure-skewed harness scenario — `seed % 8 == 0` at the scale
+/// where full VM state migration triggers (every such run must
+/// complete ≥ 1 flip), the rest alternating lease-only and static.
+/// Invariants (a), (b) and (d) must hold on every one, mid-migration
+/// ticks included.
 #[test]
 fn invariants_hold_across_forty_seeds() {
     for seed in 0..40u64 {
-        if seed % 2 == 0 {
-            // Harness scenario, shrunk: 4 hosts × 3 VMs.
-            let migrate = seed % 4 == 0;
-            let s = run_sharded_fleet(4, 3, 6_000, migrate, seed);
+        if seed % 8 == 0 {
+            // Full state migration at trigger scale: 4 hosts × 8 VMs,
+            // host 0 pressure-starved.
+            let s = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, seed);
+            assert_eq!(
+                s.total_ops,
+                s.vms as u64 * 12_000,
+                "seed {seed}: sharded fleet incomplete"
+            );
+            assert_summary_invariants(&s, &format!("seed {seed} (state)"));
+            assert!(
+                s.state_migrations_completed >= 1,
+                "seed {seed}: no state migration completed: {s:?}"
+            );
+            assert!(
+                s.state_stop_ns_max > 0,
+                "seed {seed}: flip recorded no stop time"
+            );
+        } else if seed % 2 == 0 {
+            // Harness scenario, shrunk: 4 hosts × 3 VMs, lease/static.
+            let mode = if seed % 8 == 2 {
+                FleetMode::LeaseOnly
+            } else {
+                FleetMode::StaticPlacement
+            };
+            let s = run_sharded_fleet(4, 3, 6_000, mode, seed);
             assert_eq!(
                 s.total_ops,
                 s.vms as u64 * 6_000,
                 "seed {seed}: sharded fleet incomplete"
             );
-            for h in &s.per_host {
-                assert_eq!(
-                    h.budget_exceeded_ticks, 0,
-                    "seed {seed}: host {} exceeded its budget ({} min headroom)",
-                    h.host, h.min_headroom_bytes
-                );
-            }
-            assert_eq!(s.conservation_violations, 0, "seed {seed}: budgets drifted");
-            assert_eq!(
-                s.budget_total_end, s.budget_total_start,
-                "seed {seed}: Σ budgets changed"
-            );
-            let b_in: u64 = s.per_host.iter().map(|h| h.bytes_in).sum();
-            let b_out: u64 = s.per_host.iter().map(|h| h.bytes_out).sum();
-            assert_eq!(b_in, b_out, "seed {seed}: migration bytes not conserved");
-            assert_eq!(b_in, s.migrated_bytes, "seed {seed}: transfer ledger drift");
-            if !migrate {
+            assert_summary_invariants(&s, &format!("seed {seed}"));
+            if mode == FleetMode::StaticPlacement {
                 assert_eq!(s.migrated_bytes, 0, "seed {seed}: static arm migrated");
             }
+            assert_eq!(
+                s.state_migrations_started, 0,
+                "seed {seed}: lease arm moved a VM"
+            );
         } else {
             let (f, done, expected) = run_random_fleet(seed);
             assert_eq!(done, expected, "seed {seed}: random fleet incomplete");
@@ -249,15 +310,23 @@ fn invariants_hold_across_forty_seeds() {
 /// CSV is a pure function of the summary, the CSV is identical too.
 #[test]
 fn same_seed_four_host_fleet_is_bit_identical() {
-    let a = run_sharded_fleet(4, 8, 10_000, true, 42);
-    let b = run_sharded_fleet(4, 8, 10_000, true, 42);
+    let a = run_sharded_fleet(4, 8, 10_000, FleetMode::LeaseOnly, 42);
+    let b = run_sharded_fleet(4, 8, 10_000, FleetMode::LeaseOnly, 42);
     assert_eq!(a, b, "same-seed sharded fleet runs diverged");
     assert_eq!(a.hosts, 4);
     assert_eq!(a.vms, 32);
     // And a second seed on the static arm, for the no-migration path.
-    let c = run_sharded_fleet(4, 4, 6_000, false, 9);
-    let d = run_sharded_fleet(4, 4, 6_000, false, 9);
+    let c = run_sharded_fleet(4, 4, 6_000, FleetMode::StaticPlacement, 9);
+    let d = run_sharded_fleet(4, 4, 6_000, FleetMode::StaticPlacement, 9);
     assert_eq!(c, d, "same-seed static-placement runs diverged");
+    // The full state-migration path — pre-copy staging, stop-and-copy
+    // flip, event hand-off — must be bit-identical too: the whole
+    // summary (including the stop-time and byte ledgers) compares
+    // equal, so the experiment CSV is identical.
+    let e = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, 42);
+    let g = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, 42);
+    assert_eq!(e, g, "same-seed state-migration runs diverged");
+    assert!(e.state_migrations_completed >= 1, "nothing migrated: {e:?}");
 }
 
 /// Acceptance: on the pressure-skewed fleet, the fault-rate-delta
@@ -267,8 +336,8 @@ fn same_seed_four_host_fleet_is_bit_identical() {
 /// limit-bound; 0.5% covers measurement noise).
 #[test]
 fn rebalancer_beats_static_placement() {
-    let st = run_sharded_fleet(4, 8, 16_000, false, 7);
-    let rb = run_sharded_fleet(4, 8, 16_000, true, 7);
+    let st = run_sharded_fleet(4, 8, 16_000, FleetMode::StaticPlacement, 7);
+    let rb = run_sharded_fleet(4, 8, 16_000, FleetMode::LeaseOnly, 7);
     assert_eq!(st.total_ops, rb.total_ops, "arms did different work");
     assert_eq!(st.migrated_bytes, 0);
     assert!(
@@ -292,6 +361,50 @@ fn rebalancer_beats_static_placement() {
         rb.per_host[0].budget_end > rb.per_host[0].budget_start,
         "host 0 received no budget: {:?}",
         rb.per_host[0]
+    );
+}
+
+/// Acceptance (PR 5): on the same pressure-skewed fleet, **full VM
+/// state migration** completes at least one flip and beats the
+/// lease-only rebalancer on total major faults or on fleet occupancy —
+/// moving the whole VM removes its entire demand from the starved
+/// host, where a lease can only move what donors prove free. Both arms
+/// must hold every invariant; the state arm's budgets only move if its
+/// lease *fallback* fired (Σ is conserved either way).
+#[test]
+fn state_migration_beats_lease_only() {
+    let lease = run_sharded_fleet(4, 8, 16_000, FleetMode::LeaseOnly, 7);
+    let state = run_sharded_fleet(4, 8, 16_000, FleetMode::StateMigration, 7);
+    assert_eq!(lease.total_ops, state.total_ops, "arms did different work");
+    assert_summary_invariants(&lease, "lease arm");
+    assert_summary_invariants(&state, "state arm");
+    assert!(
+        state.state_migrations_completed >= 1 && state.state_flip_bytes > 0,
+        "no VM ever moved: {state:?}"
+    );
+    // The flip pause is the brief stop-and-copy, not a stall epoch:
+    // bounded by the fixed overhead plus the whole VM over the modeled
+    // link (64MB at 10GB/s ≈ 6.4ms ≫ any real flip here).
+    assert!(
+        state.state_stop_ns_max > 0 && state.state_stop_ns_max < 50_000_000,
+        "implausible stop time: {}",
+        state.state_stop_ns_max
+    );
+    // The pressured host shipped at least one VM away.
+    assert!(
+        state.per_host[0].vms_out >= 1,
+        "host 0 kept all its VMs: {:?}",
+        state.per_host[0]
+    );
+    assert!(
+        state.total_majors < lease.total_majors
+            || state.avg_fleet_bytes < lease.avg_fleet_bytes,
+        "full migration beat lease-only on neither majors ({} vs {}) nor \
+         occupancy ({:.0} vs {:.0})",
+        state.total_majors,
+        lease.total_majors,
+        state.avg_fleet_bytes,
+        lease.avg_fleet_bytes
     );
 }
 
