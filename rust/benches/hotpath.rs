@@ -224,6 +224,79 @@ fn main() {
         }));
     }
 
+    // Fleet execution-engine scaling: events/sec of the sharded fleet at
+    // 2..64 hosts, sequential merge loop vs parallel epoch engine (PR 6).
+    // One timed run per (engine, host-count): `iters` is the total event
+    // count (engine-independent for the same seed — the equivalence gate
+    // pins that) and `mean_ns` is wall nanoseconds per event, so the
+    // seq/par ratio at a host count is the parallel speedup. Tracked as
+    // advisory series in `ci/bench_guard.py` (wall-clock scaling depends
+    // on the runner's core count).
+    {
+        use flexswap::config::{FleetConfig, HostConfig, PlacementPolicy};
+        use flexswap::daemon::{FleetScheduler, FleetVmSpec, Sla};
+        use flexswap::types::{MS, SEC};
+        use flexswap::workloads::UniformRandom;
+        use std::time::Instant;
+
+        let run_fleet = |hosts: usize, parallel: bool| -> BenchResult {
+            let mut f = FleetScheduler::new(
+                &HostConfig { seed: 11, ..Default::default() },
+                FleetConfig {
+                    hosts,
+                    host_budgets: vec![24 << 20],
+                    placement: PlacementPolicy::SpreadByFaultRate,
+                    interval: 5 * MS,
+                    max_time: 60 * SEC,
+                    parallel,
+                    workers: None,
+                    ..Default::default()
+                },
+            );
+            for i in 0..hosts * 2 {
+                f.admit(FleetVmSpec {
+                    name: format!("vm{i}"),
+                    sla: Sla::Bronze,
+                    frames: 2048,
+                    vcpus: 1,
+                    workloads: vec![Box::new(UniformRandom::new(0, 1024, 4_000))],
+                    initial_limit_bytes: None,
+                    mm: None,
+                });
+            }
+            let t0 = Instant::now();
+            let _ = f.run();
+            let wall_ns = t0.elapsed().as_nanos() as f64;
+            let events = f.events_handled().max(1);
+            let mean = wall_ns / events as f64;
+            BenchResult {
+                name: format!(
+                    "fleet_scale {} {hosts} hosts",
+                    if parallel { "par" } else { "seq" }
+                ),
+                iters: events,
+                mean_ns: mean,
+                p50_ns: mean as u64,
+                p99_ns: mean as u64,
+            }
+        };
+
+        println!("\n-- fleet_scale (events/sec, seq vs par) --");
+        for hosts in [2usize, 4, 8, 16, 32, 64] {
+            let seq = run_fleet(hosts, false);
+            let par = run_fleet(hosts, true);
+            println!(
+                "{:2} hosts: seq {:>12.0} ev/s | par {:>12.0} ev/s | speedup {:.2}x",
+                hosts,
+                seq.ops_per_sec(),
+                par.ops_per_sec(),
+                seq.mean_ns / par.mean_ns
+            );
+            results.push(seq);
+            results.push(par);
+        }
+    }
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .map(|p| p.join("BENCH_hotpath.json"))

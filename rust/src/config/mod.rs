@@ -321,6 +321,17 @@ pub struct FleetConfig {
     pub control: ControlConfig,
     /// Virtual-time horizon for [`crate::daemon::FleetScheduler::run`].
     pub max_time: Time,
+    /// Parallel epoch engine (default): between consecutive fleet
+    /// ticks every live shard drains its queue on a worker thread,
+    /// joining at the tick barrier. `false` runs the sequential
+    /// `(time, shard index)` merge — the correctness oracle the
+    /// equivalence suite compares against (`--sequential` on the CLI).
+    /// Output is byte-identical either way.
+    pub parallel: bool,
+    /// Worker-thread cap for the parallel engine; `None` uses
+    /// `std::thread::available_parallelism`. Any value yields the same
+    /// output (thread-count independence is a gated test).
+    pub workers: Option<usize>,
 }
 
 impl Default for FleetConfig {
@@ -348,6 +359,8 @@ impl Default for FleetConfig {
             fit_overcommit_pct: 140,
             control: ControlConfig::default(),
             max_time: 600 * SEC,
+            parallel: true,
+            workers: None,
         }
     }
 }

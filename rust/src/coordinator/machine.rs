@@ -205,6 +205,9 @@ pub struct Machine {
     /// Whether `start()` has seeded the initial events (set once; the
     /// fleet scheduler starts machines explicitly and then steps them).
     started: bool,
+    /// Events handled so far (the fleet_scale bench's events/sec
+    /// numerator; identical between engines for the same seed).
+    pub events_handled: u64,
     /// The in-simulation control plane (None until installed: a
     /// machine without one runs no control ticks at all).
     control: Option<ControlPlane>,
@@ -226,6 +229,7 @@ impl Machine {
             max_time: 600 * SEC,
             metrics_interval: 20 * MS,
             started: false,
+            events_handled: 0,
             control: None,
         }
     }
@@ -603,7 +607,39 @@ impl Machine {
         }
         self.clock = t;
         self.handle(ev);
+        self.events_handled += 1;
         true
+    }
+
+    /// Drain this machine's queue up to virtual-time `bound`
+    /// (**exclusive**): handles every pending event with `t < bound`
+    /// and `t <= max_time`, stopping early once all vCPUs are done.
+    /// Returns the number of events handled.
+    ///
+    /// This is the fleet scheduler's epoch primitive. Its semantics
+    /// deliberately mirror the sequential `(time, shard index)` merge
+    /// loop so the parallel engine is byte-identical to it:
+    /// * `t < bound` is strict — a fleet tick scheduled *at* `bound`
+    ///   fires before any event at that timestamp (the merge loop fires
+    ///   ticks `while next_tick <= t`);
+    /// * the bound check peeks and never pops, so an over-horizon event
+    ///   survives for the next epoch ([`Machine::step_one`] would
+    ///   consume it);
+    /// * a machine whose vCPUs all finished abandons its still-re-arming
+    ///   periodic events (`ScanTick`/`Metrics`/...), exactly as the
+    ///   merge loop's `done()` filter does.
+    pub fn run_until(&mut self, bound: Time) -> u64 {
+        let mut handled = 0u64;
+        while !self.done() {
+            match self.events.peek_time() {
+                Some(t) if t < bound && t <= self.max_time => {
+                    self.step_one();
+                    handled += 1;
+                }
+                _ => break,
+            }
+        }
+        handled
     }
 
     /// All vCPUs of all VMs finished their workloads.
@@ -1532,5 +1568,39 @@ mod tests {
         let f4k = run(PageSize::Small);
         let f2m = run(PageSize::Huge);
         assert!(f2m * 10 < f4k, "4k {f4k} vs 2m {f2m}");
+    }
+
+    /// `run_until` sliced at arbitrary epoch bounds is the same
+    /// computation as `run()`: identical per-VM results and identical
+    /// event count. The slicing grid (3ms) is deliberately off every
+    /// periodic cadence in the machine so bounds land mid-stream.
+    #[test]
+    fn run_until_slices_match_run() {
+        let build = || {
+            let mut m = Machine::new(HostConfig { seed: 21, ..Default::default() });
+            let cfg = small_vm_cfg(2048, PageSize::Small);
+            m.sys_vm(
+                cfg,
+                &MmConfig {
+                    memory_limit: Some(512 * 4096),
+                    ..Default::default()
+                },
+                vec![Box::new(UniformRandom::new(0, 1024, 15_000))],
+            );
+            m
+        };
+        let mut a = build();
+        let ra = a.run();
+
+        let mut b = build();
+        b.start();
+        let mut bound = 0;
+        while !b.done() && bound <= 600 * SEC {
+            bound += 3 * MS;
+            b.run_until(bound);
+        }
+        let rb = b.finish();
+        assert_eq!(a.events_handled, b.events_handled, "event counts diverged");
+        assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "results diverged");
     }
 }

@@ -61,6 +61,14 @@
 //! before any shard steps past them. Because a fleet tick at `now`
 //! precedes every pending event (≥ `now`), the flip can move a VM's
 //! queued events between machines without ever reordering the past.
+//!
+//! Shards interact **only** at fleet ticks, so the tick boundary is
+//! also a parallelism barrier: the default engine runs every live
+//! shard's inter-tick events on its own worker thread
+//! ([`Machine::run_until`] under `std::thread::scope`), joins at the
+//! tick, and produces byte-identical output to the sequential merge —
+//! see ARCHITECTURE.md "Parallel fleet execution" and the gated
+//! equivalence tests in `tests/fleet_scheduler.rs`.
 
 use std::collections::BTreeMap;
 
@@ -269,13 +277,41 @@ impl FleetScheduler {
             .expect("fleet has shards")
     }
 
-    /// Run the whole fleet to completion (or the horizon): merge the
-    /// shards' event queues by (time, shard index) and fire fleet ticks
-    /// at fixed virtual times before any shard steps past them.
+    /// Run the whole fleet to completion (or the horizon). Two engines
+    /// produce byte-identical output (a gated equivalence test):
+    ///
+    /// * **Parallel epochs** ([`FleetConfig::parallel`], the default) —
+    ///   between consecutive fleet ticks every live shard drains its
+    ///   own queue up to the tick bound ([`Machine::run_until`]) on a
+    ///   scoped worker thread; the threads join at the barrier, then
+    ///   the tick runs sequentially in shard-id order. Sound because
+    ///   shards share *no* mutable state between ticks — every
+    ///   cross-shard effect (lease chunk, pre-copy, flip, audit) is
+    ///   applied inside `fleet_tick`, single-threaded.
+    /// * **Sequential merge** (the PR 4 oracle, `--sequential`) — one
+    ///   global `(time, shard index)` merge of the shards' queues,
+    ///   firing fleet ticks at fixed virtual times before any shard
+    ///   steps past them.
+    ///
+    /// Both end at the same **final barrier**: in-flight state
+    /// migrations abort cleanly and the per-shard tallies are copied
+    /// out, one shared code path.
     pub fn run(&mut self) -> FleetRun {
         for s in &mut self.shards {
             s.machine.start();
         }
+        if self.cfg.parallel {
+            self.run_epochs();
+        } else {
+            self.run_merge();
+        }
+        self.final_barrier();
+        self.shards.iter_mut().map(|s| s.machine.finish()).collect()
+    }
+
+    /// The sequential `(time, shard index)` merge loop — the
+    /// correctness oracle the parallel engine is gated against.
+    fn run_merge(&mut self) {
         let mut next_tick = self.cfg.interval;
         loop {
             let next = self
@@ -295,11 +331,80 @@ impl FleetScheduler {
             }
             self.shards[idx].machine.step_one();
         }
-        // A state migration still in flight at the horizon aborts
-        // cleanly: the VM never left its donor, the staged copies are
-        // dropped and the escrow returns — end-of-run audits see no
-        // half-moved VM.
-        for idx in (0..self.state_migrations.len()).rev() {
+    }
+
+    /// The parallel epoch loop. Each iteration: find the earliest
+    /// pending event over live shards (exactly the merge loop's key,
+    /// minus the shard index — only the time gates anything here), fire
+    /// every fleet tick due at or before it, then drain all shards up
+    /// to the next unfired tick bound concurrently. After an epoch no
+    /// live shard holds an event below the bound, so the next iteration
+    /// fires the tick at that bound before anything at or past it runs
+    /// — the same tick/event interleave the merge loop produces.
+    fn run_epochs(&mut self) {
+        let mut next_tick = self.cfg.interval;
+        loop {
+            let next = self
+                .shards
+                .iter()
+                .filter(|s| !s.machine.done())
+                .filter_map(|s| s.machine.peek_time())
+                .min();
+            let Some(t) = next else { break };
+            if t > self.cfg.max_time {
+                break;
+            }
+            while next_tick <= t {
+                let now = next_tick;
+                self.fleet_tick(now);
+                next_tick += self.cfg.interval;
+            }
+            self.run_epoch(next_tick);
+        }
+    }
+
+    /// Drain every shard's queue up to `bound` (exclusive), each shard
+    /// on its own worker. Shard state is disjoint between ticks, so the
+    /// partition of shards onto workers — and the worker count itself —
+    /// cannot affect any shard's state at the barrier.
+    fn run_epoch(&mut self, bound: Time) {
+        let workers = self.worker_count().min(self.shards.len());
+        if workers <= 1 {
+            for s in &mut self.shards {
+                s.machine.run_until(bound);
+            }
+            return;
+        }
+        let per = self.shards.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            for chunk in self.shards.chunks_mut(per) {
+                scope.spawn(move || {
+                    for s in chunk {
+                        s.machine.run_until(bound);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Worker threads for the parallel engine ([`FleetConfig::workers`];
+    /// default: all cores).
+    fn worker_count(&self) -> usize {
+        self.cfg.workers.unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        })
+    }
+
+    /// The final barrier, shared by both engines. A state migration
+    /// still in flight at the horizon aborts cleanly: the VM never left
+    /// its donor, the staged copies are dropped and the escrow returns
+    /// — end-of-run audits see no half-moved VM. Abort order is
+    /// irrelevant to the audited totals (each abort touches only its
+    /// own migration's target shard, and the fleet's `busy()` admission
+    /// keeps in-flight targets disjoint — pinned by a test), so aborts
+    /// run in plain ascending index order.
+    fn final_barrier(&mut self) {
+        for idx in 0..self.state_migrations.len() {
             self.abort_state_migration(idx);
         }
         self.state_migrations.clear();
@@ -309,7 +414,12 @@ impl FleetScheduler {
                 self.stats.budget_exceeded_ticks[i] = cs.budget_exceeded_ticks;
             }
         }
-        self.shards.iter_mut().map(|s| s.machine.finish()).collect()
+    }
+
+    /// Σ events handled across all shards (the fleet_scale bench's
+    /// events/sec numerator; engine-independent for the same seed).
+    pub fn events_handled(&self) -> u64 {
+        self.shards.iter().map(|s| s.machine.events_handled).sum()
     }
 
     /// Re-shape shard `i`'s budget before the run starts (experiments
@@ -978,5 +1088,135 @@ mod tests {
             f.shard_budget(0) + f.shard_budget(1),
             f.stats.total_budget_bytes
         );
+    }
+
+    /// The two engines step identical schedules: same event counts,
+    /// same fleet-tick count, same budgets — on the small in-module
+    /// fleet (the byte-level `ShardedSummary` equivalence sweep lives
+    /// in `tests/fleet_scheduler.rs`).
+    #[test]
+    fn epoch_engine_matches_merge_on_small_fleet() {
+        let build = |parallel: bool| {
+            let mut f = FleetScheduler::new(
+                &HostConfig::default(),
+                FleetConfig {
+                    hosts: 3,
+                    host_budgets: vec![32 << 20],
+                    placement: PlacementPolicy::SpreadByFaultRate,
+                    interval: crate::types::MS * 5,
+                    parallel,
+                    ..Default::default()
+                },
+            );
+            for i in 0..6 {
+                f.admit(spec(i, Sla::Bronze, 2048, 3_000));
+            }
+            f
+        };
+        let mut seq = build(false);
+        let rs = seq.run();
+        let mut par = build(true);
+        let rp = par.run();
+        assert_eq!(seq.events_handled(), par.events_handled());
+        assert_eq!(seq.stats.fleet_ticks, par.stats.fleet_ticks);
+        for i in 0..3 {
+            assert_eq!(seq.shard_budget(i), par.shard_budget(i));
+            assert_eq!(
+                seq.shards[i].machine.events_handled,
+                par.shards[i].machine.events_handled,
+                "shard {i} stepped a different schedule"
+            );
+        }
+        assert_eq!(format!("{rs:?}"), format!("{rp:?}"), "results diverged");
+    }
+
+    /// The final barrier aborts in-flight state migrations in ascending
+    /// index order; the pre-parallel engine aborted in descending
+    /// order. Both must leave identical audited totals — each abort
+    /// touches only its own migration's disjoint target shard — so the
+    /// shared final barrier cannot have changed any outcome.
+    #[test]
+    fn abort_order_cannot_affect_audited_totals() {
+        use crate::storage::TierHint;
+
+        let build = || {
+            let mut f = FleetScheduler::new(
+                &HostConfig::default(),
+                cfg(3, PlacementPolicy::SpreadByFaultRate),
+            );
+            // Two in-flight migrations with disjoint targets (exactly
+            // what the rebalancer's busy() admission guarantees):
+            // 0 → 1 and 0 → 2, each with a staged pre-copy and an
+            // escrow the abort must return.
+            for to in [1usize, 2] {
+                let escrow = (4 + to as u64) << 20;
+                f.shards[to]
+                    .machine
+                    .control_mut()
+                    .unwrap()
+                    .begin_lease(escrow);
+                let reserved = f.shards[to].machine.reserve_slot();
+                let m = &mut f.shards[to].machine;
+                let mut rng = crate::sim::Rng::new(to as u64);
+                m.backend.write(
+                    reserved,
+                    7,
+                    &[1u8; 4096],
+                    TierHint::Pool,
+                    0,
+                    &mut m.nvme,
+                    &mut rng,
+                );
+                f.state_migrations.push(StateMigration {
+                    from: 0,
+                    to,
+                    vm: 0,
+                    reserved,
+                    escrow,
+                    copied: BTreeMap::new(),
+                    precopy_ticks: 1,
+                    stalled: 0,
+                });
+            }
+            f
+        };
+        let audit = |f: &FleetScheduler| {
+            let budgets: Vec<u64> = (0..3).map(|i| f.shard_budget(i)).collect();
+            let arb: Vec<Option<u64>> = f
+                .shards
+                .iter()
+                .map(|s| s.machine.control().unwrap().arbitration_budget())
+                .collect();
+            (budgets, arb, f.stats.state_migrations_aborted)
+        };
+
+        // Ascending (the shared final barrier) ...
+        let mut asc = build();
+        asc.final_barrier();
+        // ... vs descending (the order run() used before the barrier
+        // was shared).
+        let mut desc = build();
+        for idx in (0..desc.state_migrations.len()).rev() {
+            desc.abort_state_migration(idx);
+        }
+        desc.state_migrations.clear();
+
+        assert_eq!(audit(&asc), audit(&desc), "abort order changed the audit");
+        assert_eq!(asc.stats.state_migrations_aborted, 2);
+        for f in [&asc, &desc] {
+            for to in [1usize, 2] {
+                assert!(
+                    f.shards[to].machine.backend.list_units(0).is_empty(),
+                    "staged copies survived the abort on shard {to}"
+                );
+                // Escrow fully returned: arbitration budget == audited.
+                let cp = f.shards[to].machine.control().unwrap();
+                assert_eq!(
+                    cp.arbitration_budget(),
+                    cp.cfg.host_budget_bytes,
+                    "escrow leaked on shard {to}"
+                );
+            }
+        }
     }
 }

@@ -338,6 +338,21 @@ pub struct ShardedSummary {
     pub runtime_ns: Time,
 }
 
+/// CLI-plumbed fleet-run options: execution engine and population
+/// overrides (`--sequential`, `--workers`, `--vms`). The default is the
+/// parallel epoch engine on all cores at the scale-derived population.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetRunOpts {
+    /// Run the sequential `(time, shard index)` merge oracle instead of
+    /// the parallel epoch engine. Output is byte-identical either way.
+    pub sequential: bool,
+    /// Worker-thread cap for the parallel engine (None: all cores).
+    pub workers: Option<usize>,
+    /// VMs per host, overriding the scale default (the nightly
+    /// `--vms TOTAL` knob, divided by the host count in `main`).
+    pub per_host: Option<usize>,
+}
+
 /// Build and run one sharded fleet: `hosts` shards × `per_host` VMs,
 /// host 0's budget deliberately short of its hot-phase demand (the
 /// sustained-pressure host), the rest comfortable. Every VM touches a
@@ -347,13 +362,30 @@ pub struct ShardedSummary {
 /// VMs *moves* occupancy instead of inflating it). All VMs are Bronze:
 /// 4k units keep the arbiter's reclaim granularity fine enough that
 /// limits bind tightly on every host. `mode` picks the rebalancing
-/// tools. Deterministic in `seed`.
+/// tools. Deterministic in `seed`; runs on the parallel epoch engine.
 pub fn run_sharded_fleet(
     hosts: usize,
     per_host: usize,
     ops_per_vm: u64,
     mode: FleetMode,
     seed: u64,
+) -> ShardedSummary {
+    run_sharded_fleet_exec(hosts, per_host, ops_per_vm, mode, seed, true, None)
+}
+
+/// [`run_sharded_fleet`] with explicit engine selection: `parallel`
+/// picks the epoch engine vs the sequential merge oracle, `workers`
+/// caps the epoch engine's threads (None: all cores). The equivalence
+/// suite asserts the summary — and therefore the CSV, a pure function
+/// of it — is byte-identical across engines and worker counts.
+pub fn run_sharded_fleet_exec(
+    hosts: usize,
+    per_host: usize,
+    ops_per_vm: u64,
+    mode: FleetMode,
+    seed: u64,
+    parallel: bool,
+    workers: Option<usize>,
 ) -> ShardedSummary {
     let n = hosts * per_host;
     let frames = 4096u64;
@@ -390,6 +422,8 @@ pub fn run_sharded_fleet(
             ..Default::default()
         },
         max_time: 60 * SEC,
+        parallel,
+        workers,
         ..Default::default()
     };
     let mut f = FleetScheduler::new(&template, cfg);
@@ -539,18 +573,18 @@ pub fn run_sharded_fleet(
 /// The registered experiment driver (4 host shards by default; the CLI
 /// overrides via `flexswap fleet --hosts N`).
 pub fn fleet(scale: Scale) -> Vec<Table> {
-    fleet_with_hosts(scale, 4)
+    fleet_with_hosts(scale, 4, FleetRunOpts::default())
 }
 
 /// The nightly soak: the sharded lease-vs-state comparison swept over
-/// many seeds at larger scale (`flexswap fleet --hosts 8 --seeds N`).
-/// Kept out of the PR-gating CI path — the `schedule:`-triggered
-/// workflow runs it and uploads the per-seed CSV. Every run must hold
-/// the budget / conservation / atomic-hand-off invariants; migration
-/// activity is reported, not asserted (a seed whose fleet never
-/// pressures a VM is data, not a failure).
-pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64) -> Vec<Table> {
-    let per_host = scale.u(8, 16) as usize;
+/// many seeds at larger scale (`flexswap fleet --hosts 64 --vms 4096
+/// --seeds N`). Kept out of the PR-gating CI path — the
+/// `schedule:`-triggered workflow runs it and uploads the per-seed CSV.
+/// Every run must hold the budget / conservation / atomic-hand-off
+/// invariants; migration activity is reported, not asserted (a seed
+/// whose fleet never pressures a VM is data, not a failure).
+pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) -> Vec<Table> {
+    let per_host = opts.per_host.unwrap_or(scale.u(8, 16) as usize);
     let ops = scale.u(16_000, 48_000);
     let mut t = Table::new(
         "fleet soak: per-seed sharded comparison (lease-only vs state-migration)",
@@ -573,7 +607,15 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64) -> Vec<Table> {
     for seed in 0..seeds {
         for mode in [FleetMode::LeaseOnly, FleetMode::StateMigration] {
             let label = mode.label();
-            let s = run_sharded_fleet(hosts, per_host, ops, mode, seed);
+            let s = run_sharded_fleet_exec(
+                hosts,
+                per_host,
+                ops,
+                mode,
+                seed,
+                !opts.sequential,
+                opts.workers,
+            );
             assert_eq!(
                 s.total_ops,
                 s.vms as u64 * ops,
@@ -622,7 +664,7 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64) -> Vec<Table> {
     vec![t]
 }
 
-pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
+pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<Table> {
     let n = scale.u(64, 128) as usize;
     let ops = scale.u(12_000, 40_000);
     let mut t = Table::new(
@@ -702,7 +744,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
     // major faults or on saved memory — moving the whole VM removes
     // its entire demand from the pressured host, where a lease can
     // only move as much budget as donors can prove free.
-    let per_host = scale.u(8, 32) as usize;
+    let per_host = opts.per_host.unwrap_or(scale.u(8, 32) as usize);
     let shard_ops = scale.u(16_000, 28_000);
     let mut t3 = Table::new(
         "fleet sharding: lease-only vs full VM state migration vs static placement",
@@ -732,7 +774,15 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
         FleetMode::StateMigration,
     ] {
         let label = mode.label();
-        let s = run_sharded_fleet(hosts, per_host, shard_ops, mode, 7);
+        let s = run_sharded_fleet_exec(
+            hosts,
+            per_host,
+            shard_ops,
+            mode,
+            7,
+            !opts.sequential,
+            opts.workers,
+        );
         assert_eq!(
             s.total_ops,
             s.vms as u64 * shard_ops,
@@ -755,11 +805,12 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize) -> Vec<Table> {
             );
         }
         // The acceptance comparison is pinned to the canonical 4-host
-        // topology (the CI smoke and the test suite's
-        // `state_migration_beats_lease_only` both run it there). Other
-        // `--hosts` values are exploratory: a shape where no flip can
-        // even occur (e.g. `--hosts 1`) must report, not abort.
-        if mode == FleetMode::StateMigration && hosts == 4 {
+        // topology at its default population (the CI smoke and the test
+        // suite's `state_migration_beats_lease_only` both run it
+        // there). Other `--hosts` values — and `--vms` overrides — are
+        // exploratory: a shape where no flip can even occur (e.g.
+        // `--hosts 1`) must report, not abort.
+        if mode == FleetMode::StateMigration && hosts == 4 && opts.per_host.is_none() {
             let l = lease.as_ref().expect("lease arm ran first");
             assert!(
                 s.state_migrations_completed >= 1,

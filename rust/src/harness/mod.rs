@@ -165,11 +165,15 @@ pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
 
 /// The `fleet` experiment with an explicit shard count (the
 /// `flexswap fleet --hosts N` CLI path; tables land in the same
-/// `results/fleet_*.csv` files as the registered run).
-pub fn run_fleet_with_hosts(scale: Scale, hosts: usize) -> String {
-    let tables = fleet::fleet_with_hosts(scale, hosts);
+/// `results/fleet_*.csv` files as the registered run). `opts` carries
+/// the execution-engine knobs: `--sequential` (merge-loop oracle
+/// instead of the parallel epoch engine), `--workers N`, and `--vms N`
+/// (total population, split evenly across hosts).
+pub fn run_fleet_with_hosts(scale: Scale, hosts: usize, opts: fleet::FleetRunOpts) -> String {
+    let tables = fleet::fleet_with_hosts(scale, hosts, opts);
+    let engine = if opts.sequential { "sequential merge" } else { "parallel epochs" };
     let header = format!(
-        "## Fleet control plane ({hosts} host shards)\n\n*Expectation:* \
+        "## Fleet control plane ({hosts} host shards, {engine})\n\n*Expectation:* \
          per-host budget held at every tick (mid-migration included), \
          Σ budgets conserved, rebalancer cuts major faults on the \
          pressured host, full VM migration beats lease-only\n\n"
@@ -181,8 +185,8 @@ pub fn run_fleet_with_hosts(scale: Scale, hosts: usize) -> String {
 /// sharded comparison swept over `seeds` seeds, CSV per seed under
 /// `results/fleet_soak_*.csv`. Scheduled CI runs this off the
 /// PR-gating path.
-pub fn run_fleet_soak(scale: Scale, hosts: usize, seeds: u64) -> String {
-    let tables = fleet::fleet_soak(scale, hosts, seeds);
+pub fn run_fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: fleet::FleetRunOpts) -> String {
+    let tables = fleet::fleet_soak(scale, hosts, seeds, opts);
     let header = format!(
         "## Fleet soak ({hosts} host shards × {seeds} seeds)\n\n*Expectation:* \
          every seed holds the budget / conservation / atomic-hand-off \

@@ -6,9 +6,13 @@
 //!   flexswap fleet [--full]       # control-plane fleet (incl. 4-host shards)
 //!   flexswap fleet --hosts 4      # sharded fleet with an explicit shard count
 //!   flexswap fleet --hosts 8 --seeds 6   # nightly soak: many seeds, CSV per seed
+//!   flexswap fleet --hosts 64 --vms 4096 # explicit total VM population
+//!   flexswap fleet --hosts 4 --sequential # merge-loop oracle (no worker threads)
+//!   flexswap fleet --hosts 4 --workers 2  # pin the epoch engine's thread count
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
 
+use flexswap::harness::fleet::FleetRunOpts;
 use flexswap::harness::{registry, run_by_id, run_fleet_soak, run_fleet_with_hosts, Scale};
 
 fn main() {
@@ -41,13 +45,46 @@ fn main() {
         }
     });
 
+    // `--workers N`: pin the epoch engine's worker-thread count (the
+    // default is `available_parallelism`). Output is byte-identical at
+    // any value — this is a throughput knob, not a semantics knob.
+    let workers = args.iter().position(|a| a == "--workers").map(|i| {
+        match args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+            Some(w) if w > 0 => w,
+            _ => {
+                eprintln!("--workers needs a positive integer (e.g. `flexswap fleet --workers 2`)");
+                std::process::exit(2);
+            }
+        }
+    });
+    // `--vms N`: total VM population, split evenly across host shards
+    // (rounded up so every shard gets at least one VM). Without it the
+    // per-host population comes from the scale knob.
+    let vms = args.iter().position(|a| a == "--vms").map(|i| {
+        match args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+            Some(v) if v > 0 => v,
+            _ => {
+                eprintln!(
+                    "--vms needs a positive integer (e.g. `flexswap fleet --hosts 64 --vms 4096`)"
+                );
+                std::process::exit(2);
+            }
+        }
+    });
+
     if cmd == "fleet" {
+        let h = hosts.unwrap_or(4);
+        let opts = FleetRunOpts {
+            sequential: args.iter().any(|a| a == "--sequential"),
+            workers,
+            per_host: vms.map(|v| v.div_ceil(h)),
+        };
         if let Some(k) = seeds {
-            println!("{}", run_fleet_soak(scale, hosts.unwrap_or(4), k));
+            println!("{}", run_fleet_soak(scale, h, k, opts));
             return;
         }
-        if let Some(h) = hosts {
-            println!("{}", run_fleet_with_hosts(scale, h));
+        if hosts.is_some() || opts != FleetRunOpts::default() {
+            println!("{}", run_fleet_with_hosts(scale, h, opts));
             return;
         }
     }

@@ -139,8 +139,9 @@ impl<'a> PolicyApi<'a> {
 }
 
 /// A policy module (optional, paper §4.3). Policies only see
-/// [`PolicyEvent`]s and the [`PolicyApi`].
-pub trait Policy {
+/// [`PolicyEvent`]s and the [`PolicyApi`]. `Send` because the MM (and
+/// so its policies) rides its machine onto a fleet worker thread.
+pub trait Policy: Send {
     fn name(&self) -> &'static str;
     fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi);
     /// Periodic timer, if the policy wants one.
@@ -150,8 +151,9 @@ pub trait Policy {
 }
 
 /// The *memory-limit reclaimer* (paper §4.3 "Forced memory reclamation"):
-/// invoked synchronously on the fault path, must answer fast.
-pub trait LimitReclaimer {
+/// invoked synchronously on the fault path, must answer fast. `Send`
+/// for the same reason as [`Policy`].
+pub trait LimitReclaimer: Send {
     fn name(&self) -> &'static str;
     /// Observe events to train victim selection.
     fn note(&mut self, ev: &PolicyEvent);
@@ -1245,24 +1247,24 @@ mod tests {
 
     #[test]
     fn touches_flow_to_limit_reclaimer() {
-        use std::cell::RefCell;
-        use std::rc::Rc;
+        use std::sync::{Arc, Mutex};
 
-        struct Recorder(Rc<RefCell<Vec<(UnitId, Time)>>>);
+        // Arc<Mutex<_>>, not Rc<RefCell<_>>: `LimitReclaimer: Send`.
+        struct Recorder(Arc<Mutex<Vec<(UnitId, Time)>>>);
         impl LimitReclaimer for Recorder {
             fn name(&self) -> &'static str {
                 "recorder"
             }
             fn note(&mut self, _ev: &PolicyEvent) {}
             fn touch(&mut self, unit: UnitId, now: Time) {
-                self.0.borrow_mut().push((unit, now));
+                self.0.lock().unwrap().push((unit, now));
             }
             fn victim(&mut self, _core: &EngineCore, _now: Time) -> Option<UnitId> {
                 None
             }
         }
 
-        let touches = Rc::new(RefCell::new(vec![]));
+        let touches = Arc::new(Mutex::new(vec![]));
         let mut m = mm(8, None);
         let (mut vm, _) = vm_for(8);
         m.set_limit_reclaimer(Box::new(Recorder(touches.clone())));
@@ -1275,7 +1277,7 @@ mod tests {
         bm.set(3);
         m.on_scan(&vm, &bm, 300);
         assert_eq!(
-            touches.borrow().as_slice(),
+            touches.lock().unwrap().as_slice(),
             &[(3, 100), (3, 200), (1, 300), (3, 300)]
         );
         assert_eq!(m.core.last_touch[3], 300);

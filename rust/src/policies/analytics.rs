@@ -49,8 +49,10 @@ pub struct DtOutput {
     pub smoothed: f32,
 }
 
-/// dt-reclaimer analytics backend (L2 `dt_reclaim` graph).
-pub trait ColdAnalytics {
+/// dt-reclaimer analytics backend (L2 `dt_reclaim` graph). `Send`
+/// because the owning policy rides its machine onto a fleet worker
+/// thread between fleet ticks.
+pub trait ColdAnalytics: Send {
     /// `hist` is the window of access bitmaps, oldest first, all of the
     /// same length; `hist.len() == H`. Rows are borrowed (`&Bitmap`) so
     /// callers keeping a history ring pass references instead of
@@ -66,8 +68,9 @@ pub trait ColdAnalytics {
     fn backend_name(&self) -> &'static str;
 }
 
-/// SYS-R victim scorer backend (L2 `ert_victim` graph).
-pub trait ErtScorer {
+/// SYS-R victim scorer backend (L2 `ert_victim` graph). `Send` for the
+/// same reason as [`ColdAnalytics`].
+pub trait ErtScorer: Send {
     /// Pick argmax |ert - dt| over valid entries; returns (index, score)
     /// and applies the countdown to `ert` in place.
     fn victim(&mut self, ert: &mut [f32], valid: &[f32], dt: f32) -> (usize, f32);

@@ -180,8 +180,10 @@ pub struct PortableUnit {
 }
 
 /// Swap storage behind the Swapper workers. See the module docs for the
-/// ordering / idempotence / fallthrough contract.
-pub trait SwapBackend {
+/// ordering / idempotence / fallthrough contract. `Send` because each
+/// backend belongs to one machine and the fleet scheduler runs machines
+/// on worker threads between fleet ticks.
+pub trait SwapBackend: Send {
     /// Store `data` as the swap copy of `(vm, unit)`, replacing any
     /// previous copy. `hint` routes between tiers; the returned receipt
     /// says where the data landed and when the store completes.

@@ -24,7 +24,11 @@ pub enum Op {
 }
 
 /// A guest workload: a deterministic stream of operations.
-pub trait Workload {
+///
+/// `Send` because workloads live inside [`crate::coordinator::Machine`]
+/// slots, and the fleet scheduler runs whole machines on worker threads
+/// between fleet ticks (ARCHITECTURE.md "Parallel fleet execution").
+pub trait Workload: Send {
     fn next(&mut self, rng: &mut Rng) -> Op;
     fn label(&self) -> &'static str;
     /// Total accesses this workload will issue (for progress metrics).

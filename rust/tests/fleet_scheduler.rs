@@ -10,10 +10,11 @@
 //! arbiter against a brute-force reference solver (the PR 1
 //! LRU-oracle pattern), the recovery-mode window regression, the
 //! rebalancer-beats-static acceptance and the full-migration-beats-
-//! lease acceptance.
+//! lease acceptance. PR 6 adds the parallel-execution gate: the epoch
+//! engine (per-shard worker threads, fleet tick as barrier) must be
+//! byte-identical to the sequential merge loop at any worker count.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use flexswap::config::{
     ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig, PlacementPolicy,
@@ -21,7 +22,9 @@ use flexswap::config::{
 };
 use flexswap::coordinator::{Machine, Mechanism, VmSetup};
 use flexswap::daemon::{Arbiter, FleetScheduler, FleetVmSpec, Sla, VmReport};
-use flexswap::harness::fleet::{run_sharded_fleet, FleetMode, ShardedSummary};
+use flexswap::harness::fleet::{
+    run_sharded_fleet, run_sharded_fleet_exec, FleetMode, ShardedSummary,
+};
 use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
 use flexswap::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
 use flexswap::sim::Rng;
@@ -409,6 +412,92 @@ fn state_migration_beats_lease_only() {
 }
 
 // ---------------------------------------------------------------------
+// Parallel epoch engine ≡ sequential merge loop (PR 6 tentpole gate)
+// ---------------------------------------------------------------------
+
+/// One seq/par pair at identical parameters: the summaries must compare
+/// equal field-for-field AND render byte-identically (`Debug` covers
+/// every float bit pattern; the experiment CSV is a pure function of
+/// the summary, so byte-equal summaries mean byte-equal CSV).
+fn assert_engines_agree(
+    hosts: usize,
+    per_host: usize,
+    ops: u64,
+    mode: FleetMode,
+    seed: u64,
+    workers: Option<usize>,
+) -> ShardedSummary {
+    let seq = run_sharded_fleet_exec(hosts, per_host, ops, mode, seed, false, None);
+    let par = run_sharded_fleet_exec(hosts, per_host, ops, mode, seed, true, workers);
+    assert_eq!(
+        seq, par,
+        "seed {seed} mode {:?} workers {workers:?}: epoch engine diverged from merge loop",
+        mode
+    );
+    assert_eq!(
+        format!("{seq:?}"),
+        format!("{par:?}"),
+        "seed {seed}: debug render differs despite Eq — float bit drift"
+    );
+    par
+}
+
+/// Tentpole acceptance: on lease-only fleets the parallel epoch engine
+/// is byte-identical to the sequential merge loop across ten seeds.
+#[test]
+fn parallel_epoch_engine_matches_merge_lease_only_ten_seeds() {
+    for seed in 0..10u64 {
+        let s = assert_engines_agree(4, 4, 6_000, FleetMode::LeaseOnly, seed, None);
+        assert_eq!(s.total_ops, s.vms as u64 * 6_000, "seed {seed}: incomplete run");
+        assert_summary_invariants(&s, &format!("seed {seed} (parallel lease)"));
+    }
+}
+
+/// Tentpole acceptance: same equivalence with full VM state migration
+/// armed. Seeds 0 and 8 run at the pressure-skewed scale where flips
+/// are known to complete — pre-copy staging, stop-and-copy, and the
+/// end-of-run abort barrier all execute on worker threads and must
+/// still match the merge loop bit-for-bit.
+#[test]
+fn parallel_epoch_engine_matches_merge_state_migration_ten_seeds() {
+    for seed in 0..10u64 {
+        let (per_host, ops) = if seed % 8 == 0 { (8, 12_000) } else { (4, 6_000) };
+        let s = assert_engines_agree(4, per_host, ops, FleetMode::StateMigration, seed, None);
+        assert_summary_invariants(&s, &format!("seed {seed} (parallel state)"));
+        if seed % 8 == 0 {
+            assert!(
+                s.state_migrations_completed >= 1,
+                "seed {seed}: flip scale completed no migration: {s:?}"
+            );
+        }
+    }
+}
+
+/// Thread-count independence: 1 worker, 2 workers, and the default
+/// (`available_parallelism`) all produce the same bytes as the
+/// sequential oracle. The worker count partitions shards differently
+/// (`chunks_mut`), so this also pins partitioning-independence.
+#[test]
+fn parallel_worker_count_does_not_change_output() {
+    let base =
+        run_sharded_fleet_exec(4, 8, 12_000, FleetMode::StateMigration, 0, false, None);
+    assert!(
+        base.state_migrations_completed >= 1,
+        "baseline completed no migration: {base:?}"
+    );
+    for workers in [Some(1), Some(2), None] {
+        let par =
+            run_sharded_fleet_exec(4, 8, 12_000, FleetMode::StateMigration, 0, true, workers);
+        assert_eq!(base, par, "workers {workers:?} changed the output");
+        assert_eq!(
+            format!("{base:?}"),
+            format!("{par:?}"),
+            "workers {workers:?}: debug render differs"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
 // Arbiter oracle (brute-force reference solver, ≤6 VMs)
 // ---------------------------------------------------------------------
 
@@ -564,9 +653,9 @@ fn proportional_solver_matches_bruteforce_oracle() {
 // ---------------------------------------------------------------------
 
 /// Probe policy: samples `PolicyApi::recovery_mode()` at every scan
-/// tick into a shared log.
+/// tick into a shared log (`Arc<Mutex<_>>` because `Policy: Send`).
 struct RecoveryProbe {
-    log: Rc<RefCell<Vec<(u64, bool)>>>,
+    log: Arc<Mutex<Vec<(u64, bool)>>>,
 }
 
 impl Policy for RecoveryProbe {
@@ -575,7 +664,7 @@ impl Policy for RecoveryProbe {
     }
     fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
         if let PolicyEvent::ScanBitmap { now, .. } = ev {
-            self.log.borrow_mut().push((*now, api.recovery_mode()));
+            self.log.lock().unwrap().push((*now, api.recovery_mode()));
         }
     }
 }
@@ -610,7 +699,7 @@ fn recovery_window_expires_and_non_boost_release_does_not_reopen() {
     let units = vm_cfg.units();
     let mut mm = Mm::new(&mm_cfg, units, 4096, &m.host.sw, m.host.hw.zero_2m_ns);
     mm.add_policy(Box::new(DtReclaimer::new(Box::new(NativeAnalytics::new()), 8, 0.02)));
-    let log = Rc::new(RefCell::new(Vec::new()));
+    let log = Arc::new(Mutex::new(Vec::new()));
     mm.add_policy(Box::new(RecoveryProbe { log: log.clone() }));
     mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
     let vmid = m.add_vm(VmSetup {
@@ -631,7 +720,7 @@ fn recovery_window_expires_and_non_boost_release_does_not_reopen() {
         closes,
         "non-boost release moved the recovery window"
     );
-    let samples = log.borrow().clone();
+    let samples = log.lock().unwrap().clone();
     assert!(
         samples.iter().any(|&(t, _)| t > boost_at && t < closes),
         "no scan sample inside the boost window"
