@@ -253,6 +253,40 @@ pub enum PlacementPolicy {
     SpreadByFaultRate,
 }
 
+/// What happens to a host shard when a [`HostFault`] fires
+/// (see [`crate::daemon::FleetScheduler`]'s failure model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostFaultKind {
+    /// The host dies instantly: resident memory and the compressed pool
+    /// are gone; only NVMe receipts survive. Every VM on the shard is
+    /// rebuilt on a surviving shard from those receipts, and the Σ-budget
+    /// baseline shrinks by exactly the dead host's audited budget.
+    Crash,
+    /// The host's NVMe device degrades: flash latency inflates by
+    /// [`FleetConfig::nvme_degrade_factor`]. The scheduler reacts with a
+    /// graceful drain — mass VM state migration off the shard under
+    /// [`FleetConfig::drain_deadline_ticks`]; VMs that miss the deadline
+    /// fall back to the lease-only rebalancer.
+    DegradedNvme,
+    /// The platform revokes [`FleetConfig::revoke_pct`] percent of the
+    /// host's budget (Memtrade-style producer reclaim). The shard sheds
+    /// occupancy lease-style — chunked against measured headroom — and
+    /// the Σ-budget baseline shrinks by the revoked bytes as they land.
+    BudgetRevoke,
+}
+
+/// One deterministic failure event, injected at the first fleet tick at
+/// or after `at` (fault schedules are part of [`FleetConfig`], so
+/// same-seed runs replay faults identically at any worker count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostFault {
+    /// Virtual time at (or after) which the fault fires.
+    pub at: Time,
+    /// Target host shard index.
+    pub host: usize,
+    pub kind: HostFaultKind,
+}
+
 /// Fleet-scheduler configuration: how many host shards, their budgets,
 /// VM placement, and the fault-rate-delta migration thresholds
 /// ([`crate::daemon::FleetScheduler`]).
@@ -332,6 +366,24 @@ pub struct FleetConfig {
     /// `std::thread::available_parallelism`. Any value yields the same
     /// output (thread-count independence is a gated test).
     pub workers: Option<usize>,
+    /// Deterministic fault schedule: each entry fires at the first
+    /// fleet tick at or after its `at` time, in `(at, host)` order.
+    /// Empty (the default) preserves pre-fault behaviour exactly.
+    pub faults: Vec<HostFault>,
+    /// Graceful drain: a degraded shard has this many fleet ticks to
+    /// evacuate its VMs via state migration before the remaining ones
+    /// fall back to the lease-only rebalancer.
+    pub drain_deadline_ticks: u32,
+    /// [`HostFaultKind::DegradedNvme`] multiplies the shard's NVMe
+    /// flash latency by this factor.
+    pub nvme_degrade_factor: u32,
+    /// [`HostFaultKind::BudgetRevoke`] takes back this percentage of
+    /// the shard's current audited budget.
+    pub revoke_pct: u32,
+    /// Modeled outage a crash-rebuilt VM observes before resuming on
+    /// its new shard (detection + re-admission; receipts re-attach but
+    /// all resident state refaults from the backend).
+    pub crash_rebuild_stop_ns: Time,
 }
 
 impl Default for FleetConfig {
@@ -361,6 +413,11 @@ impl Default for FleetConfig {
             max_time: 600 * SEC,
             parallel: true,
             workers: None,
+            faults: Vec::new(),
+            drain_deadline_ticks: 32,
+            nvme_degrade_factor: 8,
+            revoke_pct: 25,
+            crash_rebuild_stop_ns: 5 * MS,
         }
     }
 }
@@ -536,6 +593,12 @@ mod tests {
         let d = FleetConfig::default();
         assert!(d.donor_demand_pct < d.pressure_demand_pct);
         assert!(d.migration_min_chunk > d.migration_margin_bytes);
+        // No faults by default: arming the failure model is opt-in, so
+        // every pre-fault scenario replays unchanged.
+        assert!(d.faults.is_empty());
+        assert!(d.nvme_degrade_factor > 1, "degrade must inflate latency");
+        assert!(d.revoke_pct < 100, "revocation must leave a live budget");
+        assert!(d.drain_deadline_ticks > 0);
     }
 
     #[test]

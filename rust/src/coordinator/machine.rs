@@ -421,6 +421,42 @@ impl Machine {
         self.host_resident_bytes() + self.backend.metrics().pool_bytes
     }
 
+    /// Crash demotion of one VM's residency (the host under it died):
+    /// every resident unit is unmapped and becomes Swapped, and the
+    /// engine's clean-on-disk knowledge is dropped — the backend those
+    /// bits referred to died with the host. The slot itself stays
+    /// intact for [`Machine::extract_vm`]; in-flight transitions settle
+    /// via the conflating pickup after the rebuild. Returns the demoted
+    /// bytes (what the VM must refault on its new shard). Kernel-swap
+    /// VMs are not fleet-managed and are left untouched.
+    pub fn crash_demote_residency(&mut self, vm: usize) -> u64 {
+        let Some(slot) = self.slots[vm].as_mut() else { return 0 };
+        let Mechanism::Sys(mm) = &mut slot.mech else { return 0 };
+        let demoted = mm.core.crash_demote_all();
+        for unit in 0..mm.core.states.len() as u64 {
+            slot.vm.ept.unmap(unit);
+        }
+        demoted
+    }
+
+    /// Mean fault latency over every VM on the host (ns; 0 before the
+    /// first fault) — the fleet scheduler's per-shard health gauge
+    /// input, fed into its fault-latency EWMA each fleet tick.
+    pub fn host_fault_mean_ns(&self) -> u64 {
+        let mut sum = 0.0f64;
+        let mut count = 0u64;
+        for s in self.slots.iter().flatten() {
+            let c = s.fault_hist.count();
+            sum += s.fault_hist.mean() * c as f64;
+            count += c;
+        }
+        if count == 0 {
+            0
+        } else {
+            (sum / count as f64) as u64
+        }
+    }
+
     /// Rebuild the control plane's per-VM reports in place (reused
     /// buffer, borrowed names — nothing allocated per tick).
     #[allow(clippy::needless_range_loop)]

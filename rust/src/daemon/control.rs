@@ -139,6 +139,18 @@ impl ControlPlane {
         }
     }
 
+    /// The host died: zero the audited budget in one step and return
+    /// what it held, so the fleet's Σ-budget baseline can step down by
+    /// exactly that amount at the crash tick. Unlike a lease hand-over,
+    /// nothing is transferred — the budget is gone with the host.
+    pub fn retire_host_budget(&mut self) -> u64 {
+        let old = self.cfg.host_budget_bytes.unwrap_or(0);
+        self.cfg.host_budget_bytes = Some(0);
+        self.stats.budget_bytes = 0;
+        self.lease_reserved = 0;
+        old
+    }
+
     /// Register a VM with the plane (called at daemon registration).
     pub fn register(&mut self, vm: usize, name: String, sla: Sla) {
         self.vms.push(ManagedVm { vm, name, sla, last_pf: 0 });
@@ -397,6 +409,20 @@ mod tests {
         cp.grow_budget(128 << 20);
         assert_eq!(cp.cfg.host_budget_bytes, Some(1 << 30));
         assert_eq!(cp.arbitration_budget(), Some(1 << 30));
+    }
+
+    #[test]
+    fn retire_host_budget_zeroes_audit_and_any_lease() {
+        let mut cp = plane(ArbiterKind::ProportionalShare, Some(1 << 30));
+        cp.begin_lease(256 << 20);
+        let old = cp.retire_host_budget();
+        assert_eq!(old, 1 << 30, "retire returns the full audited budget");
+        assert_eq!(cp.cfg.host_budget_bytes, Some(0));
+        assert_eq!(cp.stats.budget_bytes, 0);
+        // The in-flight lease died with the host: arbitration sees zero,
+        // not a negative-saturated remainder.
+        assert_eq!(cp.arbitration_budget(), Some(0));
+        assert_eq!(cp.retire_host_budget(), 0, "double retire yields nothing");
     }
 
     #[test]

@@ -54,6 +54,31 @@
 //!    the escrow is returned once the VM has landed (budgets never move
 //!    — Σ budgets is trivially conserved and still audited every tick).
 //!
+//! 4. **Failure injection and self-healing**
+//!    ([`crate::config::HostFault`]): a deterministic fault stream,
+//!    sorted `(at, host)`, is applied at fleet ticks — the only point
+//!    where shards interact, so injection is identical under both
+//!    engines and any worker count. A **degraded-NVMe** fault inflates
+//!    the shard's flash latency and starts a graceful drain: every VM
+//!    is evacuated through the state-migration path under a deadline
+//!    ([`FleetConfig::drain_deadline_ticks`]); whatever is still
+//!    waiting when it expires falls back to lease-only relief and is
+//!    counted as a deadline miss. A **crash** is immediate: in-flight
+//!    migrations touching the dead shard abort (escrows and lease
+//!    remainders return to their *surviving* counterparties), each
+//!    lost VM is rebuilt on a surviving shard from its NVMe receipts
+//!    ([`SwapBackend::salvage_vm`]) — pool-resident units died with
+//!    the host's DRAM and are re-synthesized as cold faults on next
+//!    touch, measured — and the dead shard's budget retires from the
+//!    fleet ([`super::ControlPlane::retire_host_budget`]), so the
+//!    conservation audit's Σ steps down by exactly that budget at the
+//!    crash tick. A **budget revocation** returns part of a healthy
+//!    shard's budget to the provider through the lease machinery —
+//!    shed first, retire after, never below measured occupancy. Health
+//!    gauges (per-shard liveness, fault-latency EWMA, missed ticks)
+//!    and the fault/recovery ledger live in
+//!    [`FleetStats`](crate::metrics::FleetStats).
+//!
 //! Multi-machine stepping is deterministic: the scheduler merges the
 //! shards' event queues by (virtual time, shard index) — a stable
 //! round-robin interleave in which equal timestamps always resolve
@@ -72,7 +97,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig};
+use crate::config::{
+    ArbiterKind, ControlConfig, FleetConfig, HostConfig, HostFault, HostFaultKind, MmConfig,
+};
 use crate::coordinator::{Machine, RunResult};
 use crate::metrics::FleetStats;
 use crate::storage::{SwapBackend, SwapTier};
@@ -160,6 +187,48 @@ struct StateMigration {
     precopy_ticks: u32,
     /// Consecutive flip attempts blocked on target headroom.
     stalled: u32,
+    /// Set when this migration is a graceful-drain evacuation: the
+    /// virtual time the fault was injected. The flip arms a recovery
+    /// probe measuring from it.
+    drain_since: Option<Time>,
+}
+
+/// A host marked for graceful drain (degraded NVMe): every VM placed
+/// there is evacuated via state migration before the deadline; VMs
+/// still waiting when it expires fall back to lease-only relief and
+/// count as deadline misses.
+#[derive(Debug, Clone, Copy)]
+struct Drain {
+    host: usize,
+    /// Fleet ticks left before the evacuation deadline.
+    ticks_left: u32,
+    /// Deadline expired and the misses were already counted.
+    missed: bool,
+    /// Virtual time the fault was injected.
+    t0: Time,
+}
+
+/// An in-flight budget revocation (Memtrade-style): the lease is taken
+/// up front so the shard sheds immediately, then the budget retires
+/// from the fleet chunk by chunk as measured headroom materializes —
+/// the audited budget never drops below occupancy.
+#[derive(Debug, Clone, Copy)]
+struct Revocation {
+    host: usize,
+    remaining: u64,
+    /// Consecutive fleet ticks that retired nothing.
+    stalled: u32,
+}
+
+/// Tracks one recovered VM until its resident set is back to half its
+/// pre-fault size (the ledger's time-to-restored-residency gauge).
+#[derive(Debug, Clone, Copy)]
+struct RecoveryProbe {
+    /// Index into `placements` — stable (the log is append-only) and
+    /// it follows the VM across shards.
+    placement: usize,
+    target_bytes: u64,
+    t0: Time,
 }
 
 /// Everything a finished fleet run returns: per-shard per-VM results in
@@ -177,6 +246,13 @@ pub struct FleetScheduler {
     pub placements: Vec<Placement>,
     migrations: Vec<Migration>,
     state_migrations: Vec<StateMigration>,
+    /// The fault schedule, sorted `(at, host)`, plus the injection
+    /// cursor: everything before the cursor has fired.
+    faults: Vec<HostFault>,
+    fault_cursor: usize,
+    drains: Vec<Drain>,
+    revocations: Vec<Revocation>,
+    probes: Vec<RecoveryProbe>,
     pub stats: FleetStats,
 }
 
@@ -215,6 +291,16 @@ impl FleetScheduler {
                 committed_pressure: 0,
             });
         }
+        let mut faults = cfg.faults.clone();
+        faults.sort_by_key(|f| (f.at, f.host));
+        for f in &faults {
+            assert!(
+                f.host < cfg.hosts,
+                "fault targets host {} but the fleet has {}",
+                f.host,
+                cfg.hosts
+            );
+        }
         FleetScheduler {
             stats: FleetStats::new(cfg.hosts, total_budget),
             cfg,
@@ -222,6 +308,11 @@ impl FleetScheduler {
             placements: vec![],
             migrations: vec![],
             state_migrations: vec![],
+            faults,
+            fault_cursor: 0,
+            drains: vec![],
+            revocations: vec![],
+            probes: vec![],
         }
     }
 
@@ -408,6 +499,17 @@ impl FleetScheduler {
             self.abort_state_migration(idx);
         }
         self.state_migrations.clear();
+        // A revocation still converging at the horizon returns its
+        // unretired remainder to the shard's arbitration budget (the
+        // retired part stays retired — the audit baseline moved with
+        // it).
+        for r in std::mem::take(&mut self.revocations) {
+            self.shards[r.host]
+                .machine
+                .control_mut()
+                .expect("shard has a control plane")
+                .cancel_lease(r.remaining);
+        }
         // Copy the per-shard invariant tallies out for the test suite.
         for (i, s) in self.shards.iter().enumerate() {
             if let Some(cs) = s.machine.control_stats() {
@@ -445,19 +547,382 @@ impl FleetScheduler {
             .unwrap_or(0)
     }
 
-    /// One fleet tick: advance in-flight migrations chunk by chunk
-    /// (budget leases and VM state migrations), consider starting a new
-    /// one, audit budget conservation.
+    /// One fleet tick: inject due faults, advance drains/revocations
+    /// and in-flight migrations chunk by chunk (budget leases and VM
+    /// state migrations), consider starting a new one, refresh the
+    /// health gauges, audit budget conservation.
     fn fleet_tick(&mut self, now: Time) {
         self.stats.fleet_ticks += 1;
+        self.inject_faults(now);
+        self.advance_drains(now);
+        self.advance_revocations();
         self.advance_migrations(now);
         self.advance_state_migrations(now);
         let active = self.migrations.len() + self.state_migrations.len();
         if self.cfg.migration && active < self.cfg.max_active_migrations {
             self.consider_migration();
         }
+        self.check_probes(now);
+        self.update_health();
         let sum: u64 = (0..self.shards.len()).map(|i| self.shard_budget(i)).sum();
         self.stats.audit_budgets(sum);
+    }
+
+    /// Fire every scheduled fault due at or before `now`, in `(at,
+    /// host)` order. Fleet ticks are single-threaded under both
+    /// engines, so injection is deterministic at any worker count. A
+    /// fault aimed at an already-dead host is dropped.
+    fn inject_faults(&mut self, now: Time) {
+        while self.fault_cursor < self.faults.len() && self.faults[self.fault_cursor].at <= now {
+            let f = self.faults[self.fault_cursor];
+            self.fault_cursor += 1;
+            if !self.stats.alive[f.host] {
+                continue;
+            }
+            self.stats.faults_injected += 1;
+            match f.kind {
+                HostFaultKind::Crash => self.crash_host(f.host, now),
+                HostFaultKind::DegradedNvme => self.begin_drain(f.host, now),
+                HostFaultKind::BudgetRevoke => self.begin_revocation(f.host),
+            }
+        }
+    }
+
+    fn draining(&self, host: usize) -> bool {
+        self.drains.iter().any(|d| d.host == host)
+    }
+
+    /// Hard host crash. Everything DRAM-resident on the shard is gone;
+    /// NVMe receipts survive. In order: abort migrations touching the
+    /// dead shard (remainders and escrows return to their *surviving*
+    /// counterparties — the dead side's lease state is wiped with its
+    /// budget), rebuild every placed VM on a surviving shard from its
+    /// salvaged receipts, then retire the dead budget so the
+    /// conservation Σ steps down by exactly that amount this tick.
+    fn crash_host(&mut self, host: usize, now: Time) {
+        self.stats.crashes += 1;
+        self.stats.alive[host] = false;
+        self.drains.retain(|d| d.host != host);
+        // An in-flight revocation's lease dies with the host's control
+        // plane; the not-yet-revoked remainder is part of the audited
+        // budget the retirement below removes.
+        self.revocations.retain(|r| r.host != host);
+        let mut i = 0;
+        while i < self.migrations.len() {
+            let m = self.migrations[i];
+            if m.from == host || m.to == host {
+                if m.from != host {
+                    // Receiver died; the surviving donor takes its
+                    // undelivered remainder back into arbitration.
+                    self.shards[m.from]
+                        .machine
+                        .control_mut()
+                        .expect("shard has a control plane")
+                        .cancel_lease(m.total - m.moved);
+                }
+                self.stats.migrations_aborted += 1;
+                self.migrations.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.state_migrations.len() {
+            let m = &self.state_migrations[i];
+            if m.from == host || m.to == host {
+                self.abort_state_migration(i);
+                self.state_migrations.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        // Rebuild the lost VMs, in placement (admission) order.
+        let victims: Vec<usize> = (0..self.placements.len())
+            .filter(|&i| self.placements[i].shard == host)
+            .collect();
+        let mut granted: BTreeMap<usize, u64> = BTreeMap::new();
+        for pidx in victims {
+            let vm = self.placements[pidx].vm;
+            let sla = self.placements[pidx].sla;
+            let pre_resident = self.shards[host].machine.vm_resident_bytes(vm);
+            let salvage = self.shards[host].machine.backend.salvage_vm(vm);
+            self.shards[host].machine.crash_demote_residency(vm);
+            let image = self.shards[host]
+                .machine
+                .extract_vm(vm)
+                .expect("crashed VM occupies its slot");
+            let nominal = image.nominal_bytes();
+            let survivor = self.rebuild_target(host);
+            let reserved = self.shards[survivor].machine.reserve_slot();
+            self.shards[survivor].machine.prepare_adoption(reserved, sla);
+            self.stats.vms_rebuilt += 1;
+            self.stats.rebuild_salvaged_units += salvage.units.len() as u64;
+            self.stats.rebuild_salvaged_bytes += salvage.salvaged_bytes;
+            self.stats.rebuild_lost_units += salvage.lost_units;
+            self.stats.rebuild_lost_bytes += salvage.lost_bytes;
+            for u in salvage.units {
+                self.shards[survivor].machine.backend.import_unit(reserved, u);
+            }
+            self.shards[survivor]
+                .machine
+                .implant_vm(reserved, image, self.cfg.crash_rebuild_stop_ns);
+            // Unlike a flip, a crash rebuild cannot wait for headroom:
+            // clamp the arrival's limit under the survivor's measured
+            // spare (tracking what this crash already granted it) so
+            // Σ(resident + pool) ≤ budget holds until the arbiter
+            // re-plans around the new tenant.
+            let already = granted.get(&survivor).copied().unwrap_or(0);
+            let spare = self
+                .shard_budget(survivor)
+                .saturating_sub(self.shards[survivor].machine.host_occupied_bytes())
+                .saturating_sub(already);
+            let grant = (spare / 2).max(FRAME_BYTES);
+            if let Some(mm) = self.shards[survivor].machine.mm_mut(reserved) {
+                let units = (grant / mm.core.unit_bytes).max(1);
+                let clamped = mm.core.limit_units.map_or(units, |c| c.min(units));
+                mm.core.limit_units = Some(clamped);
+                granted.insert(survivor, already + clamped * mm.core.unit_bytes);
+            }
+            let pressure = nominal * Sla::Gold.weight() / sla.weight();
+            self.shards[host].committed_bytes -= nominal;
+            self.shards[host].committed_pressure -= pressure;
+            self.shards[survivor].committed_bytes += nominal;
+            self.shards[survivor].committed_pressure += pressure;
+            self.placements[pidx].shard = survivor;
+            self.placements[pidx].vm = reserved;
+            self.probes.push(RecoveryProbe {
+                placement: pidx,
+                target_bytes: pre_resident / 2,
+                t0: now,
+            });
+        }
+        let lost = self.shards[host]
+            .machine
+            .control_mut()
+            .expect("shard has a control plane")
+            .retire_host_budget();
+        self.stats.retire_budget(lost);
+    }
+
+    /// Where a crash rebuild lands: the least-pressured live shard,
+    /// preferring ones that are not draining (falling back to a
+    /// draining one over losing the VM).
+    fn rebuild_target(&self, dead: usize) -> usize {
+        let candidate = |draining_ok: bool| {
+            self.shards
+                .iter()
+                .filter(|s| s.id != dead && self.stats.alive[s.id])
+                .filter(|s| draining_ok || !self.draining(s.id))
+                .min_by_key(|s| (s.committed_pressure, s.id))
+                .map(|s| s.id)
+        };
+        candidate(false)
+            .or_else(|| candidate(true))
+            .expect("fault plan left no live shard to rebuild on")
+    }
+
+    /// Degraded-NVMe fault: inflate the shard's flash latency and start
+    /// the graceful drain (it stays degraded; the drain entry is what
+    /// expires or completes).
+    fn begin_drain(&mut self, host: usize, now: Time) {
+        self.stats.degrades += 1;
+        self.shards[host]
+            .machine
+            .nvme
+            .set_degrade_factor(self.cfg.nvme_degrade_factor);
+        if self.draining(host) {
+            return;
+        }
+        self.stats.drains_started += 1;
+        self.drains.push(Drain {
+            host,
+            ticks_left: self.cfg.drain_deadline_ticks,
+            missed: false,
+            t0: now,
+        });
+    }
+
+    /// Advance every drain one fleet tick: evacuate waiting VMs to the
+    /// sparest live shards via the state-migration path (bypassing the
+    /// rebalancer's single-migration budget — this is a mass drain),
+    /// count deadline misses once when the clock runs out, and retire
+    /// the drain when the shard holds no more VMs.
+    fn advance_drains(&mut self, now: Time) {
+        if self.drains.is_empty() {
+            return;
+        }
+        let n = self.shards.len();
+        let snaps: Vec<ShardSnap> = (0..n).map(|i| self.snapshot(i)).collect();
+        let mut spare: Vec<u64> = (0..n)
+            .map(|i| {
+                (snaps[i].usable as u128 * self.cfg.donor_demand_pct as u128 / 100)
+                    .saturating_sub(snaps[i].demand as u128) as u64
+            })
+            .collect();
+        let mut d = 0;
+        while d < self.drains.len() {
+            let host = self.drains[d].host;
+            let vms_here: Vec<usize> = self
+                .placements
+                .iter()
+                .filter(|p| p.shard == host)
+                .map(|p| p.vm)
+                .collect();
+            if vms_here.is_empty() {
+                self.stats.drains_completed += 1;
+                self.drains.remove(d);
+                continue;
+            }
+            let waiting: Vec<usize> = vms_here
+                .into_iter()
+                .filter(|&vm| {
+                    !self
+                        .state_migrations
+                        .iter()
+                        .any(|m| m.from == host && m.vm == vm)
+                })
+                .collect();
+            if self.drains[d].ticks_left == 0 {
+                if !self.drains[d].missed {
+                    self.drains[d].missed = true;
+                    self.stats.drain_deadline_misses += waiting.len() as u64;
+                }
+                d += 1;
+                continue;
+            }
+            self.drains[d].ticks_left -= 1;
+            let t0 = self.drains[d].t0;
+            let hots: Vec<HotVm> = {
+                let reports = self.shards[host].machine.control_reports();
+                waiting
+                    .iter()
+                    .filter_map(|&vm| reports.iter().find(|r| r.vm == vm))
+                    .map(|r| {
+                        let cur = r.limit_bytes.unwrap_or(r.usage_bytes);
+                        HotVm {
+                            vm: r.vm,
+                            deficit: Arbiter::demand_of(r).saturating_sub(cur),
+                            demand: Arbiter::demand_of(r),
+                            usage: r.usage_bytes,
+                            limit: r.limit_bytes,
+                            inflight: r.inflight_allowance,
+                        }
+                    })
+                    .collect()
+            };
+            for hot in hots {
+                let target = (0..n)
+                    .filter(|&i| i != host && self.stats.alive[i] && !self.draining(i))
+                    .filter(|&i| spare[i] >= hot.demand)
+                    .max_by_key(|&i| (spare[i], std::cmp::Reverse(i)));
+                let Some(dst) = target else { continue };
+                spare[dst] = spare[dst].saturating_sub(hot.demand.max(1));
+                self.start_state_migration(host, dst, hot, Some(t0));
+            }
+            d += 1;
+        }
+    }
+
+    /// Budget-revocation fault: the provider wants `revoke_pct` of the
+    /// shard's budget back. Take the lease up front (the shard starts
+    /// shedding now); the retirement itself is paced by measured
+    /// headroom in [`Self::advance_revocations`].
+    fn begin_revocation(&mut self, host: usize) {
+        self.stats.revocations += 1;
+        let want = self.shard_budget(host) * self.cfg.revoke_pct as u64 / 100;
+        let cp = self.shards[host]
+            .machine
+            .control_mut()
+            .expect("shard has a control plane");
+        // Never lease past what is arbitrable: an escrow or an earlier
+        // revocation may already hold part of the budget.
+        let take = cp.arbitration_budget().unwrap_or(0).min(want);
+        if take == 0 {
+            return;
+        }
+        cp.begin_lease(take);
+        self.revocations.push(Revocation { host, remaining: take, stalled: 0 });
+    }
+
+    /// Retire each revocation's next chunk — bounded by measured
+    /// headroom minus the margin, exactly the lease-migration pacing —
+    /// stepping the conservation baseline down in the same tick. A
+    /// revocation that stops converging cancels its remainder.
+    fn advance_revocations(&mut self) {
+        let mut i = 0;
+        while i < self.revocations.len() {
+            let host = self.revocations[i].host;
+            let budget = self.shard_budget(host);
+            let occupied = self.shards[host].machine.host_occupied_bytes();
+            let avail = budget
+                .saturating_sub(occupied)
+                .saturating_sub(self.cfg.migration_margin_bytes);
+            let remaining = self.revocations[i].remaining;
+            let chunk = remaining.min(avail);
+            if chunk == 0 || chunk < self.cfg.migration_min_chunk.min(remaining) {
+                self.revocations[i].stalled += 1;
+                if self.revocations[i].stalled > self.cfg.migration_stall_ticks {
+                    self.shards[host]
+                        .machine
+                        .control_mut()
+                        .expect("shard has a control plane")
+                        .cancel_lease(remaining);
+                    self.revocations.remove(i);
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            self.shards[host]
+                .machine
+                .control_mut()
+                .expect("shard has a control plane")
+                .complete_lease(chunk);
+            self.stats.retire_budget(chunk);
+            self.stats.revoked_bytes += chunk;
+            self.revocations[i].remaining -= chunk;
+            self.revocations[i].stalled = 0;
+            if self.revocations[i].remaining == 0 {
+                self.revocations.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Resolve recovery probes: a recovered VM counts as restored once
+    /// its resident set is back to the probe's target (half its
+    /// pre-fault size).
+    fn check_probes(&mut self, now: Time) {
+        let mut i = 0;
+        while i < self.probes.len() {
+            let p = self.probes[i];
+            let pl = &self.placements[p.placement];
+            let resident = self.shards[pl.shard].machine.vm_resident_bytes(pl.vm);
+            if resident >= p.target_bytes {
+                self.stats.residency_restored += 1;
+                self.stats.residency_restore_ns_max =
+                    self.stats.residency_restore_ns_max.max(now - p.t0);
+                self.probes.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Health-check gauges: a live shard's fault-latency EWMA (α=1/8
+    /// over its current mean guest fault latency), a dead shard's
+    /// missed-tick counter.
+    fn update_health(&mut self) {
+        for (i, s) in self.shards.iter().enumerate() {
+            if self.stats.alive[i] {
+                let sample = s.machine.host_fault_mean_ns();
+                let e = self.stats.fault_ewma_ns[i];
+                self.stats.fault_ewma_ns[i] = e - e / 8 + sample / 8;
+            } else {
+                self.stats.missed_ticks[i] += 1;
+            }
+        }
     }
 
     /// Move what each migration's donor can *prove* free: a chunk is
@@ -605,10 +1070,14 @@ impl FleetScheduler {
                     .iter()
                     .any(|m| m.from == i || m.to == i)
         };
+        // Dead shards hold nothing to move; draining shards are being
+        // mass-evacuated already and must not also join the regular
+        // rebalance (as source, target or donor).
+        let eligible = |i: usize| self.stats.alive[i] && !self.draining(i);
         // Pressured: Σ demand above the trigger fraction of usable,
         // with an eligible hot VM. Pick the worst ratio, ties low id.
         let pressured = (0..n)
-            .filter(|&i| !busy(i) && snaps[i].hot.is_some())
+            .filter(|&i| eligible(i) && !busy(i) && snaps[i].hot.is_some())
             .filter(|&i| {
                 snaps[i].demand as u128 * 100
                     > snaps[i].usable as u128 * self.cfg.pressure_demand_pct as u128
@@ -636,11 +1105,11 @@ impl FleetScheduler {
         // — so it is preferred whenever feasible.
         if self.cfg.state_migration {
             let target = (0..n)
-                .filter(|&i| i != src && !busy(i))
+                .filter(|&i| i != src && eligible(i) && !busy(i))
                 .filter(|&i| spare_of(i) >= hot.demand)
                 .max_by_key(|&i| (spare_of(i), std::cmp::Reverse(i)));
             if let Some(dst) = target {
-                self.start_state_migration(src, dst, hot);
+                self.start_state_migration(src, dst, hot, None);
                 return;
             }
         }
@@ -649,7 +1118,7 @@ impl FleetScheduler {
         // after the lease and has cold slack to shed. Most spare wins,
         // ties low id.
         let donor = (0..n)
-            .filter(|&i| i != src && !busy(i))
+            .filter(|&i| i != src && eligible(i) && !busy(i))
             .filter(|&i| spare_of(i) > 0 && snaps[i].cold > 0)
             .max_by_key(|&i| (spare_of(i), std::cmp::Reverse(i)));
         let Some(dst) = donor else { return };
@@ -683,7 +1152,13 @@ impl FleetScheduler {
     /// budget (the resident set that will arrive at the flip, plus the
     /// configured margin — its fleet starts shedding immediately), and
     /// enter the pre-copy phase.
-    fn start_state_migration(&mut self, src: usize, dst: usize, hot: HotVm) {
+    fn start_state_migration(
+        &mut self,
+        src: usize,
+        dst: usize,
+        hot: HotVm,
+        drain_since: Option<Time>,
+    ) {
         // Expected resident arrival: capped by the limit the donor's
         // arbiter enforces (plus in-flight slack), or current usage for
         // an unlimited VM. The escrow also covers the flip threshold —
@@ -721,6 +1196,7 @@ impl FleetScheduler {
             copied: BTreeMap::new(),
             precopy_ticks: 0,
             stalled: 0,
+            drain_since,
         });
         self.stats.state_migrations_started += 1;
     }
@@ -730,10 +1206,10 @@ impl FleetScheduler {
     /// (or pre-copy stops converging), attempt the stop-and-copy flip —
     /// gated on *measured* target headroom, so Σ(resident + pool) ≤
     /// budget holds on the target through the hand-off by construction.
-    fn advance_state_migrations(&mut self, _now: Time) {
+    fn advance_state_migrations(&mut self, now: Time) {
         let mut i = 0;
         while i < self.state_migrations.len() {
-            match self.step_state_migration(i) {
+            match self.step_state_migration(i, now) {
                 StateStep::InFlight => i += 1,
                 StateStep::Done | StateStep::Aborted => {
                     self.state_migrations.remove(i);
@@ -742,7 +1218,7 @@ impl FleetScheduler {
         }
     }
 
-    fn step_state_migration(&mut self, idx: usize) -> StateStep {
+    fn step_state_migration(&mut self, idx: usize, now: Time) -> StateStep {
         let (from, to, vm, reserved) = {
             let m = &self.state_migrations[idx];
             (m.from, m.to, m.vm, m.reserved)
@@ -822,7 +1298,7 @@ impl FleetScheduler {
             return StateStep::InFlight;
         }
 
-        self.flip_state_migration(idx, listing, resident)
+        self.flip_state_migration(idx, listing, resident, now)
     }
 
     /// The stop-and-copy flip: final copy of every stale unit, atomic
@@ -833,10 +1309,11 @@ impl FleetScheduler {
         idx: usize,
         listing: Vec<crate::storage::UnitSummary>,
         resident: u64,
+        now: Time,
     ) -> StateStep {
-        let (from, to, vm, reserved, escrow) = {
+        let (from, to, vm, reserved, escrow, drain_since) = {
             let m = &self.state_migrations[idx];
-            (m.from, m.to, m.vm, m.reserved, m.escrow)
+            (m.from, m.to, m.vm, m.reserved, m.escrow, m.drain_since)
         };
         // Final copy: units never staged or rewritten since staging.
         let mut flip_bytes = 0u64;
@@ -909,6 +1386,22 @@ impl FleetScheduler {
             if p.shard == from && p.vm == vm {
                 p.shard = to;
                 p.vm = reserved;
+            }
+        }
+        // A drain evacuation's flip arms a recovery probe: stop-and-copy
+        // carries the resident set, so restoration is measured from the
+        // fault, not from the flip.
+        if let Some(t0) = drain_since {
+            if let Some(pidx) = self
+                .placements
+                .iter()
+                .position(|p| p.shard == to && p.vm == reserved)
+            {
+                self.probes.push(RecoveryProbe {
+                    placement: pidx,
+                    target_bytes: resident / 2,
+                    t0,
+                });
             }
         }
         self.stats.record_transfer(from, to, flip_bytes);
@@ -1176,6 +1669,7 @@ mod tests {
                     copied: BTreeMap::new(),
                     precopy_ticks: 1,
                     stalled: 0,
+                    drain_since: None,
                 });
             }
             f
@@ -1218,5 +1712,98 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// PR 7 regression: the donor of an in-flight state migration
+    /// crashes mid-pre-copy. The migration must abort cleanly — the
+    /// target's escrow lease returns in full and its staged copies are
+    /// forgotten — and the VM is rebuilt elsewhere from its NVMe
+    /// receipts, with the audited totals pinned: Σ budgets steps down
+    /// by exactly the dead shard's budget.
+    #[test]
+    fn donor_crash_mid_precopy_returns_escrow_and_rebuilds_from_receipts() {
+        use crate::storage::TierHint;
+        use crate::types::MS;
+
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            cfg(3, PlacementPolicy::SpreadByFaultRate),
+        );
+        f.admit(spec(0, Sla::Silver, 2048, 10));
+        for s in &mut f.shards {
+            s.machine.start();
+        }
+        let vm = f.placements[0].vm;
+        assert_eq!(f.placements[0].shard, 0, "spread places the first VM on shard 0");
+        // Durable state on the donor: one NVMe receipt (salvageable)
+        // and one pool-resident unit (dies with the host's DRAM).
+        {
+            let m = &mut f.shards[0].machine;
+            let mut rng = crate::sim::Rng::new(7);
+            m.backend
+                .write(vm, 3, &[9u8; 4096], TierHint::Nvme, 0, &mut m.nvme, &mut rng);
+            m.backend
+                .write(vm, 5, &[0u8; 4096], TierHint::Pool, 0, &mut m.nvme, &mut rng);
+        }
+        // An in-flight state migration 0 → 1, mid-pre-copy: escrow
+        // taken on the target, one unit already staged there.
+        let escrow = 8u64 << 20;
+        f.shards[1].machine.control_mut().unwrap().begin_lease(escrow);
+        let reserved = f.shards[1].machine.reserve_slot();
+        let staged = f.shards[0].machine.backend.export_unit(vm, 3).unwrap();
+        f.shards[1].machine.backend.import_unit(reserved, staged);
+        f.state_migrations.push(StateMigration {
+            from: 0,
+            to: 1,
+            vm,
+            reserved,
+            escrow,
+            copied: BTreeMap::new(),
+            precopy_ticks: 1,
+            stalled: 0,
+            drain_since: None,
+        });
+
+        let budget0 = f.shard_budget(0);
+        let total_before = f.stats.total_budget_bytes;
+        f.crash_host(0, MS);
+
+        // The migration aborted cleanly.
+        assert!(f.state_migrations.is_empty());
+        assert_eq!(f.stats.state_migrations_aborted, 1);
+        let cp = f.shards[1].machine.control().unwrap();
+        assert_eq!(cp.arbitration_budget(), cp.cfg.host_budget_bytes, "escrow leaked");
+        assert!(
+            f.shards[1].machine.backend.list_units(reserved).is_empty(),
+            "staged copies survived the abort"
+        );
+
+        // The VM rebuilt on a live shard from exactly its NVMe receipt;
+        // the pool unit is accounted as genuinely lost.
+        let (ps, pv) = (f.placements[0].shard, f.placements[0].vm);
+        assert_ne!(ps, 0);
+        assert!(f.stats.alive[ps]);
+        assert!(!f.stats.alive[0]);
+        let units = f.shards[ps].machine.backend.list_units(pv);
+        assert_eq!(units.len(), 1, "exactly the NVMe receipt was salvaged");
+        assert_eq!(units[0].unit, 3);
+        assert_eq!(units[0].tier, SwapTier::Nvme);
+        assert_eq!(f.stats.vms_rebuilt, 1);
+        assert_eq!(f.stats.rebuild_salvaged_units, 1);
+        assert_eq!(f.stats.rebuild_salvaged_bytes, 4096);
+        assert_eq!(f.stats.rebuild_lost_units, 1);
+        assert_eq!(f.stats.rebuild_lost_bytes, 4096);
+        assert!(
+            f.shards[0].machine.backend.list_units(vm).is_empty(),
+            "the dead shard still lists the VM's units"
+        );
+
+        // Audited totals pinned: Σ stepped down by the dead budget.
+        assert_eq!(f.stats.budget_retired_bytes, budget0);
+        assert_eq!(f.stats.total_budget_bytes, total_before - budget0);
+        assert_eq!(f.shard_budget(0), 0);
+        let sum: u64 = (0..3).map(|i| f.shard_budget(i)).sum();
+        f.stats.audit_budgets(sum);
+        assert_eq!(f.stats.conservation_violations, 0);
     }
 }

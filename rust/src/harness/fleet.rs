@@ -21,16 +21,24 @@
 //!    rebalancer stages cold-memory migrations from the slackest
 //!    shards, so total major faults drop while Σ saved memory holds
 //!    (every shard stays limit-bound, and Σ budgets is conserved).
+//! 4. **Host failure** (PR 7) — the same state-migration fleet with
+//!    host 0 faulted mid-run, hard crash vs graceful drain
+//!    (degraded-NVMe). The drain arm evacuates its VMs with their
+//!    resident sets through state migration; the crash arm rebuilds
+//!    them from salvaged NVMe receipts and refaults everything. Drain
+//!    must beat crash on recovered-VM p99 fault stall and SLA
+//!    violations, with at least one completed evacuation flip.
 
 use crate::config::{
-    ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig, PlacementPolicy,
-    TierConfig, VmConfig,
+    ArbiterKind, ControlConfig, FleetConfig, HostConfig, HostFault, HostFaultKind, MmConfig,
+    PlacementPolicy, TierConfig, VmConfig,
 };
 use crate::coordinator::{Machine, Mechanism, VmSetup};
 use crate::daemon::{FleetScheduler, FleetVmSpec, Sla};
 use crate::metrics::{LatencyHist, Table};
 use crate::mm::Mm;
 use crate::policies::{DtReclaimer, LruReclaimer, NativeAnalytics, WsrPolicy};
+use crate::sim::Rng;
 use crate::types::{PageSize, Time, FRAME_BYTES, MS, SEC};
 use crate::workloads::{BootDelay, PhasedWss, UniformRandom, Workload};
 
@@ -331,12 +339,38 @@ pub struct ShardedSummary {
     pub state_stop_ns_max: u64,
     pub handoff_violations: u64,
     pub conservation_violations: u64,
-    /// Σ audited budgets after the run (must equal the initial Σ).
+    /// Σ audited budgets after the run (must equal the initial Σ minus
+    /// whatever crashes and revocations retired).
     pub budget_total_end: u64,
     pub budget_total_start: u64,
     pub p99_stall_ns: u64,
     pub runtime_ns: Time,
+    /// PR 7 fault/recovery ledger (all zero with no faults armed).
+    pub faults_injected: u64,
+    pub crashes: u64,
+    pub degrades: u64,
+    pub revocations: u64,
+    pub budget_retired_bytes: u64,
+    pub vms_rebuilt: u64,
+    pub rebuild_salvaged_bytes: u64,
+    pub rebuild_lost_bytes: u64,
+    pub drains_started: u64,
+    pub drains_completed: u64,
+    pub drain_deadline_misses: u64,
+    pub residency_restored: u64,
+    pub residency_restore_ns_max: u64,
+    /// Fault-stall stats over the *recovered population*: VMs admitted
+    /// to a host the fault plan targets, measured across the whole run
+    /// wherever they end up. Empty plan → zero VMs.
+    pub recovered_vms: usize,
+    pub recovered_p99_stall_ns: u64,
+    /// Recovered VMs whose own p99 fault stall exceeds [`FAULT_SLA_NS`].
+    pub recovered_sla_violations: u64,
 }
+
+/// The per-VM p99 fault-stall bound the failure experiment scores
+/// against: a recovered VM above this counts as an SLA violation.
+pub const FAULT_SLA_NS: u64 = MS;
 
 /// CLI-plumbed fleet-run options: execution engine and population
 /// overrides (`--sequential`, `--workers`, `--vms`). The default is the
@@ -351,6 +385,47 @@ pub struct FleetRunOpts {
     /// VMs per host, overriding the scale default (the nightly
     /// `--vms TOTAL` knob, divided by the host count in `main`).
     pub per_host: Option<usize>,
+    /// Fault schedule armed on soak runs (`--fault-plan`).
+    pub fault_plan: FaultPlan,
+}
+
+/// Which fault schedule a soak run arms (`--fault-plan <none|random>`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum FaultPlan {
+    /// No injected faults (the default).
+    #[default]
+    None,
+    /// A seed-derived chaos schedule of crash / degraded-NVMe /
+    /// budget-revocation faults ([`random_fault_plan`]).
+    Random,
+}
+
+/// Deterministic seed-derived chaos schedule: roughly half the hosts
+/// take one fault each, timed in the middle half of the fleet's pure
+/// compute span (so faults land while VMs are still working), with
+/// crashes capped at `hosts - 2` so recovery always has live shards to
+/// land on.
+pub fn random_fault_plan(hosts: usize, ops_per_vm: u64, seed: u64) -> Vec<HostFault> {
+    let mut rng = Rng::new(seed ^ 0x00FA_0175);
+    // `run_sharded_fleet_faulted` workloads cost 20µs of compute per op.
+    let work_ns = ops_per_vm * 20_000;
+    let (lo, hi) = (work_ns / 4, (work_ns * 3 / 4).max(work_ns / 4 + 1));
+    let crash_cap = hosts.saturating_sub(2);
+    let mut crashes = 0usize;
+    let mut plan = Vec::new();
+    for host in 0..hosts {
+        let at = rng.range(lo, hi);
+        match rng.below(6) {
+            0 if crashes < crash_cap => {
+                crashes += 1;
+                plan.push(HostFault { at, host, kind: HostFaultKind::Crash });
+            }
+            1 | 2 => plan.push(HostFault { at, host, kind: HostFaultKind::DegradedNvme }),
+            3 => plan.push(HostFault { at, host, kind: HostFaultKind::BudgetRevoke }),
+            _ => {}
+        }
+    }
+    plan
 }
 
 /// Build and run one sharded fleet: `hosts` shards × `per_host` VMs,
@@ -386,6 +461,23 @@ pub fn run_sharded_fleet_exec(
     seed: u64,
     parallel: bool,
     workers: Option<usize>,
+) -> ShardedSummary {
+    run_sharded_fleet_faulted(hosts, per_host, ops_per_vm, mode, seed, parallel, workers, &[])
+}
+
+/// [`run_sharded_fleet_exec`] with a [`HostFault`] schedule armed (PR
+/// 7). The recovered-population stats track every VM admitted to a
+/// faulted host across the whole run, wherever recovery lands it.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_fleet_faulted(
+    hosts: usize,
+    per_host: usize,
+    ops_per_vm: u64,
+    mode: FleetMode,
+    seed: u64,
+    parallel: bool,
+    workers: Option<usize>,
+    faults: &[HostFault],
 ) -> ShardedSummary {
     let n = hosts * per_host;
     let frames = 4096u64;
@@ -424,6 +516,7 @@ pub fn run_sharded_fleet_exec(
         max_time: 60 * SEC,
         parallel,
         workers,
+        faults: faults.to_vec(),
         ..Default::default()
     };
     let mut f = FleetScheduler::new(&template, cfg);
@@ -498,6 +591,19 @@ pub fn run_sharded_fleet_exec(
     }
     let budget_total_start: u64 = budgets.iter().sum();
 
+    // The recovered population: every VM admitted to a host the fault
+    // plan targets. Captured as placement-log indices — the log is
+    // append-only and follows each VM across crashes and drains.
+    let faulted_hosts: std::collections::BTreeSet<usize> =
+        faults.iter().map(|f| f.host).collect();
+    let recovered_pidx: Vec<usize> = f
+        .placements
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| faulted_hosts.contains(&p.shard))
+        .map(|(i, _)| i)
+        .collect();
+
     let results = f.run();
     let mut hist = LatencyHist::default();
     let mut per_host = Vec::with_capacity(hosts);
@@ -541,6 +647,22 @@ pub fn run_sharded_fleet_exec(
             majors,
         });
     }
+    // Per-VM recovered stats: a shard's result rows flatten its
+    // occupied slots in slot-id order, so a VM's row index is the count
+    // of occupied lower slots on its final shard.
+    let mut rec_hist = LatencyHist::default();
+    let mut rec_viol = 0u64;
+    for &pidx in &recovered_pidx {
+        let p = &f.placements[pidx];
+        let row = (0..p.vm)
+            .filter(|&u| f.shards[p.shard].machine.mm(u).is_some())
+            .count();
+        let r = &results[p.shard][row];
+        rec_hist.merge(&r.fault_hist);
+        if r.fault_hist.quantile(0.99) > FAULT_SLA_NS {
+            rec_viol += 1;
+        }
+    }
     ShardedSummary {
         hosts,
         vms: n,
@@ -567,6 +689,22 @@ pub fn run_sharded_fleet_exec(
         budget_total_start,
         p99_stall_ns: hist.quantile(0.99),
         runtime_ns: runtime,
+        faults_injected: f.stats.faults_injected,
+        crashes: f.stats.crashes,
+        degrades: f.stats.degrades,
+        revocations: f.stats.revocations,
+        budget_retired_bytes: f.stats.budget_retired_bytes,
+        vms_rebuilt: f.stats.vms_rebuilt,
+        rebuild_salvaged_bytes: f.stats.rebuild_salvaged_bytes,
+        rebuild_lost_bytes: f.stats.rebuild_lost_bytes,
+        drains_started: f.stats.drains_started,
+        drains_completed: f.stats.drains_completed,
+        drain_deadline_misses: f.stats.drain_deadline_misses,
+        residency_restored: f.stats.residency_restored,
+        residency_restore_ns_max: f.stats.residency_restore_ns_max,
+        recovered_vms: recovered_pidx.len(),
+        recovered_p99_stall_ns: rec_hist.quantile(0.99),
+        recovered_sla_violations: rec_viol,
     }
 }
 
@@ -578,11 +716,15 @@ pub fn fleet(scale: Scale) -> Vec<Table> {
 
 /// The nightly soak: the sharded lease-vs-state comparison swept over
 /// many seeds at larger scale (`flexswap fleet --hosts 64 --vms 4096
-/// --seeds N`). Kept out of the PR-gating CI path — the
-/// `schedule:`-triggered workflow runs it and uploads the per-seed CSV.
-/// Every run must hold the budget / conservation / atomic-hand-off
-/// invariants; migration activity is reported, not asserted (a seed
-/// whose fleet never pressures a VM is data, not a failure).
+/// --seeds N`), optionally as a chaos soak with a seed-derived fault
+/// schedule armed (`--fault-plan random`). Kept out of the PR-gating
+/// CI path — the `schedule:`-triggered workflow runs it and uploads
+/// the per-seed CSV. Every run must hold the budget / conservation /
+/// atomic-hand-off invariants — with faults, the conservation baseline
+/// steps down by exactly the retired budgets — and no VM may lose work
+/// to a fault; migration and recovery activity is reported, not
+/// asserted (a seed whose plan injects nothing is data, not a
+/// failure).
 pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) -> Vec<Table> {
     let per_host = opts.per_host.unwrap_or(scale.u(8, 16) as usize);
     let ops = scale.u(16_000, 48_000);
@@ -602,12 +744,22 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
             "stop_max_us",
             "p99_stall_us",
             "runtime_ms",
+            "faults",
+            "vms_rebuilt",
+            "retired_mb",
+            "restored",
+            "restore_max_ms",
+            "drain_misses",
         ],
     );
     for seed in 0..seeds {
+        let plan = match opts.fault_plan {
+            FaultPlan::None => vec![],
+            FaultPlan::Random => random_fault_plan(hosts, ops, seed),
+        };
         for mode in [FleetMode::LeaseOnly, FleetMode::StateMigration] {
             let label = mode.label();
-            let s = run_sharded_fleet_exec(
+            let s = run_sharded_fleet_faulted(
                 hosts,
                 per_host,
                 ops,
@@ -615,15 +767,21 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
                 seed,
                 !opts.sequential,
                 opts.workers,
+                &plan,
             );
             assert_eq!(
                 s.total_ops,
                 s.vms as u64 * ops,
-                "soak seed {seed} {label}: fleet incomplete"
+                "soak seed {seed} {label}: fleet lost work"
             );
             assert_eq!(
                 s.conservation_violations, 0,
                 "soak seed {seed} {label}: budgets drifted"
+            );
+            assert_eq!(
+                s.budget_total_end + s.budget_retired_bytes,
+                s.budget_total_start,
+                "soak seed {seed} {label}: Σ budgets ≠ start − retired"
             );
             assert_eq!(
                 s.handoff_violations, 0,
@@ -658,6 +816,15 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
                 format!("{:.0}", s.state_stop_ns_max as f64 / 1e3),
                 format!("{:.0}", s.p99_stall_ns as f64 / 1e3),
                 format!("{:.0}", s.runtime_ns as f64 / 1e6),
+                format!(
+                    "{}c/{}d/{}r",
+                    s.crashes, s.degrades, s.revocations
+                ),
+                s.vms_rebuilt.to_string(),
+                format!("{:.1}", s.budget_retired_bytes as f64 / 1e6),
+                s.residency_restored.to_string(),
+                format!("{:.0}", s.residency_restore_ns_max as f64 / 1e6),
+                s.drain_deadline_misses.to_string(),
             ]);
         }
     }
@@ -885,5 +1052,117 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
             lease = Some(s);
         }
     }
-    vec![t, t2, t3]
+
+    // Host failure: hard crash vs graceful drain on the same pressured
+    // state-migration fleet (PR 7). One fault hits host 0 halfway
+    // through the fleet's pure compute span — both arms share the same
+    // seed, so their schedules are identical up to the fault tick and
+    // the comparison isolates the recovery path. The crash arm rebuilds
+    // host 0's VMs from salvaged NVMe receipts and refaults their
+    // residency cold on the survivors; the drain arm evacuates them
+    // with their resident sets via stop-and-copy flips. Drain must be
+    // no worse on recovered-VM p99 fault stall and SLA violations, and
+    // strictly better on at least one.
+    let fault_at = shard_ops * 20_000 / 2;
+    let mut t4 = Table::new(
+        "host failure: hard crash at T vs graceful drain (state-migration fleet)",
+        &[
+            "config",
+            "faults",
+            "recovered_vms",
+            "recovered_p99_us",
+            "sla_violations",
+            "restored",
+            "restore_max_ms",
+            "vms_rebuilt",
+            "salvaged_mb",
+            "lost_mb",
+            "drain_misses",
+            "evac_flips",
+            "stop_max_us",
+            "major_faults",
+            "runtime_ms",
+        ],
+    );
+    let mut crash_arm: Option<ShardedSummary> = None;
+    for (label, kind) in [
+        ("hard-crash", HostFaultKind::Crash),
+        ("graceful-drain", HostFaultKind::DegradedNvme),
+    ] {
+        let faults = vec![HostFault { at: fault_at, host: 0, kind }];
+        let s = run_sharded_fleet_faulted(
+            hosts,
+            per_host,
+            shard_ops,
+            FleetMode::StateMigration,
+            7,
+            !opts.sequential,
+            opts.workers,
+            &faults,
+        );
+        assert_eq!(
+            s.total_ops,
+            s.vms as u64 * shard_ops,
+            "{label}: fleet lost work to the fault"
+        );
+        assert_eq!(s.conservation_violations, 0, "{label}: budgets drifted");
+        assert_eq!(
+            s.budget_total_end + s.budget_retired_bytes,
+            s.budget_total_start,
+            "{label}: Σ budgets ≠ start − retired"
+        );
+        assert_eq!(s.handoff_violations, 0, "{label}: non-atomic hand-off");
+        for h in &s.per_host {
+            assert_eq!(
+                h.budget_exceeded_ticks, 0,
+                "{label}: host {} exceeded its budget ({} min headroom)",
+                h.host, h.min_headroom_bytes
+            );
+        }
+        // Pinned on the canonical topology, like the t3 acceptance.
+        if hosts == 4 && opts.per_host.is_none() {
+            if kind == HostFaultKind::Crash {
+                assert!(s.vms_rebuilt > 0, "{label}: the crash rebuilt nothing");
+            } else {
+                assert!(
+                    s.state_migrations_completed >= 1,
+                    "{label}: no evacuation flip completed: {s:?}"
+                );
+                let c = crash_arm.as_ref().expect("crash arm ran first");
+                assert!(
+                    s.recovered_p99_stall_ns <= c.recovered_p99_stall_ns
+                        && s.recovered_sla_violations <= c.recovered_sla_violations
+                        && (s.recovered_p99_stall_ns < c.recovered_p99_stall_ns
+                            || s.recovered_sla_violations < c.recovered_sla_violations),
+                    "{label}: drain did not beat the crash — p99 {} vs {} ns, \
+                     violations {} vs {}",
+                    s.recovered_p99_stall_ns,
+                    c.recovered_p99_stall_ns,
+                    s.recovered_sla_violations,
+                    c.recovered_sla_violations
+                );
+            }
+        }
+        t4.row(vec![
+            label.into(),
+            format!("{}c/{}d/{}r", s.crashes, s.degrades, s.revocations),
+            s.recovered_vms.to_string(),
+            format!("{:.0}", s.recovered_p99_stall_ns as f64 / 1e3),
+            s.recovered_sla_violations.to_string(),
+            s.residency_restored.to_string(),
+            format!("{:.0}", s.residency_restore_ns_max as f64 / 1e6),
+            s.vms_rebuilt.to_string(),
+            format!("{:.1}", s.rebuild_salvaged_bytes as f64 / 1e6),
+            format!("{:.1}", s.rebuild_lost_bytes as f64 / 1e6),
+            s.drain_deadline_misses.to_string(),
+            s.state_migrations_completed.to_string(),
+            format!("{:.0}", s.state_stop_ns_max as f64 / 1e3),
+            s.total_majors.to_string(),
+            format!("{:.0}", s.runtime_ns as f64 / 1e6),
+        ]);
+        if kind == HostFaultKind::Crash {
+            crash_arm = Some(s);
+        }
+    }
+    vec![t, t2, t3, t4]
 }

@@ -111,8 +111,8 @@ pub fn registry() -> Vec<Experiment> {
         },
         Experiment {
             id: "fleet",
-            title: "Fleet control plane: mixed-SLA VMs under closed-loop limits, plus a 4-host sharded fleet with budget leases and live VM state migration (PR 3/4/5 extension)",
-            expectation: "per-host budget never exceeded at any control tick — mid-migration included — and Σ budgets conserved; closed-loop beats static limits on memory saved and/or p99 stall; the lease rebalancer cuts total major faults on the pressure-skewed 4-host fleet without losing Σ saved memory; full VM state migration beats lease-only on majors or occupancy, with atomic hand-off at every flip",
+            title: "Fleet control plane: mixed-SLA VMs under closed-loop limits, plus a 4-host sharded fleet with budget leases, live VM state migration, and host failure injection (PR 3/4/5/7 extension)",
+            expectation: "per-host budget never exceeded at any control tick — mid-migration included — and Σ budgets conserved (less exactly the retired budget of dead hosts); closed-loop beats static limits on memory saved and/or p99 stall; the lease rebalancer cuts total major faults on the pressure-skewed 4-host fleet without losing Σ saved memory; full VM state migration beats lease-only on majors or occupancy, with atomic hand-off at every flip; graceful drain beats hard crash on recovered-VM p99 fault stall and SLA violations",
             run: fleet::fleet,
         },
         Experiment {
@@ -167,30 +167,37 @@ pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
 /// `flexswap fleet --hosts N` CLI path; tables land in the same
 /// `results/fleet_*.csv` files as the registered run). `opts` carries
 /// the execution-engine knobs: `--sequential` (merge-loop oracle
-/// instead of the parallel epoch engine), `--workers N`, and `--vms N`
-/// (total population, split evenly across hosts).
+/// instead of the parallel epoch engine), `--workers N`, `--vms N`
+/// (total population, split evenly across hosts), and `--fault-plan`
+/// (arm randomized host faults in the soak).
 pub fn run_fleet_with_hosts(scale: Scale, hosts: usize, opts: fleet::FleetRunOpts) -> String {
     let tables = fleet::fleet_with_hosts(scale, hosts, opts);
     let engine = if opts.sequential { "sequential merge" } else { "parallel epochs" };
     let header = format!(
         "## Fleet control plane ({hosts} host shards, {engine})\n\n*Expectation:* \
          per-host budget held at every tick (mid-migration included), \
-         Σ budgets conserved, rebalancer cuts major faults on the \
-         pressured host, full VM migration beats lease-only\n\n"
+         Σ budgets conserved less retired dead-host budget, rebalancer \
+         cuts major faults on the pressured host, full VM migration \
+         beats lease-only, graceful drain beats hard crash on \
+         recovered-VM tail latency\n\n"
     );
     emit_tables("fleet", header, &tables)
 }
 
 /// The nightly fleet soak (`flexswap fleet --hosts N --seeds K`): the
 /// sharded comparison swept over `seeds` seeds, CSV per seed under
-/// `results/fleet_soak_*.csv`. Scheduled CI runs this off the
-/// PR-gating path.
+/// `results/fleet_soak_*.csv`. With `--fault-plan random` each seed
+/// also carries a seed-derived host-fault schedule (chaos soak).
+/// Scheduled CI runs this off the PR-gating path.
 pub fn run_fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: fleet::FleetRunOpts) -> String {
     let tables = fleet::fleet_soak(scale, hosts, seeds, opts);
+    let chaos = if opts.fault_plan == fleet::FaultPlan::Random { ", random faults" } else { "" };
     let header = format!(
-        "## Fleet soak ({hosts} host shards × {seeds} seeds)\n\n*Expectation:* \
+        "## Fleet soak ({hosts} host shards × {seeds} seeds{chaos})\n\n*Expectation:* \
          every seed holds the budget / conservation / atomic-hand-off \
-         invariants; migration activity is reported per seed\n\n"
+         invariants (Σ budgets stepping down by exactly each dead \
+         host's budget); migration and recovery activity is reported \
+         per seed\n\n"
     );
     emit_tables("fleet_soak", header, &tables)
 }

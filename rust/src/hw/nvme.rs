@@ -25,6 +25,10 @@ pub struct Nvme {
     bus_ns_per_byte_den: u64,
     lat_4k_ns: Time,
     lat_2m_extra_ns: Time,
+    /// Flash-latency multiplier; 1 = healthy. Raised by the fleet's
+    /// degraded-NVMe fault injection (transfer time is unchanged: the
+    /// bus is fine, the flash is dying).
+    degrade_factor: u32,
     pub ops: u64,
     pub bytes: u64,
     /// Busy time of the bus (for utilization reporting).
@@ -40,6 +44,7 @@ impl Nvme {
             bus_ns_per_byte_den: hw.nvme_bus_bytes_per_sec,
             lat_4k_ns: hw.nvme_lat_4k_ns,
             lat_2m_extra_ns: hw.nvme_lat_2m_extra_ns,
+            degrade_factor: 1,
             ops: 0,
             bytes: 0,
             bus_busy_ns: 0,
@@ -74,6 +79,7 @@ impl Nvme {
         if kind == IoKind::Write {
             flash = flash * 7 / 10;
         }
+        flash *= self.degrade_factor.max(1) as Time;
 
         // Serialize payload on the shared PCIe bus.
         let xfer = self.transfer_ns(bytes);
@@ -85,6 +91,18 @@ impl Nvme {
         let done = (start + flash).max(bus_done);
         self.channel_free[ci] = done;
         done
+    }
+
+    /// Degrade (or heal) the device: every subsequent op's flash
+    /// latency is multiplied by `factor` (clamped to ≥ 1). In-flight
+    /// completions are unaffected — degradation is prospective, which
+    /// keeps fault injection deterministic at any worker count.
+    pub fn set_degrade_factor(&mut self, factor: u32) {
+        self.degrade_factor = factor.max(1);
+    }
+
+    pub fn degrade_factor(&self) -> u32 {
+        self.degrade_factor
     }
 
     /// Aggregate achieved bandwidth over an interval.
@@ -149,6 +167,23 @@ mod tests {
         let d33 = d.submit(0, FRAME_BYTES, IoKind::Read);
         assert!(d33 > max, "d33 {d33} max {max}");
         let _ = MS;
+    }
+
+    #[test]
+    fn degraded_flash_inflates_latency_but_not_transfer() {
+        let mut healthy = dev();
+        let mut sick = dev();
+        sick.set_degrade_factor(8);
+        assert_eq!(sick.degrade_factor(), 8);
+        let h = healthy.submit(0, FRAME_BYTES, IoKind::Read);
+        let s = sick.submit(0, FRAME_BYTES, IoKind::Read);
+        // 4k ops are flash-dominated: ~8x slower end to end.
+        assert!(s >= 7 * h, "sick {s} healthy {h}");
+        // Clamp: a zero factor means healthy, not free I/O.
+        let mut z = dev();
+        z.set_degrade_factor(0);
+        assert_eq!(z.degrade_factor(), 1);
+        assert_eq!(z.submit(0, FRAME_BYTES, IoKind::Read), h);
     }
 
     #[test]

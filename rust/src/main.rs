@@ -9,10 +9,11 @@
 //!   flexswap fleet --hosts 64 --vms 4096 # explicit total VM population
 //!   flexswap fleet --hosts 4 --sequential # merge-loop oracle (no worker threads)
 //!   flexswap fleet --hosts 4 --workers 2  # pin the epoch engine's thread count
+//!   flexswap fleet --hosts 8 --seeds 6 --fault-plan random  # chaos soak
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
 
-use flexswap::harness::fleet::FleetRunOpts;
+use flexswap::harness::fleet::{FaultPlan, FleetRunOpts};
 use flexswap::harness::{registry, run_by_id, run_fleet_soak, run_fleet_with_hosts, Scale};
 
 fn main() {
@@ -72,12 +73,29 @@ fn main() {
         }
     });
 
+    // `--fault-plan <none|random>`: arm a deterministic host-fault
+    // schedule (crash / degraded-NVMe / budget-revocation, derived from
+    // each run's seed) in the fleet soak.
+    let fault_plan = args.iter().position(|a| a == "--fault-plan").map(|i| {
+        match args.get(i + 1).map(|v| v.as_str()) {
+            Some("none") => FaultPlan::None,
+            Some("random") => FaultPlan::Random,
+            _ => {
+                eprintln!(
+                    "--fault-plan needs `none` or `random` (e.g. `flexswap fleet --fault-plan random`)"
+                );
+                std::process::exit(2);
+            }
+        }
+    });
+
     if cmd == "fleet" {
         let h = hosts.unwrap_or(4);
         let opts = FleetRunOpts {
             sequential: args.iter().any(|a| a == "--sequential"),
             workers,
             per_host: vms.map(|v| v.div_ceil(h)),
+            fault_plan: fault_plan.unwrap_or_default(),
         };
         if let Some(k) = seeds {
             println!("{}", run_fleet_soak(scale, h, k, opts));

@@ -224,6 +224,47 @@ pub struct FleetStats {
     /// Per-shard whole-VM arrivals / departures.
     pub vms_migrated_in: Vec<u64>,
     pub vms_migrated_out: Vec<u64>,
+
+    // ---- Fault / recovery ledger (the PR 7 failure model) ----
+    /// [`crate::config::HostFault`] events injected (all kinds).
+    pub faults_injected: u64,
+    pub crashes: u64,
+    pub degrades: u64,
+    pub revocations: u64,
+    /// Bytes taken back by budget revocations (chunked, as they land).
+    pub revoked_bytes: u64,
+    /// Total budget permanently removed from the Σ-budget baseline:
+    /// dead hosts' full budgets plus delivered revocations. The audit
+    /// holds `Σ shard budgets == total_budget_bytes` where the baseline
+    /// has already been stepped down by exactly this amount.
+    pub budget_retired_bytes: u64,
+    /// Graceful drains started / fully evacuated before their deadline.
+    pub drains_started: u64,
+    pub drains_completed: u64,
+    /// VMs still on a draining shard when its deadline expired (they
+    /// fell back to the lease-only rebalancer).
+    pub drain_deadline_misses: u64,
+    /// VMs rebuilt on surviving shards after a host crash.
+    pub vms_rebuilt: u64,
+    /// NVMe receipts salvaged into rebuilt VMs (units / raw bytes) —
+    /// swap state that survived its host's death.
+    pub rebuild_salvaged_units: u64,
+    pub rebuild_salvaged_bytes: u64,
+    /// Pool-resident-only units lost with the host (units / raw bytes);
+    /// their content is re-synthesized as cold faults on first touch.
+    pub rebuild_lost_units: u64,
+    pub rebuild_lost_bytes: u64,
+    /// Per-shard liveness: false once the host crashed.
+    pub alive: Vec<bool>,
+    /// Per-shard fault-latency EWMA (ns), updated each fleet tick from
+    /// the shard's merged per-VM fault histograms (health gauge).
+    pub fault_ewma_ns: Vec<u64>,
+    /// Per-shard fleet ticks missed while dead (health gauge).
+    pub missed_ticks: Vec<u64>,
+    /// Recovered VMs (crash-rebuilt or drain-migrated) that re-reached
+    /// their pre-fault residency target, and the slowest such recovery.
+    pub residency_restored: u64,
+    pub residency_restore_ns_max: Time,
 }
 
 impl FleetStats {
@@ -236,8 +277,20 @@ impl FleetStats {
             budget_exceeded_ticks: vec![0; hosts],
             vms_migrated_in: vec![0; hosts],
             vms_migrated_out: vec![0; hosts],
+            alive: vec![true; hosts],
+            fault_ewma_ns: vec![0; hosts],
+            missed_ticks: vec![0; hosts],
             ..Default::default()
         }
+    }
+
+    /// Permanently retire `bytes` from the Σ-budget baseline (a dead
+    /// host's budget, or a delivered revocation chunk). Subsequent
+    /// [`FleetStats::audit_budgets`] calls compare against the stepped-
+    /// down baseline, so conservation means "shrank by *exactly* this".
+    pub fn retire_budget(&mut self, bytes: u64) {
+        self.total_budget_bytes -= bytes;
+        self.budget_retired_bytes += bytes;
     }
 
     /// Record one completed stop-and-copy flip of a whole VM.
@@ -481,6 +534,25 @@ mod tests {
         assert_eq!(s.vms_migrated_out, vec![1, 1]);
         assert_eq!(s.vms_migrated_in, vec![1, 1]);
         assert_eq!(s.handoff_violations, 0);
+    }
+
+    #[test]
+    fn fleet_stats_budget_retirement_steps_down_baseline() {
+        let mut s = FleetStats::new(2, 1000);
+        s.audit_budgets(1000);
+        assert_eq!(s.conservation_violations, 0);
+        // A crash retires the dead host's budget: the audit baseline
+        // steps down by exactly that amount, so only the stepped-down
+        // sum passes from here on.
+        s.retire_budget(400);
+        assert_eq!(s.total_budget_bytes, 600);
+        assert_eq!(s.budget_retired_bytes, 400);
+        s.audit_budgets(600);
+        assert_eq!(s.conservation_violations, 0);
+        s.audit_budgets(1000);
+        assert_eq!(s.conservation_violations, 1);
+        assert_eq!(s.alive, vec![true, true]);
+        assert_eq!(s.missed_ticks, vec![0, 0]);
     }
 
     #[test]

@@ -370,6 +370,28 @@ impl EngineCore {
         }
     }
 
+    /// Crash demotion: the host under this VM died, so its DRAM —
+    /// every resident unit — is gone. Residents become Swapped (their
+    /// next touch refaults cold against the rebuild shard's backend)
+    /// and every clean-on-disk bit drops: those bits vouched for the
+    /// *dead* host's backend, so no future reclaim may elide its
+    /// write-back against the new one. In-flight transitions and
+    /// queued intents are left alone — the conflating pickup settles
+    /// their planned counts when the stale entries pop. Returns the
+    /// demoted bytes. Callers unmap the EPT themselves.
+    pub fn crash_demote_all(&mut self) -> u64 {
+        let mut demoted = 0u64;
+        for ui in 0..self.states.len() {
+            if self.states[ui] == UnitState::Resident {
+                self.states[ui] = UnitState::Swapped;
+                self.usage_units -= 1;
+                demoted += self.unit_bytes;
+            }
+            self.clean_on_disk.clear(ui);
+        }
+        demoted
+    }
+
     /// Planned usage if every queued request were processed: the paper's
     /// "correct ratio of swap-in and swap-out requests" invariant.
     pub fn planned_usage(&self) -> i64 {

@@ -283,4 +283,48 @@ pub trait SwapBackend: Send {
     fn forget_vm(&mut self, _vm: VmId) -> usize {
         0
     }
+
+    /// Crash salvage: what survives of a VM's swap state when this
+    /// backend's host dies. NVMe receipts are durable — they are
+    /// exported for re-import on the rebuild shard. Pool-resident
+    /// copies lived in the dead host's DRAM and are genuinely lost:
+    /// they are only *counted* (units, raw bytes); the rebuilt VM
+    /// re-synthesizes their content as cold faults on first touch
+    /// (the never-written-unit fallthrough in the read contract).
+    /// The VM's entries are dropped either way — the backend belongs
+    /// to a machine that no longer exists.
+    fn salvage_vm(&mut self, vm: VmId) -> CrashSalvage {
+        let mut s = CrashSalvage::default();
+        for u in self.list_units(vm) {
+            match u.tier {
+                SwapTier::Nvme => {
+                    if let Some(p) = self.export_unit(vm, u.unit) {
+                        s.salvaged_bytes += u.raw_bytes;
+                        s.units.push(p);
+                    }
+                }
+                SwapTier::Pool => {
+                    s.lost_units += 1;
+                    s.lost_bytes += u.raw_bytes;
+                }
+            }
+        }
+        self.forget_vm(vm);
+        s
+    }
+}
+
+/// What [`SwapBackend::salvage_vm`] recovered from a dead host: the
+/// durable NVMe copies, plus the tally of pool-resident state that died
+/// with the host's DRAM.
+#[derive(Debug, Clone, Default)]
+pub struct CrashSalvage {
+    /// Durable NVMe copies, ascending by unit id, ready to re-import.
+    pub units: Vec<PortableUnit>,
+    /// Raw bytes of the salvaged NVMe copies.
+    pub salvaged_bytes: u64,
+    /// Pool-resident-only units lost with the host.
+    pub lost_units: u64,
+    /// Raw bytes of the lost pool copies.
+    pub lost_bytes: u64,
 }

@@ -62,7 +62,8 @@ pub mod locks;
 pub mod tiered;
 
 pub use backend::{
-    IoReceipt, IoToken, PortableUnit, SwapBackend, SwapTier, TierHint, TierMetrics, UnitSummary,
+    CrashSalvage, IoReceipt, IoToken, PortableUnit, SwapBackend, SwapTier, TierHint, TierMetrics,
+    UnitSummary,
 };
 pub use codec::{compress, decompress, is_zero_page, Compressed};
 pub use content::{ContentClass, ContentMix, ContentModel};

@@ -13,17 +13,22 @@
 //! lease acceptance. PR 6 adds the parallel-execution gate: the epoch
 //! engine (per-shard worker threads, fleet tick as barrier) must be
 //! byte-identical to the sequential merge loop at any worker count.
+//! PR 7 adds the chaos sweep: randomized host-fault schedules (crash,
+//! degraded NVMe, budget revocation) under which every invariant must
+//! still hold — Σ budgets stepping down by exactly each dead host's
+//! budget — with no VM lost and the same worker-count byte-identity.
 
 use std::sync::{Arc, Mutex};
 
 use flexswap::config::{
-    ArbiterKind, ControlConfig, FleetConfig, HostConfig, MmConfig, PlacementPolicy,
-    TierConfig, VmConfig,
+    ArbiterKind, ControlConfig, FleetConfig, HostConfig, HostFault, HostFaultKind, MmConfig,
+    PlacementPolicy, TierConfig, VmConfig,
 };
 use flexswap::coordinator::{Machine, Mechanism, VmSetup};
 use flexswap::daemon::{Arbiter, FleetScheduler, FleetVmSpec, Sla, VmReport};
 use flexswap::harness::fleet::{
-    run_sharded_fleet, run_sharded_fleet_exec, FleetMode, ShardedSummary,
+    random_fault_plan, run_sharded_fleet, run_sharded_fleet_exec, run_sharded_fleet_faulted,
+    FleetMode, ShardedSummary,
 };
 use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
 use flexswap::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
@@ -409,6 +414,161 @@ fn state_migration_beats_lease_only() {
         state.avg_fleet_bytes,
         lease.avg_fleet_bytes
     );
+}
+
+// ---------------------------------------------------------------------
+// Chaos sweep: randomized host-fault schedules (PR 7 tentpole gate)
+// ---------------------------------------------------------------------
+
+/// The fault-run version of [`assert_summary_invariants`]: Σ budgets
+/// may legitimately shrink, but only by exactly what crashes and
+/// revocations retired — never by drift.
+fn assert_chaos_summary_invariants(s: &ShardedSummary, label: &str) {
+    assert_eq!(s.conservation_violations, 0, "{label}: budgets drifted");
+    assert_eq!(
+        s.budget_total_end + s.budget_retired_bytes,
+        s.budget_total_start,
+        "{label}: Σ budgets did not step down by exactly the retired amount"
+    );
+    assert_eq!(s.handoff_violations, 0, "{label}: non-atomic hand-off");
+    for h in &s.per_host {
+        assert_eq!(
+            h.budget_exceeded_ticks, 0,
+            "{label}: host {} exceeded its budget ({} min headroom)",
+            h.host, h.min_headroom_bytes
+        );
+    }
+    assert_eq!(
+        s.crashes + s.degrades + s.revocations,
+        s.faults_injected,
+        "{label}: fault ledger drift"
+    );
+}
+
+/// The chaos sweep: ≥40 seeds, each with its own randomized host-fault
+/// schedule (up to one crash / degraded-NVMe / budget-revocation per
+/// host, timed inside the run's compute span), alternating the
+/// state-migration and lease-only recovery paths. Every seed must (a)
+/// hold each shard's budget at every tick — mid-evacuation and
+/// mid-rebuild included, (b) finish every VM's work (a VM whose pages
+/// reached NVMe is never lost to a crash), and (c) conserve Σ budgets
+/// less exactly the retired dead-host/revoked amounts.
+#[test]
+fn chaos_invariants_hold_across_forty_random_fault_seeds() {
+    let (hosts, per_host, ops) = (4usize, 3usize, 6_000u64);
+    let (mut crashes, mut degrades, mut revocations) = (0u64, 0u64, 0u64);
+    for seed in 0..44u64 {
+        let plan = random_fault_plan(hosts, ops, seed);
+        let mode = if seed % 2 == 0 {
+            FleetMode::StateMigration
+        } else {
+            FleetMode::LeaseOnly
+        };
+        let label = format!("chaos seed {seed} ({mode:?})");
+        let s = run_sharded_fleet_faulted(
+            hosts, per_host, ops, mode, seed, true, None, &plan,
+        );
+        assert_eq!(s.vms, hosts * per_host, "{label}: admission lost a VM");
+        assert_eq!(
+            s.total_ops,
+            s.vms as u64 * ops,
+            "{label}: a VM lost work to a fault"
+        );
+        assert_chaos_summary_invariants(&s, &label);
+        // Every planned fault fired (the plan targets each host at most
+        // once, so none is ever skipped as already-dead).
+        assert_eq!(
+            s.faults_injected,
+            plan.len() as u64,
+            "{label}: schedule not fully injected"
+        );
+        let planned_crashes =
+            plan.iter().filter(|f| f.kind == HostFaultKind::Crash).count() as u64;
+        assert_eq!(s.crashes, planned_crashes, "{label}: crash count drift");
+        if s.crashes == 0 {
+            assert_eq!(s.vms_rebuilt, 0, "{label}: rebuild without a crash");
+            if s.revocations == 0 {
+                // Only crashes and revocations may retire budget.
+                assert_eq!(
+                    s.budget_retired_bytes, 0,
+                    "{label}: budget retired without a crash or revocation"
+                );
+            }
+        } else {
+            // A dead host's budget reads zero afterwards; something was
+            // retired for every crash.
+            assert!(
+                s.budget_retired_bytes > 0,
+                "{label}: crash retired no budget"
+            );
+        }
+        if s.degrades == 0 {
+            assert_eq!(s.drains_started, 0, "{label}: drain without a degrade");
+        }
+        crashes += s.crashes;
+        degrades += s.degrades;
+        revocations += s.revocations;
+    }
+    // The sweep as a whole exercised every fault kind.
+    assert!(
+        crashes > 0 && degrades > 0 && revocations > 0,
+        "sweep never exercised all fault kinds: {crashes}c/{degrades}d/{revocations}r"
+    );
+}
+
+/// Worker-count byte-identity with faults armed: a fixed three-kind
+/// schedule (drain host 1, then crash host 2 mid-drain, then revoke
+/// host 3) on the pressure-skewed state-migration fleet must produce
+/// the same bytes from the sequential merge oracle and the epoch
+/// engine at 1, 2, and `available_parallelism` workers. Fault
+/// injection, evacuation, and crash rebuild all happen at fleet ticks
+/// — single-threaded barriers in both engines — so the shard set
+/// changing size mid-run must not perturb determinism.
+#[test]
+fn chaos_same_seed_bit_identical_across_worker_counts() {
+    let faults = vec![
+        HostFault { at: 60 * MS, host: 1, kind: HostFaultKind::DegradedNvme },
+        HostFault { at: 100 * MS, host: 2, kind: HostFaultKind::Crash },
+        HostFault { at: 150 * MS, host: 3, kind: HostFaultKind::BudgetRevoke },
+    ];
+    let base = run_sharded_fleet_faulted(
+        4, 8, 12_000, FleetMode::StateMigration, 0, false, None, &faults,
+    );
+    assert_eq!(
+        (base.crashes, base.degrades, base.revocations),
+        (1, 1, 1),
+        "schedule did not inject all three kinds: {base:?}"
+    );
+    assert!(base.vms_rebuilt >= 1, "the crash rebuilt nothing: {base:?}");
+    assert_eq!(base.total_ops, base.vms as u64 * 12_000, "fleet lost work");
+    assert_chaos_summary_invariants(&base, "chaos oracle");
+    for workers in [Some(1), Some(2), None] {
+        let par = run_sharded_fleet_faulted(
+            4, 8, 12_000, FleetMode::StateMigration, 0, true, workers, &faults,
+        );
+        assert_eq!(base, par, "workers {workers:?} changed the faulted output");
+        assert_eq!(
+            format!("{base:?}"),
+            format!("{par:?}"),
+            "workers {workers:?}: debug render differs despite Eq — float bit drift"
+        );
+    }
+    // And the same engine equivalence under randomized schedules, at
+    // the smaller sweep scale.
+    let mut injected = 0u64;
+    for seed in [3u64, 11, 27] {
+        let plan = random_fault_plan(4, 6_000, seed);
+        let seq = run_sharded_fleet_faulted(
+            4, 4, 6_000, FleetMode::StateMigration, seed, false, None, &plan,
+        );
+        let par = run_sharded_fleet_faulted(
+            4, 4, 6_000, FleetMode::StateMigration, seed, true, Some(2), &plan,
+        );
+        assert_eq!(seq, par, "chaos seed {seed}: engines diverged under faults");
+        assert_chaos_summary_invariants(&seq, &format!("chaos seed {seed}"));
+        injected += seq.faults_injected;
+    }
+    assert!(injected > 0, "all three random plans were empty");
 }
 
 // ---------------------------------------------------------------------
