@@ -101,6 +101,22 @@ fn main() {
         }));
     }
 
+    // EPT scan with every region 2MB-backed: the scanner tests one
+    // summary bit per live region (128 here) instead of 64k unit PTEs —
+    // the PR 8 granularity win the acceptance gate pins at >=4x.
+    {
+        let mut ept = flexswap::hw::Ept::new(65_536);
+        for r in 0..65_536 / flexswap::types::REGION_UNITS {
+            ept.set_region_huge(r);
+            ept.map(r * flexswap::types::REGION_UNITS);
+        }
+        let mut bm = Bitmap::new(65_536);
+        results.push(bench("ept scan_and_clear (huge)", 2_000, || {
+            bm.zero();
+            ept.scan_and_clear(&mut bm);
+        }));
+    }
+
     // Analytics ablation: native vs XLA artifact over H=32, N=65536.
     {
         let mut rng = Rng::new(3);
@@ -179,6 +195,20 @@ fn main() {
             results.push(bench("storage_tiers write + watermark drain (4k)", 20_000, || {
                 b.write(0, j % 65_536, &rnd, TierHint::Pool, j, &mut nvme, &mut rng);
                 j += 1;
+            }));
+        }
+
+        // Huge-unit direct writeback: one naturally-aligned 2MB NVMe
+        // request per reclaim (zero-copy DMA, no bounce buffer) — the
+        // per-request path a huge-granularity region reclaim takes.
+        {
+            let mut b = TieredBackend::flat(&sw);
+            let mut rng = Rng::new(9);
+            let big = vec![7u8; flexswap::types::HUGE_BYTES as usize];
+            let mut k = 0u64;
+            results.push(bench("storage_tiers 2M writeback", 50_000, || {
+                b.write(0, k % 4096, &big, TierHint::Nvme, k, &mut nvme, &mut rng);
+                k += 1;
             }));
         }
     }

@@ -7,7 +7,7 @@
 
 
 
-use crate::types::{PageSize, Time, MS, NS, SEC, US};
+use crate::types::{GranularityMode, PageSize, Time, MS, NS, SEC, US};
 
 /// Hardware model constants (Intel Xeon Gold 6226 + Intel D7-P5510 over
 /// PCIe3 x4, per the paper's machine setup).
@@ -486,6 +486,14 @@ pub struct MmConfig {
     /// Use the AOT-compiled XLA artifacts for the reclaimer analytics
     /// (true) or the native Rust fallback (false; used for ablation).
     pub use_xla: bool,
+    /// Swap-granularity mode for 4kB-unit VMs (PR 8): overlay 2MB-backed
+    /// regions on the flat unit space. Ignored (forced to `Fixed`) on
+    /// strict-2MB VMs, whose unit is already 2MB.
+    pub granularity: GranularityMode,
+    /// Drive the tiered backend's pool-admission threshold from the
+    /// dt-reclaimer's age histogram instead of the static
+    /// `TierConfig::reject_pct` (off by default: determinism baseline).
+    pub adaptive_pool_admission: bool,
 }
 
 impl Default for MmConfig {
@@ -499,6 +507,8 @@ impl Default for MmConfig {
             zero_pool: 64,
             vmcs_ring: 512,
             use_xla: false,
+            granularity: GranularityMode::Fixed,
+            adaptive_pool_admission: false,
         }
     }
 }

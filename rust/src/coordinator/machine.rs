@@ -528,6 +528,16 @@ impl Machine {
                 vm.enable_host_thp();
             }
         }
+        // Mirror the MM's admission-time granularity regions into the
+        // EPT (PR 8): both sides must agree on what is 2MB-backed
+        // before the first fault.
+        if let Mechanism::Sys(mm) = &setup.mech {
+            for r in 0..mm.core.regions() {
+                if mm.core.region_huge(r) {
+                    vm.ept.set_region_huge(r);
+                }
+            }
+        }
         // One guest process addressing the whole guest memory (workload
         // generators index GVA pages within it).
         let proc = vm.spawn_process(setup.vm_cfg.frames);
@@ -838,6 +848,9 @@ impl Machine {
         };
         let unit = frame as u64 / slot.vm.unit_frames();
         if let Mechanism::Sys(mm) = &mut slot.mech {
+            // Inside a 2MB granularity region the base unit carries the
+            // lock and the access bit (canonical-state invariant).
+            let unit = mm.core.canonical_unit(unit);
             mm.core.locks.lock(unit);
             slot.qemu_bits.set(unit as usize);
             mm.core.locks.unlock(unit);
@@ -950,7 +963,7 @@ impl Machine {
                     let was_dirty = slot.vm.ept.dirty(unit);
                     mm.unmap_for_swapout(&mut slot.vm, unit);
                     if was_dirty {
-                        let bytes = mm.core.unit_bytes;
+                        let bytes = mm.core.unit_bytes * mm.core.span_units(unit);
                         if self.host.tier.pool_enabled() {
                             slot.content.fill(unit, bytes, &mut slot.scratch);
                         } else if slot.scratch.len() != bytes as usize {
@@ -1065,6 +1078,29 @@ impl Machine {
                         // cleared, so the dirty bit has done its job.
                         slot.vm.ept.clear_dirty(uu);
                     }
+                }
+                // Apply policy-requested granularity changes (PR 8).
+                // The engine validates; the EPT mirror and the stale
+                // backend receipts move in the same step, so no fault
+                // can observe a half-applied split/collapse.
+                let (splits, collapses) = mm.drain_region_ops();
+                for r in splits {
+                    slot.vm.ept.split_region(r);
+                    // The 2MB image can't serve per-4k reads.
+                    self.backend.discard(vmid, mm.core.region_base(r));
+                }
+                for r in collapses {
+                    slot.vm.ept.set_region_huge(r);
+                    // Per-4k copies can't back the 2MB unit.
+                    let base = mm.core.region_base(r);
+                    for u in base..base + mm.core.region_span(r) {
+                        self.backend.discard(vmid, u);
+                    }
+                }
+                // Forward a policy-requested pool-admission retune
+                // (PR 8 satellite: histogram-driven admission).
+                if let Some(pct) = mm.take_pool_admission() {
+                    self.backend.set_pool_admission(pct);
                 }
                 // Policies may have changed the scan cadence (SYS-Agg).
                 if let Some(req) = mm.core.requested_scan_interval.take() {
@@ -1266,13 +1302,14 @@ impl Machine {
             slot.vm.ept.map(unit);
             match &mut slot.mech {
                 Mechanism::Sys(mm) => {
-                    let ui = unit as usize;
+                    let cu = mm.core.canonical_unit(unit);
+                    let ui = cu as usize;
                     if mm.core.states[ui] != crate::types::UnitState::Resident {
                         mm.core.states[ui] = crate::types::UnitState::Resident;
-                        mm.core.usage_units += 1;
+                        mm.core.usage_units += mm.core.span_units(cu);
                         // Register with the reclaimer's recency structure
                         // at time 0 (coldest, ascending-unit tie order).
-                        mm.note_touch(unit, 0);
+                        mm.note_touch(cu, 0);
                     }
                 }
                 Mechanism::Kernel(k, _) => {
@@ -1297,9 +1334,10 @@ impl Machine {
             slot.vm.ept.unmap(unit);
             match &mut slot.mech {
                 Mechanism::Sys(mm) => {
-                    let ui = unit as usize;
+                    let cu = mm.core.canonical_unit(unit);
+                    let ui = cu as usize;
                     if mm.core.states[ui] == crate::types::UnitState::Resident {
-                        mm.core.usage_units -= 1;
+                        mm.core.usage_units -= mm.core.span_units(cu);
                     }
                     mm.core.states[ui] = crate::types::UnitState::Swapped;
                 }
@@ -1357,11 +1395,10 @@ impl Machine {
         } else {
             Box::new(NativeAnalytics::new())
         };
-        mm.add_policy(Box::new(DtReclaimer::new(
-            backend,
-            mm_cfg.history,
-            mm_cfg.target_promotion_rate,
-        )));
+        mm.add_policy(Box::new(
+            DtReclaimer::new(backend, mm_cfg.history, mm_cfg.target_promotion_rate)
+                .with_adaptive_admission(mm_cfg.adaptive_pool_admission),
+        ));
         mm.set_limit_reclaimer(Box::new(LruReclaimer::new()));
         self.add_vm(VmSetup {
             vm_cfg,
@@ -1604,6 +1641,70 @@ mod tests {
         let f4k = run(PageSize::Small);
         let f2m = run(PageSize::Huge);
         assert!(f2m * 10 < f4k, "4k {f4k} vs 2m {f2m}");
+    }
+
+    /// Under `--granularity huge` every swap op moves a whole 2MB
+    /// region: one queue entry, one receipt, one latency charge.
+    #[test]
+    fn granularity_huge_mode_moves_regions_whole() {
+        let mut m = Machine::new(HostConfig::default());
+        let cfg = small_vm_cfg(16_384, PageSize::Small);
+        let mm_cfg = MmConfig {
+            memory_limit: Some(4096 * 4096),
+            scan_interval: 50 * MS,
+            granularity: crate::types::GranularityMode::Huge,
+            ..Default::default()
+        };
+        m.sys_vm(
+            cfg,
+            &mm_cfg,
+            vec![Box::new(UniformRandom::new(0, 8192, 60_000))],
+        );
+        let res = m.run();
+        let c = &res[0].counters;
+        assert_eq!(res[0].work_ops, 60_000);
+        assert!(c.swapout_ops > 0, "{c:?}");
+        // All regions are huge, so every swap-in/out is a region op.
+        assert_eq!(c.huge_swapins, c.swapin_ops, "{c:?}");
+        assert_eq!(c.huge_swapouts, c.swapout_ops, "{c:?}");
+        let mm = m.mm(0).unwrap();
+        assert!(mm.core.usage_units <= 4096 + 512 * mm.swapper.threads() as u64);
+    }
+
+    /// The split-always oracle is *byte-identical* to the flat 4k
+    /// baseline: admitting huge and immediately splitting every region
+    /// must leave no structural trace in the run.
+    #[test]
+    fn granularity_split_all_matches_fixed_exactly() {
+        use crate::types::GranularityMode;
+        let run = |g: GranularityMode| {
+            let mut m = Machine::new(HostConfig { seed: 7, ..Default::default() });
+            let cfg = small_vm_cfg(8192, PageSize::Small);
+            let mm_cfg = MmConfig {
+                memory_limit: Some(1024 * 4096),
+                scan_interval: 50 * MS,
+                granularity: g,
+                ..Default::default()
+            };
+            m.sys_vm(
+                cfg,
+                &mm_cfg,
+                vec![Box::new(UniformRandom::new(0, 4096, 60_000))],
+            );
+            let res = m.run();
+            let bm = format!("{:?}", m.backend_metrics());
+            (res[0].runtime, res[0].counters.clone(), bm)
+        };
+        let norm = |mut c: Counters| {
+            c.region_splits = 0; // the only legal difference
+            format!("{c:?}")
+        };
+        let (rt_f, cf, bf) = run(GranularityMode::Fixed);
+        let (rt_s, cs, bs) = run(GranularityMode::SplitAll);
+        assert_eq!(cs.region_splits, 16); // 8192 units / 512
+        assert_eq!(rt_f, rt_s);
+        assert_eq!(norm(cf), norm(cs));
+        assert_eq!(bf, bs);
     }
 
     /// `run_until` sliced at arbitrary epoch bounds is the same

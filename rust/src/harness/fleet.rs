@@ -39,7 +39,7 @@ use crate::metrics::{LatencyHist, Table};
 use crate::mm::Mm;
 use crate::policies::{DtReclaimer, LruReclaimer, NativeAnalytics, WsrPolicy};
 use crate::sim::Rng;
-use crate::types::{PageSize, Time, FRAME_BYTES, MS, SEC};
+use crate::types::{GranularityMode, PageSize, Time, FRAME_BYTES, MS, REGION_UNITS, SEC};
 use crate::workloads::{BootDelay, PhasedWss, UniformRandom, Workload};
 
 use super::Scale;
@@ -387,6 +387,9 @@ pub struct FleetRunOpts {
     pub per_host: Option<usize>,
     /// Fault schedule armed on soak runs (`--fault-plan`).
     pub fault_plan: FaultPlan,
+    /// Swap granularity for every fleet VM (`--granularity
+    /// <4k|huge|auto>`; the default is flat 4k).
+    pub granularity: GranularityMode,
 }
 
 /// Which fault schedule a soak run arms (`--fault-plan <none|random>`).
@@ -479,6 +482,35 @@ pub fn run_sharded_fleet_faulted(
     workers: Option<usize>,
     faults: &[HostFault],
 ) -> ShardedSummary {
+    run_sharded_fleet_granular(
+        hosts,
+        per_host,
+        ops_per_vm,
+        mode,
+        seed,
+        parallel,
+        workers,
+        &[GranularityMode::Fixed],
+        faults,
+    )
+}
+
+/// [`run_sharded_fleet_faulted`] with explicit swap granularity: VM `i`
+/// gets `granularity[i % len]`, so a single-element slice sets a
+/// uniform mode (the `--granularity` CLI path) and a multi-element
+/// slice seeds a mixed-granularity fleet (the chaos sweep's PR 8 arm).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_fleet_granular(
+    hosts: usize,
+    per_host: usize,
+    ops_per_vm: u64,
+    mode: FleetMode,
+    seed: u64,
+    parallel: bool,
+    workers: Option<usize>,
+    granularity: &[GranularityMode],
+    faults: &[HostFault],
+) -> ShardedSummary {
     let n = hosts * per_host;
     let frames = 4096u64;
     let pages = frames - 1024;
@@ -545,6 +577,11 @@ pub fn run_sharded_fleet_faulted(
                 // *limit* (arbiter pressure), which keeps every shard
                 // limit-bound.
                 target_promotion_rate: 0.002,
+                granularity: if granularity.is_empty() {
+                    GranularityMode::Fixed
+                } else {
+                    granularity[i % granularity.len()]
+                },
                 ..Default::default()
             }),
         });
@@ -572,7 +609,15 @@ pub fn run_sharded_fleet_faulted(
             .iter()
             .map(|&v| {
                 let mm = f.shards[h].machine.mm(v).expect("sys VM");
-                mm.swapper.threads() as u64 * mm.core.unit_bytes
+                // A huge-granularity VM's in-flight swap-in is a whole
+                // 2MB region, not one unit — slack must cover it or
+                // demand-fault overshoot trips the budget audit.
+                let span = if mm.core.granularity_mode == GranularityMode::Fixed {
+                    1
+                } else {
+                    REGION_UNITS
+                };
+                mm.swapper.threads() as u64 * mm.core.unit_bytes * span
             })
             .sum();
         let demand = hot_demand * members.len() as u64;
@@ -759,7 +804,7 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
         };
         for mode in [FleetMode::LeaseOnly, FleetMode::StateMigration] {
             let label = mode.label();
-            let s = run_sharded_fleet_faulted(
+            let s = run_sharded_fleet_granular(
                 hosts,
                 per_host,
                 ops,
@@ -767,6 +812,7 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
                 seed,
                 !opts.sequential,
                 opts.workers,
+                &[opts.granularity],
                 &plan,
             );
             assert_eq!(
@@ -941,7 +987,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
         FleetMode::StateMigration,
     ] {
         let label = mode.label();
-        let s = run_sharded_fleet_exec(
+        let s = run_sharded_fleet_granular(
             hosts,
             per_host,
             shard_ops,
@@ -949,6 +995,8 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
             7,
             !opts.sequential,
             opts.workers,
+            &[opts.granularity],
+            &[],
         );
         assert_eq!(
             s.total_ops,
@@ -977,7 +1025,11 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
         // there). Other `--hosts` values — and `--vms` overrides — are
         // exploratory: a shape where no flip can even occur (e.g.
         // `--hosts 1`) must report, not abort.
-        if mode == FleetMode::StateMigration && hosts == 4 && opts.per_host.is_none() {
+        if mode == FleetMode::StateMigration
+            && hosts == 4
+            && opts.per_host.is_none()
+            && opts.granularity == GranularityMode::Fixed
+        {
             let l = lease.as_ref().expect("lease arm ran first");
             assert!(
                 s.state_migrations_completed >= 1,
@@ -1090,7 +1142,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
         ("graceful-drain", HostFaultKind::DegradedNvme),
     ] {
         let faults = vec![HostFault { at: fault_at, host: 0, kind }];
-        let s = run_sharded_fleet_faulted(
+        let s = run_sharded_fleet_granular(
             hosts,
             per_host,
             shard_ops,
@@ -1098,6 +1150,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
             7,
             !opts.sequential,
             opts.workers,
+            &[opts.granularity],
             &faults,
         );
         assert_eq!(
@@ -1120,7 +1173,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
             );
         }
         // Pinned on the canonical topology, like the t3 acceptance.
-        if hosts == 4 && opts.per_host.is_none() {
+        if hosts == 4 && opts.per_host.is_none() && opts.granularity == GranularityMode::Fixed {
             if kind == HostFaultKind::Crash {
                 assert!(s.vms_rebuilt > 0, "{label}: the crash rebuilt nothing");
             } else {

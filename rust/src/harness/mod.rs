@@ -6,6 +6,7 @@
 pub mod analysis;
 pub mod eval;
 pub mod fleet;
+pub mod granularity;
 
 use crate::metrics::Table;
 
@@ -116,6 +117,12 @@ pub fn registry() -> Vec<Experiment> {
             run: fleet::fleet,
         },
         Experiment {
+            id: "granularity",
+            title: "Swap granularity: strict-4k vs huge vs auto on a uniform-cold sweep (PR 8 extension)",
+            expectation: "huge moves whole 2MB regions: strictly fewer major faults per GB reclaimed and strictly fewer NVMe requests than strict-4k; region-level scan burns far less CPU; auto splits only refault-heavy regions",
+            run: granularity::granularity,
+        },
+        Experiment {
             id: "fig12",
             title: "Fig 12: g500 memory usage over time (SYS-Agg vs default)",
             expectation: "aggressive policy reclaims phase memory much faster",
@@ -211,7 +218,7 @@ mod tests {
         let ids: Vec<_> = registry().iter().map(|e| e.id).collect();
         for want in [
             "fig1", "fig2", "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "figpf",
-            "tiers", "fleet", "fig12", "fig13",
+            "tiers", "fleet", "granularity", "fig12", "fig13",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -10,8 +10,20 @@
 //! flag byte so [`Ept::scan_and_clear`] — the direct CPU cost that
 //! bounds how aggressively policies can scan (§3.3, Fig 3) — operates
 //! on 64 units per AND/clear instead of one unit per branch.
+//!
+//! # Two-level granularity (PR 8)
+//!
+//! A 4kB-unit EPT can overlay 2MB-backed *regions* of [`REGION_UNITS`]
+//! units. A huge region keeps its presence/A/D state in one bit of the
+//! region-level summary bitmaps (`r_present`/`r_accessed`/`r_dirty`)
+//! and its unit-level bits all-zero; a split region is the inverse.
+//! State lives at exactly one level, so the word-parallel 4k scan loop
+//! runs unchanged (huge spans contribute zero words) and a second,
+//! regions/64-sized loop visits one bit per live huge region — a 2M
+//! A-bit check covers 512 units in one test. With no huge regions every
+//! path short-circuits to the flat pre-PR-8 behaviour.
 
-use crate::types::{Bitmap, UnitId};
+use crate::types::{Bitmap, UnitId, REGION_UNITS};
 
 /// EPT over `units` swap units.
 #[derive(Debug, Clone)]
@@ -19,14 +31,27 @@ pub struct Ept {
     present: Bitmap,
     accessed: Bitmap,
     dirty: Bitmap,
+    /// Bit r set: region r is 2MB-backed (state in `r_*`, unit bits 0).
+    huge: Bitmap,
+    r_present: Bitmap,
+    r_accessed: Bitmap,
+    r_dirty: Bitmap,
+    /// Count of set bits in `huge` (fast path: 0 = flat 4k EPT).
+    huge_regions: u64,
 }
 
 impl Ept {
     pub fn new(units: u64) -> Self {
+        let regions = units.div_ceil(REGION_UNITS) as usize;
         Ept {
             present: Bitmap::new(units as usize),
             accessed: Bitmap::new(units as usize),
             dirty: Bitmap::new(units as usize),
+            huge: Bitmap::new(regions),
+            r_present: Bitmap::new(regions),
+            r_accessed: Bitmap::new(regions),
+            r_dirty: Bitmap::new(regions),
+            huge_regions: 0,
         }
     }
 
@@ -34,15 +59,69 @@ impl Ept {
         self.present.len() as u64
     }
 
+    /// Number of granularity regions ([`REGION_UNITS`] units each; the
+    /// last one may be short).
+    pub fn regions(&self) -> u64 {
+        self.huge.len() as u64
+    }
+
+    /// Count of 2MB-backed regions.
+    pub fn huge_region_count(&self) -> u64 {
+        self.huge_regions
+    }
+
+    /// Is region `r` 2MB-backed?
+    #[inline]
+    pub fn region_huge(&self, r: u64) -> bool {
+        self.huge_regions > 0 && self.huge.get(r as usize)
+    }
+
+    /// Unit range `[lo, hi)` covered by region `r`.
+    #[inline]
+    fn span(&self, r: usize) -> (usize, usize) {
+        let lo = r * REGION_UNITS as usize;
+        (lo, (lo + REGION_UNITS as usize).min(self.present.len()))
+    }
+
+    /// The unit that carries a unit's state: the region base when its
+    /// region is huge, the unit itself otherwise.
+    #[inline]
+    pub fn canonical_unit(&self, unit: UnitId) -> UnitId {
+        if self.huge_regions > 0 && self.huge.get((unit / REGION_UNITS) as usize) {
+            unit - unit % REGION_UNITS
+        } else {
+            unit
+        }
+    }
+
     /// True if the unit is mapped (no EPT violation on access).
     #[inline]
     pub fn present(&self, unit: UnitId) -> bool {
+        if self.huge_regions > 0 {
+            let r = (unit / REGION_UNITS) as usize;
+            if self.huge.get(r) {
+                return self.r_present.get(r);
+            }
+        }
         self.present.get(unit as usize)
     }
 
     /// Record a guest access; returns false if it raises an EPT violation.
     #[inline]
     pub fn touch(&mut self, unit: UnitId, write: bool) -> bool {
+        if self.huge_regions > 0 {
+            let r = (unit / REGION_UNITS) as usize;
+            if self.huge.get(r) {
+                if !self.r_present.get(r) {
+                    return false;
+                }
+                self.r_accessed.set(r);
+                if write {
+                    self.r_dirty.set(r);
+                }
+                return true;
+            }
+        }
         let ui = unit as usize;
         if !self.present.get(ui) {
             return false;
@@ -56,37 +135,126 @@ impl Ept {
 
     /// Install a leaf mapping (UFFDIO_CONTINUE resolved the violation).
     pub fn map(&mut self, unit: UnitId) {
-        // Mapping implies an immediate access by the faulting instruction.
+        if self.huge_regions > 0 {
+            let r = (unit / REGION_UNITS) as usize;
+            if self.huge.get(r) {
+                // Mapping implies an immediate access by the faulter.
+                self.r_present.set(r);
+                self.r_accessed.set(r);
+                return;
+            }
+        }
         self.present.set(unit as usize);
         self.accessed.set(unit as usize);
     }
 
-    /// Remove a leaf (MADV_DONTNEED on swap-out).
+    /// Remove a leaf (MADV_DONTNEED on swap-out). For a unit inside a
+    /// huge region this drops the whole region's 2MB leaf.
     pub fn unmap(&mut self, unit: UnitId) {
+        if self.huge_regions > 0 {
+            let r = (unit / REGION_UNITS) as usize;
+            if self.huge.get(r) {
+                self.r_present.clear(r);
+                self.r_accessed.clear(r);
+                self.r_dirty.clear(r);
+                return;
+            }
+        }
         self.present.clear(unit as usize);
         self.accessed.clear(unit as usize);
         self.dirty.clear(unit as usize);
     }
 
     pub fn accessed(&self, unit: UnitId) -> bool {
+        if self.huge_regions > 0 {
+            let r = (unit / REGION_UNITS) as usize;
+            if self.huge.get(r) {
+                return self.r_accessed.get(r);
+            }
+        }
         self.accessed.get(unit as usize)
     }
 
     pub fn dirty(&self, unit: UnitId) -> bool {
+        if self.huge_regions > 0 {
+            let r = (unit / REGION_UNITS) as usize;
+            if self.huge.get(r) {
+                return self.r_dirty.get(r);
+            }
+        }
         self.dirty.get(unit as usize)
     }
 
     pub fn clear_dirty(&mut self, unit: UnitId) {
+        if self.huge_regions > 0 {
+            let r = (unit / REGION_UNITS) as usize;
+            if self.huge.get(r) {
+                self.r_dirty.clear(r);
+                return;
+            }
+        }
         self.dirty.clear(unit as usize);
+    }
+
+    /// Promote region `r` to a 2MB leaf, folding any unit-level state up
+    /// into the region summary (callers collapse uniformly-populated
+    /// regions, so "any unit present" and "all present" coincide there).
+    pub fn set_region_huge(&mut self, r: u64) {
+        let ri = r as usize;
+        if self.huge.get(ri) {
+            return;
+        }
+        let (lo, hi) = self.span(ri);
+        if self.present.any_in_range(lo, hi) {
+            self.r_present.set(ri);
+        }
+        if self.accessed.any_in_range(lo, hi) {
+            self.r_accessed.set(ri);
+        }
+        if self.dirty.any_in_range(lo, hi) {
+            self.r_dirty.set(ri);
+        }
+        self.present.clear_range(lo, hi);
+        self.accessed.clear_range(lo, hi);
+        self.dirty.clear_range(lo, hi);
+        self.huge.set(ri);
+        self.huge_regions += 1;
+    }
+
+    /// Demote region `r` back to per-4k leaves, fanning the region
+    /// summary down over the whole span.
+    pub fn split_region(&mut self, r: u64) {
+        let ri = r as usize;
+        if !self.huge.get(ri) {
+            return;
+        }
+        let (lo, hi) = self.span(ri);
+        if self.r_present.get(ri) {
+            self.present.set_range(lo, hi);
+        }
+        if self.r_accessed.get(ri) {
+            self.accessed.set_range(lo, hi);
+        }
+        if self.r_dirty.get(ri) {
+            self.dirty.set_range(lo, hi);
+        }
+        self.r_present.clear(ri);
+        self.r_accessed.clear(ri);
+        self.r_dirty.clear(ri);
+        self.huge.clear(ri);
+        self.huge_regions -= 1;
     }
 
     /// Scan: copy A-bits into a bitmap and clear them (the kernel-module
     /// behaviour the userspace EPT scanner drives). Returns the number of
-    /// *present* leaves visited (scan cost scales with PTE count).
+    /// *present* leaves visited (scan cost scales with PTE count) — one
+    /// leaf per live 2MB region, one per present 4k unit.
     ///
     /// Word-parallel: each 64-unit word costs one popcount plus, only
     /// when some present unit was accessed, one OR into `out` and one
-    /// AND-NOT to clear — no per-unit branching.
+    /// AND-NOT to clear — no per-unit branching. Huge regions never
+    /// contribute unit-level words; a second regions/64-sized loop tests
+    /// one bit per live region and reports hits at the region base unit.
     pub fn scan_and_clear(&mut self, out: &mut Bitmap) -> u64 {
         assert_eq!(out.len() as u64, self.units());
         let mut visited = 0u64;
@@ -107,12 +275,48 @@ impl Ept {
                 *a &= !hit;
             }
         }
+        if self.huge_regions > 0 {
+            let hw = self.huge.as_words();
+            let rp = self.r_present.as_words();
+            let ra = self.r_accessed.as_words_mut();
+            for (wi, ((&h, &p), a)) in hw.iter().zip(rp.iter()).zip(ra.iter_mut()).enumerate() {
+                let live = h & p;
+                if live == 0 {
+                    continue;
+                }
+                visited += live.count_ones() as u64;
+                let mut hit = *a & live;
+                if hit != 0 {
+                    *a &= !hit;
+                    while hit != 0 {
+                        let b = hit.trailing_zeros() as usize;
+                        hit &= hit - 1;
+                        out.set((wi * 64 + b) * REGION_UNITS as usize);
+                    }
+                }
+            }
+        }
         visited
     }
 
-    /// Present-unit count (resident memory in units).
+    /// Present-unit count (resident memory in units): per-4k presents
+    /// plus the full span of every live 2MB region.
     pub fn resident_units(&self) -> u64 {
-        self.present.count_ones() as u64
+        let mut n = self.present.count_ones() as u64;
+        if self.huge_regions > 0 {
+            let hw = self.huge.as_words();
+            let rp = self.r_present.as_words();
+            for (wi, (&h, &p)) in hw.iter().zip(rp.iter()).enumerate() {
+                let mut live = h & p;
+                while live != 0 {
+                    let b = live.trailing_zeros() as usize;
+                    live &= live - 1;
+                    let (lo, hi) = self.span(wi * 64 + b);
+                    n += (hi - lo) as u64;
+                }
+            }
+        }
+        n
     }
 }
 
@@ -188,5 +392,114 @@ mod tests {
         assert!(e.dirty(1) && !e.accessed(1));
         e.clear_dirty(1);
         assert!(!e.dirty(1));
+    }
+
+    #[test]
+    fn granularity_huge_region_state_lives_at_one_level() {
+        // 3 regions, last one short (1536 + 100 units).
+        let mut e = Ept::new(2 * REGION_UNITS + 100);
+        assert_eq!(e.regions(), 3);
+        e.set_region_huge(1);
+        assert_eq!(e.huge_region_count(), 1);
+        assert!(e.region_huge(1) && !e.region_huge(0));
+        // Any unit in the region canonicalizes to the base.
+        assert_eq!(e.canonical_unit(REGION_UNITS + 77), REGION_UNITS);
+        assert_eq!(e.canonical_unit(5), 5);
+        // Map via a non-base unit: the whole region becomes present.
+        e.map(REGION_UNITS + 77);
+        assert!(e.present(REGION_UNITS) && e.present(2 * REGION_UNITS - 1));
+        assert_eq!(e.resident_units(), REGION_UNITS);
+        assert!(e.touch(REGION_UNITS + 3, true));
+        assert!(e.dirty(REGION_UNITS + 9));
+        // Unit-level bitmaps stay empty: state is region-level only.
+        assert_eq!(e.present.count_ones(), 0);
+        e.unmap(REGION_UNITS + 500);
+        assert_eq!(e.resident_units(), 0);
+        assert!(!e.present(REGION_UNITS));
+    }
+
+    #[test]
+    fn granularity_scan_visits_one_leaf_per_huge_region() {
+        let mut e = Ept::new(4 * REGION_UNITS);
+        for r in 0..4 {
+            e.set_region_huge(r);
+        }
+        e.map(0); // region 0
+        e.map(2 * REGION_UNITS + 9); // region 2
+        let mut bm = Bitmap::new(4 * REGION_UNITS as usize);
+        // Two live 2MB leaves: visited = 2, not 1024.
+        assert_eq!(e.scan_and_clear(&mut bm), 2);
+        // Hits reported at the region base units.
+        let ones: Vec<_> = bm.iter_ones().collect();
+        assert_eq!(ones, vec![0, 2 * REGION_UNITS as usize]);
+        // A-bits cleared, presence retained.
+        let mut bm2 = Bitmap::new(4 * REGION_UNITS as usize);
+        assert_eq!(e.scan_and_clear(&mut bm2), 2);
+        assert_eq!(bm2.count_ones(), 0);
+        assert_eq!(e.resident_units(), 2 * REGION_UNITS);
+    }
+
+    #[test]
+    fn granularity_mixed_scan_sums_levels() {
+        // Region 0 huge + live, region 1 split with 3 present units.
+        let mut e = Ept::new(2 * REGION_UNITS);
+        e.set_region_huge(0);
+        e.map(7); // canonicalized into region 0's summary
+        for u in [REGION_UNITS, REGION_UNITS + 64, 2 * REGION_UNITS - 1] {
+            e.map(u);
+        }
+        let mut bm = Bitmap::new(2 * REGION_UNITS as usize);
+        assert_eq!(e.scan_and_clear(&mut bm), 4);
+        let ones: Vec<_> = bm.iter_ones().collect();
+        assert_eq!(
+            ones,
+            vec![
+                0,
+                REGION_UNITS as usize,
+                REGION_UNITS as usize + 64,
+                2 * REGION_UNITS as usize - 1
+            ]
+        );
+        assert_eq!(e.resident_units(), REGION_UNITS + 3);
+    }
+
+    #[test]
+    fn granularity_split_fans_state_down_and_collapse_folds_up() {
+        let mut e = Ept::new(2 * REGION_UNITS);
+        e.set_region_huge(0);
+        e.map(0);
+        e.touch(3, true); // region-level dirty
+        e.split_region(0);
+        assert_eq!(e.huge_region_count(), 0);
+        // Every unit of the span is now individually present + dirty.
+        assert!(e.present(0) && e.present(REGION_UNITS - 1));
+        assert!(e.dirty(0) && e.dirty(REGION_UNITS - 1));
+        assert!(!e.present(REGION_UNITS));
+        assert_eq!(e.resident_units(), REGION_UNITS);
+        // Collapse folds it back up into one summary bit.
+        e.set_region_huge(0);
+        assert!(e.present(5) && e.dirty(5));
+        assert_eq!(e.resident_units(), REGION_UNITS);
+        assert_eq!(e.present.count_ones(), 0);
+        // Split of an untouched huge region yields an empty span.
+        e.set_region_huge(1);
+        e.split_region(1);
+        assert!(!e.present(REGION_UNITS + 1));
+        // Idempotence: split of a split region / collapse twice no-op.
+        e.split_region(1);
+        e.set_region_huge(0);
+        assert_eq!(e.huge_region_count(), 1);
+    }
+
+    #[test]
+    fn granularity_flat_ept_is_untouched_by_region_code() {
+        // huge_regions == 0: scan output identical to the flat loop.
+        let mut e = Ept::new(130);
+        e.map(129);
+        assert_eq!(e.canonical_unit(129), 129);
+        assert!(!e.region_huge(0));
+        let mut bm = Bitmap::new(130);
+        assert_eq!(e.scan_and_clear(&mut bm), 1);
+        assert_eq!(bm.iter_ones().collect::<Vec<_>>(), vec![129]);
     }
 }

@@ -10,11 +10,13 @@
 //!   flexswap fleet --hosts 4 --sequential # merge-loop oracle (no worker threads)
 //!   flexswap fleet --hosts 4 --workers 2  # pin the epoch engine's thread count
 //!   flexswap fleet --hosts 8 --seeds 6 --fault-plan random  # chaos soak
+//!   flexswap fleet --hosts 8 --granularity auto  # PR 8 swap-granularity mode
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
 
 use flexswap::harness::fleet::{FaultPlan, FleetRunOpts};
 use flexswap::harness::{registry, run_by_id, run_fleet_soak, run_fleet_with_hosts, Scale};
+use flexswap::types::GranularityMode;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -89,6 +91,24 @@ fn main() {
         }
     });
 
+    // `--granularity <4k|huge|auto>`: swap granularity for every fleet
+    // VM (PR 8). `4k` is the flat default; `huge` moves whole 2MB
+    // regions; `auto` starts huge and lets the dt-reclaimer split
+    // refault-heavy regions.
+    let granularity = args.iter().position(|a| a == "--granularity").map(|i| {
+        match args.get(i + 1).map(|v| v.as_str()) {
+            Some("4k") => GranularityMode::Fixed,
+            Some("huge") => GranularityMode::Huge,
+            Some("auto") => GranularityMode::Auto,
+            _ => {
+                eprintln!(
+                    "--granularity needs `4k`, `huge`, or `auto` (e.g. `flexswap fleet --granularity auto`)"
+                );
+                std::process::exit(2);
+            }
+        }
+    });
+
     if cmd == "fleet" {
         let h = hosts.unwrap_or(4);
         let opts = FleetRunOpts {
@@ -96,6 +116,7 @@ fn main() {
             workers,
             per_host: vms.map(|v| v.div_ceil(h)),
             fault_plan: fault_plan.unwrap_or_default(),
+            granularity: granularity.unwrap_or_default(),
         };
         if let Some(k) = seeds {
             println!("{}", run_fleet_soak(scale, h, k, opts));

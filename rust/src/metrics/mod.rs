@@ -38,6 +38,14 @@ pub struct Counters {
     /// TLB statistics.
     pub tlb_hits: u64,
     pub tlb_misses: u64,
+    /// Swap-ins that moved a whole 2MB granularity region in one op.
+    pub huge_swapins: u64,
+    /// Swap-outs that moved a whole 2MB granularity region in one op.
+    pub huge_swapouts: u64,
+    /// Granularity regions demoted to per-4k tracking (PR 8).
+    pub region_splits: u64,
+    /// Split regions promoted back to 2MB backing (PR 8).
+    pub region_collapses: u64,
 }
 
 /// Log-bucketed latency histogram (ns), 2 buckets per octave.

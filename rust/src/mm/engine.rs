@@ -17,7 +17,7 @@ use crate::mm::queues::{QueueClass, SwapperQueue};
 use crate::mm::swapper::{Swapper, WorkOutcome};
 use crate::mm::zero_pool::ZeroPool;
 use crate::storage::{LockBitmap, SwapTier, TierHint};
-use crate::types::{Bitmap, Time, UnitId, UnitState};
+use crate::types::{Bitmap, Granularity, GranularityMode, Time, UnitId, UnitState, REGION_UNITS};
 use crate::uffd::{Uffd, UffdEvent};
 use crate::vm::Vm;
 
@@ -135,6 +135,57 @@ impl<'a> PolicyApi<'a> {
     /// advisory — the engine still validates every request.
     pub fn recovery_mode(&self) -> bool {
         self.now < self.core.recovery_until
+    }
+
+    /// `split_region(r)` (PR 8): ask that 2MB-backed region `r` be
+    /// demoted to per-4k tracking. Queued and applied by the machine at
+    /// the next scan tick (the VM's EPT mirror must change in the same
+    /// step), and validated there — a region with in-flight or swapped
+    /// state stays huge until it settles.
+    pub fn split_region(&mut self, r: u64) {
+        if r < self.core.regions() && self.core.region_huge(r) {
+            self.core.pending_splits.push(r);
+        }
+    }
+
+    /// `collapse_region(r)` (PR 8): ask that split region `r` be
+    /// promoted back to one 2MB-backed unit. Applied at the next scan
+    /// tick if the whole span is uniformly resident and idle.
+    pub fn collapse_region(&mut self, r: u64) {
+        if r < self.core.regions() && !self.core.region_huge(r) {
+            self.core.pending_collapses.push(r);
+        }
+    }
+
+    /// Number of granularity regions over the unit space.
+    pub fn regions(&self) -> u64 {
+        self.core.regions()
+    }
+
+    /// Is region `r` currently 2MB-backed?
+    pub fn region_huge(&self, r: u64) -> bool {
+        r < self.core.regions() && self.core.region_huge(r)
+    }
+
+    /// Granularity tag of the op a fault/reclaim on `unit` would be.
+    pub fn granularity_of(&self, unit: UnitId) -> Granularity {
+        if self.core.huge_unit(unit) {
+            Granularity::Region
+        } else {
+            Granularity::Page
+        }
+    }
+
+    /// The VM's configured granularity mode.
+    pub fn granularity_mode(&self) -> GranularityMode {
+        self.core.granularity_mode
+    }
+
+    /// Retune the tiered backend's pool-admission threshold (satellite
+    /// of PR 8: the dt-reclaimer drives this from its age histogram).
+    /// Forwarded to the backend by the machine at the next scan tick.
+    pub fn set_pool_admission(&mut self, reject_pct: u8) {
+        self.core.pending_admission = Some(reject_pct.min(100));
     }
 }
 
@@ -290,6 +341,21 @@ pub struct EngineCore {
     /// machine so the fault path / policies never query the backend.
     backend_tier: Vec<u8>,
     clock_hand: usize,
+    /// Granularity overlay (PR 8): bit r set = region r is 2MB-backed.
+    /// All state for a huge region lives at its *base unit* (r *
+    /// [`REGION_UNITS`]); the other units stay `Untouched` and are never
+    /// queued, waited on or LRU-tracked, so one huge fault/reclaim is
+    /// one O(1) op through every existing structure.
+    pub region_huge: Bitmap,
+    /// Count of set bits in `region_huge` (fast path: 0 = flat 4k).
+    huge_region_count: u64,
+    pub granularity_mode: GranularityMode,
+    /// Region ops requested by policies this tick, validated + applied
+    /// by the machine at the next scan tick (EPT mirror moves with it).
+    pub pending_splits: Vec<u64>,
+    pub pending_collapses: Vec<u64>,
+    /// Pool-admission retune requested by a policy (reject_pct).
+    pub pending_admission: Option<u8>,
 }
 
 #[inline]
@@ -337,7 +403,187 @@ impl EngineCore {
             tier_hint: vec![0; units as usize],
             backend_tier: vec![0; units as usize],
             clock_hand: 0,
+            region_huge: Bitmap::new(units.div_ceil(REGION_UNITS) as usize),
+            huge_region_count: 0,
+            granularity_mode: GranularityMode::Fixed,
+            pending_splits: Vec::new(),
+            pending_collapses: Vec::new(),
+            pending_admission: None,
         }
+    }
+
+    /// Install the granularity mode at admission time (before any
+    /// fault). Strict-2MB VMs force `Fixed`: their unit is already 2MB.
+    pub fn set_granularity(&mut self, mode: GranularityMode) {
+        if self.huge {
+            self.granularity_mode = GranularityMode::Fixed;
+            return;
+        }
+        self.granularity_mode = mode;
+        match mode {
+            GranularityMode::Fixed => {}
+            GranularityMode::Huge | GranularityMode::Auto => {
+                for r in 0..self.regions() {
+                    self.region_huge.set(r as usize);
+                }
+                self.huge_region_count = self.regions();
+            }
+            GranularityMode::SplitAll => {
+                // Oracle: admit huge, then split every region while it
+                // is still untouched — structurally identical to Fixed.
+                for r in 0..self.regions() {
+                    self.region_huge.set(r as usize);
+                    self.huge_region_count += 1;
+                    let ok = self.split_region(r);
+                    debug_assert!(ok);
+                }
+            }
+        }
+    }
+
+    /// Number of granularity regions ([`REGION_UNITS`] units each, last
+    /// one possibly short).
+    #[inline]
+    pub fn regions(&self) -> u64 {
+        (self.states.len() as u64).div_ceil(REGION_UNITS)
+    }
+
+    /// Is region `r` 2MB-backed? (`r` must be in bounds.)
+    #[inline]
+    pub fn region_huge(&self, r: u64) -> bool {
+        self.huge_region_count > 0 && self.region_huge.get(r as usize)
+    }
+
+    /// First unit of region `r`.
+    #[inline]
+    pub fn region_base(&self, r: u64) -> UnitId {
+        r * REGION_UNITS
+    }
+
+    /// Units covered by region `r` (the last region may be short).
+    #[inline]
+    pub fn region_span(&self, r: u64) -> u64 {
+        (self.states.len() as u64 - self.region_base(r)).min(REGION_UNITS)
+    }
+
+    /// The unit carrying a unit's swap state: the region base inside a
+    /// huge region, the unit itself otherwise.
+    #[inline]
+    pub fn canonical_unit(&self, unit: UnitId) -> UnitId {
+        if self.huge_region_count > 0 && self.region_huge.get((unit / REGION_UNITS) as usize) {
+            unit - unit % REGION_UNITS
+        } else {
+            unit
+        }
+    }
+
+    /// Units one swap op on `unit` moves (1, or the whole region span
+    /// for the base of a huge region).
+    #[inline]
+    pub fn span_units(&self, unit: UnitId) -> u64 {
+        if self.huge_region_count > 0 && self.region_huge.get((unit / REGION_UNITS) as usize) {
+            self.region_span(unit / REGION_UNITS)
+        } else {
+            1
+        }
+    }
+
+    /// Does an op on this unit move a 2MB mapping (strict-2MB unit or
+    /// 2MB-backed granularity region)?
+    #[inline]
+    pub fn huge_unit(&self, unit: UnitId) -> bool {
+        self.huge
+            || (self.huge_region_count > 0
+                && self.region_huge.get((unit / REGION_UNITS) as usize))
+    }
+
+    /// Demote region `r` to per-4k tracking. Only settled regions split:
+    /// the base must be `Resident` or `Untouched` with nothing queued,
+    /// wanted, locked or waited-on — in particular a `Swapped` base
+    /// never splits, so a 2MB backing-store image is never torn into 4k
+    /// reads. Returns true on success; the caller (machine) mirrors the
+    /// transition into the VM's EPT and discards the stale base receipt.
+    pub fn split_region(&mut self, r: u64) -> bool {
+        if !self.region_huge(r) {
+            return false;
+        }
+        let base = self.region_base(r);
+        let bi = base as usize;
+        let span = self.region_span(r) as usize;
+        match self.states[bi] {
+            UnitState::Resident | UnitState::Untouched => {}
+            _ => return false,
+        }
+        if self.queue.contains(base)
+            || self.want_out.get(bi)
+            || self.prefetch_intent.get(bi)
+            || self.locks.is_locked(base)
+            || self.waiters.has(base)
+        {
+            return false;
+        }
+        self.region_huge.clear(r as usize);
+        self.huge_region_count -= 1;
+        if self.states[bi] == UnitState::Resident {
+            // Fan the resident base out over the span: usage_units
+            // already counts the full span, so accounting is unchanged.
+            let t = self.last_touch[bi];
+            for u in bi + 1..bi + span {
+                self.states[u] = UnitState::Resident;
+                self.last_touch[u] = t;
+            }
+        }
+        // Any 2MB backing-store copy can no longer serve per-4k reads:
+        // forget the clean copy (the machine discards the receipt).
+        self.clean_on_disk.clear(bi);
+        self.tier_hint[bi] = 0;
+        self.backend_tier[bi] = 0;
+        self.prefetched_untouched.clear(bi);
+        self.counters.region_splits += 1;
+        true
+    }
+
+    /// Promote split region `r` back to one 2MB-backed unit. Requires
+    /// the whole span uniformly `Resident` and idle (nothing queued,
+    /// wanted, locked or waited-on anywhere in it). Returns true on
+    /// success; the caller mirrors the EPT and discards the span's
+    /// stale per-4k receipts.
+    pub fn collapse_region(&mut self, r: u64) -> bool {
+        if self.huge || r >= self.regions() || self.region_huge(r) {
+            return false;
+        }
+        let base = self.region_base(r);
+        let bi = base as usize;
+        let span = self.region_span(r) as usize;
+        for u in bi..bi + span {
+            if self.states[u] != UnitState::Resident
+                || self.want_out.get(u)
+                || self.prefetch_intent.get(u)
+                || self.queue.contains(u as UnitId)
+                || self.locks.is_locked(u as UnitId)
+                || self.waiters.has(u as UnitId)
+            {
+                return false;
+            }
+        }
+        let mut newest = 0;
+        for u in bi..bi + span {
+            newest = newest.max(self.last_touch[u]);
+            // Per-4k disk copies can't back a 2MB unit: drop them.
+            self.clean_on_disk.clear(u);
+            self.tier_hint[u] = 0;
+            self.backend_tier[u] = 0;
+            self.prefetched_untouched.clear(u);
+            if u != bi {
+                self.states[u] = UnitState::Untouched;
+                self.last_touch[u] = 0;
+            }
+        }
+        self.last_touch[bi] = newest;
+        self.region_huge.set(r as usize);
+        self.huge_region_count += 1;
+        self.counters.region_collapses += 1;
+        true
     }
 
     /// Record where the backend put this unit's swap copy (machine-side
@@ -383,9 +629,11 @@ impl EngineCore {
         let mut demoted = 0u64;
         for ui in 0..self.states.len() {
             if self.states[ui] == UnitState::Resident {
+                // A huge region's base carries the whole span's DRAM.
+                let span = self.span_units(ui as UnitId);
                 self.states[ui] = UnitState::Swapped;
-                self.usage_units -= 1;
-                demoted += self.unit_bytes;
+                self.usage_units -= span;
+                demoted += self.unit_bytes * span;
             }
             self.clean_on_disk.clear(ui);
         }
@@ -428,7 +676,7 @@ impl EngineCore {
             return; // already requested
         }
         self.want_out.set(unit as usize);
-        self.planned_out += 1;
+        self.planned_out += self.span_units(unit);
         self.queue.push(unit, QueueClass::Reclaim);
     }
 
@@ -444,13 +692,14 @@ impl EngineCore {
         if self.queue.contains(unit) {
             return;
         }
+        let span = self.span_units(unit);
         if self
             .limit_units
-            .is_some_and(|l| self.planned_usage() + 1 > l as i64)
+            .is_some_and(|l| self.planned_usage() + span as i64 > l as i64)
         {
             return; // would violate limit: drop (paper §4.3)
         }
-        self.planned_in += 1;
+        self.planned_in += span;
         self.prefetch_intent.set(unit as usize);
         self.counters.prefetch_issued += 1;
         self.queue.push(unit, QueueClass::Prefetch);
@@ -466,9 +715,10 @@ impl EngineCore {
                 UnitState::Untouched => {
                     if self.waiters.has(unit) {
                         self.states[ui] = UnitState::SwappingIn;
+                        let huge_op = self.huge_unit(unit);
                         let cost = sw.queue_handoff_ns
-                            + if self.huge { zero_pool.take() } else { 0 }
-                            + Uffd::continue_cost(sw, self.huge);
+                            + if huge_op { zero_pool.take() } else { 0 }
+                            + Uffd::continue_cost(sw, huge_op);
                         return Some(WorkOutcome::MapZero { unit, cost });
                     }
                     // Prefetch/reclaim of an untouched unit: nothing to do.
@@ -488,7 +738,7 @@ impl EngineCore {
                         self.prefetch_intent.clear(ui);
                         return Some(WorkOutcome::SwapIn {
                             unit,
-                            bytes: self.unit_bytes,
+                            bytes: self.unit_bytes * self.span_units(unit),
                         });
                     }
                     self.cancel_intents(unit);
@@ -515,7 +765,7 @@ impl EngineCore {
                         }
                         return Some(WorkOutcome::SwapOutWrite {
                             unit,
-                            bytes: self.unit_bytes,
+                            bytes: self.unit_bytes * self.span_units(unit),
                             pre_cost: pre,
                             hint,
                         });
@@ -529,7 +779,7 @@ impl EngineCore {
                     if self.waiters.has(unit) {
                         self.states[ui] = UnitState::SwappingIn;
                         let cost = sw.queue_handoff_ns
-                            + Uffd::continue_cost(sw, self.huge);
+                            + Uffd::continue_cost(sw, self.huge_unit(unit));
                         return Some(WorkOutcome::MapStaged { unit, cost });
                     }
                     if self.want_out.get(ui) && !self.locks.is_locked(unit) {
@@ -561,14 +811,15 @@ impl EngineCore {
 
     fn cancel_intents(&mut self, unit: UnitId) {
         let ui = unit as usize;
+        let span = self.span_units(unit);
         if self.want_out.get(ui) {
             self.want_out.clear(ui);
-            self.planned_out = self.planned_out.saturating_sub(1);
+            self.planned_out = self.planned_out.saturating_sub(span);
             self.tier_hint[ui] = 0;
         }
         if self.prefetch_intent.get(ui) {
             self.prefetch_intent.clear(ui);
-            self.planned_in = self.planned_in.saturating_sub(1);
+            self.planned_in = self.planned_in.saturating_sub(span);
         }
         // A fault whose unit became resident: its planned_in is settled
         // by the waiter wake path instead.
@@ -637,9 +888,11 @@ pub struct Mm {
 impl Mm {
     pub fn new(cfg: &MmConfig, units: u64, unit_bytes: u64, sw: &SwCost, zero_2m_ns: Time) -> Self {
         let limit_units = cfg.memory_limit.map(|b| b / unit_bytes);
+        let mut core = EngineCore::new(units, unit_bytes, limit_units);
+        core.set_granularity(cfg.granularity);
         Mm {
             cfg: cfg.clone(),
-            core: EngineCore::new(units, unit_bytes, limit_units),
+            core,
             swapper: Swapper::new(cfg.swapper_threads),
             zero_pool: ZeroPool::new(cfg.zero_pool, zero_2m_ns),
             ring: VmcsRing::new(cfg.vmcs_ring),
@@ -788,7 +1041,7 @@ impl Mm {
                 let first = !self.core.waiters.has(unit);
                 self.core.waiters.push(unit, ev.fault.vcpu);
                 if first {
-                    self.core.planned_in += 1;
+                    self.core.planned_in += self.core.span_units(unit);
                 }
                 self.core.queue.push(unit, QueueClass::Fault);
                 true
@@ -802,7 +1055,7 @@ impl Mm {
                         // its swap-in is already planned.
                         self.core.prefetch_intent.clear(ui);
                     } else {
-                        self.core.planned_in += 1;
+                        self.core.planned_in += self.core.span_units(unit);
                     }
                     // Limit check (paper §4.1 step 6): forced reclamation.
                     // Like kswapd, reclaim down to a low watermark below
@@ -834,15 +1087,19 @@ impl Mm {
     pub fn finish_swapin(&mut self, vm: &mut Vm, unit: UnitId, from_disk: bool, now: Time) -> (Time, Vec<usize>) {
         let ui = unit as usize;
         debug_assert_eq!(self.core.states[ui], UnitState::SwappingIn);
-        self.core.usage_units += 1;
-        self.core.planned_in = self.core.planned_in.saturating_sub(1);
+        let span = self.core.span_units(unit);
+        self.core.usage_units += span;
+        self.core.planned_in = self.core.planned_in.saturating_sub(span);
         if from_disk {
             self.core.clean_on_disk.set(ui); // disk copy valid until dirtied
         } else {
             self.core.clean_on_disk.clear(ui);
         }
         self.core.counters.swapin_ops += 1;
-        self.core.counters.swapin_bytes += self.core.unit_bytes;
+        self.core.counters.swapin_bytes += self.core.unit_bytes * span;
+        if span > 1 {
+            self.core.counters.huge_swapins += 1;
+        }
         self.note_touch(unit, now);
         let wake = self.core.waiters.take(unit);
         if wake.is_empty() && self.core.prefetched_untouched.get(ui) {
@@ -860,7 +1117,7 @@ impl Mm {
             // A reclaim raced this swap-in: re-queue it.
             self.core.queue.push(unit, QueueClass::Reclaim);
         }
-        let cost = Uffd::continue_cost(&self.sw, self.core.huge);
+        let cost = Uffd::continue_cost(&self.sw, self.core.huge_unit(unit));
         self.dispatch_event_vm(vm, &|n| PolicyEvent::SwapIn { unit, now: n }, now);
         (cost, wake)
     }
@@ -875,7 +1132,7 @@ impl Mm {
         vm.ept.map(unit);
         vm.ept.clear_dirty(unit);
         let wake = self.core.waiters.take(unit);
-        let cost = Uffd::continue_cost(&self.sw, self.core.huge);
+        let cost = Uffd::continue_cost(&self.sw, self.core.huge_unit(unit));
         (cost, wake)
     }
 
@@ -885,13 +1142,17 @@ impl Mm {
     pub fn finish_swapout(&mut self, vm: &mut Vm, unit: UnitId, dirty_written: bool, now: Time) -> bool {
         let ui = unit as usize;
         debug_assert_eq!(self.core.states[ui], UnitState::SwappingOut);
+        let span = self.core.span_units(unit);
         self.core.states[ui] = UnitState::Swapped;
-        self.core.usage_units = self.core.usage_units.saturating_sub(1);
-        self.core.planned_out = self.core.planned_out.saturating_sub(1);
+        self.core.usage_units = self.core.usage_units.saturating_sub(span);
+        self.core.planned_out = self.core.planned_out.saturating_sub(span);
         self.core.clean_on_disk.set(ui);
         self.core.counters.swapout_ops += 1;
         if dirty_written {
-            self.core.counters.swapout_bytes += self.core.unit_bytes;
+            self.core.counters.swapout_bytes += self.core.unit_bytes * span;
+        }
+        if span > 1 {
+            self.core.counters.huge_swapouts += 1;
         }
         self.dispatch_event_vm(vm, &|n| PolicyEvent::SwapOut { unit, now: n }, now);
         // A vCPU may have faulted on this unit while the write was in
@@ -1006,6 +1267,53 @@ impl Mm {
     pub fn pick_work(&mut self, now: Time) -> Option<WorkOutcome> {
         let sw = self.sw.clone();
         self.core.pick_work(&mut self.zero_pool, &sw, now)
+    }
+
+    /// Apply region-granularity requests queued by policies via
+    /// [`PolicyApi::split_region`] / [`PolicyApi::collapse_region`].
+    /// Returns the region ids actually applied (validation may refuse a
+    /// request whose base is in flight) so the machine can mirror the
+    /// change into the VM's EPT and discard stale backend receipts.
+    pub fn drain_region_ops(&mut self) -> (Vec<u64>, Vec<u64>) {
+        let split_req = std::mem::take(&mut self.core.pending_splits);
+        let collapse_req = std::mem::take(&mut self.core.pending_collapses);
+        let mut splits = Vec::new();
+        let mut collapses = Vec::new();
+        for r in split_req {
+            if self.core.split_region(r) {
+                // Fanned-out resident units enter the limit reclaimer's
+                // recency structure at the base's timestamp so they are
+                // individually reclaimable right away.
+                let base = self.core.region_base(r);
+                let span = self.core.region_span(r);
+                for u in base..base + span {
+                    if self.core.states[u as usize] == UnitState::Resident {
+                        let t = self.core.last_touch[u as usize];
+                        if let Some(rec) = self.limit_reclaimer.as_mut() {
+                            rec.touch(u, t);
+                        }
+                    }
+                }
+                splits.push(r);
+            }
+        }
+        for r in collapse_req {
+            if self.core.collapse_region(r) {
+                let base = self.core.region_base(r);
+                let t = self.core.last_touch[base as usize];
+                if let Some(rec) = self.limit_reclaimer.as_mut() {
+                    rec.touch(base, t);
+                }
+                collapses.push(r);
+            }
+        }
+        (splits, collapses)
+    }
+
+    /// Take a pending pool-admission retune requested by a policy
+    /// through [`PolicyApi::set_pool_admission`].
+    pub fn take_pool_admission(&mut self) -> Option<u8> {
+        self.core.pending_admission.take()
     }
 
     pub fn stats(&self) -> MmStats {
@@ -1303,5 +1611,167 @@ mod tests {
             &[(3, 100), (3, 200), (1, 300), (3, 300)]
         );
         assert_eq!(m.core.last_touch[3], 300);
+    }
+
+    fn mm_mode(units: u64, limit: Option<u64>, mode: crate::types::GranularityMode) -> Mm {
+        let mut cfg = MmConfig::default();
+        cfg.memory_limit = limit.map(|u| u * 4096);
+        cfg.granularity = mode;
+        Mm::new(&cfg, units, 4096, &SwCost::default(), HwConfig::default().zero_2m_ns)
+    }
+
+    #[test]
+    fn granularity_huge_fault_is_one_op_with_region_bytes() {
+        use crate::types::{GranularityMode, REGION_UNITS};
+        let mut m = mm_mode(2 * REGION_UNITS, None, GranularityMode::Huge);
+        let (mut vm, _) = vm_for(2 * REGION_UNITS);
+        assert_eq!(m.core.span_units(0), REGION_UNITS);
+        // First touch: one MapZero covering the whole region.
+        assert!(m.on_fault(&vm, &fault_ev(0), 0));
+        assert_eq!(m.core.planned_in, REGION_UNITS);
+        match m.pick_work(0) {
+            Some(WorkOutcome::MapZero { unit: 0, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        m.finish_swapin(&mut vm, 0, false, 1);
+        assert_eq!(m.core.usage_units, REGION_UNITS);
+        assert_eq!(m.core.planned_in, 0);
+        assert_eq!(m.core.counters.huge_swapins, 1);
+        assert_eq!(m.core.counters.swapin_bytes, REGION_UNITS * 4096);
+        // One reclaim moves the whole 2MB in one write.
+        m.core.request_reclaim(0);
+        assert_eq!(m.core.planned_out, REGION_UNITS);
+        match m.pick_work(2) {
+            Some(WorkOutcome::SwapOutWrite { unit: 0, bytes, .. }) => {
+                assert_eq!(bytes, REGION_UNITS * 4096);
+            }
+            other => panic!("{other:?}"),
+        }
+        m.finish_swapout(&mut vm, 0, true, 3);
+        assert_eq!(m.core.usage_units, 0);
+        assert_eq!(m.core.counters.huge_swapouts, 1);
+        // Refault: one major fault, one 2MB swap-in.
+        assert!(m.on_fault(&vm, &fault_ev(0), 4));
+        assert_eq!(m.core.counters.faults_major, 1);
+        match m.pick_work(4) {
+            Some(WorkOutcome::SwapIn { unit: 0, bytes }) => {
+                assert_eq!(bytes, REGION_UNITS * 4096);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn granularity_split_fans_resident_and_collapse_folds_back() {
+        use crate::types::{GranularityMode, REGION_UNITS};
+        let mut m = mm_mode(2 * REGION_UNITS, None, GranularityMode::Auto);
+        let (mut vm, _) = vm_for(2 * REGION_UNITS);
+        m.on_fault(&vm, &fault_ev(0), 0);
+        m.pick_work(0).unwrap();
+        m.finish_swapin(&mut vm, 0, false, 1);
+        assert_eq!(m.core.usage_units, REGION_UNITS);
+        // Split: every unit of the span becomes individually resident,
+        // accounting unchanged.
+        m.core.pending_splits.push(0);
+        let (splits, collapses) = m.drain_region_ops();
+        assert_eq!(splits, vec![0]);
+        assert!(collapses.is_empty());
+        assert!(!m.core.region_huge(0));
+        assert_eq!(m.core.span_units(0), 1);
+        for u in 0..REGION_UNITS {
+            assert_eq!(m.core.states[u as usize], UnitState::Resident);
+        }
+        assert_eq!(m.core.usage_units, REGION_UNITS);
+        // Now a single-unit reclaim works at 4k granularity.
+        m.core.request_reclaim(7);
+        assert_eq!(m.core.planned_out, 1);
+        m.pick_work(2).unwrap();
+        m.finish_swapout(&mut vm, 7, true, 3);
+        assert_eq!(m.core.usage_units, REGION_UNITS - 1);
+        // Collapse refused while the span is not uniformly resident.
+        m.core.pending_collapses.push(0);
+        assert!(m.drain_region_ops().1.is_empty());
+        // Bring unit 7 back; collapse then folds the span to the base.
+        m.on_fault(&vm, &fault_ev(7), 4);
+        m.pick_work(4).unwrap();
+        m.finish_swapin(&mut vm, 7, true, 5);
+        m.core.pending_collapses.push(0);
+        assert_eq!(m.drain_region_ops().1, vec![0]);
+        assert!(m.core.region_huge(0));
+        assert_eq!(m.core.states[0], UnitState::Resident);
+        for u in 1..REGION_UNITS {
+            assert_eq!(m.core.states[u as usize], UnitState::Untouched);
+        }
+        assert_eq!(m.core.usage_units, REGION_UNITS);
+        assert_eq!(m.core.counters.region_splits, 1);
+        assert_eq!(m.core.counters.region_collapses, 1);
+    }
+
+    #[test]
+    fn granularity_split_refused_for_swapped_base() {
+        use crate::types::{GranularityMode, REGION_UNITS};
+        let mut m = mm_mode(REGION_UNITS, None, GranularityMode::Huge);
+        let (mut vm, _) = vm_for(REGION_UNITS);
+        m.on_fault(&vm, &fault_ev(0), 0);
+        m.pick_work(0).unwrap();
+        m.finish_swapin(&mut vm, 0, false, 1);
+        m.core.request_reclaim(0);
+        m.pick_work(2).unwrap();
+        m.finish_swapout(&mut vm, 0, true, 3);
+        assert_eq!(m.core.states[0], UnitState::Swapped);
+        // A swapped base never splits: the 2MB backing-store image
+        // would otherwise be torn into per-4k reads.
+        m.core.pending_splits.push(0);
+        assert!(m.drain_region_ops().0.is_empty());
+        assert!(m.core.region_huge(0));
+    }
+
+    #[test]
+    fn granularity_splitall_is_structurally_fixed() {
+        use crate::types::{GranularityMode, REGION_UNITS};
+        let units = 2 * REGION_UNITS;
+        let mut fixed = mm_mode(units, None, GranularityMode::Fixed);
+        let mut oracle = mm_mode(units, None, GranularityMode::SplitAll);
+        assert_eq!(oracle.core.counters.region_splits, 2);
+        let (mut vf, _) = vm_for(units);
+        let (mut vo, _) = vm_for(units);
+        for (m, vm) in [(&mut fixed, &mut vf), (&mut oracle, &mut vo)] {
+            for u in [0u64, 3, 700] {
+                m.on_fault(vm, &fault_ev(u), u);
+                m.pick_work(u).unwrap();
+                m.finish_swapin(vm, u, false, u + 1);
+            }
+            m.core.request_reclaim(3);
+            m.pick_work(10).unwrap();
+            m.finish_swapout(vm, 3, true, 11);
+        }
+        assert_eq!(fixed.core.usage_units, oracle.core.usage_units);
+        assert_eq!(fixed.core.states, oracle.core.states);
+        let (cf, co) = (&fixed.core.counters, &oracle.core.counters);
+        assert_eq!(cf.faults_major, co.faults_major);
+        assert_eq!(cf.swapin_bytes, co.swapin_bytes);
+        assert_eq!(cf.swapout_bytes, co.swapout_bytes);
+        assert_eq!(co.huge_swapins, 0);
+        assert_eq!(co.huge_swapouts, 0);
+    }
+
+    #[test]
+    fn granularity_strict_2m_vm_forces_fixed() {
+        use crate::types::GranularityMode;
+        let cfg = MmConfig { granularity: GranularityMode::Huge, ..Default::default() };
+        let zero_2m = HwConfig::default().zero_2m_ns;
+        let m = Mm::new(&cfg, 64, 2 * 1024 * 1024, &SwCost::default(), zero_2m);
+        assert_eq!(m.core.granularity_mode, GranularityMode::Fixed);
+        assert_eq!(m.core.span_units(0), 1);
+        assert!(m.core.huge_unit(0)); // the unit itself is 2MB
+    }
+
+    #[test]
+    fn granularity_pool_admission_handoff() {
+        let mut m = mm(8, None);
+        assert_eq!(m.take_pool_admission(), None);
+        m.core.pending_admission = Some(80);
+        assert_eq!(m.take_pool_admission(), Some(80));
+        assert_eq!(m.take_pool_admission(), None);
     }
 }

@@ -16,7 +16,7 @@ use std::collections::VecDeque;
 use crate::mm::{Policy, PolicyApi, PolicyEvent};
 use crate::policies::analytics::ColdAnalytics;
 use crate::storage::TierHint;
-use crate::types::{Bitmap, Time, UnitId, UnitState};
+use crate::types::{Bitmap, GranularityMode, Time, UnitId, UnitState, REGION_UNITS};
 
 pub struct DtReclaimer {
     backend: Box<dyn ColdAnalytics>,
@@ -38,6 +38,19 @@ pub struct DtReclaimer {
     pub analytics_runs: u64,
     /// WSS estimate: units with age < threshold at the last run.
     pub wss_estimate_units: u64,
+    /// Major refaults per granularity region since the last analytics
+    /// run (PR 8, `--granularity auto`): a 2MB-backed region that keeps
+    /// refaulting wastes a whole region of DRAM per touch — split it.
+    region_refaults: Vec<u16>,
+    /// Split requests issued under `--granularity auto`.
+    pub splits_requested: u64,
+    /// Collapse requests issued under `--granularity auto`.
+    pub collapses_requested: u64,
+    /// Drive the tiered backend's pool-admission threshold from the
+    /// age histogram instead of the fixed config value (PR 8 satellite).
+    adaptive_admission: bool,
+    /// Last admission percentage sent (avoid re-sending every run).
+    last_admission: Option<u8>,
 }
 
 impl DtReclaimer {
@@ -55,7 +68,20 @@ impl DtReclaimer {
             nvme_routed: 0,
             analytics_runs: 0,
             wss_estimate_units: 0,
+            region_refaults: vec![],
+            splits_requested: 0,
+            collapses_requested: 0,
+            adaptive_admission: false,
+            last_admission: None,
         }
+    }
+
+    /// Enable histogram-driven pool admission (PR 8 satellite): the
+    /// reclaimer retunes the backend's compressibility threshold from
+    /// the warm/cold mix of each reclaim batch.
+    pub fn with_adaptive_admission(mut self, on: bool) -> Self {
+        self.adaptive_admission = on;
+        self
     }
 
     fn note_fault(&mut self, unit: UnitId, units: usize) {
@@ -73,8 +99,20 @@ impl Policy for DtReclaimer {
 
     fn on_event(&mut self, ev: &PolicyEvent, api: &mut PolicyApi) {
         match ev {
-            PolicyEvent::PageFault { unit, .. } => {
+            PolicyEvent::PageFault { unit, major, .. } => {
                 self.note_fault(*unit, api.units() as usize);
+                // Auto granularity: a major fault on a 2MB-backed base
+                // re-pulled a whole region from the backing store.
+                if *major
+                    && api.granularity_mode() == GranularityMode::Auto
+                    && api.region_huge(*unit / REGION_UNITS)
+                {
+                    let r = (*unit / REGION_UNITS) as usize;
+                    if self.region_refaults.len() <= r {
+                        self.region_refaults.resize(r + 1, 0);
+                    }
+                    self.region_refaults[r] = self.region_refaults[r].saturating_add(1);
+                }
             }
             PolicyEvent::ScanBitmap { bitmap, now } => {
                 let n = bitmap.len();
@@ -109,10 +147,75 @@ impl Policy for DtReclaimer {
                 self.threshold = out.smoothed;
                 let cut = self.threshold;
                 let h_max = self.history as f32;
+                // Auto granularity (PR 8): manage the region overlay
+                // *before* issuing reclaims, so a region we are about to
+                // collapse isn't shredded into per-4k reclaims first.
+                // `region_op` marks regions with a pending split or
+                // collapse this run; the reclaim loop leaves them alone.
+                let regions = n.div_ceil(REGION_UNITS as usize);
+                let mut region_op: Vec<bool> = Vec::new();
+                if api.granularity_mode() == GranularityMode::Auto {
+                    region_op = vec![false; regions];
+                    self.region_refaults.resize(regions, 0);
+                    for r in 0..regions as u64 {
+                        let refaults = self.region_refaults[r as usize];
+                        self.region_refaults[r as usize] = 0;
+                        let base = (r * REGION_UNITS) as usize;
+                        let span = (n - base).min(REGION_UNITS as usize);
+                        if api.region_huge(r) {
+                            // Repeated refaults mean the region mixes
+                            // hot and cold at sub-2MB grain: each touch
+                            // re-pulls 512 units. Split it.
+                            if refaults >= 2 {
+                                api.split_region(r);
+                                self.splits_requested += 1;
+                                region_op[r as usize] = true;
+                            }
+                        } else if refaults == 0 {
+                            // Collapse a quiet split region back to 2MB
+                            // once the whole span is resident and sits
+                            // on one side of the cut (uniformly hot, or
+                            // uniformly cold = one future queue entry
+                            // and one receipt instead of 512).
+                            let mut resident = true;
+                            let mut all_cold = true;
+                            let mut all_hot = true;
+                            for u in base..base + span {
+                                if api.page_state(u as UnitId) != UnitState::Resident {
+                                    resident = false;
+                                    break;
+                                }
+                                if out.age[u] >= cut {
+                                    all_hot = false;
+                                } else {
+                                    all_cold = false;
+                                }
+                            }
+                            if resident && (all_cold || all_hot) {
+                                api.collapse_region(r);
+                                self.collapses_requested += 1;
+                                region_op[r as usize] = true;
+                            }
+                        }
+                    }
+                }
                 let mut wss = 0u64;
+                let mut cold_reclaims = 0u64;
+                let mut warm_reclaims = 0u64;
                 for u in 0..n {
                     if out.age[u] < cut {
-                        wss += 1;
+                        // A 2MB-backed base stands for its whole span in
+                        // the WSS estimate.
+                        wss += if u as u64 % REGION_UNITS == 0
+                            && api.region_huge(u as u64 / REGION_UNITS)
+                        {
+                            (n - u).min(REGION_UNITS as usize) as u64
+                        } else {
+                            1
+                        };
+                    }
+                    if !region_op.is_empty() && region_op[u / REGION_UNITS as usize] {
+                        continue; // pending split/collapse owns this region
                     }
                     if out.age[u] >= cut
                         && api.page_state(u as UnitId) == UnitState::Resident
@@ -123,10 +226,23 @@ impl Policy for DtReclaimer {
                             // so it doesn't churn capacity.
                             api.reclaim_to(u as UnitId, TierHint::Nvme);
                             self.nvme_routed += 1;
+                            cold_reclaims += 1;
                         } else {
                             api.reclaim(u as UnitId);
+                            warm_reclaims += 1;
                         }
                         self.reclaims_requested += 1;
+                    }
+                }
+                // Histogram-driven pool admission (PR 8 satellite): a
+                // warm-dominated reclaim batch is likely to refault, so
+                // open the compressed pool up; a cold-dominated batch
+                // heads to NVMe anyway, so keep the pool selective.
+                if self.adaptive_admission && cold_reclaims + warm_reclaims > 0 {
+                    let pct = (50 + warm_reclaims * 50 / (cold_reclaims + warm_reclaims)) as u8;
+                    if self.last_admission != Some(pct) {
+                        api.set_pool_admission(pct);
+                        self.last_admission = Some(pct);
                     }
                 }
                 self.wss_estimate_units = wss;
@@ -273,5 +389,114 @@ mod tests {
             !mm.core.want_out.get(5),
             "faulting unit must not be reclaimed (paper §6.4)"
         );
+    }
+
+    fn setup_mode(units: u64, mode: crate::types::GranularityMode, adaptive: bool) -> (Mm, Vm) {
+        let mm_cfg = MmConfig { history: 8, granularity: mode, ..Default::default() };
+        let mut mm = Mm::new(&mm_cfg, units, 4096, &SwCost::default(), 100_000);
+        mm.add_policy(Box::new(
+            DtReclaimer::new(Box::new(NativeAnalytics::new()), 8, 0.02)
+                .with_adaptive_admission(adaptive),
+        ));
+        let cfg = VmConfig {
+            frames: units,
+            vcpus: 1,
+            page_size: PageSize::Small,
+            scramble: 0.0,
+            guest_thp_coverage: 1.0,
+        };
+        let mut rng = Rng::new(2);
+        let vm = Vm::new(&cfg, &HwConfig::default(), &SwCost::default(), &mut rng);
+        (mm, vm)
+    }
+
+    fn major_fault(mm: &mut Mm, vm: &Vm, unit: u64, now: u64) {
+        let ev = crate::uffd::UffdEvent {
+            fault: crate::vm::FaultInfo {
+                unit,
+                gpa_frame: unit,
+                gva_page: unit,
+                cr3: 0,
+                ip: 0,
+                write: false,
+                vcpu: 0,
+                pre_cost: 0,
+            },
+            raised_at: now,
+            delivered_at: now,
+        };
+        mm.on_fault(vm, &ev, now);
+    }
+
+    #[test]
+    fn granularity_auto_splits_refaulting_huge_region() {
+        use crate::types::{GranularityMode, REGION_UNITS};
+        let (mut mm, mut vm) = setup_mode(2 * REGION_UNITS, GranularityMode::Auto, false);
+        mm.core.states[0] = UnitState::Swapped;
+        // Two refault cycles on region 0's base: swap in, kick out,
+        // swap in again — a huge region churning whole-2MB I/O.
+        for t in 0..2u64 {
+            major_fault(&mut mm, &vm, 0, t * 1000);
+            mm.pick_work(t * 1000).unwrap();
+            mm.finish_swapin(&mut vm, 0, true, t * 1000 + 1);
+            if t == 0 {
+                mm.core.request_reclaim(0);
+                mm.pick_work(500).unwrap();
+                mm.finish_swapout(&mut vm, 0, true, 600);
+            }
+        }
+        for s in 0..4u64 {
+            mm.on_scan(&vm, &Bitmap::new(2 * REGION_UNITS as usize), 10_000 + s);
+        }
+        // The analytics run asked for the split, and the engine applied
+        // it (base resident and idle): per-4k tracking from here on.
+        let (splits, _) = mm.drain_region_ops();
+        assert_eq!(splits, vec![0]);
+        assert!(!mm.core.region_huge(0));
+        assert_eq!(mm.core.states[1], UnitState::Resident); // fanned out
+    }
+
+    #[test]
+    fn granularity_auto_collapses_uniform_split_region() {
+        use crate::types::{GranularityMode, REGION_UNITS};
+        let (mut mm, vm) = setup_mode(2 * REGION_UNITS, GranularityMode::Auto, false);
+        // Split region 0 while untouched (trivial), then hand-build a
+        // uniformly-resident span.
+        mm.core.pending_splits.push(0);
+        assert_eq!(mm.drain_region_ops().0, vec![0]);
+        for u in 0..REGION_UNITS as usize {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.usage_units = REGION_UNITS;
+        for s in 0..4u64 {
+            mm.on_scan(&vm, &Bitmap::new(2 * REGION_UNITS as usize), 10_000 + s);
+        }
+        // Uniformly cold + resident: the reclaimer asked to collapse it
+        // back to one 2MB unit instead of issuing 512 reclaims.
+        let (_, collapses) = mm.drain_region_ops();
+        assert_eq!(collapses, vec![0]);
+        assert!(mm.core.region_huge(0));
+        assert_eq!(mm.core.states[0], UnitState::Resident);
+        assert_eq!(mm.core.usage_units, REGION_UNITS);
+    }
+
+    #[test]
+    fn granularity_adaptive_admission_tracks_reclaim_mix() {
+        let (mut mm, vm) = setup_mode(64, crate::types::GranularityMode::Fixed, true);
+        for u in 0..64 {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.usage_units = 64;
+        for s in 0..8 {
+            let mut bm = Bitmap::new(64);
+            for u in 0..8 {
+                bm.set(u);
+            }
+            mm.on_scan(&vm, &bm, s * 1_000_000_000);
+        }
+        // Every reclaimed unit was maximally cold: the batch is
+        // cold-dominated, so the pool stays selective (50%).
+        assert_eq!(mm.take_pool_admission(), Some(50));
+        assert_eq!(mm.take_pool_admission(), None);
     }
 }

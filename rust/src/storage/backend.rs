@@ -111,6 +111,9 @@ pub struct TierMetrics {
     /// NVMe request counts *after* coalescing (direct writes + writeback
     /// + reads). The tiering win is measured here.
     pub nvme_write_reqs: u64,
+    /// Subset of `nvme_write_reqs` larger than one 4kB frame (huge-unit
+    /// direct writes and coalesced writeback runs).
+    pub nvme_huge_write_reqs: u64,
     pub nvme_reads: u64,
     pub nvme_bytes_read: u64,
     pub nvme_bytes_written: u64,
@@ -240,6 +243,13 @@ pub trait SwapBackend: Send {
     fn class_pool_bytes(&self, _class: u8) -> u64 {
         0
     }
+
+    /// Retune pool admission at runtime (PR 8 satellite): admit a page
+    /// only while its compressed size is below `reject_pct`% of raw.
+    /// Driven by the dt-reclaimer's age histogram when
+    /// `adaptive_pool_admission` is on. Default: ignored — backends
+    /// without a compressed pool have no admission decision.
+    fn set_pool_admission(&mut self, _reject_pct: u8) {}
 
     // ---- VM state migration (fleet scheduler hand-off) ----
     //

@@ -74,6 +74,9 @@ pub struct TieredBackend {
     /// fresh stamp, so stale FIFO references can never match it.
     next_stamp: u32,
     next_token: IoToken,
+    /// Pool reject threshold pushed by the dt-reclaimer's adaptive
+    /// admission (overrides `cfg.reject_pct` when set).
+    admission_override: Option<u8>,
     metrics: TierMetrics,
 }
 
@@ -92,6 +95,7 @@ impl TieredBackend {
             vm_class: vec![],
             next_stamp: 1,
             next_token: 0,
+            admission_override: None,
             metrics: TierMetrics::default(),
         }
     }
@@ -180,6 +184,9 @@ impl TieredBackend {
             }
             IoKind::Write => {
                 self.metrics.nvme_write_reqs += 1;
+                if bytes > FRAME_BYTES {
+                    self.metrics.nvme_huge_write_reqs += 1;
+                }
                 self.metrics.nvme_bytes_written += bytes;
             }
         }
@@ -284,8 +291,8 @@ impl SwapBackend for TieredBackend {
             cpu = self.scaled(self.compress_4k_ns, raw);
             let img = codec::compress(data);
             let stored = img.stored_bytes();
-            let admit =
-                hint == TierHint::Pool || stored * 100 < raw * self.cfg.reject_pct as u64;
+            let reject_pct = self.admission_override.unwrap_or(self.cfg.reject_pct);
+            let admit = hint == TierHint::Pool || stored * 100 < raw * reject_pct as u64;
             if admit
                 && (self.class_bytes[class] + stored > high
                     || self.metrics.pool_bytes + stored > self.cfg.high_watermark_bytes())
@@ -452,6 +459,10 @@ impl SwapBackend for TieredBackend {
         self.class_bytes.get(class as usize).copied().unwrap_or(0)
     }
 
+    fn set_pool_admission(&mut self, reject_pct: u8) {
+        self.admission_override = Some(reject_pct.min(100));
+    }
+
     fn list_units(&self, vm: VmId) -> Vec<UnitSummary> {
         let Some(store) = self.stores.get(vm) else { return Vec::new() };
         store
@@ -568,6 +579,49 @@ mod tests {
         assert_eq!(b.metrics().bounced_ops, 1);
         assert_eq!(b.metrics().nvme_write_reqs, 2);
         assert_eq!(b.metrics().pool_stores, 0);
+    }
+
+    #[test]
+    fn granularity_huge_write_counts_one_2m_request() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::flat());
+        b.write(0, 1, &random_page(HUGE_BYTES as usize, 1), TierHint::Auto, 0, &mut n, &mut rng);
+        b.write(0, 2, &random_page(FRAME_BYTES as usize, 2), TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(b.metrics().nvme_huge_write_reqs, 1);
+        assert_eq!(b.metrics().nvme_write_reqs, 2);
+        assert_eq!(b.metrics().nvme_bytes_written, HUGE_BYTES + FRAME_BYTES);
+    }
+
+    #[test]
+    fn granularity_huge_unit_roundtrips_through_pool_backend() {
+        // A 2MB unit written through the pool-enabled backend must read
+        // back byte-identical, whichever tier it landed on — and a
+        // never-written 2MB unit reads back as cold zero-fill.
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let page = pattern_page(HUGE_BYTES as usize, 7);
+        let w = b.write(0, 1, &page, TierHint::Auto, 0, &mut n, &mut rng);
+        let mut out = Vec::new();
+        b.read(0, 1, HUGE_BYTES, &mut out, w.completes_at, &mut n, &mut rng);
+        assert_eq!(out, page);
+        let mut cold = Vec::new();
+        b.read(0, 2, HUGE_BYTES, &mut cold, w.completes_at, &mut n, &mut rng);
+        assert_eq!(cold, vec![0u8; HUGE_BYTES as usize]);
+    }
+
+    #[test]
+    fn granularity_admission_override_replaces_config_threshold() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let page = pattern_page(FRAME_BYTES as usize, 3);
+        let w = b.write(0, 1, &page, TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Pool); // compressible -> admitted
+        b.set_pool_admission(0); // adaptive policy: reject everything
+        let w2 = b.write(0, 2, &page, TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(w2.tier, SwapTier::Nvme);
+        // Explicit Pool routing bypasses the threshold either way.
+        let w3 = b.write(0, 3, &page, TierHint::Pool, 0, &mut n, &mut rng);
+        assert_eq!(w3.tier, SwapTier::Pool);
+        b.set_pool_admission(100); // back to permissive
+        let w4 = b.write(0, 4, &page, TierHint::Auto, 0, &mut n, &mut rng);
+        assert_eq!(w4.tier, SwapTier::Pool);
     }
 
     #[test]

@@ -15,6 +15,9 @@ pub const HUGE_FRAMES: u64 = 512;
 pub const FRAME_BYTES: u64 = 4096;
 /// Bytes per 2MB hugepage.
 pub const HUGE_BYTES: u64 = FRAME_BYTES * HUGE_FRAMES;
+/// 4kB swap units per 2MB-backed region (granularity regions only exist
+/// on VMs whose unit is 4kB; strict-2MB VMs already swap whole 2M units).
+pub const REGION_UNITS: u64 = HUGE_FRAMES;
 
 /// Identifier of a VM on the host.
 pub type VmId = usize;
@@ -53,6 +56,48 @@ impl PageSize {
             PageSize::Huge => "2M",
         }
     }
+}
+
+/// Swap-granularity mode of a 4kB-unit VM (PR 8). Unlike
+/// [`PageSize::Huge`] (whole-VM strict 2MB units, never split), these
+/// modes keep the unit 4kB and overlay 2MB-backed *regions* of 512
+/// units that can split back to per-4k tracking and collapse again at
+/// runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum GranularityMode {
+    /// Flat 4k: no regions, byte-identical to the pre-PR-8 behaviour.
+    #[default]
+    Fixed,
+    /// Every region 2MB-backed at admission; no runtime split/collapse.
+    Huge,
+    /// Every region 2MB-backed at admission; the dt-reclaimer splits
+    /// refault-churning regions and collapses uniform ranges back.
+    Auto,
+    /// Oracle: admit huge, then immediately split every region. Must be
+    /// byte-identical to `Fixed` (the split-always acceptance test).
+    SplitAll,
+}
+
+impl GranularityMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            GranularityMode::Fixed => "4k",
+            GranularityMode::Huge => "huge",
+            GranularityMode::Auto => "auto",
+            GranularityMode::SplitAll => "split-all",
+        }
+    }
+}
+
+/// Granularity tag of one swap operation: whether a fault/reclaim on a
+/// unit moves one 4kB page or one whole 2MB-backed region in a single
+/// O(1) queue entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// One 4kB unit.
+    Page,
+    /// One 2MB-backed region (512 units, canonicalized to its base).
+    Region,
 }
 
 /// Dense bitmap over swap units (the EPT scanner's output format).
@@ -131,6 +176,45 @@ impl Bitmap {
             }
             self.words[hw] &= !hi_mask;
         }
+    }
+    /// Set bits in `[lo, hi)`, 64 at a time for interior words (the
+    /// mirror of [`Bitmap::clear_range`]; region split fan-out path).
+    pub fn set_range(&mut self, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        assert!(hi <= self.len);
+        let lw = lo / 64;
+        let hw = (hi - 1) / 64;
+        let lo_mask = !0u64 << (lo % 64);
+        let hi_mask = !0u64 >> (63 - ((hi - 1) % 64));
+        if lw == hw {
+            self.words[lw] |= lo_mask & hi_mask;
+        } else {
+            self.words[lw] |= lo_mask;
+            for w in &mut self.words[lw + 1..hw] {
+                *w = !0;
+            }
+            self.words[hw] |= hi_mask;
+        }
+    }
+    /// Any bit set in `[lo, hi)`?
+    pub fn any_in_range(&self, lo: usize, hi: usize) -> bool {
+        if lo >= hi {
+            return false;
+        }
+        assert!(hi <= self.len);
+        let lw = lo / 64;
+        let hw = (hi - 1) / 64;
+        let lo_mask = !0u64 << (lo % 64);
+        let hi_mask = !0u64 >> (63 - ((hi - 1) % 64));
+        if lw == hw {
+            return self.words[lw] & lo_mask & hi_mask != 0;
+        }
+        if self.words[lw] & lo_mask != 0 || self.words[hw] & hi_mask != 0 {
+            return true;
+        }
+        self.words[lw + 1..hw].iter().any(|&w| w != 0)
     }
     /// Raw 64-bit words (bit `i` of word `w` is unit `w*64 + i`). Bits at
     /// or beyond `len()` are always zero.
@@ -269,6 +353,48 @@ mod tests {
         b.clear_range(3, 7);
         assert_eq!(b.count_ones(), 60);
         assert!(b.get(2) && !b.get(3) && !b.get(6) && b.get(7));
+    }
+
+    #[test]
+    fn granularity_set_range_mirrors_clear_range() {
+        let mut a = Bitmap::new(200);
+        a.set_range(10, 10); // empty range: no-op
+        assert_eq!(a.count_ones(), 0);
+        a.set_range(60, 140);
+        for i in 0..200 {
+            assert_eq!(a.get(i), (60..140).contains(&i), "bit {i}");
+        }
+        a.set_range(0, 200);
+        assert_eq!(a.count_ones(), 200);
+        // Single-word interior range.
+        let mut b = Bitmap::new(64);
+        b.set_range(3, 7);
+        assert_eq!(b.count_ones(), 4);
+        assert!(!b.get(2) && b.get(3) && b.get(6) && !b.get(7));
+    }
+
+    #[test]
+    fn granularity_any_in_range() {
+        let mut a = Bitmap::new(300);
+        assert!(!a.any_in_range(0, 300));
+        a.set(128);
+        assert!(a.any_in_range(0, 300));
+        assert!(a.any_in_range(128, 129));
+        assert!(a.any_in_range(64, 192)); // interior full word
+        assert!(!a.any_in_range(0, 128));
+        assert!(!a.any_in_range(129, 300));
+        assert!(!a.any_in_range(10, 10));
+    }
+
+    #[test]
+    fn granularity_mode_labels_and_default() {
+        assert_eq!(GranularityMode::default(), GranularityMode::Fixed);
+        assert_eq!(GranularityMode::Fixed.label(), "4k");
+        assert_eq!(GranularityMode::Huge.label(), "huge");
+        assert_eq!(GranularityMode::Auto.label(), "auto");
+        assert_eq!(GranularityMode::SplitAll.label(), "split-all");
+        assert_eq!(REGION_UNITS, HUGE_FRAMES);
+        assert_ne!(Granularity::Page, Granularity::Region);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::config::{HwConfig, SwCost, VmConfig};
 use crate::guest::{GuestAllocator, GuestProcess};
 use crate::hw::{Ept, Tlb, WalkModel};
 use crate::sim::Rng;
-use crate::types::{PageSize, Time, UnitId};
+use crate::types::{PageSize, Time, UnitId, REGION_UNITS};
 
 /// Outcome of one guest memory access.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -165,13 +165,16 @@ impl Vm {
         let cr3 = proc.cr3;
 
         let gpa_frame = frame as u64;
-        let unit = gpa_frame / self.unit_frames;
+        // A unit inside a 2MB-backed granularity region canonicalizes to
+        // the region base: the whole region faults/maps as one op.
+        let unit = self.ept.canonical_unit(gpa_frame / self.unit_frames);
 
         // TLB: hugepage entries only where both host mode and the guest's
-        // THP policy give a 2MB leaf on both levels.
+        // THP policy give a 2MB leaf on both levels. A huge granularity
+        // region is host-side 2MB-backed exactly like strict-2MB mode.
         let host_huge = match &self.host_thp {
             Some(bm) => bm.get((gpa_frame / 512) as usize),
-            None => self.unit_frames > 1,
+            None => self.unit_frames > 1 || self.ept.region_huge(unit / REGION_UNITS),
         };
         let huge_leaf = host_huge && self.guest_thp(proc_idx, gva_page);
         let (tlb4k, tlb2m) = &mut self.tlbs[vcpu];
@@ -292,6 +295,28 @@ mod tests {
             AccessResult::Hit { .. } => {}
             other => panic!("expected hit in same 2M unit, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn granularity_access_canonicalizes_to_region_base() {
+        let (mut vm, mut rng) = small_vm(PageSize::Small);
+        let p = vm.spawn_process(2048);
+        vm.ept.set_region_huge(1);
+        // Unscrambled boot allocator: gva 700 -> frame 700, region 1.
+        let f = match vm.access(0, p, 700, false, 0, 0, &mut rng) {
+            AccessResult::Fault(f) => f,
+            other => panic!("expected fault, got {other:?}"),
+        };
+        assert_eq!(f.gpa_frame, 700);
+        assert_eq!(f.unit, 512, "fault canonicalizes to the region base");
+        // Mapping the base maps the whole region: any frame in it hits.
+        vm.ept.map(f.unit);
+        match vm.access(0, p, 1000, true, 0, 0, &mut rng) {
+            AccessResult::Hit { .. } => {}
+            other => panic!("expected hit in huge region, got {other:?}"),
+        }
+        assert!(vm.ept.dirty(512));
+        assert_eq!(vm.resident_bytes(), 512 * 4096);
     }
 
     #[test]

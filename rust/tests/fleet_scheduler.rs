@@ -28,12 +28,12 @@ use flexswap::coordinator::{Machine, Mechanism, VmSetup};
 use flexswap::daemon::{Arbiter, FleetScheduler, FleetVmSpec, Sla, VmReport};
 use flexswap::harness::fleet::{
     random_fault_plan, run_sharded_fleet, run_sharded_fleet_exec, run_sharded_fleet_faulted,
-    FleetMode, ShardedSummary,
+    run_sharded_fleet_granular, FleetMode, ShardedSummary,
 };
 use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
 use flexswap::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
 use flexswap::sim::Rng;
-use flexswap::types::{PageSize, MS, SEC};
+use flexswap::types::{GranularityMode, PageSize, MS, SEC};
 use flexswap::workloads::{PhasedWss, UniformRandom, Workload};
 
 // ---------------------------------------------------------------------
@@ -569,6 +569,41 @@ fn chaos_same_seed_bit_identical_across_worker_counts() {
         injected += seq.faults_injected;
     }
     assert!(injected > 0, "all three random plans were empty");
+}
+
+/// Mixed-granularity chaos seeds (PR 8 satellite): VMs cycling through
+/// strict-4k, huge, and auto granularity share each shard while the
+/// randomized fault schedule crashes/drains/revokes hosts around them.
+/// Salvage and rebuild must preserve per-VM granularity state (a split
+/// region's per-4k receipts stay per-4k across a crash), every VM must
+/// finish its work, the chaos budget/conservation invariants must hold,
+/// and the seq/par engines must stay bit-identical.
+#[test]
+fn chaos_mixed_granularity_seeds_hold_invariants() {
+    let (hosts, per_host, ops) = (4usize, 3usize, 6_000u64);
+    let mix = [
+        GranularityMode::Fixed,
+        GranularityMode::Huge,
+        GranularityMode::Auto,
+    ];
+    for seed in [5u64, 13, 29] {
+        let plan = random_fault_plan(hosts, ops, seed);
+        let label = format!("chaos mixed-granularity seed {seed}");
+        let s = run_sharded_fleet_granular(
+            hosts, per_host, ops, FleetMode::StateMigration, seed, true, None, &mix, &plan,
+        );
+        assert_eq!(s.vms, hosts * per_host, "{label}: admission lost a VM");
+        assert_eq!(
+            s.total_ops,
+            s.vms as u64 * ops,
+            "{label}: a VM lost work to a fault"
+        );
+        assert_chaos_summary_invariants(&s, &label);
+        let seq = run_sharded_fleet_granular(
+            hosts, per_host, ops, FleetMode::StateMigration, seed, false, None, &mix, &plan,
+        );
+        assert_eq!(s, seq, "{label}: engines diverged");
+    }
 }
 
 // ---------------------------------------------------------------------
