@@ -181,6 +181,25 @@ fn main() {
             }));
         }
 
+        // Remote-tier hit: decompress from a leased donor's DRAM (PR
+        // 9). The modeled network round trip is virtual time — wall
+        // cost is the lookup + decompress, tracked so the remote read
+        // path never silently grows real CPU work.
+        {
+            let mut b = TieredBackend::new(&TierConfig::default(), &sw);
+            let mut rng = Rng::new(12);
+            for u in 0..512u64 {
+                b.write(0, u, &page, TierHint::Pool, u, &mut nvme, &mut rng);
+            }
+            assert!(b.remote_stage(u64::MAX) > 0, "bench staged nothing");
+            let mut out = Vec::new();
+            let mut i = 0u64;
+            results.push(bench("storage_tiers remote hit (4k)", 100_000, || {
+                b.read(0, i % 512, 4096, &mut out, i, &mut nvme, &mut rng);
+                i += 1;
+            }));
+        }
+
         // Sustained watermark writeback churn (sort + coalesce path).
         {
             let cfg = TierConfig {

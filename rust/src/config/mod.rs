@@ -141,6 +141,13 @@ pub struct TierConfig {
     /// percentage of the raw size (incompressible page; zswap's
     /// same-filled/reject heuristic).
     pub reject_pct: u8,
+    /// Network round trip for fetching one 4kB of compressed data from a
+    /// remote-memory lease (RDMA-class fabric; Memtrade measures remote
+    /// hits an order of magnitude faster than flash but slower than
+    /// local DRAM). Scaled linearly with raw unit size, like the codec
+    /// costs, and sits between a pool hit (~decompress only) and the
+    /// 75us NVMe flash read.
+    pub remote_lat_4k_ns: Time,
 }
 
 impl Default for TierConfig {
@@ -152,6 +159,7 @@ impl Default for TierConfig {
             writeback_batch: 64,
             max_coalesce_units: 8,
             reject_pct: 90,
+            remote_lat_4k_ns: 20 * US,
         }
     }
 }
@@ -287,6 +295,43 @@ pub struct HostFault {
     pub kind: HostFaultKind,
 }
 
+/// Remote-memory marketplace configuration (Memtrade-style, PR 9):
+/// shards with pool slack post offers at fleet ticks, demand-infeasible
+/// shards bid, and a matched pair moves the consumer's coldest pool
+/// entries onto donor DRAM under a lease escrow. All matching, staging
+/// and revocation run single-threaded at the fleet-tick barrier.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// Arm the marketplace. Off by default: every pre-remote scenario
+    /// replays unchanged.
+    pub enabled: bool,
+    /// Smallest lease worth granting — offers and bids below this are
+    /// ignored (matching overhead would dominate the benefit).
+    pub min_lease_bytes: u64,
+    /// Largest single lease; also caps one donor's total exposure,
+    /// since a donor holds at most one lease at a time.
+    pub max_lease_bytes: u64,
+    /// Consumer-side staging pace: at most this many compressed pool
+    /// bytes retag to the remote tier per fleet tick, and never more
+    /// than the donor's measured headroom minus the margin.
+    pub stage_chunk_bytes: u64,
+    /// Revocation pace: at most this many remote bytes written back to
+    /// the consumer's NVMe per fleet tick while a lease is revoking.
+    pub recall_chunk_bytes: u64,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            enabled: false,
+            min_lease_bytes: 1024 * 1024,
+            max_lease_bytes: 16 * 1024 * 1024,
+            stage_chunk_bytes: 1024 * 1024,
+            recall_chunk_bytes: 2 * 1024 * 1024,
+        }
+    }
+}
+
 /// Fleet-scheduler configuration: how many host shards, their budgets,
 /// VM placement, and the fault-rate-delta migration thresholds
 /// ([`crate::daemon::FleetScheduler`]).
@@ -384,6 +429,8 @@ pub struct FleetConfig {
     /// its new shard (detection + re-admission; receipts re-attach but
     /// all resident state refaults from the backend).
     pub crash_rebuild_stop_ns: Time,
+    /// Remote-memory marketplace (PR 9); disabled by default.
+    pub remote: RemoteConfig,
 }
 
 impl Default for FleetConfig {
@@ -418,6 +465,7 @@ impl Default for FleetConfig {
             nvme_degrade_factor: 8,
             revoke_pct: 25,
             crash_rebuild_stop_ns: 5 * MS,
+            remote: RemoteConfig::default(),
         }
     }
 }
@@ -609,6 +657,20 @@ mod tests {
         assert!(d.nvme_degrade_factor > 1, "degrade must inflate latency");
         assert!(d.revoke_pct < 100, "revocation must leave a live budget");
         assert!(d.drain_deadline_ticks > 0);
+    }
+
+    #[test]
+    fn remote_defaults_are_opt_in_and_latency_ordered() {
+        let d = FleetConfig::default();
+        assert!(!d.remote.enabled, "marketplace must be opt-in");
+        assert!(d.remote.min_lease_bytes <= d.remote.max_lease_bytes);
+        assert!(d.remote.stage_chunk_bytes > 0);
+        assert!(d.remote.recall_chunk_bytes > 0);
+        // Fault-path ordering the walkthrough promises: a remote hit is
+        // slower than a pool decompress, faster than an NVMe flash read.
+        let t = TierConfig::default();
+        assert!(t.remote_lat_4k_ns > SwCost::default().decompress_4k_ns);
+        assert!(t.remote_lat_4k_ns < HwConfig::default().nvme_lat_4k_ns);
     }
 
     #[test]

@@ -912,6 +912,8 @@ impl Machine {
                     );
                     if r.tier == SwapTier::Pool {
                         mm.core.counters.swapin_pool_hits += 1;
+                    } else if r.tier == SwapTier::Remote {
+                        mm.core.counters.swapin_remote_hits += 1;
                     }
                     self.events.push(
                         r.completes_at,

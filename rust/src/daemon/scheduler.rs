@@ -79,6 +79,19 @@
 //!    and the fault/recovery ledger live in
 //!    [`FleetStats`](crate::metrics::FleetStats).
 //!
+//! 5. **Remote-memory marketplace** ([`crate::config::RemoteConfig`],
+//!    PR 9): at fleet ticks, shards with pool slack post offers,
+//!    pressured shards bid, and a matched pair forms a lease — the
+//!    donor escrows the grant out of its arbitration budget
+//!    ([`super::ControlPlane::begin_lease`]) and the consumer's coldest
+//!    compressed-pool entries retag to [`SwapTier::Remote`] in paced,
+//!    donor-headroom-gated chunks. A remote fault hit pays a modeled
+//!    network latency between a pool hit and an NVMe read. When the
+//!    donor's own pressure rises the lease revokes: remote bytes write
+//!    back to the consumer's NVMe chunk by chunk, returning escrow as
+//!    they land. The escrow is only ever cancelled, never completed, so
+//!    audited budgets don't move and Σ-budget conservation is trivial.
+//!
 //! Multi-machine stepping is deterministic: the scheduler merges the
 //! shards' event queues by (virtual time, shard index) — a stable
 //! round-robin interleave in which equal timestamps always resolve
@@ -193,6 +206,33 @@ struct StateMigration {
     drain_since: Option<Time>,
 }
 
+/// An in-flight remote-memory lease (the PR 9 Memtrade-style
+/// marketplace): `donor` escrows `granted` bytes of its *arbitration*
+/// budget ([`super::ControlPlane::begin_lease`]) — its arbiter squeezes,
+/// so real DRAM headroom materializes to host the `consumer`'s coldest
+/// compressed-pool entries, which retag to [`SwapTier::Remote`] in
+/// paced, headroom-gated chunks. Unlike a budget-lease migration the
+/// escrow is only ever *cancelled* (revocation, crash, final barrier),
+/// never completed: audited budgets are untouched by the marketplace,
+/// so Σ-budget conservation holds trivially and Σ(resident + pool) ≤
+/// budget is unaffected on both sides (staged bytes leave the
+/// consumer's pool; the donor's occupancy only ever shrinks under the
+/// squeeze).
+#[derive(Debug, Clone, Copy)]
+struct RemoteLease {
+    donor: usize,
+    consumer: usize,
+    /// Bytes granted at the match: staging never exceeds this.
+    granted: u64,
+    /// Escrow still held on the donor (granted minus what revocation
+    /// already returned chunk by chunk).
+    reserved: u64,
+    /// The donor turned pressured (or either side started draining):
+    /// each tick recalls a chunk of remote bytes to the consumer's NVMe
+    /// and returns that much escrow, until the lease dissolves.
+    revoking: bool,
+}
+
 /// A host marked for graceful drain (degraded NVMe): every VM placed
 /// there is evacuated via state migration before the deadline; VMs
 /// still waiting when it expires fall back to lease-only relief and
@@ -252,6 +292,7 @@ pub struct FleetScheduler {
     fault_cursor: usize,
     drains: Vec<Drain>,
     revocations: Vec<Revocation>,
+    remote_leases: Vec<RemoteLease>,
     probes: Vec<RecoveryProbe>,
     pub stats: FleetStats,
 }
@@ -312,6 +353,7 @@ impl FleetScheduler {
             fault_cursor: 0,
             drains: vec![],
             revocations: vec![],
+            remote_leases: vec![],
             probes: vec![],
         }
     }
@@ -340,16 +382,47 @@ impl FleetScheduler {
         (shard, vm)
     }
 
+    /// Σ in-flight state-migration escrow reserved on shard `i`:
+    /// resident sets headed there that have not landed yet. Admission
+    /// must treat these bytes as spoken for, or a new tenant squeezes
+    /// the target below its escrowed headroom and the flip gate stalls
+    /// the migration into an avoidable abort.
+    fn inbound_escrow(&self, i: usize) -> u64 {
+        self.state_migrations.iter().filter(|m| m.to == i).map(|m| m.escrow).sum()
+    }
+
+    /// Shard `i` is a party to any in-flight migration (budget lease or
+    /// VM state move, either direction).
+    fn migrating(&self, i: usize) -> bool {
+        self.migrations.iter().any(|m| m.from == i || m.to == i)
+            || self.state_migrations.iter().any(|m| m.from == i || m.to == i)
+    }
+
     /// Placement decision (pure; ties always break on the lowest shard
-    /// id so admission is deterministic).
+    /// id so admission is deterministic). Migration-aware: in-flight
+    /// state-migration escrow counts against a shard's capacity, and a
+    /// migration-free shard is preferred over an equally fitting party
+    /// to one. With no migrations in flight both passes reduce to the
+    /// original policies exactly.
     fn place(&self, pressure: u64) -> usize {
         match self.cfg.placement {
             crate::config::PlacementPolicy::FirstFitBySla => {
-                for s in &self.shards {
+                let fits = |s: &HostShard| {
                     let cap = self.cfg.budget_of(s.id) as u128
                         * self.cfg.fit_overcommit_pct as u128
                         / 100;
-                    if (s.committed_pressure + pressure) as u128 <= cap {
+                    (s.committed_pressure + self.inbound_escrow(s.id) + pressure) as u128
+                        <= cap
+                };
+                // First pass: migration-free shards only; second pass
+                // admits onto a migration party over overflowing.
+                for s in self.shards.iter().filter(|s| !self.migrating(s.id)) {
+                    if fits(s) {
+                        return s.id;
+                    }
+                }
+                for s in &self.shards {
+                    if fits(s) {
                         return s.id;
                     }
                 }
@@ -363,7 +436,13 @@ impl FleetScheduler {
     fn least_pressured(&self) -> usize {
         self.shards
             .iter()
-            .min_by_key(|s| (s.committed_pressure, s.id))
+            .min_by_key(|s| {
+                (
+                    self.migrating(s.id),
+                    s.committed_pressure + self.inbound_escrow(s.id),
+                    s.id,
+                )
+            })
             .map(|s| s.id)
             .expect("fleet has shards")
     }
@@ -510,6 +589,19 @@ impl FleetScheduler {
                 .expect("shard has a control plane")
                 .cancel_lease(r.remaining);
         }
+        // Remote leases dissolve at the horizon: every escrow returns
+        // to its donor's arbitration budget (audited budgets never
+        // moved, so the conservation audit saw nothing either way).
+        // Staged entries stay on the remote tier — their reads already
+        // paid the modeled network latency, and no one is left to
+        // fault them back.
+        for l in std::mem::take(&mut self.remote_leases) {
+            self.shards[l.donor]
+                .machine
+                .control_mut()
+                .expect("shard has a control plane")
+                .cancel_lease(l.reserved);
+        }
         // Copy the per-shard invariant tallies out for the test suite.
         for (i, s) in self.shards.iter().enumerate() {
             if let Some(cs) = s.machine.control_stats() {
@@ -561,6 +653,10 @@ impl FleetScheduler {
         let active = self.migrations.len() + self.state_migrations.len();
         if self.cfg.migration && active < self.cfg.max_active_migrations {
             self.consider_migration();
+        }
+        if self.cfg.remote.enabled {
+            self.advance_remote(now);
+            self.match_remote();
         }
         self.check_probes(now);
         self.update_health();
@@ -632,6 +728,35 @@ impl FleetScheduler {
             if m.from == host || m.to == host {
                 self.abort_state_migration(i);
                 self.state_migrations.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        // Remote leases touching the dead shard dissolve now, before
+        // the rebuilds measure survivor occupancy. Donor died: its DRAM
+        // — and every remote entry it hosted — is gone; the surviving
+        // consumer drops them and re-faults each as a measured cold
+        // miss (no escrow to return — the dead budget retires whole
+        // below). Consumer died: the surviving donor takes its full
+        // escrow back into arbitration; the dead consumer's remote
+        // entries are salvage-counted as lost with the rest of its
+        // DRAM-resident state.
+        let mut i = 0;
+        while i < self.remote_leases.len() {
+            let l = self.remote_leases[i];
+            if l.donor == host {
+                let (units, bytes) =
+                    self.shards[l.consumer].machine.backend.remote_drop();
+                self.stats.remote_dropped_units += units;
+                self.stats.remote_dropped_bytes += bytes;
+                self.remote_leases.remove(i);
+            } else if l.consumer == host {
+                self.shards[l.donor]
+                    .machine
+                    .control_mut()
+                    .expect("shard has a control plane")
+                    .cancel_lease(l.reserved);
+                self.remote_leases.remove(i);
             } else {
                 i += 1;
             }
@@ -887,6 +1012,152 @@ impl FleetScheduler {
             } else {
                 i += 1;
             }
+        }
+    }
+
+    /// Advance every remote-memory lease one fleet tick (single-
+    /// threaded at the barrier, like all marketplace decisions). A
+    /// healthy lease stages the consumer's coldest pool entries toward
+    /// its grant — paced per tick and gated on the donor's *measured*
+    /// free DRAM (budget − occupancy − already-hosted bytes − margin),
+    /// so hosting never pushes the donor over its own budget. When the
+    /// donor turns pressured (or either side starts draining), the
+    /// lease flips to revoking: each tick a chunk of remote bytes
+    /// writes back to the consumer's local NVMe and exactly that much
+    /// escrow returns to the donor's arbitration budget, until no
+    /// remote bytes remain and the lease dissolves.
+    fn advance_remote(&mut self, now: Time) {
+        let mut i = 0;
+        while i < self.remote_leases.len() {
+            let lease = self.remote_leases[i];
+            let (donor, consumer) = (lease.donor, lease.consumer);
+            if !lease.revoking {
+                let snap = self.snapshot(donor);
+                let pressured = snap.demand as u128 * 100
+                    > snap.usable as u128 * self.cfg.donor_demand_pct as u128;
+                if pressured || self.draining(donor) || self.draining(consumer) {
+                    self.remote_leases[i].revoking = true;
+                    self.stats.remote_revocations += 1;
+                }
+            }
+            if self.remote_leases[i].revoking {
+                let chunk = self.cfg.remote.recall_chunk_bytes;
+                let m = &mut self.shards[consumer].machine;
+                let recalled = m.backend.remote_recall(chunk, now, &mut m.nvme);
+                if recalled > 0 {
+                    self.stats.remote_recalled_bytes += recalled;
+                    self.shards[donor]
+                        .machine
+                        .control_mut()
+                        .expect("shard has a control plane")
+                        .cancel_lease(recalled);
+                    let l = &mut self.remote_leases[i];
+                    l.reserved = l.reserved.saturating_sub(recalled);
+                }
+                if self.shards[consumer].machine.backend.remote_bytes() == 0 {
+                    // Everything recalled (or rewritten/migrated away
+                    // in the meantime): return the escrow remainder and
+                    // dissolve.
+                    let remainder = self.remote_leases[i].reserved;
+                    if remainder > 0 {
+                        self.shards[donor]
+                            .machine
+                            .control_mut()
+                            .expect("shard has a control plane")
+                            .cancel_lease(remainder);
+                    }
+                    self.remote_leases.remove(i);
+                    continue;
+                }
+            } else {
+                let staged = self.shards[consumer].machine.backend.remote_bytes();
+                let want = self.remote_leases[i]
+                    .granted
+                    .saturating_sub(staged)
+                    .min(self.cfg.remote.stage_chunk_bytes);
+                let donor_free = self
+                    .shard_budget(donor)
+                    .saturating_sub(self.shards[donor].machine.host_occupied_bytes())
+                    .saturating_sub(staged)
+                    .saturating_sub(self.cfg.migration_margin_bytes);
+                let chunk = want.min(donor_free);
+                if chunk > 0 {
+                    let got =
+                        self.shards[consumer].machine.backend.remote_stage(chunk);
+                    self.stats.remote_staged_bytes += got;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// Match new remote leases at the tick barrier. An **offer** comes
+    /// from a live, non-draining shard that is not already party to a
+    /// lease, sits comfortably under the donor line, and has pool slack
+    /// (pool occupancy below its own low watermark — it is not even
+    /// draining to NVMe). A **bid** comes from a pressured shard (the
+    /// arbiter's own infeasibility criterion) with pool entries to
+    /// stage. The worst-pressured bid matches the most-spare offer,
+    /// ties breaking on the lowest shard id, until either side runs out
+    /// — one lease per donor and per consumer, so matching is a simple
+    /// deterministic zip.
+    fn match_remote(&mut self) {
+        let n = self.shards.len();
+        if n < 2 {
+            return;
+        }
+        let snaps: Vec<ShardSnap> = (0..n).map(|i| self.snapshot(i)).collect();
+        let leased = |i: usize| {
+            self.remote_leases.iter().any(|l| l.donor == i || l.consumer == i)
+        };
+        let eligible = |i: usize| self.stats.alive[i] && !self.draining(i) && !leased(i);
+        let spare_of = |i: usize| -> u64 {
+            (snaps[i].usable as u128 * self.cfg.donor_demand_pct as u128 / 100)
+                .saturating_sub(snaps[i].demand as u128) as u64
+        };
+        let mut offers: Vec<(usize, u64)> = (0..n)
+            .filter(|&i| eligible(i))
+            .filter(|&i| {
+                let m = &self.shards[i].machine;
+                m.backend_metrics().pool_bytes < m.host.tier.low_watermark_bytes()
+            })
+            .map(|i| (i, spare_of(i).min(self.cfg.remote.max_lease_bytes)))
+            .filter(|&(_, sz)| sz >= self.cfg.remote.min_lease_bytes)
+            .collect();
+        let mut bids: Vec<usize> = (0..n)
+            .filter(|&i| eligible(i))
+            .filter(|&i| {
+                snaps[i].demand as u128 * 100
+                    > snaps[i].usable as u128 * self.cfg.pressure_demand_pct as u128
+            })
+            .filter(|&i| self.shards[i].machine.backend_metrics().pool_bytes > 0)
+            .collect();
+        self.stats.remote_offers += offers.len() as u64;
+        self.stats.remote_bids += bids.len() as u64;
+        bids.sort_by_key(|&i| {
+            let ratio = if snaps[i].usable == 0 {
+                u128::MAX
+            } else {
+                snaps[i].demand as u128 * 1_000_000 / snaps[i].usable as u128
+            };
+            (std::cmp::Reverse(ratio), i)
+        });
+        offers.sort_by_key(|&(i, sz)| (std::cmp::Reverse(sz), i));
+        for (consumer, (donor, sz)) in bids.into_iter().zip(offers) {
+            self.shards[donor]
+                .machine
+                .control_mut()
+                .expect("shard has a control plane")
+                .begin_lease(sz);
+            self.remote_leases.push(RemoteLease {
+                donor,
+                consumer,
+                granted: sz,
+                reserved: sz,
+                revoking: false,
+            });
+            self.stats.remote_leases += 1;
+            self.stats.remote_leased_bytes += sz;
         }
     }
 
@@ -1239,7 +1510,19 @@ impl FleetScheduler {
                 .iter()
                 .filter(|s| m.copied.get(&s.unit) != Some(&s.stamp))
                 .collect();
-            pending.sort_by_key(|s| (s.tier == SwapTier::Pool, s.unit));
+            // Coldest tier first: NVMe receipts, then remote-leased
+            // entries (already evicted from the local pool, and a
+            // remote copy always demotes to NVMe on import anyway),
+            // then local pool entries. Without remote entries this is
+            // exactly the old `tier == Pool` boolean key.
+            pending.sort_by_key(|s| {
+                let rank = match s.tier {
+                    SwapTier::Nvme => 0u8,
+                    SwapTier::Remote => 1,
+                    SwapTier::Pool => 2,
+                };
+                (rank, s.unit)
+            });
             for s in pending {
                 if s.raw_bytes > chunk {
                     break;
@@ -1805,5 +2088,189 @@ mod tests {
         let sum: u64 = (0..3).map(|i| f.shard_budget(i)).sum();
         f.stats.audit_budgets(sum);
         assert_eq!(f.stats.conservation_violations, 0);
+    }
+
+    /// PR 9 satellite: admission is migration-aware. A shard targeted
+    /// by an in-flight state migration has its headroom spoken for by
+    /// the escrow; admitting a new tenant there squeezes the arrival
+    /// below the flip gate and stalls the migration into an avoidable
+    /// abort. Both policies must count in-flight escrow against
+    /// capacity and prefer migration-free shards. (With no migration
+    /// in flight the behavior is unchanged — pinned by the placement
+    /// tests above.)
+    #[test]
+    fn admission_avoids_shard_with_inflight_migration_escrow() {
+        for placement in
+            [PlacementPolicy::SpreadByFaultRate, PlacementPolicy::FirstFitBySla]
+        {
+            let mut f = FleetScheduler::new(&HostConfig::default(), cfg(3, placement));
+            // In-flight migration 2 → 0 whose escrow holds most of
+            // shard 0's 64MB budget.
+            let escrow = 60u64 << 20;
+            f.shards[0].machine.control_mut().unwrap().begin_lease(escrow);
+            let reserved = f.shards[0].machine.reserve_slot();
+            f.state_migrations.push(StateMigration {
+                from: 2,
+                to: 0,
+                vm: 0,
+                reserved,
+                escrow,
+                copied: BTreeMap::new(),
+                precopy_ticks: 0,
+                stalled: 0,
+                drain_since: None,
+            });
+            let (shard, _) = f.admit(spec(0, Sla::Silver, 4096, 10));
+            assert_eq!(shard, 1, "{placement:?} admitted onto a migration party");
+            // The escrowed headroom the flip gate will measure stays
+            // intact: nothing was committed onto the target.
+            assert_eq!(f.shards[0].committed_bytes, 0);
+        }
+    }
+
+    /// PR 9: donor crash mid-remote-lease. The surviving consumer's
+    /// remote entries lived in the dead host's DRAM — they are dropped
+    /// and re-fault as measured cold misses; no escrow returns (the
+    /// dead shard's whole budget retires) and the audit stays clean.
+    #[test]
+    fn remote_donor_crash_drops_entries_and_audits_clean() {
+        use crate::storage::TierHint;
+        use crate::types::MS;
+
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            cfg(3, PlacementPolicy::SpreadByFaultRate),
+        );
+        f.admit(spec(0, Sla::Silver, 2048, 10)); // shard 0 = consumer
+        let vm = f.placements[0].vm;
+        {
+            let m = &mut f.shards[0].machine;
+            let mut rng = crate::sim::Rng::new(11);
+            m.backend
+                .write(vm, 4, &[3u8; 4096], TierHint::Pool, 0, &mut m.nvme, &mut rng);
+            let staged = m.backend.remote_stage(1 << 30);
+            assert!(staged > 0, "nothing staged to the remote tier");
+        }
+        let granted = 4u64 << 20;
+        f.shards[1].machine.control_mut().unwrap().begin_lease(granted);
+        f.remote_leases.push(RemoteLease {
+            donor: 1,
+            consumer: 0,
+            granted,
+            reserved: granted,
+            revoking: false,
+        });
+
+        let budget1 = f.shard_budget(1);
+        let total_before = f.stats.total_budget_bytes;
+        f.crash_host(1, MS);
+
+        assert!(f.remote_leases.is_empty(), "lease survived its donor");
+        assert_eq!(f.shards[0].machine.backend.remote_bytes(), 0);
+        assert_eq!(f.stats.remote_dropped_units, 1);
+        assert!(f.stats.remote_dropped_bytes > 0);
+        // The dropped unit re-faults as a never-written cold miss.
+        {
+            let m = &mut f.shards[0].machine;
+            let mut rng = crate::sim::Rng::new(12);
+            let mut out = Vec::new();
+            let r = m.backend.read(vm, 4, 4096, &mut out, 2 * MS, &mut m.nvme, &mut rng);
+            assert_eq!(r.tier, SwapTier::Nvme);
+            assert_eq!(out, vec![0u8; 4096], "dropped remote entry kept content");
+        }
+        // Σ budgets stepped down by exactly the dead donor's budget.
+        assert_eq!(f.stats.budget_retired_bytes, budget1);
+        assert_eq!(f.stats.total_budget_bytes, total_before - budget1);
+        let sum: u64 = (0..3).map(|i| f.shard_budget(i)).sum();
+        f.stats.audit_budgets(sum);
+        assert_eq!(f.stats.conservation_violations, 0);
+    }
+
+    /// PR 9: consumer crash mid-remote-lease. The surviving donor takes
+    /// its full escrow back into arbitration — nothing leaks, audited
+    /// budgets never moved.
+    #[test]
+    fn remote_consumer_crash_returns_full_escrow_to_donor() {
+        use crate::types::MS;
+
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            cfg(3, PlacementPolicy::SpreadByFaultRate),
+        );
+        let granted = 4u64 << 20;
+        f.shards[1].machine.control_mut().unwrap().begin_lease(granted);
+        f.remote_leases.push(RemoteLease {
+            donor: 1,
+            consumer: 0,
+            granted,
+            reserved: granted,
+            revoking: false,
+        });
+        f.crash_host(0, MS);
+        assert!(f.remote_leases.is_empty(), "lease survived its consumer");
+        let cp = f.shards[1].machine.control().unwrap();
+        assert_eq!(cp.arbitration_budget(), cp.cfg.host_budget_bytes, "escrow leaked");
+        let sum: u64 = (0..3).map(|i| f.shard_budget(i)).sum();
+        f.stats.audit_budgets(sum);
+        assert_eq!(f.stats.conservation_violations, 0);
+    }
+
+    /// PR 9: revocation is paced by `recall_chunk_bytes` and returns
+    /// escrow exactly as remote bytes land on the consumer's NVMe;
+    /// when the remote tier is empty the lease dissolves with its full
+    /// remainder back in the donor's arbitration budget.
+    #[test]
+    fn remote_revocation_paces_recalls_and_returns_escrow() {
+        use crate::storage::TierHint;
+        use crate::types::MS;
+
+        let mut f = FleetScheduler::new(
+            &HostConfig::default(),
+            cfg(3, PlacementPolicy::SpreadByFaultRate),
+        );
+        f.admit(spec(0, Sla::Silver, 2048, 10)); // shard 0 = consumer
+        let vm = f.placements[0].vm;
+        let staged = {
+            let m = &mut f.shards[0].machine;
+            let mut rng = crate::sim::Rng::new(21);
+            for u in 0..3u64 {
+                m.backend.write(
+                    vm,
+                    u,
+                    &[5u8; 4096],
+                    TierHint::Pool,
+                    u,
+                    &mut m.nvme,
+                    &mut rng,
+                );
+            }
+            m.backend.remote_stage(1 << 30)
+        };
+        assert!(staged > 0);
+        let granted = 4u64 << 20;
+        f.shards[1].machine.control_mut().unwrap().begin_lease(granted);
+        f.remote_leases.push(RemoteLease {
+            donor: 1,
+            consumer: 0,
+            granted,
+            reserved: granted,
+            revoking: true,
+        });
+        // Tiny recall chunks: one entry per tick, so pacing is visible.
+        f.cfg.remote.recall_chunk_bytes = 1;
+        let mut ticks = 0u64;
+        while !f.remote_leases.is_empty() {
+            f.advance_remote((ticks + 1) * MS);
+            ticks += 1;
+            assert!(ticks <= 4, "revocation failed to converge");
+        }
+        // One entry per tick; the lease dissolves in the same tick the
+        // last entry lands (remote tier empty → remainder cancelled).
+        assert_eq!(ticks, 3, "recalls were not paced one entry per tick");
+        assert_eq!(f.shards[0].machine.backend.remote_bytes(), 0);
+        assert_eq!(f.shards[0].machine.backend_metrics().remote_recalls, 3);
+        let cp = f.shards[1].machine.control().unwrap();
+        assert_eq!(cp.arbitration_budget(), cp.cfg.host_budget_bytes, "escrow leaked");
+        assert_eq!(f.stats.remote_recalled_bytes, staged);
     }
 }

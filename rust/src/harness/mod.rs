@@ -112,8 +112,8 @@ pub fn registry() -> Vec<Experiment> {
         },
         Experiment {
             id: "fleet",
-            title: "Fleet control plane: mixed-SLA VMs under closed-loop limits, plus a 4-host sharded fleet with budget leases, live VM state migration, and host failure injection (PR 3/4/5/7 extension)",
-            expectation: "per-host budget never exceeded at any control tick — mid-migration included — and Σ budgets conserved (less exactly the retired budget of dead hosts); closed-loop beats static limits on memory saved and/or p99 stall; the lease rebalancer cuts total major faults on the pressure-skewed 4-host fleet without losing Σ saved memory; full VM state migration beats lease-only on majors or occupancy, with atomic hand-off at every flip; graceful drain beats hard crash on recovered-VM p99 fault stall and SLA violations",
+            title: "Fleet control plane: mixed-SLA VMs under closed-loop limits, plus a 4-host sharded fleet with budget leases, live VM state migration, host failure injection, and a remote-memory marketplace (PR 3/4/5/7/9 extension)",
+            expectation: "per-host budget never exceeded at any control tick — mid-migration included — and Σ budgets conserved (less exactly the retired budget of dead hosts); closed-loop beats static limits on memory saved and/or p99 stall; the lease rebalancer cuts total major faults on the pressure-skewed 4-host fleet without losing Σ saved memory; full VM state migration beats lease-only on majors or occupancy, with atomic hand-off at every flip; graceful drain beats hard crash on recovered-VM p99 fault stall and SLA violations; the remote marketplace strictly beats NVMe-only on the pressured host's p99 fault stall with Σ budgets exactly conserved",
             run: fleet::fleet,
         },
         Experiment {
@@ -141,14 +141,23 @@ pub fn registry() -> Vec<Experiment> {
 /// `results/<id>_<slug>.csv` (shared by `run_by_id` and the CLI's
 /// parameterized runs like `fleet --hosts N`).
 pub fn emit_tables(id: &str, header: String, tables: &[Table]) -> String {
+    emit_tables_in("results", id, header, tables)
+}
+
+/// [`emit_tables`] with an explicit output directory — the `--out-dir`
+/// CLI path. Nightly soak arms write to distinct directories so their
+/// per-arm CSVs don't clobber each other under the shared
+/// `fleet_soak_*` names.
+pub fn emit_tables_in(dir: &str, id: &str, header: String, tables: &[Table]) -> String {
     let mut out = header;
     for t in tables {
         out.push_str(&t.markdown());
         out.push('\n');
         // Also persist CSV for plotting.
-        let _ = std::fs::create_dir_all("results");
+        let _ = std::fs::create_dir_all(dir);
         let file = format!(
-            "results/{}_{}.csv",
+            "{}/{}_{}.csv",
+            dir,
             id,
             t.title
                 .to_lowercase()
@@ -175,8 +184,9 @@ pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
 /// `results/fleet_*.csv` files as the registered run). `opts` carries
 /// the execution-engine knobs: `--sequential` (merge-loop oracle
 /// instead of the parallel epoch engine), `--workers N`, `--vms N`
-/// (total population, split evenly across hosts), and `--fault-plan`
-/// (arm randomized host faults in the soak).
+/// (total population, split evenly across hosts), `--fault-plan`
+/// (arm randomized host faults in the soak), and `--remote` (arm the
+/// remote-memory marketplace in the soak).
 pub fn run_fleet_with_hosts(scale: Scale, hosts: usize, opts: fleet::FleetRunOpts) -> String {
     let tables = fleet::fleet_with_hosts(scale, hosts, opts);
     let engine = if opts.sequential { "sequential merge" } else { "parallel epochs" };
@@ -186,27 +196,37 @@ pub fn run_fleet_with_hosts(scale: Scale, hosts: usize, opts: fleet::FleetRunOpt
          Σ budgets conserved less retired dead-host budget, rebalancer \
          cuts major faults on the pressured host, full VM migration \
          beats lease-only, graceful drain beats hard crash on \
-         recovered-VM tail latency\n\n"
+         recovered-VM tail latency, remote marketplace beats NVMe-only \
+         on pressured-host tail latency\n\n"
     );
     emit_tables("fleet", header, &tables)
 }
 
 /// The nightly fleet soak (`flexswap fleet --hosts N --seeds K`): the
 /// sharded comparison swept over `seeds` seeds, CSV per seed under
-/// `results/fleet_soak_*.csv`. With `--fault-plan random` each seed
-/// also carries a seed-derived host-fault schedule (chaos soak).
-/// Scheduled CI runs this off the PR-gating path.
-pub fn run_fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: fleet::FleetRunOpts) -> String {
+/// `<out_dir>/fleet_soak_*.csv` (`--out-dir`; the default `results`
+/// matches the PR-gating path, nightly arms pass distinct dirs). With
+/// `--fault-plan random` each seed also carries a seed-derived
+/// host-fault schedule (chaos soak); with `--remote` the marketplace
+/// is armed. Scheduled CI runs this off the PR-gating path.
+pub fn run_fleet_soak(
+    scale: Scale,
+    hosts: usize,
+    seeds: u64,
+    opts: fleet::FleetRunOpts,
+    out_dir: &str,
+) -> String {
     let tables = fleet::fleet_soak(scale, hosts, seeds, opts);
     let chaos = if opts.fault_plan == fleet::FaultPlan::Random { ", random faults" } else { "" };
+    let remote = if opts.remote { ", remote marketplace" } else { "" };
     let header = format!(
-        "## Fleet soak ({hosts} host shards × {seeds} seeds{chaos})\n\n*Expectation:* \
+        "## Fleet soak ({hosts} host shards × {seeds} seeds{chaos}{remote})\n\n*Expectation:* \
          every seed holds the budget / conservation / atomic-hand-off \
          invariants (Σ budgets stepping down by exactly each dead \
-         host's budget); migration and recovery activity is reported \
-         per seed\n\n"
+         host's budget); migration, recovery, and remote-lease activity \
+         is reported per seed\n\n"
     );
-    emit_tables("fleet_soak", header, &tables)
+    emit_tables_in(out_dir, "fleet_soak", header, &tables)
 }
 
 #[cfg(test)]

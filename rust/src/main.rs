@@ -11,6 +11,8 @@
 //!   flexswap fleet --hosts 4 --workers 2  # pin the epoch engine's thread count
 //!   flexswap fleet --hosts 8 --seeds 6 --fault-plan random  # chaos soak
 //!   flexswap fleet --hosts 8 --granularity auto  # PR 8 swap-granularity mode
+//!   flexswap fleet --hosts 8 --seeds 4 --remote  # PR 9 remote-marketplace soak
+//!   flexswap fleet --seeds 2 --out-dir results/chaos  # per-arm CSV directory
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
 
@@ -109,6 +111,22 @@ fn main() {
         }
     });
 
+    // `--out-dir DIR`: CSV output directory for the fleet soak (the
+    // default `results` matches the PR-gating path). Nightly arms pass
+    // distinct directories so their per-arm CSVs — which share the
+    // `fleet_soak_*` file names — don't clobber each other.
+    let out_dir = args.iter().position(|a| a == "--out-dir").map(|i| {
+        match args.get(i + 1) {
+            Some(d) if !d.is_empty() && !d.starts_with("--") => d.clone(),
+            _ => {
+                eprintln!(
+                    "--out-dir needs a directory (e.g. `flexswap fleet --seeds 2 --out-dir results/chaos`)"
+                );
+                std::process::exit(2);
+            }
+        }
+    });
+
     if cmd == "fleet" {
         let h = hosts.unwrap_or(4);
         let opts = FleetRunOpts {
@@ -117,9 +135,11 @@ fn main() {
             per_host: vms.map(|v| v.div_ceil(h)),
             fault_plan: fault_plan.unwrap_or_default(),
             granularity: granularity.unwrap_or_default(),
+            remote: args.iter().any(|a| a == "--remote"),
         };
         if let Some(k) = seeds {
-            println!("{}", run_fleet_soak(scale, h, k, opts));
+            let dir = out_dir.as_deref().unwrap_or("results");
+            println!("{}", run_fleet_soak(scale, h, k, opts, dir));
             return;
         }
         if hosts.is_some() || opts != FleetRunOpts::default() {

@@ -18,6 +18,9 @@ pub struct Counters {
     pub swapout_bytes: u64,
     /// Swap-ins served from the compressed pool (no NVMe I/O).
     pub swapin_pool_hits: u64,
+    /// Swap-ins served from a remote-memory lease (network fetch, no
+    /// NVMe I/O; latency sits between pool hit and flash read).
+    pub swapin_remote_hits: u64,
     /// Swap-outs absorbed by the compressed pool (no NVMe I/O).
     pub swapout_pool_stores: u64,
     pub prefetch_issued: u64,
@@ -273,6 +276,30 @@ pub struct FleetStats {
     /// their pre-fault residency target, and the slowest such recovery.
     pub residency_restored: u64,
     pub residency_restore_ns_max: Time,
+
+    // ---- Remote-memory marketplace ledger (PR 9) ----
+    /// Offers posted by pool-slack shards / bids posted by pressured
+    /// shards at fleet ticks (counted per tick, matched or not).
+    pub remote_offers: u64,
+    pub remote_bids: u64,
+    /// Leases granted (matched offer/bid pairs) and their Σ granted
+    /// bytes. The donor escrows the grant via `begin_lease`; the escrow
+    /// is *always* returned via `cancel_lease` (revocation, crash or the
+    /// final barrier), never completed — so Σ budgets are untouched by
+    /// the marketplace and the conservation audit holds trivially.
+    pub remote_leases: u64,
+    pub remote_leased_bytes: u64,
+    /// Compressed pool bytes retagged to the remote tier (Σ over paced
+    /// per-tick staging chunks).
+    pub remote_staged_bytes: u64,
+    /// Revocations started (donor pressure rose) and remote bytes
+    /// written back to the consumer's NVMe under them.
+    pub remote_revocations: u64,
+    pub remote_recalled_bytes: u64,
+    /// Remote entries lost to a donor crash (units / stored bytes); the
+    /// consumer re-faults them as cold misses.
+    pub remote_dropped_units: u64,
+    pub remote_dropped_bytes: u64,
 }
 
 impl FleetStats {

@@ -593,6 +593,7 @@ impl EngineCore {
             None => 0,
             Some(SwapTier::Pool) => 1,
             Some(SwapTier::Nvme) => 2,
+            Some(SwapTier::Remote) => 3,
         };
     }
 
@@ -601,6 +602,7 @@ impl EngineCore {
         match self.backend_tier[unit as usize] {
             1 => Some(SwapTier::Pool),
             2 => Some(SwapTier::Nvme),
+            3 => Some(SwapTier::Remote),
             _ => None,
         }
     }

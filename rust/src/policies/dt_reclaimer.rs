@@ -46,6 +46,11 @@ pub struct DtReclaimer {
     pub splits_requested: u64,
     /// Collapse requests issued under `--granularity auto`.
     pub collapses_requested: u64,
+    /// Straggler prefetches issued to unblock a collapse (PR 9 bugfix):
+    /// a split region that turned uniformly hot keeps Swapped stragglers
+    /// from split time, so the fully-resident collapse gate alone never
+    /// fires again.
+    pub promotions_requested: u64,
     /// Drive the tiered backend's pool-admission threshold from the
     /// age histogram instead of the fixed config value (PR 8 satellite).
     adaptive_admission: bool,
@@ -71,6 +76,7 @@ impl DtReclaimer {
             region_refaults: vec![],
             splits_requested: 0,
             collapses_requested: 0,
+            promotions_requested: 0,
             adaptive_admission: false,
             last_admission: None,
         }
@@ -177,23 +183,43 @@ impl Policy for DtReclaimer {
                             // on one side of the cut (uniformly hot, or
                             // uniformly cold = one future queue entry
                             // and one receipt instead of 512).
-                            let mut resident = true;
-                            let mut all_cold = true;
-                            let mut all_hot = true;
+                            let mut resident = 0usize;
+                            let mut hot = 0usize;
+                            let mut stragglers: Vec<UnitId> = vec![];
                             for u in base..base + span {
-                                if api.page_state(u as UnitId) != UnitState::Resident {
-                                    resident = false;
-                                    break;
+                                match api.page_state(u as UnitId) {
+                                    UnitState::Resident => resident += 1,
+                                    UnitState::Swapped => stragglers.push(u as UnitId),
+                                    _ => {}
                                 }
-                                if out.age[u] >= cut {
-                                    all_hot = false;
-                                } else {
-                                    all_cold = false;
+                                if out.age[u] < cut {
+                                    hot += 1;
                                 }
                             }
-                            if resident && (all_cold || all_hot) {
+                            if resident == span && (hot == 0 || hot == span) {
                                 api.collapse_region(r);
                                 self.collapses_requested += 1;
+                                region_op[r as usize] = true;
+                            } else if !stragglers.is_empty()
+                                && resident + stragglers.len() == span
+                                && hot * 8 >= span * 7
+                            {
+                                // Dense-touch promotion (PR 9 bugfix): a
+                                // region split while it mixed hot and
+                                // cold can turn uniformly hot later, but
+                                // the cold minority swapped out around
+                                // split time stays Swapped forever — no
+                                // access ever lands on it — so the
+                                // fully-resident gate above can never
+                                // fire and the region pays 512 per-unit
+                                // scan bits indefinitely. Pull the
+                                // stragglers back in; once they land the
+                                // span is resident and uniformly hot and
+                                // a later run collapses it.
+                                for &u in &stragglers {
+                                    api.prefetch(u);
+                                }
+                                self.promotions_requested += stragglers.len() as u64;
                                 region_op[r as usize] = true;
                             }
                         }
@@ -473,6 +499,64 @@ mod tests {
         }
         // Uniformly cold + resident: the reclaimer asked to collapse it
         // back to one 2MB unit instead of issuing 512 reclaims.
+        let (_, collapses) = mm.drain_region_ops();
+        assert_eq!(collapses, vec![0]);
+        assert!(mm.core.region_huge(0));
+        assert_eq!(mm.core.states[0], UnitState::Resident);
+        assert_eq!(mm.core.usage_units, REGION_UNITS);
+    }
+
+    #[test]
+    fn granularity_auto_promotes_dense_hot_region_then_collapses() {
+        use crate::mm::WorkOutcome;
+        use crate::types::{GranularityMode, REGION_UNITS};
+        let (mut mm, mut vm) = setup_mode(2 * REGION_UNITS, GranularityMode::Auto, false);
+        // Split region 0 while untouched (trivial), then hand-build the
+        // stuck shape: the span turned uniformly hot except for two cold
+        // stragglers swapped out around split time. Nothing ever touches
+        // a Swapped unit, so the fully-resident collapse gate alone can
+        // never fire — the pre-fix reclaimer leaves this split forever.
+        mm.core.pending_splits.push(0);
+        assert_eq!(mm.drain_region_ops().0, vec![0]);
+        let span = REGION_UNITS as usize;
+        for u in 0..span {
+            mm.core.states[u] = UnitState::Resident;
+        }
+        mm.core.states[3] = UnitState::Swapped;
+        mm.core.states[7] = UnitState::Swapped;
+        mm.core.usage_units = REGION_UNITS - 2;
+        for s in 0..4u64 {
+            let mut bm = Bitmap::new(2 * REGION_UNITS as usize);
+            for u in 0..span {
+                if mm.core.states[u] == UnitState::Resident {
+                    bm.set(u);
+                }
+            }
+            mm.on_scan(&vm, &bm, 10_000 + s);
+        }
+        // The dense-touch promotion path prefetched the stragglers
+        // instead of collapsing early or giving up.
+        assert_eq!(mm.drain_region_ops(), (vec![], vec![]));
+        assert_eq!(mm.core.counters.prefetch_issued, 2);
+        let mut pulled = vec![];
+        while let Some(w) = mm.pick_work(20_000) {
+            if let WorkOutcome::SwapIn { unit, .. } = w {
+                pulled.push(unit);
+            }
+        }
+        pulled.sort_unstable();
+        assert_eq!(pulled, vec![3, 7]);
+        for &u in &pulled {
+            mm.finish_swapin(&mut vm, u, true, 20_001);
+        }
+        // Stragglers landed and get touched with the rest of the hot
+        // span: the next analytics run sees a fully-resident uniformly
+        // hot region and collapses it back to 2MB.
+        let mut bm = Bitmap::new(2 * REGION_UNITS as usize);
+        for u in 0..span {
+            bm.set(u);
+        }
+        mm.on_scan(&vm, &bm, 30_000);
         let (_, collapses) = mm.drain_region_ops();
         assert_eq!(collapses, vec![0]);
         assert!(mm.core.region_huge(0));

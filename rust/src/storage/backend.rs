@@ -55,6 +55,15 @@ pub enum SwapTier {
     Pool,
     /// NVMe device (flat tier / writeback target).
     Nvme,
+    /// Remote memory leased from another host (PR 9, Memtrade-style):
+    /// the compressed image lives in a donor shard's DRAM, so a hit
+    /// pays a modeled network round trip — between a pool hit and an
+    /// NVMe read. Entries reach this tier only via
+    /// [`SwapBackend::remote_stage`] under a fleet-scheduler lease, and
+    /// leave it via [`SwapBackend::remote_recall`] (revocation, back to
+    /// NVMe) or [`SwapBackend::remote_drop`] (donor crash: content is
+    /// gone and the next read re-faults as cold).
+    Remote,
 }
 
 /// Policy-provided routing hint for a swap-out write.
@@ -121,6 +130,20 @@ pub struct TierMetrics {
     pub zero_copy_ops: u64,
     pub bounced_ops: u64,
     pub discards: u64,
+    /// Remote tier (PR 9): entries staged out of the pool into leased
+    /// remote memory, and the reads they served at network cost.
+    pub remote_stages: u64,
+    pub remote_hits: u64,
+    /// Current stored (compressed) bytes held in the remote tier.
+    pub remote_bytes: u64,
+    pub remote_peak_bytes: u64,
+    /// Revocation recalls (remote -> local NVMe) in units / stored bytes.
+    pub remote_recalls: u64,
+    pub remote_recalled_bytes: u64,
+    /// Entries dropped because the donor died mid-lease: the content is
+    /// gone and the next read of each re-faults as a cold NVMe miss.
+    pub remote_dropped_units: u64,
+    pub remote_dropped_bytes: u64,
 }
 
 impl TierMetrics {
@@ -313,7 +336,10 @@ pub trait SwapBackend: Send {
                         s.units.push(p);
                     }
                 }
-                SwapTier::Pool => {
+                // Pool copies lived in this host's DRAM; remote copies
+                // lived in a donor's DRAM under a lease that dies with
+                // this host. Both are genuinely lost.
+                SwapTier::Pool | SwapTier::Remote => {
                     s.lost_units += 1;
                     s.lost_bytes += u.raw_bytes;
                 }
@@ -321,6 +347,44 @@ pub trait SwapBackend: Send {
         }
         self.forget_vm(vm);
         s
+    }
+
+    // ---- Remote marketplace tier (PR 9) ----
+    //
+    // Contract: the fleet scheduler drives all three calls at the
+    // single-threaded fleet-tick barrier, never mid-epoch. `remote_stage`
+    // retags the coldest pool entries (oldest-admitted first, exactly
+    // the watermark drain's victim order) as `SwapTier::Remote` until
+    // `max_bytes` of stored bytes moved — pool occupancy drops by what
+    // was staged, so staging extends effective pool capacity instead of
+    // spilling to NVMe. `remote_recall` moves the oldest-staged entries
+    // back as paced NVMe writes (revocation). `remote_drop` loses every
+    // remote entry's content (donor crash): subsequent reads take the
+    // never-written cold-miss path. Defaults are no-ops so accounting-
+    // only backends stay remote-free.
+
+    /// Retag up to `max_bytes` stored bytes of the coldest pool entries
+    /// as remote. Returns the stored bytes actually staged.
+    fn remote_stage(&mut self, _max_bytes: u64) -> u64 {
+        0
+    }
+
+    /// Recall up to `max_bytes` stored bytes of remote entries back to
+    /// local NVMe (oldest-staged first), issuing the writeback I/O.
+    /// Returns the stored bytes actually recalled.
+    fn remote_recall(&mut self, _max_bytes: u64, _now: Time, _nvme: &mut Nvme) -> u64 {
+        0
+    }
+
+    /// Drop every remote entry (the donor holding them crashed).
+    /// Returns `(units, stored_bytes)` dropped.
+    fn remote_drop(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Stored bytes currently held in the remote tier.
+    fn remote_bytes(&self) -> u64 {
+        0
     }
 }
 

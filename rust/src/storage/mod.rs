@@ -2,13 +2,22 @@
 //!
 //! One backend process serves swap I/O for all MMs on the host. PR 2
 //! replaced the flat SPDK/NVMe path with the [`SwapBackend`] trait and
-//! a two-tier implementation, [`TieredBackend`]:
+//! a tiered implementation, [`TieredBackend`] — three tiers since
+//! PR 9:
 //!
 //! * **Tier 0 — compressed pool** ([`codec`]): a zswap-style in-memory
 //!   pool that absorbs reclaim writes. Zero pages (detected with the
 //!   same all-zero scan idea as the MM's [`crate::mm::ZeroPool`]) store
 //!   no payload; run-length-compressible pages store their encoded
 //!   form; incompressible pages are rejected to NVMe.
+//! * **Tier 0.5 — leased remote memory** (PR 9): when the fleet's
+//!   marketplace matches this host with a donor, `remote_stage` moves
+//!   the coldest pool entries into the donor's DRAM — a fault hit
+//!   there costs one modeled network round trip plus decompression,
+//!   strictly between a pool hit and an NVMe read, with no local
+//!   NVMe I/O. Revocation (`remote_recall`) writes entries back to
+//!   local NVMe oldest-first; a donor crash (`remote_drop`) loses
+//!   them, and later faults re-fault as cold NVMe misses.
 //! * **Tier 1 — NVMe writeback** ([`crate::hw::Nvme`]): when the pool
 //!   crosses its high watermark, the oldest entries are drained in
 //!   batches of sorted, adjacent-unit-coalesced I/O requests down to

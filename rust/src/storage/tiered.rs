@@ -64,6 +64,9 @@ pub struct TieredBackend {
     /// lazily invalidated (same tombstone idiom as the Swapper queue).
     /// Index 0 is the shared arena when no quotas are configured.
     drain_fifo: Vec<VecDeque<(VmId, UnitId, u32)>>,
+    /// Remote-tier staging order (oldest staged first), same
+    /// stamp-tombstone idiom: revocation recalls pop from the front.
+    remote_fifo: VecDeque<(VmId, UnitId, u32)>,
     /// SLA pool partitions: `class_quota[c]` bytes reserved for class
     /// `c` (empty = one shared arena); `class_bytes[c]` tracks
     /// occupancy; `vm_class` maps VMs to classes.
@@ -90,6 +93,7 @@ impl TieredBackend {
             decompress_4k_ns: sw.decompress_4k_ns,
             stores: vec![],
             drain_fifo: vec![VecDeque::new()],
+            remote_fifo: VecDeque::new(),
             class_quota: vec![],
             class_bytes: vec![0],
             vm_class: vec![],
@@ -158,9 +162,14 @@ impl TieredBackend {
         let slot = self.slot_mut(vm, unit);
         match slot.take() {
             Some(e) => {
-                if e.tier == SwapTier::Pool {
-                    self.metrics.pool_bytes -= e.img.stored_bytes();
-                    self.class_bytes[e.class as usize] -= e.img.stored_bytes();
+                match e.tier {
+                    SwapTier::Pool => {
+                        self.metrics.pool_bytes -= e.img.stored_bytes();
+                        self.class_bytes[e.class as usize] -= e.img.stored_bytes();
+                    }
+                    // Stale remote-FIFO references tombstone via stamp.
+                    SwapTier::Remote => self.metrics.remote_bytes -= e.img.stored_bytes(),
+                    SwapTier::Nvme => {}
                 }
                 true
             }
@@ -397,6 +406,23 @@ impl SwapBackend for TieredBackend {
                     writeback: vec![],
                 }
             }
+            Some(e) if e.tier == SwapTier::Remote => {
+                // Leased remote memory: one modeled network round trip
+                // fetches the compressed image from the donor's DRAM,
+                // then local decompression — strictly between a pool
+                // hit and an NVMe read, and no NVMe I/O at all.
+                codec::decompress(&e.img, out);
+                let raw = e.img.raw_len() as u64;
+                let net = self.scaled(self.cfg.remote_lat_4k_ns, raw);
+                let cpu = self.scaled(self.decompress_4k_ns, raw);
+                self.metrics.remote_hits += 1;
+                IoReceipt {
+                    token,
+                    completes_at: pickup + net + cpu,
+                    tier: SwapTier::Remote,
+                    writeback: vec![],
+                }
+            }
             Some(e) => {
                 // NVMe tier: wait out any in-flight writeback of this
                 // unit — the data is not on the device before then.
@@ -474,10 +500,9 @@ impl SwapBackend for TieredBackend {
                     stamp: e.stamp,
                     tier: e.tier,
                     raw_bytes: e.img.raw_len() as u64,
-                    stored_bytes: if e.tier == SwapTier::Pool {
-                        e.img.stored_bytes()
-                    } else {
-                        0
+                    stored_bytes: match e.tier {
+                        SwapTier::Pool | SwapTier::Remote => e.img.stored_bytes(),
+                        SwapTier::Nvme => 0,
                     },
                 })
             })
@@ -501,7 +526,9 @@ impl SwapBackend for TieredBackend {
         // Pool copies stay pooled only while the target has room;
         // otherwise they land on NVMe (the migration modeled the
         // arrival as a writeback — no drain is triggered here, so one
-        // import can never evict a resident class's entries).
+        // import can never evict a resident class's entries). A
+        // remote-tier copy always demotes to NVMe: the target holds no
+        // lease covering it.
         let tier = if u.tier == SwapTier::Pool
             && self.cfg.pool_enabled()
             && self.metrics.pool_bytes + stored <= self.cfg.pool_capacity_bytes
@@ -542,6 +569,117 @@ impl SwapBackend for TieredBackend {
             self.remove_entry(vm, u);
         }
         units.len()
+    }
+
+    // ---- Remote marketplace tier (PR 9) ----
+
+    /// Retag the coldest pool entries (oldest-admitted first, per
+    /// partition class in class order — the watermark drain's own
+    /// victim order) as remote, never exceeding `max_bytes` of stored
+    /// bytes: the cap is the donor's proven headroom, so overshooting
+    /// would break the donor's budget reasoning.
+    fn remote_stage(&mut self, max_bytes: u64) -> u64 {
+        if !self.cfg.pool_enabled() {
+            return 0;
+        }
+        let mut staged = 0u64;
+        for class in 0..self.drain_fifo.len() {
+            loop {
+                let Some(&(vm, unit, stamp)) = self.drain_fifo[class].front() else { break };
+                let stored = match self.entry(vm, unit) {
+                    Some(e) if e.stamp == stamp && e.tier == SwapTier::Pool => {
+                        e.img.stored_bytes()
+                    }
+                    _ => {
+                        // Stale reference (replaced or already drained).
+                        self.drain_fifo[class].pop_front();
+                        continue;
+                    }
+                };
+                if staged + stored > max_bytes {
+                    break;
+                }
+                self.drain_fifo[class].pop_front();
+                let mut entry_class = class;
+                if let Some(e) = self.slot_mut(vm, unit).as_mut() {
+                    entry_class = e.class as usize;
+                    e.tier = SwapTier::Remote;
+                }
+                self.metrics.pool_bytes -= stored;
+                self.class_bytes[entry_class] -= stored;
+                self.metrics.remote_bytes += stored;
+                self.metrics.remote_peak_bytes =
+                    self.metrics.remote_peak_bytes.max(self.metrics.remote_bytes);
+                self.metrics.remote_stages += 1;
+                staged += stored;
+                self.remote_fifo.push_back((vm, unit, stamp));
+            }
+        }
+        staged
+    }
+
+    /// Revocation: move the oldest-staged remote entries back to local
+    /// NVMe with real writeback I/O. Always makes progress — a single
+    /// entry larger than `max_bytes` is still recalled (recalling only
+    /// *frees* donor memory, so overshoot is safe on this side).
+    fn remote_recall(&mut self, max_bytes: u64, now: Time, nvme: &mut Nvme) -> u64 {
+        if max_bytes == 0 {
+            return 0;
+        }
+        let mut recalled = 0u64;
+        while let Some(&(vm, unit, stamp)) = self.remote_fifo.front() {
+            let (stored, raw) = match self.entry(vm, unit) {
+                Some(e) if e.stamp == stamp && e.tier == SwapTier::Remote => {
+                    (e.img.stored_bytes(), e.img.raw_len() as u64)
+                }
+                _ => {
+                    self.remote_fifo.pop_front();
+                    continue;
+                }
+            };
+            if recalled > 0 && recalled + stored > max_bytes {
+                break;
+            }
+            self.remote_fifo.pop_front();
+            let done = self.nvme_op(now, raw, IoKind::Write, nvme);
+            if let Some(e) = self.slot_mut(vm, unit).as_mut() {
+                e.tier = SwapTier::Nvme;
+                e.nvme_ready_at = done;
+            }
+            self.metrics.remote_bytes -= stored;
+            self.metrics.remote_recalls += 1;
+            self.metrics.remote_recalled_bytes += stored;
+            recalled += stored;
+        }
+        recalled
+    }
+
+    /// Donor crash: every remote entry's content lived in the dead
+    /// donor's DRAM. Drop them outright — the next read of each takes
+    /// the never-written cold-miss path (zero-fill NVMe read), so the
+    /// loss is re-synthesized as measured faults, not waved away.
+    fn remote_drop(&mut self) -> (u64, u64) {
+        let mut units = 0u64;
+        let mut bytes = 0u64;
+        while let Some((vm, unit, stamp)) = self.remote_fifo.pop_front() {
+            let stored = match self.entry(vm, unit) {
+                Some(e) if e.stamp == stamp && e.tier == SwapTier::Remote => {
+                    e.img.stored_bytes()
+                }
+                _ => continue,
+            };
+            *self.slot_mut(vm, unit) = None;
+            self.metrics.remote_bytes -= stored;
+            self.metrics.remote_dropped_units += 1;
+            self.metrics.remote_dropped_bytes += stored;
+            units += 1;
+            bytes += stored;
+        }
+        (units, bytes)
+    }
+
+    fn remote_bytes(&self) -> u64 {
+        self.metrics.remote_bytes
     }
 }
 
@@ -1060,6 +1198,123 @@ mod tests {
         b.write(0, 1, &pattern_page(4096, 2), TierHint::Pool, 10, &mut n, &mut rng);
         let after = b.list_units(0)[0].stamp;
         assert_ne!(before, after);
+    }
+
+    // ---- Remote marketplace tier (PR 9) ----
+
+    /// Staging retags the coldest (oldest-admitted) pool entries as
+    /// remote: pool occupancy drops by exactly the staged stored bytes,
+    /// the stored bytes move to the remote gauge, and the cap is never
+    /// overshot.
+    #[test]
+    fn remote_stage_moves_coldest_pool_entries_and_frees_pool() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        for u in 0..4u64 {
+            b.write(0, u, &pattern_page(4096, 1 + u as u8), TierHint::Pool, u * 100, &mut n, &mut rng);
+        }
+        let listing = b.list_units(0);
+        let per = listing[0].stored_bytes;
+        assert!(per > 0);
+        let pool_before = b.metrics().pool_bytes;
+        // Budget for one and a half entries: exactly one stages.
+        let staged = b.remote_stage(per + per / 2);
+        assert_eq!(staged, per, "cap overshot or nothing staged");
+        assert_eq!(b.metrics().pool_bytes, pool_before - per);
+        assert_eq!(b.remote_bytes(), per);
+        assert_eq!(b.metrics().remote_stages, 1);
+        // Oldest-admitted entry (unit 0) went remote; the rest stayed.
+        assert_eq!(b.tier_of(0, 0), Some(SwapTier::Remote));
+        for u in 1..4u64 {
+            assert_eq!(b.tier_of(0, u), Some(SwapTier::Pool));
+        }
+    }
+
+    /// A remote hit decompresses intact content with NO NVMe I/O, and
+    /// its completion sits strictly between a pool hit and an NVMe
+    /// round trip.
+    #[test]
+    fn remote_hit_latency_sits_between_pool_and_nvme() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let page = pattern_page(4096, 9);
+        b.write(0, 0, &page, TierHint::Pool, 0, &mut n, &mut rng);
+        b.write(0, 1, &page, TierHint::Pool, 10, &mut n, &mut rng);
+        let per = b.list_units(0)[0].stored_bytes;
+        assert_eq!(b.remote_stage(per), per); // unit 0 only
+        let now = 1_000_000;
+        let mut out = Vec::new();
+        let rp = b.read(0, 1, 4096, &mut out, now, &mut n, &mut rng);
+        assert_eq!(rp.tier, SwapTier::Pool);
+        let rr = b.read(0, 0, 4096, &mut out, now, &mut n, &mut rng);
+        assert_eq!(rr.tier, SwapTier::Remote);
+        assert_eq!(out, page, "remote content corrupted");
+        assert_eq!(b.metrics().remote_hits, 1);
+        assert_eq!(b.metrics().nvme_reads, 0, "remote hit did NVMe I/O");
+        // Pool ~1us + jitter; remote adds a ~20us network round trip;
+        // NVMe would be ~75us + queueing.
+        assert!(rr.completes_at > rp.completes_at + 15_000, "remote not slower than pool");
+        assert!(rr.completes_at < now + 75_000, "remote not faster than NVMe");
+    }
+
+    /// Revocation recalls oldest-staged entries to local NVMe with real
+    /// writeback I/O; content survives and later reads are NVMe-tier.
+    #[test]
+    fn remote_recall_writes_back_to_nvme_oldest_first() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        let page = pattern_page(4096, 5);
+        for u in 0..3u64 {
+            b.write(0, u, &page, TierHint::Pool, u * 100, &mut n, &mut rng);
+        }
+        let per = b.list_units(0)[0].stored_bytes;
+        assert_eq!(b.remote_stage(3 * per), 3 * per);
+        let writes_before = b.metrics().nvme_write_reqs;
+        // Budget for one entry: the oldest-staged (unit 0) recalls.
+        let recalled = b.remote_recall(per, 1_000, &mut n);
+        assert_eq!(recalled, per);
+        assert_eq!(b.tier_of(0, 0), Some(SwapTier::Nvme));
+        assert_eq!(b.tier_of(0, 1), Some(SwapTier::Remote));
+        assert_eq!(b.metrics().nvme_write_reqs, writes_before + 1);
+        assert_eq!(b.remote_bytes(), 2 * per);
+        assert_eq!(b.metrics().remote_recalled_bytes, per);
+        let mut out = Vec::new();
+        let r = b.read(0, 0, 4096, &mut out, 2_000_000, &mut n, &mut rng);
+        assert_eq!(r.tier, SwapTier::Nvme);
+        assert_eq!(out, page);
+    }
+
+    /// Donor crash: dropped remote entries are genuinely lost — the
+    /// next read takes the never-written cold-miss path (zero fill,
+    /// full NVMe read).
+    #[test]
+    fn remote_drop_refaults_as_cold_miss() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(0, 7, &pattern_page(4096, 3), TierHint::Pool, 0, &mut n, &mut rng);
+        let per = b.list_units(0)[0].stored_bytes;
+        assert_eq!(b.remote_stage(per), per);
+        let (units, bytes) = b.remote_drop();
+        assert_eq!((units, bytes), (1, per));
+        assert_eq!(b.remote_bytes(), 0);
+        assert_eq!(b.tier_of(0, 7), None);
+        let mut out = Vec::new();
+        let r = b.read(0, 7, 4096, &mut out, 1_000, &mut n, &mut rng);
+        assert_eq!(r.tier, SwapTier::Nvme);
+        assert_eq!(out, vec![0u8; 4096]);
+        assert_eq!(b.metrics().remote_dropped_units, 1);
+    }
+
+    /// A rewrite of a remote unit replaces the copy (fresh pool entry)
+    /// and tombstones the stale remote-FIFO reference: a later recall
+    /// must not touch the new copy.
+    #[test]
+    fn remote_rewrite_tombstones_fifo_reference() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        b.write(0, 2, &pattern_page(4096, 1), TierHint::Pool, 0, &mut n, &mut rng);
+        let per = b.list_units(0)[0].stored_bytes;
+        assert_eq!(b.remote_stage(per), per);
+        b.write(0, 2, &pattern_page(4096, 2), TierHint::Pool, 100, &mut n, &mut rng);
+        assert_eq!(b.remote_bytes(), 0, "replaced remote copy still accounted");
+        assert_eq!(b.tier_of(0, 2), Some(SwapTier::Pool));
+        assert_eq!(b.remote_recall(u64::MAX / 2, 200, &mut n), 0);
+        assert_eq!(b.tier_of(0, 2), Some(SwapTier::Pool), "recall touched the fresh copy");
     }
 
     #[test]

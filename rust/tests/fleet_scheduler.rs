@@ -17,6 +17,11 @@
 //! degraded NVMe, budget revocation) under which every invariant must
 //! still hold — Σ budgets stepping down by exactly each dead host's
 //! budget — with no VM lost and the same worker-count byte-identity.
+//! PR 9 adds the remote-memory marketplace gates: lease formation on
+//! the pressured static-placement fleet, chaos seeds with leases armed
+//! (donor crashes drop staged entries, consumer crashes return the
+//! full escrow), and seq/par byte-identity with the marketplace and
+//! random fault plans armed together.
 
 use std::sync::{Arc, Mutex};
 
@@ -28,7 +33,7 @@ use flexswap::coordinator::{Machine, Mechanism, VmSetup};
 use flexswap::daemon::{Arbiter, FleetScheduler, FleetVmSpec, Sla, VmReport};
 use flexswap::harness::fleet::{
     random_fault_plan, run_sharded_fleet, run_sharded_fleet_exec, run_sharded_fleet_faulted,
-    run_sharded_fleet_granular, FleetMode, ShardedSummary,
+    run_sharded_fleet_granular, run_sharded_fleet_market, FleetMode, ShardedSummary,
 };
 use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
 use flexswap::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
@@ -603,6 +608,159 @@ fn chaos_mixed_granularity_seeds_hold_invariants() {
             hosts, per_host, ops, FleetMode::StateMigration, seed, false, None, &mix, &plan,
         );
         assert_eq!(s, seq, "{label}: engines diverged");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Remote-memory marketplace (PR 9 tentpole gates)
+// ---------------------------------------------------------------------
+
+/// Lease formation and conservation on the canonical marketplace
+/// shape: static placement (the marketplace is the only relief
+/// channel), host 0 demand-infeasible, donors at 300% of demand so
+/// their pools sit empty below the low watermark and real DRAM
+/// headroom backs the escrow. Leases must form, staged entries must
+/// serve faults from the remote tier, and — because remote escrow is
+/// begin/cancel-only — Σ audited budgets must end exactly where they
+/// started. Same seed twice must be bit-identical (lease matching is
+/// deterministic at the fleet-tick barrier).
+#[test]
+fn remote_marketplace_forms_leases_and_conserves_budgets() {
+    let label = "remote marketplace";
+    let run = || {
+        run_sharded_fleet_market(
+            4,
+            8,
+            16_000,
+            FleetMode::StaticPlacement,
+            7,
+            true,
+            None,
+            &[GranularityMode::Fixed],
+            &[],
+            true,
+            300,
+        )
+    };
+    let s = run();
+    assert_eq!(s.total_ops, s.vms as u64 * 16_000, "{label}: fleet lost work");
+    assert!(s.remote_leases >= 1, "{label}: no lease ever matched: {s:?}");
+    assert!(s.remote_staged_bytes > 0, "{label}: leases staged nothing");
+    assert!(
+        s.remote_hits > 0,
+        "{label}: no fault was ever served from the remote tier"
+    );
+    assert!(
+        s.remote_staged_bytes <= s.remote_leased_bytes,
+        "{label}: staged more than the granted leases"
+    );
+    // No faults armed: nothing may be dropped, and every invariant of
+    // the fault-free suite (including exact Σ-budget equality) holds
+    // with leases in flight and dissolved at the final barrier.
+    assert_eq!(s.remote_dropped_bytes, 0, "{label}: drops without a crash");
+    assert_summary_invariants(&s, label);
+    let again = run();
+    assert_eq!(s, again, "{label}: same seed diverged");
+}
+
+/// Chaos seeds with remote leases armed: randomized fault schedules
+/// over the marketplace fleet. A donor crash drops the staged entries
+/// (the consumer re-faults them as cold NVMe misses — reported in the
+/// dropped ledger) and returns the escrow; a consumer crash dissolves
+/// the lease donor-side. Either way the budget audit must stay clean:
+/// Σ budgets step down by exactly the retired amounts, nothing more.
+#[test]
+fn remote_marketplace_chaos_seeds_hold_invariants() {
+    let (hosts, per_host, ops) = (4usize, 4usize, 12_000u64);
+    let mut leases = 0u64;
+    for seed in 0..10u64 {
+        let plan = random_fault_plan(hosts, ops, seed);
+        let mode = if seed % 2 == 0 {
+            FleetMode::StateMigration
+        } else {
+            FleetMode::LeaseOnly
+        };
+        let label = format!("remote chaos seed {seed} ({mode:?})");
+        let s = run_sharded_fleet_market(
+            hosts,
+            per_host,
+            ops,
+            mode,
+            seed,
+            true,
+            None,
+            &[GranularityMode::Fixed],
+            &plan,
+            true,
+            300,
+        );
+        assert_eq!(s.vms, hosts * per_host, "{label}: admission lost a VM");
+        assert_eq!(
+            s.total_ops,
+            s.vms as u64 * ops,
+            "{label}: a VM lost work to a fault"
+        );
+        assert_chaos_summary_invariants(&s, &label);
+        if s.crashes == 0 {
+            assert_eq!(
+                s.remote_dropped_bytes, 0,
+                "{label}: remote drops without a crash"
+            );
+        }
+        leases += s.remote_leases;
+    }
+    assert!(leases > 0, "the remote chaos sweep never formed a lease");
+}
+
+/// Seq/par byte-identity with the marketplace AND random fault plans
+/// armed together: lease matching, paced revocation, crash-time drops,
+/// and the final-barrier cancellation all run at the fleet tick — a
+/// single-threaded barrier in both engines — so the output must be
+/// bit-identical from the merge oracle and the epoch engine at 1, 2,
+/// and `available_parallelism` workers.
+#[test]
+fn remote_marketplace_seq_par_byte_identical_across_worker_counts() {
+    for seed in [2u64, 9] {
+        let plan = random_fault_plan(4, 12_000, seed);
+        let base = run_sharded_fleet_market(
+            4,
+            4,
+            12_000,
+            FleetMode::StateMigration,
+            seed,
+            false,
+            None,
+            &[GranularityMode::Fixed],
+            &plan,
+            true,
+            300,
+        );
+        assert_chaos_summary_invariants(&base, &format!("remote seq seed {seed}"));
+        for workers in [Some(1), Some(2), None] {
+            let par = run_sharded_fleet_market(
+                4,
+                4,
+                12_000,
+                FleetMode::StateMigration,
+                seed,
+                true,
+                workers,
+                &[GranularityMode::Fixed],
+                &plan,
+                true,
+                300,
+            );
+            assert_eq!(
+                base, par,
+                "remote seed {seed} workers {workers:?}: engines diverged"
+            );
+            assert_eq!(
+                format!("{base:?}"),
+                format!("{par:?}"),
+                "remote seed {seed} workers {workers:?}: debug render differs \
+                 despite Eq — float bit drift"
+            );
+        }
     }
 }
 
