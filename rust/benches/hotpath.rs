@@ -200,6 +200,50 @@ fn main() {
             }));
         }
 
+        // Golden-image unit install (PR 10): compress, content-hash,
+        // and dedup against blobs already stored — the per-unit price
+        // `ensure_golden_image` pays once per host when a storm's
+        // first clone lands there. Cycling 17 distinct contents makes
+        // every install after the first pass a pure dedup hit, the
+        // storm's steady state.
+        {
+            let mut b = TieredBackend::new(&TierConfig::default(), &sw);
+            let variants: Vec<Vec<u8>> = (0..17u8)
+                .map(|v| {
+                    let mut p = page.clone();
+                    p[1] = v;
+                    p
+                })
+                .collect();
+            let mut i = 0u64;
+            results.push(bench("pool dedup store", 100_000, || {
+                b.install_image_unit(1, i % 4096, &variants[(i % 17) as usize]);
+                i += 1;
+            }));
+        }
+
+        // Clone-from-image admission hot path (PR 10): attach a clone
+        // to the host's golden image (refcount bump + mapping insert)
+        // and fault its first boot unit straight out of the dedup'd
+        // pool copy — decompress only, no NVMe I/O. This is the
+        // per-clone wall cost a boot storm pays at the tick barrier;
+        // the ~75 us cold-boot zero-fill it replaces is virtual time.
+        {
+            let mut b = TieredBackend::new(&TierConfig::default(), &sw);
+            for u in 0..512u64 {
+                b.install_image_unit(1, u, &page);
+            }
+            let mut out = Vec::new();
+            let mut rng = Rng::new(13);
+            let mut i = 0u64;
+            results.push(bench("clone admit (image-backed)", 100_000, || {
+                let vm = 1 + (i as usize) % 1024;
+                b.attach_image(vm, 1);
+                b.read(vm, i % 512, 4096, &mut out, i, &mut nvme, &mut rng);
+                i += 1;
+            }));
+        }
+
         // Sustained watermark writeback churn (sort + coalesce path).
         {
             let cfg = TierConfig {

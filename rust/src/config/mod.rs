@@ -332,6 +332,59 @@ impl Default for RemoteConfig {
     }
 }
 
+/// Clone-from-image admission (PR 10): a newly admitted VM implants
+/// with *zero* resident memory, backed by a shared read-only
+/// content-addressed golden image held once per host in the compressed
+/// pool. Faults decompress units out of the image at pool latency
+/// (instead of the per-VM NVMe boot-image read a cold boot pays), a
+/// write breaks CoW into a private shadow entry, and the image itself
+/// is refcounted — dropped only when the last clone on the host is
+/// forgotten. All clone admissions happen at the fleet-tick barrier,
+/// so seq/par byte-identity and the Σ-budget audit hold with storms
+/// armed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CloneConfig {
+    /// Arm clone-from-image admission. Off by default: every
+    /// pre-clone scenario (and `HostConfig::paper()` figure) replays
+    /// unchanged.
+    pub enabled: bool,
+    /// Golden-image size in swap units (the clone's boot working set).
+    pub image_units: u64,
+    /// Content-synthesis seed for the golden image. All clones of one
+    /// image share it — that determinism is what makes the dedup ratio
+    /// measurable.
+    pub image_seed: u64,
+    /// Admission pacing: at most this many queued clones implant per
+    /// fleet tick.
+    pub clones_per_tick: usize,
+    /// Placement for image-sharing clones: `true` packs them onto
+    /// hosts that already hold the image (the stored image bytes are
+    /// charged once per host, so packing amortizes them); `false`
+    /// spreads by committed pressure like any other admission.
+    pub pack: bool,
+    /// `LinearPf` boot-stream lookahead: while the clone's recovery
+    /// boost window is raised, each fault streams this many successor
+    /// units ahead out of the image.
+    pub boot_stream_depth: u64,
+    /// How long the clone's recovery boost stays raised after implant
+    /// (the boot window the prefetcher streams inside).
+    pub boost_window: Time,
+}
+
+impl Default for CloneConfig {
+    fn default() -> Self {
+        CloneConfig {
+            enabled: false,
+            image_units: 1024,
+            image_seed: 0xB007_1A6E,
+            clones_per_tick: 4,
+            pack: false,
+            boot_stream_depth: 8,
+            boost_window: 500 * MS,
+        }
+    }
+}
+
 /// Fleet-scheduler configuration: how many host shards, their budgets,
 /// VM placement, and the fault-rate-delta migration thresholds
 /// ([`crate::daemon::FleetScheduler`]).
@@ -431,6 +484,8 @@ pub struct FleetConfig {
     pub crash_rebuild_stop_ns: Time,
     /// Remote-memory marketplace (PR 9); disabled by default.
     pub remote: RemoteConfig,
+    /// Clone-from-image admission (PR 10); disabled by default.
+    pub clone: CloneConfig,
 }
 
 impl Default for FleetConfig {
@@ -466,6 +521,7 @@ impl Default for FleetConfig {
             revoke_pct: 25,
             crash_rebuild_stop_ns: 5 * MS,
             remote: RemoteConfig::default(),
+            clone: CloneConfig::default(),
         }
     }
 }
@@ -671,6 +727,33 @@ mod tests {
         let t = TierConfig::default();
         assert!(t.remote_lat_4k_ns > SwCost::default().decompress_4k_ns);
         assert!(t.remote_lat_4k_ns < HwConfig::default().nvme_lat_4k_ns);
+    }
+
+    #[test]
+    fn clone_defaults_are_opt_in_and_paper_mode_is_clean() {
+        let d = FleetConfig::default();
+        assert!(!d.clone.enabled, "clone admission must be opt-in");
+        assert!(d.clone.image_units > 0);
+        assert!(d.clone.clones_per_tick > 0);
+        assert!(
+            d.clone.boot_stream_depth >= 2,
+            "must stream at least as far as the stock LinearPf"
+        );
+        assert!(d.clone.boost_window > 0);
+        // Paper-mode divergence audit: the calibrated figure host has no
+        // compressed pool, so a golden image could never live there —
+        // and nothing in `HostConfig` grows clone state. Pin both so
+        // figure shapes stay byte-identical with PR 10 merged.
+        let paper = HostConfig::paper();
+        assert!(
+            !paper.tier.pool_enabled(),
+            "paper host must stay flat (image tier needs the pool)"
+        );
+        assert_eq!(
+            format!("{:?}", paper.tier),
+            format!("{:?}", TierConfig::flat()),
+            "paper tier config must not drift from flat()"
+        );
     }
 
     #[test]

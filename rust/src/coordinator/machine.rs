@@ -44,6 +44,10 @@ struct VcpuState {
     fault_raised_at: Time,
     ops_done: u64,
     finished_at: Time,
+    /// Virtual time of the first *completed* guest access (hit cost
+    /// paid, or first fault resolved) — the clone storm's
+    /// time-to-first-useful-work probe (PR 10). None until then.
+    first_work_at: Option<Time>,
 }
 
 struct VmSlot {
@@ -184,6 +188,10 @@ pub struct RunResult {
     pub thp_coverage: f64,
     pub scan_cpu_ns: Time,
     pub work_ops: u64,
+    /// Virtual time of the VM's first completed guest access (min over
+    /// vCPUs; 0 when the VM never did useful work) — the clone storm's
+    /// boot-latency probe (PR 10).
+    pub first_work_ns: Time,
 }
 
 pub struct Machine {
@@ -415,10 +423,15 @@ impl Machine {
             .unwrap_or(0)
     }
 
-    /// Σ(resident + compressed-pool) bytes — the occupancy the budget
-    /// invariant bounds (fleet-scheduler headroom probe).
+    /// Σ(resident + compressed-pool + golden-image) bytes — the
+    /// occupancy the budget invariant bounds (fleet-scheduler headroom
+    /// probe). Image bytes are the *stored* (dedup'd) footprint, so a
+    /// host full of clones is charged for the shared image exactly once
+    /// (PR 10).
     pub fn host_occupied_bytes(&self) -> u64 {
-        self.host_resident_bytes() + self.backend.metrics().pool_bytes
+        self.host_resident_bytes()
+            + self.backend.metrics().pool_bytes
+            + self.backend.metrics().image_stored_bytes
     }
 
     /// Crash demotion of one VM's residency (the host under it died):
@@ -552,6 +565,7 @@ impl Machine {
                 fault_raised_at: 0,
                 ops_done: 0,
                 finished_at: 0,
+                first_work_at: None,
             })
             .collect();
         let scan_interval = setup.scan_interval.unwrap_or(SEC);
@@ -728,8 +742,12 @@ impl Machine {
             Ev::Metrics { vm } => self.metrics_tick(vm),
             Ev::ControlTick { periodic } => self.control_tick(periodic),
             Ev::KernelResume { vm, vcpu } => {
+                let now = self.clock;
                 if let Some(slot) = self.slots[vm].as_mut() {
                     slot.vcpus[vcpu].blocked = false;
+                    if slot.vcpus[vcpu].first_work_at.is_none() {
+                        slot.vcpus[vcpu].first_work_at = Some(now);
+                    }
                 }
                 self.vcpu_run(vm, vcpu);
             }
@@ -781,7 +799,13 @@ impl Machine {
                         t_access,
                         &mut self.rng,
                     ) {
-                        AccessResult::Hit { cost } => elapsed += cost + cost_ns,
+                        AccessResult::Hit { cost } => {
+                            elapsed += cost + cost_ns;
+                            let v = &mut slot.vcpus[vcpu];
+                            if v.first_work_at.is_none() {
+                                v.first_work_at = Some(now + elapsed);
+                            }
+                        }
                         AccessResult::Fault(fault) => {
                             elapsed += fault.pre_cost;
                             let raised = now + elapsed;
@@ -1021,6 +1045,11 @@ impl Machine {
                 continue;
             }
             slot.vcpus[v].blocked = false;
+            // The faulted access op was consumed before the block: its
+            // completion (now) is the vCPU's first useful work.
+            if slot.vcpus[v].first_work_at.is_none() {
+                slot.vcpus[v].first_work_at = Some(at);
+            }
             let stall = at.saturating_sub(slot.vcpus[v].fault_raised_at);
             slot.fault_hist.record(stall);
             if let Mechanism::Sys(mm) = &mut slot.mech {
@@ -1288,6 +1317,12 @@ impl Machine {
                     thp_coverage: thp,
                     scan_cpu_ns: counters.scan_cpu_ns,
                     work_ops: slot.vcpus.iter().map(|v| v.ops_done).sum(),
+                    first_work_ns: slot
+                        .vcpus
+                        .iter()
+                        .filter_map(|v| v.first_work_at)
+                        .min()
+                        .unwrap_or(0),
                 }
             })
             .collect()
@@ -1352,6 +1387,102 @@ impl Machine {
                 }
             }
         }
+    }
+
+    /// Schedule a late-added VM's initial events (clone admission,
+    /// PR 10): the machine is already started, so `schedule_initial`
+    /// never saw this slot. Mirrors [`Machine::schedule_initial`] with
+    /// every cadence anchored at `at` instead of 0 — admission happens
+    /// at the fleet-tick barrier, which may sit ahead of an idle
+    /// shard's clock.
+    pub fn activate_vm(&mut self, vmid: usize, at: Time) {
+        assert!(
+            self.started,
+            "activate_vm requires a started machine: before start(), \
+             schedule_initial seeds every slot itself"
+        );
+        let now = self.clock.max(at);
+        let slot = self.slots[vmid].as_ref().expect("vm slot");
+        let (vcpus, scan) = (slot.vcpus.len(), slot.scan_interval);
+        for v in 0..vcpus {
+            self.events.push(now, Ev::VcpuRun { vm: vmid, vcpu: v });
+        }
+        self.events.push(now + scan, Ev::ScanTick { vm: vmid });
+        self.events.push(now + SEC, Ev::PolicyTimer { vm: vmid });
+        self.events.push(now + 10 * MS, Ev::PoolRefill { vm: vmid });
+        self.events
+            .push(now + self.metrics_interval, Ev::Metrics { vm: vmid });
+    }
+
+    /// Install the shared golden image on this host's backend
+    /// (idempotent per image id): synthesize `units` deterministic page
+    /// images from `image_seed` and hand them to the backend's
+    /// content-addressed image store. A flat (paper) backend ignores
+    /// the install, so this is a no-op there.
+    pub fn ensure_golden_image(
+        &mut self,
+        image: u32,
+        image_seed: u64,
+        units: u64,
+        unit_bytes: u64,
+    ) {
+        if self.backend.image_units(image) >= units {
+            return;
+        }
+        let content = ContentModel::new(image_seed, ContentMix::default());
+        let mut buf = Vec::new();
+        for u in 0..units {
+            content.fill(u, unit_bytes, &mut buf);
+            self.backend.install_image_unit(image, u, &buf);
+        }
+    }
+
+    /// Wire a freshly added (not yet activated) VM up as a clone of a
+    /// golden image (PR 10): the whole guest is swapped out with zero
+    /// resident memory, its on-demand faults pull units from the shared
+    /// image, the tier map reflects the image's pool-cost residency,
+    /// and `LinearPf::boot_stream` streams `depth` units ahead of every
+    /// boot fault while the `boost_window` recovery window is open.
+    pub fn attach_clone(
+        &mut self,
+        vmid: usize,
+        image: u32,
+        depth: u64,
+        boost_window: Time,
+        at: Time,
+    ) {
+        use crate::policies::LinearPf;
+        let now = self.clock.max(at);
+        self.backend.attach_image(vmid, image);
+        let pages = self.slots[vmid].as_ref().expect("vm slot").vm.cfg.frames;
+        self.prime_swapped(vmid, 0, pages);
+        self.resync_vm_tiers(vmid);
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
+        if let Mechanism::Sys(mm) = &mut slot.mech {
+            mm.add_policy(Box::new(LinearPf::boot_stream(crate::policies::PfMode::Hva, depth)));
+            mm.core.recovery_until = now + boost_window;
+        }
+    }
+
+    /// Re-sync one VM's per-unit tier map from this machine's backend
+    /// (image attach/detach and crash re-attachment change what a read
+    /// would hit without going through the receipt path).
+    pub fn resync_vm_tiers(&mut self, vmid: usize) {
+        let backend = &self.backend;
+        let Some(slot) = self.slots[vmid].as_mut() else { return };
+        if let Mechanism::Sys(mm) = &mut slot.mech {
+            mm.core
+                .resync_backend_tiers(|u| backend.tier_of(vmid, u));
+        }
+    }
+
+    /// Wire a freshly added VM up as a *cold boot* (the clone storm's
+    /// baseline arm): the whole guest is swapped out with zero resident
+    /// memory and **no** backing entries, so every boot fault pays the
+    /// cold NVMe zero-fill path.
+    pub fn prime_cold_boot(&mut self, vmid: usize) {
+        let pages = self.slots[vmid].as_ref().expect("vm slot").vm.cfg.frames;
+        self.prime_swapped(vmid, 0, pages);
     }
 
     /// Direct access to a VM's MM (tests / harness; None for kernel

@@ -108,7 +108,7 @@
 //! see ARCHITECTURE.md "Parallel fleet execution" and the gated
 //! equivalence tests in `tests/fleet_scheduler.rs`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::{
     ArbiterKind, ControlConfig, FleetConfig, HostConfig, HostFault, HostFaultKind, MmConfig,
@@ -276,6 +276,23 @@ struct RecoveryProbe {
 /// mid-run is reported by the shard that owned it at the end.
 pub type FleetRun = Vec<Vec<RunResult>>;
 
+/// The fleet's one golden boot image (PR 10). A single id suffices:
+/// every storm clone shares the same content-addressed image, installed
+/// at most once per host backend.
+pub const GOLDEN_IMAGE_ID: u32 = 1;
+
+/// A storm VM waiting at the admission queue. Clone decisions happen
+/// only at fleet ticks (the parallelism barrier), paced by
+/// [`crate::config::CloneConfig::clones_per_tick`], so storms are
+/// deterministic under both engines and any worker count.
+struct PendingClone {
+    spec: FleetVmSpec,
+    /// Cold-boot comparison arm: admitted with zero resident memory
+    /// but *no* golden image — every boot fault pays the cold NVMe
+    /// path instead of a shared-image pool hit.
+    cold: bool,
+}
+
 /// The fleet scheduler (see module docs).
 pub struct FleetScheduler {
     pub cfg: FleetConfig,
@@ -294,6 +311,13 @@ pub struct FleetScheduler {
     revocations: Vec<Revocation>,
     remote_leases: Vec<RemoteLease>,
     probes: Vec<RecoveryProbe>,
+    /// Storm VMs staged for clone-from-image admission (PR 10); drained
+    /// at fleet ticks, `clones_per_tick` at a time.
+    clone_queue: VecDeque<PendingClone>,
+    /// Image-backed clones by placement name — crash rebuilds and
+    /// state-migration flips re-attach the VM to the new host's copy of
+    /// its golden image.
+    clone_images: BTreeMap<String, u32>,
     pub stats: FleetStats,
 }
 
@@ -355,6 +379,8 @@ impl FleetScheduler {
             revocations: vec![],
             remote_leases: vec![],
             probes: vec![],
+            clone_queue: VecDeque::new(),
+            clone_images: BTreeMap::new(),
         }
     }
 
@@ -380,6 +406,129 @@ impl FleetScheduler {
         s.committed_pressure += pressure;
         self.placements.push(Placement { name: spec.name, sla: spec.sla, shard, vm });
         (shard, vm)
+    }
+
+    /// Stage one storm VM for clone-from-image admission (PR 10).
+    /// Nothing happens until a fleet tick drains the queue
+    /// ([`Self::admit_clones`]): every clone decision sits at the
+    /// parallelism barrier, so storms are byte-identical under both
+    /// engines and at any worker count. `cold` marks the comparison
+    /// arm: admitted identically but with no golden image behind it.
+    pub fn stage_clone(&mut self, spec: FleetVmSpec, cold: bool) {
+        self.stats.clones_staged += 1;
+        self.clone_queue.push_back(PendingClone { spec, cold });
+    }
+
+    /// Drain up to [`crate::config::CloneConfig::clones_per_tick`]
+    /// staged clones into the fleet at this tick. An image-backed clone
+    /// implants with *zero* resident memory: every frame starts Swapped
+    /// against the shared golden image, boot faults decompress units
+    /// out of the host's dedup'd pool copy, and boot streaming pulls
+    /// the working set ahead inside the recovery window. A cold-boot
+    /// arm VM gets the same zero-resident start but no image — its
+    /// faults pay the never-written NVMe zero-fill path instead.
+    fn admit_clones(&mut self, now: Time) {
+        if self.clone_queue.is_empty() {
+            return;
+        }
+        let batch = self.cfg.clone.clones_per_tick.max(1);
+        // Bytes this tick's batch has already granted per shard — the
+        // occupancy gauge cannot see limits that have not faulted in
+        // yet, so stacked same-tick admissions must be tracked by hand
+        // (same bookkeeping as the crash-rebuild re-land).
+        let mut granted: BTreeMap<usize, u64> = BTreeMap::new();
+        for _ in 0..batch {
+            let Some(PendingClone { spec, cold }) = self.clone_queue.pop_front() else {
+                break;
+            };
+            let nominal = spec.frames * FRAME_BYTES;
+            let pressure = nominal * Sla::Gold.weight() / spec.sla.weight();
+            let shard = self.place_clone(cold, GOLDEN_IMAGE_ID);
+            let mm_base = spec.mm.unwrap_or_else(|| spec.sla.mm_config());
+            let name = spec.name;
+            let s = &mut self.shards[shard];
+            let vm = super::register_vm_on(
+                &mut s.machine,
+                name.clone(),
+                spec.sla,
+                spec.frames,
+                spec.vcpus,
+                spec.workloads,
+                spec.initial_limit_bytes,
+                mm_base,
+            );
+            s.committed_bytes += nominal;
+            s.committed_pressure += pressure;
+            if cold {
+                s.machine.prime_cold_boot(vm);
+                self.stats.clone_cold_boots += 1;
+            } else {
+                let unit_bytes = s.machine.mm(vm).map_or(FRAME_BYTES, |m| m.core.unit_bytes);
+                s.machine.ensure_golden_image(
+                    GOLDEN_IMAGE_ID,
+                    self.cfg.clone.image_seed,
+                    self.cfg.clone.image_units,
+                    unit_bytes,
+                );
+                s.machine.attach_clone(
+                    vm,
+                    GOLDEN_IMAGE_ID,
+                    self.cfg.clone.boot_stream_depth,
+                    self.cfg.clone.boost_window,
+                    now,
+                );
+                self.clone_images.insert(name.clone(), GOLDEN_IMAGE_ID);
+                self.stats.clones_admitted += 1;
+            }
+            // Like a crash rebuild, mid-run admission cannot wait for
+            // the arbiter: clamp the clone's initial limit under the
+            // target's measured spare so Σ(resident + pool) ≤ budget
+            // keeps holding until the next control tick re-plans
+            // around the new tenant (which then grows the clone as its
+            // measured WSS rises).
+            let already = granted.get(&shard).copied().unwrap_or(0);
+            let spare = self
+                .shard_budget(shard)
+                .saturating_sub(self.shards[shard].machine.host_occupied_bytes())
+                .saturating_sub(already);
+            let grant = (spare / 2).max(FRAME_BYTES);
+            if let Some(mm) = self.shards[shard].machine.mm_mut(vm) {
+                let units = (grant / mm.core.unit_bytes).max(1);
+                let clamped = mm.core.limit_units.map_or(units, |c| c.min(units));
+                mm.core.limit_units = Some(clamped);
+                granted.insert(shard, already + clamped * mm.core.unit_bytes);
+            }
+            self.shards[shard].machine.activate_vm(vm, now);
+            self.placements.push(Placement { name, sla: spec.sla, shard, vm });
+        }
+    }
+
+    /// Placement for storm clones. Spread (the default) picks the
+    /// least-pressured live, non-draining shard — clones land
+    /// everywhere, each host installs its own image copy once. Pack
+    /// prefers shards that *already hold* the golden image, so later
+    /// clones ride the existing dedup'd copy instead of installing a
+    /// new one (the clone_storm experiment tables both). Ties always
+    /// break on the lowest shard id, keeping admission deterministic.
+    fn place_clone(&self, cold: bool, image: u32) -> usize {
+        let live = |s: &&HostShard| self.stats.alive[s.id] && !self.draining(s.id);
+        if !cold && self.cfg.clone.pack {
+            if let Some(s) = self
+                .shards
+                .iter()
+                .filter(live)
+                .filter(|s| s.machine.backend.image_units(image) > 0)
+                .min_by_key(|s| (s.committed_pressure + self.inbound_escrow(s.id), s.id))
+            {
+                return s.id;
+            }
+        }
+        self.shards
+            .iter()
+            .filter(live)
+            .min_by_key(|s| (s.committed_pressure + self.inbound_escrow(s.id), s.id))
+            .map(|s| s.id)
+            .expect("clone admission needs a live shard")
     }
 
     /// Σ in-flight state-migration escrow reserved on shard `i`:
@@ -490,8 +639,26 @@ impl FleetScheduler {
                 .filter(|s| !s.machine.done())
                 .filter_map(|s| s.machine.peek_time().map(|t| (t, s.id)))
                 .min();
-            let Some((t, idx)) = next else { break };
+            // Storm liveness: a fleet whose admitted VMs are all done
+            // (or that started empty) has no pending events, but staged
+            // clones still need fleet ticks to enter it. Storms off ⇒
+            // the queue is empty and both arms reduce to the originals.
+            let Some((t, idx)) = next else {
+                if !self.clone_queue.is_empty() && next_tick <= self.cfg.max_time {
+                    let now = next_tick;
+                    self.fleet_tick(now);
+                    next_tick += self.cfg.interval;
+                    continue;
+                }
+                break;
+            };
             if t > self.cfg.max_time {
+                if !self.clone_queue.is_empty() && next_tick <= self.cfg.max_time {
+                    let now = next_tick;
+                    self.fleet_tick(now);
+                    next_tick += self.cfg.interval;
+                    continue;
+                }
                 break;
             }
             while next_tick <= t {
@@ -520,8 +687,25 @@ impl FleetScheduler {
                 .filter(|s| !s.machine.done())
                 .filter_map(|s| s.machine.peek_time())
                 .min();
-            let Some(t) = next else { break };
+            // Storm liveness (mirrors `run_merge` exactly — the gate is
+            // single-threaded in both engines, so tick times and order
+            // stay byte-identical).
+            let Some(t) = next else {
+                if !self.clone_queue.is_empty() && next_tick <= self.cfg.max_time {
+                    let now = next_tick;
+                    self.fleet_tick(now);
+                    next_tick += self.cfg.interval;
+                    continue;
+                }
+                break;
+            };
             if t > self.cfg.max_time {
+                if !self.clone_queue.is_empty() && next_tick <= self.cfg.max_time {
+                    let now = next_tick;
+                    self.fleet_tick(now);
+                    next_tick += self.cfg.interval;
+                    continue;
+                }
                 break;
             }
             while next_tick <= t {
@@ -646,6 +830,7 @@ impl FleetScheduler {
     fn fleet_tick(&mut self, now: Time) {
         self.stats.fleet_ticks += 1;
         self.inject_faults(now);
+        self.admit_clones(now);
         self.advance_drains(now);
         self.advance_revocations();
         self.advance_migrations(now);
@@ -807,6 +992,26 @@ impl FleetScheduler {
                 let clamped = mm.core.limit_units.map_or(units, |c| c.min(units));
                 mm.core.limit_units = Some(clamped);
                 granted.insert(survivor, already + clamped * mm.core.unit_bytes);
+            }
+            // An image-backed clone re-attaches to the survivor's copy
+            // of its golden image: `extract_vm` → `forget_vm` dropped
+            // the dead host's reference, and the implant resynced tiers
+            // *before* the image existed here. Salvaged private (CoW)
+            // entries imported above still win over the image on reads.
+            if let Some(&img) = self.clone_images.get(&self.placements[pidx].name) {
+                let unit_bytes = self.shards[survivor]
+                    .machine
+                    .mm(reserved)
+                    .map_or(FRAME_BYTES, |m| m.core.unit_bytes);
+                let m = &mut self.shards[survivor].machine;
+                m.ensure_golden_image(
+                    img,
+                    self.cfg.clone.image_seed,
+                    self.cfg.clone.image_units,
+                    unit_bytes,
+                );
+                m.backend.attach_image(reserved, img);
+                m.resync_vm_tiers(reserved);
             }
             let pressure = nominal * Sla::Gold.weight() / sla.weight();
             self.shards[host].committed_bytes -= nominal;
@@ -1670,6 +1875,31 @@ impl FleetScheduler {
                 p.shard = to;
                 p.vm = reserved;
             }
+        }
+        // An image-backed clone re-attaches on the target: the donor's
+        // `forget_vm` dropped its image reference and the implant's
+        // tier re-sync saw only the exported private entries, so the
+        // target needs its own image copy wired up (then a second
+        // re-sync so still-shared units report the Pool tier again).
+        let img = self
+            .placements
+            .iter()
+            .find(|p| p.shard == to && p.vm == reserved)
+            .and_then(|p| self.clone_images.get(&p.name).copied());
+        if let Some(img) = img {
+            let unit_bytes = self.shards[to]
+                .machine
+                .mm(reserved)
+                .map_or(FRAME_BYTES, |m| m.core.unit_bytes);
+            let m = &mut self.shards[to].machine;
+            m.ensure_golden_image(
+                img,
+                self.cfg.clone.image_seed,
+                self.cfg.clone.image_units,
+                unit_bytes,
+            );
+            m.backend.attach_image(reserved, img);
+            m.resync_vm_tiers(reserved);
         }
         // A drain evacuation's flip arms a recovery probe: stop-and-copy
         // carries the resident set, so restoration is measured from the

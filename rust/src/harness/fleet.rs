@@ -37,10 +37,23 @@
 //!    pressured host's p99 fault stall while Σ budgets stay exactly
 //!    conserved (begin/cancel-only escrow) and every shard holds
 //!    Σ(resident + pool) ≤ budget at every tick.
+//! 6. **Boot-storm autoscaling** (PR 10, the separate `clone_storm`
+//!    experiment in this module) — a burst of VMs clone-admitted from
+//!    a shared read-only golden image at fleet-tick barriers: zero
+//!    resident memory at implant, boot faults decompressing units out
+//!    of the host's dedup'd refcounted pool copy while `LinearPf`
+//!    boot-streams ahead. Image-backed clones must beat cold boots
+//!    (full NVMe zero-fill per fault) on time-to-first-useful-work
+//!    p99, the golden-image dedup ratio must exceed 1, packing must
+//!    hold the image on fewer hosts than spreading, and the storm
+//!    must preserve every engine-identity and Σ-budget invariant.
+//!
+//! All arms run through the single unified entry point,
+//! [`run_sharded_fleet`], parameterized by [`FleetRunOpts`].
 
 use crate::config::{
-    ArbiterKind, ControlConfig, FleetConfig, HostConfig, HostFault, HostFaultKind, MmConfig,
-    PlacementPolicy, RemoteConfig, TierConfig, VmConfig,
+    ArbiterKind, CloneConfig, ControlConfig, FleetConfig, HostConfig, HostFault, HostFaultKind,
+    MmConfig, PlacementPolicy, RemoteConfig, TierConfig, VmConfig,
 };
 use crate::coordinator::{Machine, Mechanism, VmSetup};
 use crate::daemon::{FleetScheduler, FleetVmSpec, Sla};
@@ -49,7 +62,7 @@ use crate::mm::Mm;
 use crate::policies::{DtReclaimer, LruReclaimer, NativeAnalytics, WsrPolicy};
 use crate::sim::Rng;
 use crate::types::{GranularityMode, PageSize, Time, FRAME_BYTES, MS, REGION_UNITS, SEC};
-use crate::workloads::{BootDelay, PhasedWss, UniformRandom, Workload};
+use crate::workloads::{BootDelay, PhasedWss, SeqScan, UniformRandom, Workload};
 
 use super::Scale;
 
@@ -388,16 +401,50 @@ pub struct ShardedSummary {
     /// p99 fault stall over host 0's VMs only — the deliberately
     /// demand-infeasible shard the marketplace exists to relieve.
     pub pressured_p99_stall_ns: u64,
+    /// PR 10 clone-storm ledger (all zero with storms disarmed).
+    pub clones_staged: u64,
+    pub clones_admitted: u64,
+    pub clone_cold_boots: u64,
+    /// p99 time-to-first-useful-work measured from each storm VM's
+    /// admission tick: image-backed clones vs the cold-boot arm.
+    pub clone_first_work_p99_ns: u64,
+    pub cold_first_work_p99_ns: u64,
+    /// Σ over hosts of golden-image stored / logical bytes at the end
+    /// of the run (dedup ratio = logical / stored).
+    pub image_stored_bytes: u64,
+    pub image_logical_bytes: u64,
+    pub image_hits: u64,
+    pub image_cow_breaks: u64,
+    /// Image-backed clones resident per host at the end of the run —
+    /// the spread-vs-pack evidence.
+    pub clones_per_host: Vec<usize>,
+}
+
+impl ShardedSummary {
+    /// Fleet-wide golden-image dedup ratio: logical bytes the clones
+    /// would hold privately over bytes actually stored (0 when no
+    /// image is installed anywhere).
+    pub fn image_dedup_ratio(&self) -> f64 {
+        if self.image_stored_bytes == 0 {
+            0.0
+        } else {
+            self.image_logical_bytes as f64 / self.image_stored_bytes as f64
+        }
+    }
 }
 
 /// The per-VM p99 fault-stall bound the failure experiment scores
 /// against: a recovered VM above this counts as an SLA violation.
 pub const FAULT_SLA_NS: u64 = MS;
 
-/// CLI-plumbed fleet-run options: execution engine and population
-/// overrides (`--sequential`, `--workers`, `--vms`). The default is the
-/// parallel epoch engine on all cores at the scale-derived population.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Fleet-run options — the ONE parameter object the unified
+/// [`run_sharded_fleet`] runner takes. PR 10 collapsed the old
+/// positional variants (`_exec`, `_faulted`, `_granular`, `_market`)
+/// into this: `Default` is the canonical shape (parallel epoch engine
+/// on all cores, flat 4k granularity, no faults, no remote
+/// marketplace, no clone storm), and the builder-style `with_*`
+/// methods override one knob at a time.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetRunOpts {
     /// Run the sequential `(time, shard index)` merge oracle instead of
     /// the parallel epoch engine. Output is byte-identical either way.
@@ -407,14 +454,112 @@ pub struct FleetRunOpts {
     /// VMs per host, overriding the scale default (the nightly
     /// `--vms TOTAL` knob, divided by the host count in `main`).
     pub per_host: Option<usize>,
-    /// Fault schedule armed on soak runs (`--fault-plan`).
+    /// Fault-schedule *plan* for soak runs (`--fault-plan`): each soak
+    /// seed derives its own concrete [`FleetRunOpts::faults`] from it.
     pub fault_plan: FaultPlan,
-    /// Swap granularity for every fleet VM (`--granularity
-    /// <4k|huge|auto>`; the default is flat 4k).
-    pub granularity: GranularityMode,
-    /// Arm the PR 9 remote-memory marketplace (`--remote`): soak arms
-    /// run with leases enabled and donor budgets sized for spare DRAM.
+    /// Concrete fault schedule armed on this run (PR 7).
+    pub faults: Vec<HostFault>,
+    /// Swap granularity: VM `i` gets `granularity[i % len]`, so one
+    /// element sets a uniform mode (the `--granularity` CLI path) and
+    /// several seed a mixed-granularity fleet (the chaos sweep's PR 8
+    /// arm). Empty means flat 4k for everyone — the canonical shape
+    /// the acceptance comparisons are pinned to.
+    pub granularity: Vec<GranularityMode>,
+    /// Arm the PR 9 remote-memory marketplace (`--remote`): leases
+    /// matched at fleet ticks, donor budgets sized for spare DRAM.
     pub remote: bool,
+    /// Donor budget sizing as % of hot-phase demand. 0 means auto:
+    /// 300 with the marketplace armed (donors never reclaim, pools sit
+    /// empty, real DRAM headroom hosts staged bytes), 130 otherwise
+    /// (donors limit-bound with modest slack).
+    pub donor_pct: u64,
+    /// Clone-from-image parameters (PR 10). `enabled` is forced on
+    /// whenever a storm is staged; `image_units` is rounded up so the
+    /// golden image covers a storm VM's whole gpa space.
+    pub clone: CloneConfig,
+    /// Image-backed storm clones staged before the run (admitted at
+    /// fleet ticks, [`CloneConfig::clones_per_tick`] at a time).
+    pub storm_clones: usize,
+    /// Cold-boot comparison VMs staged interleaved with the clones:
+    /// same zero-resident start, no golden image behind the faults.
+    pub storm_cold: usize,
+    /// Storm-VM memory limit as % of the boot working set (0 = 100).
+    /// The balloon arm squeezes it: the guest hands memory back before
+    /// host swap gets involved (the arxiv 1411.7344 comparison).
+    pub storm_limit_pct: u64,
+    /// CLI `--clone-storm` switch: also run the clone-storm tables.
+    pub clone_storm: bool,
+}
+
+impl FleetRunOpts {
+    pub fn with_sequential(mut self, sequential: bool) -> Self {
+        self.sequential = sequential;
+        self
+    }
+    pub fn with_workers(mut self, workers: Option<usize>) -> Self {
+        self.workers = workers;
+        self
+    }
+    pub fn with_per_host(mut self, per_host: Option<usize>) -> Self {
+        self.per_host = per_host;
+        self
+    }
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = plan;
+        self
+    }
+    pub fn with_faults(mut self, faults: Vec<HostFault>) -> Self {
+        self.faults = faults;
+        self
+    }
+    pub fn with_granularity(mut self, granularity: Vec<GranularityMode>) -> Self {
+        self.granularity = granularity;
+        self
+    }
+    pub fn with_remote(mut self, remote: bool) -> Self {
+        self.remote = remote;
+        self
+    }
+    pub fn with_donor_pct(mut self, pct: u64) -> Self {
+        self.donor_pct = pct;
+        self
+    }
+    /// Stage a clone storm: `clones` image-backed + `cold` cold-boot
+    /// comparison VMs, interleaved so each admission tick carries both
+    /// arms (paired admission times keep the p99 comparison fair).
+    pub fn with_storm(mut self, clones: usize, cold: usize) -> Self {
+        self.storm_clones = clones;
+        self.storm_cold = cold;
+        self.clone.enabled = self.clone.enabled || clones + cold > 0;
+        self
+    }
+    pub fn with_clone(mut self, clone: CloneConfig) -> Self {
+        self.clone = clone;
+        self
+    }
+    pub fn with_pack(mut self, pack: bool) -> Self {
+        self.clone.pack = pack;
+        self
+    }
+    pub fn with_storm_limit_pct(mut self, pct: u64) -> Self {
+        self.storm_limit_pct = pct;
+        self
+    }
+
+    /// Resolved donor budget % (see [`FleetRunOpts::donor_pct`]).
+    fn donor_pct_resolved(&self) -> u64 {
+        if self.donor_pct != 0 {
+            self.donor_pct
+        } else if self.remote {
+            300
+        } else {
+            130
+        }
+    }
+
+    fn storm_total(&self) -> usize {
+        self.storm_clones + self.storm_cold
+    }
 }
 
 /// Which fault schedule a soak run arms (`--fault-plan <none|random>`).
@@ -435,7 +580,7 @@ pub enum FaultPlan {
 /// land on.
 pub fn random_fault_plan(hosts: usize, ops_per_vm: u64, seed: u64) -> Vec<HostFault> {
     let mut rng = Rng::new(seed ^ 0x00FA_0175);
-    // `run_sharded_fleet_faulted` workloads cost 20µs of compute per op.
+    // [`run_sharded_fleet`] workloads cost 20µs of compute per op.
     let work_ns = ops_per_vm * 20_000;
     let (lo, hi) = (work_ns / 4, (work_ns * 3 / 4).max(work_ns / 4 + 1));
     let crash_cap = hosts.saturating_sub(2);
@@ -456,6 +601,34 @@ pub fn random_fault_plan(hosts: usize, ops_per_vm: u64, seed: u64) -> Vec<HostFa
     plan
 }
 
+/// Storm-VM gpa size: the golden image covers the clone's *entire*
+/// guest-physical space (`frames == image_units` after rounding up),
+/// so a scrambled gva→gpa mapping can never step off the image onto
+/// the cold path and dilute the clone-vs-cold comparison.
+fn storm_frames(clone: &CloneConfig) -> u64 {
+    clone.image_units.max(2048)
+}
+
+/// Boot working set of one storm VM (the usual 1024-frame guest
+/// slack, like every other fleet VM shape).
+fn storm_boot_pages(clone: &CloneConfig) -> u64 {
+    storm_frames(clone) - 1024
+}
+
+/// Guest ops one storm VM performs — two sequential passes over its
+/// boot working set. Public because the soak's lost-work audit needs
+/// the expected total.
+pub fn storm_vm_ops(clone: &CloneConfig) -> u64 {
+    storm_boot_pages(clone) * 2
+}
+
+/// Storm-VM memory limit in bytes ([`FleetRunOpts::storm_limit_pct`]
+/// of the boot working set; 0 = 100%).
+fn storm_limit_bytes(opts: &FleetRunOpts) -> u64 {
+    let pct = if opts.storm_limit_pct == 0 { 100 } else { opts.storm_limit_pct };
+    (storm_boot_pages(&opts.clone) * FRAME_BYTES * pct / 100).max(FRAME_BYTES)
+}
+
 /// Build and run one sharded fleet: `hosts` shards × `per_host` VMs,
 /// host 0's budget deliberately short of its hot-phase demand (the
 /// sustained-pressure host), the rest comfortable. Every VM touches a
@@ -465,107 +638,28 @@ pub fn random_fault_plan(hosts: usize, ops_per_vm: u64, seed: u64) -> Vec<HostFa
 /// VMs *moves* occupancy instead of inflating it). All VMs are Bronze:
 /// 4k units keep the arbiter's reclaim granularity fine enough that
 /// limits bind tightly on every host. `mode` picks the rebalancing
-/// tools. Deterministic in `seed`; runs on the parallel epoch engine.
+/// tools; everything else — engine, workers, faults, granularity,
+/// remote marketplace, clone storm — rides in `opts` (this is the one
+/// public sharded-fleet runner; PR 10 folded the old positional
+/// variants into [`FleetRunOpts`]). Deterministic in `seed`, and the
+/// equivalence suite asserts the summary — and therefore the CSV, a
+/// pure function of it — is byte-identical across engines and worker
+/// counts, clone storms included.
 pub fn run_sharded_fleet(
     hosts: usize,
     per_host: usize,
     ops_per_vm: u64,
     mode: FleetMode,
     seed: u64,
+    opts: &FleetRunOpts,
 ) -> ShardedSummary {
-    run_sharded_fleet_exec(hosts, per_host, ops_per_vm, mode, seed, true, None)
-}
-
-/// [`run_sharded_fleet`] with explicit engine selection: `parallel`
-/// picks the epoch engine vs the sequential merge oracle, `workers`
-/// caps the epoch engine's threads (None: all cores). The equivalence
-/// suite asserts the summary — and therefore the CSV, a pure function
-/// of it — is byte-identical across engines and worker counts.
-pub fn run_sharded_fleet_exec(
-    hosts: usize,
-    per_host: usize,
-    ops_per_vm: u64,
-    mode: FleetMode,
-    seed: u64,
-    parallel: bool,
-    workers: Option<usize>,
-) -> ShardedSummary {
-    run_sharded_fleet_faulted(hosts, per_host, ops_per_vm, mode, seed, parallel, workers, &[])
-}
-
-/// [`run_sharded_fleet_exec`] with a [`HostFault`] schedule armed (PR
-/// 7). The recovered-population stats track every VM admitted to a
-/// faulted host across the whole run, wherever recovery lands it.
-#[allow(clippy::too_many_arguments)]
-pub fn run_sharded_fleet_faulted(
-    hosts: usize,
-    per_host: usize,
-    ops_per_vm: u64,
-    mode: FleetMode,
-    seed: u64,
-    parallel: bool,
-    workers: Option<usize>,
-    faults: &[HostFault],
-) -> ShardedSummary {
-    run_sharded_fleet_granular(
-        hosts,
-        per_host,
-        ops_per_vm,
-        mode,
-        seed,
-        parallel,
-        workers,
-        &[GranularityMode::Fixed],
-        faults,
-    )
-}
-
-/// [`run_sharded_fleet_faulted`] with explicit swap granularity: VM `i`
-/// gets `granularity[i % len]`, so a single-element slice sets a
-/// uniform mode (the `--granularity` CLI path) and a multi-element
-/// slice seeds a mixed-granularity fleet (the chaos sweep's PR 8 arm).
-#[allow(clippy::too_many_arguments)]
-pub fn run_sharded_fleet_granular(
-    hosts: usize,
-    per_host: usize,
-    ops_per_vm: u64,
-    mode: FleetMode,
-    seed: u64,
-    parallel: bool,
-    workers: Option<usize>,
-    granularity: &[GranularityMode],
-    faults: &[HostFault],
-) -> ShardedSummary {
-    run_sharded_fleet_market(
-        hosts, per_host, ops_per_vm, mode, seed, parallel, workers, granularity, faults, false,
-        130,
-    )
-}
-
-/// [`run_sharded_fleet_granular`] with the PR 9 remote-memory
-/// marketplace knob. `remote` arms lease matching at fleet ticks;
-/// `donor_pct` sizes every non-pressured host's budget as a percentage
-/// of its hot-phase demand (the canonical comparison uses 130 — donors
-/// limit-bound with modest slack; remote scenarios use 300 — donors
-/// never reclaim, their pools stay empty, so the below-watermark offer
-/// condition holds as soon as their phase-2 working sets contract and
-/// real DRAM headroom exists to host the consumer's staged bytes).
-/// Host 0 stays at 78% of demand either way: the one shard whose
-/// demand is infeasible, i.e. the marketplace's only bidder.
-#[allow(clippy::too_many_arguments)]
-pub fn run_sharded_fleet_market(
-    hosts: usize,
-    per_host: usize,
-    ops_per_vm: u64,
-    mode: FleetMode,
-    seed: u64,
-    parallel: bool,
-    workers: Option<usize>,
-    granularity: &[GranularityMode],
-    faults: &[HostFault],
-    remote: bool,
-    donor_pct: u64,
-) -> ShardedSummary {
+    let parallel = !opts.sequential;
+    let workers = opts.workers;
+    let granularity = &opts.granularity;
+    let faults = &opts.faults;
+    let remote = opts.remote;
+    let donor_pct = opts.donor_pct_resolved();
+    let interval = 50 * MS;
     let n = hosts * per_host;
     let frames = 4096u64;
     let pages = frames - 1024;
@@ -583,7 +677,7 @@ pub fn run_sharded_fleet_market(
         // below via `set_shard_budget`.
         host_budgets: vec![1 << 40],
         placement: PlacementPolicy::SpreadByFaultRate,
-        interval: 50 * MS,
+        interval,
         migration: mode != FleetMode::StaticPlacement,
         state_migration: mode == FleetMode::StateMigration,
         migrate_pf_delta_min: 16,
@@ -605,6 +699,11 @@ pub fn run_sharded_fleet_market(
         workers,
         faults: faults.to_vec(),
         remote: RemoteConfig { enabled: remote, ..Default::default() },
+        clone: CloneConfig {
+            enabled: opts.clone.enabled || opts.storm_total() > 0,
+            image_units: storm_frames(&opts.clone),
+            ..opts.clone.clone()
+        },
         ..Default::default()
     };
     let mut f = FleetScheduler::new(&template, cfg);
@@ -643,6 +742,38 @@ pub fn run_sharded_fleet_market(
         });
     }
 
+    // Clone storm (PR 10): stage the storm before the run; the
+    // scheduler drains it at fleet ticks, `clones_per_tick` per tick.
+    // The two arms interleave (Bresenham over the staged order), so
+    // each tick's batch carries both and admission times pair up. Each
+    // storm VM boots with two sequential passes over its boot working
+    // set — the pattern the image's boot-stream prefetch is built for.
+    let storm_total = opts.storm_total();
+    let boot_pages = storm_boot_pages(&opts.clone);
+    let limit = storm_limit_bytes(opts);
+    for k in 0..storm_total {
+        let cold = (k * opts.storm_cold) / storm_total != ((k + 1) * opts.storm_cold) / storm_total;
+        let name = format!("{}-{k}", if cold { "cold" } else { "clone" });
+        f.stage_clone(
+            FleetVmSpec {
+                name,
+                sla: Sla::Bronze,
+                frames: storm_frames(&opts.clone),
+                vcpus: 1,
+                workloads: vec![Box::new(SeqScan::new(boot_pages, 2, 2_000))],
+                initial_limit_bytes: Some(limit),
+                mm: Some(MmConfig {
+                    swapper_threads: swapper_threads(Sla::Bronze),
+                    scan_interval: 60 * MS,
+                    history: 6,
+                    target_promotion_rate: 0.002,
+                    ..Default::default()
+                }),
+            },
+            cold,
+        );
+    }
+
     // Size each shard's budget from its actually admitted members: the
     // arbiter's own hot-phase demand (WSS + WSS/8) plus the pool
     // reservation and in-flight slack. Host 0: usable ≈ 78% of demand
@@ -654,6 +785,26 @@ pub fn run_sharded_fleet_market(
     let hot_demand = {
         let wss = pages / 3 * FRAME_BYTES;
         wss + wss / 8
+    };
+    // Storm headroom, charged to every host up front: clones spread by
+    // committed pressure (⌈total/hosts⌉ per host), but pack piles every
+    // image-backed clone onto one host, and a chaos crash re-lands a
+    // dead host's clones on the survivors — both size for the whole
+    // storm. Per clone: its memory limit plus swapper in-flight slack;
+    // per host: one shared golden image (stored ≤ raw, charged once).
+    let storm_extra = if storm_total > 0 {
+        let per_host_storm = if opts.clone.pack
+            || !opts.faults.is_empty()
+            || opts.fault_plan == FaultPlan::Random
+        {
+            storm_total as u64
+        } else {
+            (storm_total as u64).div_ceil(hosts as u64)
+        };
+        let storm_inflight = swapper_threads(Sla::Bronze) as u64 * FRAME_BYTES;
+        per_host_storm * (limit + storm_inflight) + storm_frames(&opts.clone) * FRAME_BYTES
+    } else {
+        0
     };
     let mut budgets = vec![0u64; hosts];
     for h in 0..hosts {
@@ -680,12 +831,14 @@ pub fn run_sharded_fleet_market(
             .sum();
         let demand = hot_demand * members.len() as u64;
         let pct = if h == 0 { 78 } else { donor_pct };
-        let budget = demand * pct / 100 + pool_cap + inflight;
+        let budget = demand * pct / 100 + pool_cap + inflight + storm_extra;
         budgets[h] = budget;
         f.set_shard_budget(h, budget);
         // Everyone starts at an equal share of its shard's usable
         // budget, so Σ(resident + pool) ≤ budget holds from t = 0.
-        let usable = budget - pool_cap - inflight;
+        // Storm headroom is reserved for the storm: base shares match
+        // the storm-free run exactly.
+        let usable = budget - pool_cap - inflight - storm_extra;
         let share = usable / members.len().max(1) as u64;
         for &v in &members {
             let mm = f.shards[h].machine.mm_mut(v).expect("sys VM");
@@ -777,6 +930,46 @@ pub fn run_sharded_fleet_market(
             rec_viol += 1;
         }
     }
+    // PR 10 storm ledger: per-arm time-to-first-useful-work, measured
+    // from each storm VM's admission tick. Staged index k is admitted
+    // at the (k / clones_per_tick + 1)-th tick — the queue is FIFO and
+    // every tick drains exactly one batch while any remain, so the
+    // admission time is exact, not estimated.
+    let batch = opts.clone.clones_per_tick.max(1) as u64;
+    let mut clone_hist = LatencyHist::default();
+    let mut cold_hist = LatencyHist::default();
+    let mut clones_per_host = vec![0usize; hosts];
+    for p in &f.placements {
+        let (arm_cold, k) = if let Some(k) = p.name.strip_prefix("clone-") {
+            (false, k)
+        } else if let Some(k) = p.name.strip_prefix("cold-") {
+            (true, k)
+        } else {
+            continue;
+        };
+        let Ok(k) = k.parse::<u64>() else { continue };
+        let admit_at = (k / batch + 1) * interval;
+        let row = (0..p.vm)
+            .filter(|&u| f.shards[p.shard].machine.mm(u).is_some())
+            .count();
+        let r = &results[p.shard][row];
+        let rel = r.first_work_ns.saturating_sub(admit_at);
+        if arm_cold {
+            cold_hist.record(rel);
+        } else {
+            clone_hist.record(rel);
+            clones_per_host[p.shard] += 1;
+        }
+    }
+    let (mut image_stored, mut image_logical) = (0u64, 0u64);
+    let (mut image_hits, mut image_cow_breaks) = (0u64, 0u64);
+    for s in f.shards.iter() {
+        let tm = s.machine.backend.metrics();
+        image_stored += tm.image_stored_bytes;
+        image_logical += tm.image_logical_bytes;
+        image_hits += tm.image_hits;
+        image_cow_breaks += tm.image_cow_breaks;
+    }
     ShardedSummary {
         hosts,
         vms: n,
@@ -827,6 +1020,16 @@ pub fn run_sharded_fleet_market(
         remote_dropped_bytes: f.stats.remote_dropped_bytes,
         remote_hits,
         pressured_p99_stall_ns: pressured_hist.quantile(0.99),
+        clones_staged: f.stats.clones_staged,
+        clones_admitted: f.stats.clones_admitted,
+        clone_cold_boots: f.stats.clone_cold_boots,
+        clone_first_work_p99_ns: clone_hist.quantile(0.99),
+        cold_first_work_p99_ns: cold_hist.quantile(0.99),
+        image_stored_bytes: image_stored,
+        image_logical_bytes: image_logical,
+        image_hits,
+        image_cow_breaks,
+        clones_per_host,
     }
 }
 
@@ -875,6 +1078,7 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
             "restore_max_ms",
             "drain_misses",
             "remote_leases/staged_mb/hits",
+            "clones(adm/cold)",
         ],
     );
     for seed in 0..seeds {
@@ -884,23 +1088,18 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
         };
         for mode in [FleetMode::LeaseOnly, FleetMode::StateMigration] {
             let label = mode.label();
-            let s = run_sharded_fleet_market(
-                hosts,
-                per_host,
-                ops,
-                mode,
-                seed,
-                !opts.sequential,
-                opts.workers,
-                &[opts.granularity],
-                &plan,
-                opts.remote,
-                if opts.remote { 300 } else { 130 },
-            );
+            let arm = opts.clone().with_faults(plan.clone());
+            let s = run_sharded_fleet(hosts, per_host, ops, mode, seed, &arm);
+            let storm_ops = (arm.storm_clones + arm.storm_cold) as u64 * storm_vm_ops(&arm.clone);
             assert_eq!(
                 s.total_ops,
-                s.vms as u64 * ops,
+                s.vms as u64 * ops + storm_ops,
                 "soak seed {seed} {label}: fleet lost work"
+            );
+            assert_eq!(
+                (s.clones_admitted + s.clone_cold_boots) as usize,
+                arm.storm_clones + arm.storm_cold,
+                "soak seed {seed} {label}: staged storm VMs never admitted"
             );
             assert_eq!(
                 s.conservation_violations, 0,
@@ -959,6 +1158,7 @@ pub fn fleet_soak(scale: Scale, hosts: usize, seeds: u64, opts: FleetRunOpts) ->
                     s.remote_staged_bytes as f64 / 1e6,
                     s.remote_hits
                 ),
+                format!("{}/{}", s.clones_admitted, s.clone_cold_boots),
             ]);
         }
     }
@@ -1047,6 +1247,22 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
     // only move as much budget as donors can prove free.
     let per_host = opts.per_host.unwrap_or(scale.u(8, 32) as usize);
     let shard_ops = scale.u(16_000, 28_000);
+    // The t3–t5 comparison arms run storm-free even when
+    // `--clone-storm` is set (the storm gets its own tables below):
+    // their lost-work audits and acceptance pins are calibrated to the
+    // base population.
+    let base = FleetRunOpts {
+        faults: vec![],
+        fault_plan: FaultPlan::None,
+        remote: false,
+        donor_pct: 0,
+        clone: CloneConfig::default(),
+        storm_clones: 0,
+        storm_cold: 0,
+        storm_limit_pct: 0,
+        clone_storm: false,
+        ..opts.clone()
+    };
     let mut t3 = Table::new(
         "fleet sharding: lease-only vs full VM state migration vs static placement",
         &[
@@ -1075,17 +1291,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
         FleetMode::StateMigration,
     ] {
         let label = mode.label();
-        let s = run_sharded_fleet_granular(
-            hosts,
-            per_host,
-            shard_ops,
-            mode,
-            7,
-            !opts.sequential,
-            opts.workers,
-            &[opts.granularity],
-            &[],
-        );
+        let s = run_sharded_fleet(hosts, per_host, shard_ops, mode, 7, &base);
         assert_eq!(
             s.total_ops,
             s.vms as u64 * shard_ops,
@@ -1116,7 +1322,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
         if mode == FleetMode::StateMigration
             && hosts == 4
             && opts.per_host.is_none()
-            && opts.granularity == GranularityMode::Fixed
+            && opts.granularity.is_empty()
         {
             let l = lease.as_ref().expect("lease arm ran first");
             assert!(
@@ -1230,17 +1436,8 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
         ("graceful-drain", HostFaultKind::DegradedNvme),
     ] {
         let faults = vec![HostFault { at: fault_at, host: 0, kind }];
-        let s = run_sharded_fleet_granular(
-            hosts,
-            per_host,
-            shard_ops,
-            FleetMode::StateMigration,
-            7,
-            !opts.sequential,
-            opts.workers,
-            &[opts.granularity],
-            &faults,
-        );
+        let arm = base.clone().with_faults(faults);
+        let s = run_sharded_fleet(hosts, per_host, shard_ops, FleetMode::StateMigration, 7, &arm);
         assert_eq!(
             s.total_ops,
             s.vms as u64 * shard_ops,
@@ -1261,7 +1458,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
             );
         }
         // Pinned on the canonical topology, like the t3 acceptance.
-        if hosts == 4 && opts.per_host.is_none() && opts.granularity == GranularityMode::Fixed {
+        if hosts == 4 && opts.per_host.is_none() && opts.granularity.is_empty() {
             if kind == HostFaultKind::Crash {
                 assert!(s.vms_rebuilt > 0, "{label}: the crash rebuilt nothing");
             } else {
@@ -1338,19 +1535,8 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
     );
     let mut nvme_only: Option<ShardedSummary> = None;
     for (label, remote) in [("nvme-only", false), ("remote-armed", true)] {
-        let s = run_sharded_fleet_market(
-            hosts,
-            per_host,
-            shard_ops,
-            FleetMode::StaticPlacement,
-            7,
-            !opts.sequential,
-            opts.workers,
-            &[opts.granularity],
-            &[],
-            remote,
-            300,
-        );
+        let arm = base.clone().with_remote(remote).with_donor_pct(300);
+        let s = run_sharded_fleet(hosts, per_host, shard_ops, FleetMode::StaticPlacement, 7, &arm);
         assert_eq!(
             s.total_ops,
             s.vms as u64 * shard_ops,
@@ -1382,7 +1568,7 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
         if remote
             && hosts == 4
             && opts.per_host.is_none()
-            && opts.granularity == GranularityMode::Fixed
+            && opts.granularity.is_empty()
         {
             let base = nvme_only.as_ref().expect("nvme-only arm ran first");
             assert!(s.remote_leases >= 1, "{label}: no lease ever matched: {s:?}");
@@ -1419,5 +1605,273 @@ pub fn fleet_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<T
             nvme_only = Some(s);
         }
     }
-    vec![t, t2, t3, t4, t5]
+    let mut tables = vec![t, t2, t3, t4, t5];
+    if opts.clone_storm {
+        tables.extend(clone_storm_with_hosts(scale, hosts, opts));
+    }
+    tables
+}
+
+/// Shape-independent invariants every storm run must hold: no lost
+/// work (base or storm), every staged storm VM admitted, Σ budgets
+/// exactly conserved at the audit and end-to-end, atomic hand-offs.
+fn assert_storm_invariants(label: &str, s: &ShardedSummary, arm: &FleetRunOpts, base_ops: u64) {
+    let storm_ops = arm.storm_total() as u64 * storm_vm_ops(&arm.clone);
+    assert_eq!(
+        s.total_ops,
+        s.vms as u64 * base_ops + storm_ops,
+        "{label}: storm fleet lost work"
+    );
+    assert_eq!(
+        s.clones_staged as usize,
+        arm.storm_total(),
+        "{label}: staging miscounted"
+    );
+    assert_eq!(
+        s.clones_admitted as usize, arm.storm_clones,
+        "{label}: not every image-backed clone was admitted"
+    );
+    assert_eq!(
+        s.clone_cold_boots as usize, arm.storm_cold,
+        "{label}: not every cold-boot VM was admitted"
+    );
+    assert_eq!(
+        s.conservation_violations, 0,
+        "{label}: budgets drifted under the storm"
+    );
+    assert_eq!(
+        s.budget_total_end, s.budget_total_start,
+        "{label}: Σ budgets not conserved with the storm armed"
+    );
+    assert_eq!(s.handoff_violations, 0, "{label}: non-atomic hand-off");
+}
+
+/// The registered `clone_storm` experiment driver (8 host shards by
+/// default; the CLI reaches it via `flexswap fleet --hosts N
+/// --clone-storm`).
+pub fn clone_storm(scale: Scale) -> Vec<Table> {
+    clone_storm_with_hosts(scale, 8, FleetRunOpts::default())
+}
+
+/// Boot-storm autoscaling (PR 10): a storm of image-backed clones —
+/// 256 over at most 100 fleet ticks at Full scale — lands on a busy
+/// 8-host fleet, with an interleaved cold-boot comparison arm. Three
+/// tables:
+///
+/// 1. **Clone vs cold boot** — time-to-first-useful-work p99 per arm,
+///    measured from each storm VM's admission tick. Image-backed
+///    clones must strictly beat cold boots: their boot faults
+///    decompress shared pool entries (and boot-streaming runs ahead)
+///    where a cold boot pays the full NVMe path per fault. Also
+///    asserts the golden-image dedup ratio exceeds 1, Σ budgets hold
+///    exactly, and the summary is byte-identical across engines and
+///    worker counts with the storm armed.
+/// 2. **Spread vs pack** — placement policy for image-sharing clones.
+///    Spread installs the image once per host; pack rides one host's
+///    copy, so it must hold the image on fewer hosts and store fewer
+///    image bytes fleet-wide.
+/// 3. **Balloon vs swap vs balloon+swap** (arxiv 1411.7344) — the same
+///    storm under three reclaim renderings: a squeezed guest memory
+///    limit (balloon), host swap with the full boot set resident
+///    (swap), and the middle path.
+pub fn clone_storm_with_hosts(scale: Scale, hosts: usize, opts: FleetRunOpts) -> Vec<Table> {
+    let per_host = opts.per_host.unwrap_or(scale.u(2, 4) as usize);
+    let ops = scale.u(4_000, 12_000);
+    let clones = if opts.storm_clones > 0 { opts.storm_clones } else { scale.u(48, 256) as usize };
+    let cold = if opts.storm_cold > 0 { opts.storm_cold } else { scale.u(16, 64) as usize };
+    let base = FleetRunOpts {
+        faults: vec![],
+        fault_plan: FaultPlan::None,
+        remote: false,
+        donor_pct: 0,
+        clone: CloneConfig::default(),
+        storm_clones: 0,
+        storm_cold: 0,
+        storm_limit_pct: 0,
+        clone_storm: false,
+        ..opts.clone()
+    };
+    let storm = base.with_storm(clones, cold);
+
+    let mut t = Table::new(
+        "clone storm: image-backed admission vs cold boot",
+        &[
+            "config",
+            "hosts",
+            "clones",
+            "cold",
+            "admit_ticks",
+            "clone_first_work_p99_us",
+            "cold_first_work_p99_us",
+            "dedup_ratio",
+            "image_stored_mb",
+            "image_hits",
+            "cow_breaks",
+            "major_faults",
+            "runtime_ms",
+        ],
+    );
+    let s = run_sharded_fleet(hosts, per_host, ops, FleetMode::StaticPlacement, 7, &storm);
+    assert_storm_invariants("clone-storm", &s, &storm, ops);
+    let batch = storm.clone.clones_per_tick.max(1);
+    let admit_ticks = storm.storm_total().div_ceil(batch);
+    if opts.storm_clones == 0 {
+        assert!(
+            admit_ticks <= 100,
+            "clone-storm: default storm needs {admit_ticks} ticks (> 100) to admit"
+        );
+    }
+    if storm.storm_clones > 0 && storm.storm_cold > 0 {
+        assert!(
+            s.clone_first_work_p99_ns < s.cold_first_work_p99_ns,
+            "clone-storm: image-backed admission did not beat cold boot on \
+             time-to-first-useful-work p99 ({} vs {} ns)",
+            s.clone_first_work_p99_ns,
+            s.cold_first_work_p99_ns
+        );
+    }
+    if clones >= 2 * hosts {
+        assert!(
+            s.image_dedup_ratio() > 1.0,
+            "clone-storm: golden image did not dedup (ratio {:.2})",
+            s.image_dedup_ratio()
+        );
+    }
+    // Engine equivalence with the storm armed: the sequential merge
+    // oracle and a pinned worker count must reproduce the parallel
+    // summary byte-for-byte (clone admission happens only at the
+    // fleet-tick barrier, so nothing engine-dependent can leak in).
+    let seq = run_sharded_fleet(
+        hosts,
+        per_host,
+        ops,
+        FleetMode::StaticPlacement,
+        7,
+        &storm.clone().with_sequential(true),
+    );
+    assert_eq!(s, seq, "clone-storm: summary differs between engines");
+    let w3 = run_sharded_fleet(
+        hosts,
+        per_host,
+        ops,
+        FleetMode::StaticPlacement,
+        7,
+        &storm.clone().with_workers(Some(3)),
+    );
+    assert_eq!(s, w3, "clone-storm: summary differs at a pinned worker count");
+    t.row(vec![
+        "storm".into(),
+        hosts.to_string(),
+        clones.to_string(),
+        cold.to_string(),
+        admit_ticks.to_string(),
+        format!("{:.0}", s.clone_first_work_p99_ns as f64 / 1e3),
+        format!("{:.0}", s.cold_first_work_p99_ns as f64 / 1e3),
+        format!("{:.1}", s.image_dedup_ratio()),
+        format!("{:.1}", s.image_stored_bytes as f64 / 1e6),
+        s.image_hits.to_string(),
+        s.image_cow_breaks.to_string(),
+        s.total_majors.to_string(),
+        format!("{:.0}", s.runtime_ns as f64 / 1e6),
+    ]);
+
+    // Spread vs pack: clone-only storms (no cold arm) so the placement
+    // comparison is pure.
+    let mut t2 = Table::new(
+        "clone storm: spread vs pack placement (image-sharing clones)",
+        &[
+            "config",
+            "host",
+            "clones",
+            "image_stored_mb",
+            "dedup_ratio",
+            "clone_first_work_p99_us",
+            "major_faults",
+        ],
+    );
+    let holding = |x: &ShardedSummary| x.clones_per_host.iter().filter(|&&c| c > 0).count();
+    let mut spread_arm: Option<ShardedSummary> = None;
+    for (label, pack) in [("spread", false), ("pack", true)] {
+        let arm = storm.clone().with_pack(pack).with_storm(clones, 0);
+        let sp = run_sharded_fleet(hosts, per_host, ops, FleetMode::StaticPlacement, 7, &arm);
+        assert_storm_invariants(label, &sp, &arm, ops);
+        for (h, &c) in sp.clones_per_host.iter().enumerate() {
+            t2.row(vec![
+                label.into(),
+                h.to_string(),
+                c.to_string(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]);
+        }
+        t2.row(vec![
+            label.into(),
+            "all".into(),
+            sp.clones_admitted.to_string(),
+            format!("{:.1}", sp.image_stored_bytes as f64 / 1e6),
+            format!("{:.1}", sp.image_dedup_ratio()),
+            format!("{:.0}", sp.clone_first_work_p99_ns as f64 / 1e3),
+            sp.total_majors.to_string(),
+        ]);
+        if pack {
+            let spread = spread_arm.as_ref().expect("spread arm ran first");
+            if hosts > 1 && clones >= 2 * hosts {
+                assert!(
+                    holding(&sp) < holding(spread),
+                    "{label}: packing spread the image anyway ({} vs {} hosts)",
+                    holding(&sp),
+                    holding(spread)
+                );
+                assert!(
+                    sp.image_stored_bytes < spread.image_stored_bytes,
+                    "{label}: packing stored no fewer image bytes ({} vs {})",
+                    sp.image_stored_bytes,
+                    spread.image_stored_bytes
+                );
+            }
+        } else {
+            spread_arm = Some(sp);
+        }
+    }
+
+    // Balloon vs swap vs balloon+swap under the same storm: ballooning
+    // is rendered as a squeezed per-VM memory limit (the guest hands
+    // pages back before host swap is involved), swap as the full boot
+    // working set resident with overflow on the image/swap path. The
+    // swap arm *is* the main storm run above (limit = 100%).
+    let mut t3 = Table::new(
+        "clone storm: balloon vs swap vs balloon+swap",
+        &[
+            "config",
+            "limit_pct",
+            "clone_first_work_p99_us",
+            "cold_first_work_p99_us",
+            "major_faults",
+            "p99_stall_us",
+            "runtime_ms",
+        ],
+    );
+    for (label, limit_pct) in [("balloon", 55), ("balloon+swap", 80), ("swap", 100)] {
+        let sb;
+        let arm_summary = if limit_pct == 100 {
+            &s
+        } else {
+            let arm = storm.clone().with_storm_limit_pct(limit_pct);
+            sb = run_sharded_fleet(hosts, per_host, ops, FleetMode::StaticPlacement, 7, &arm);
+            assert_storm_invariants(label, &sb, &arm, ops);
+            &sb
+        };
+        t3.row(vec![
+            label.into(),
+            limit_pct.to_string(),
+            format!("{:.0}", arm_summary.clone_first_work_p99_ns as f64 / 1e3),
+            format!("{:.0}", arm_summary.cold_first_work_p99_ns as f64 / 1e3),
+            arm_summary.total_majors.to_string(),
+            format!("{:.0}", arm_summary.p99_stall_ns as f64 / 1e3),
+            format!("{:.0}", arm_summary.runtime_ns as f64 / 1e6),
+        ]);
+    }
+    vec![t, t2, t3]
 }

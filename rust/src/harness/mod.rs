@@ -117,6 +117,12 @@ pub fn registry() -> Vec<Experiment> {
             run: fleet::fleet,
         },
         Experiment {
+            id: "clone_storm",
+            title: "Boot-storm autoscaling: clone-from-image admission with streamed memory on an 8-host fleet (PR 10 extension)",
+            expectation: "image-backed clones implant with zero resident memory and strictly beat cold boots on time-to-first-useful-work p99 (boot faults decompress shared pool entries and the boot stream runs ahead, vs full NVMe zero-fill per cold fault); golden-image dedup ratio > 1 with clones sharing one image; packing holds the image on fewer hosts and stores fewer image bytes than spreading; Σ budgets exactly conserved and summaries byte-identical across engines and worker counts with the storm armed",
+            run: fleet::clone_storm,
+        },
+        Experiment {
             id: "granularity",
             title: "Swap granularity: strict-4k vs huge vs auto on a uniform-cold sweep (PR 8 extension)",
             expectation: "huge moves whole 2MB regions: strictly fewer major faults per GB reclaimed and strictly fewer NVMe requests than strict-4k; region-level scan burns far less CPU; auto splits only refault-heavy regions",
@@ -185,11 +191,12 @@ pub fn run_by_id(id: &str, scale: Scale) -> Option<String> {
 /// the execution-engine knobs: `--sequential` (merge-loop oracle
 /// instead of the parallel epoch engine), `--workers N`, `--vms N`
 /// (total population, split evenly across hosts), `--fault-plan`
-/// (arm randomized host faults in the soak), and `--remote` (arm the
-/// remote-memory marketplace in the soak).
+/// (arm randomized host faults in the soak), `--remote` (arm the
+/// remote-memory marketplace in the soak), and `--clone-storm`
+/// (append the PR 10 boot-storm tables).
 pub fn run_fleet_with_hosts(scale: Scale, hosts: usize, opts: fleet::FleetRunOpts) -> String {
-    let tables = fleet::fleet_with_hosts(scale, hosts, opts);
     let engine = if opts.sequential { "sequential merge" } else { "parallel epochs" };
+    let tables = fleet::fleet_with_hosts(scale, hosts, opts);
     let header = format!(
         "## Fleet control plane ({hosts} host shards, {engine})\n\n*Expectation:* \
          per-host budget held at every tick (mid-migration included), \
@@ -216,9 +223,9 @@ pub fn run_fleet_soak(
     opts: fleet::FleetRunOpts,
     out_dir: &str,
 ) -> String {
-    let tables = fleet::fleet_soak(scale, hosts, seeds, opts);
     let chaos = if opts.fault_plan == fleet::FaultPlan::Random { ", random faults" } else { "" };
     let remote = if opts.remote { ", remote marketplace" } else { "" };
+    let tables = fleet::fleet_soak(scale, hosts, seeds, opts);
     let header = format!(
         "## Fleet soak ({hosts} host shards × {seeds} seeds{chaos}{remote})\n\n*Expectation:* \
          every seed holds the budget / conservation / atomic-hand-off \
@@ -238,7 +245,7 @@ mod tests {
         let ids: Vec<_> = registry().iter().map(|e| e.id).collect();
         for want in [
             "fig1", "fig2", "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "figpf",
-            "tiers", "fleet", "granularity", "fig12", "fig13",
+            "tiers", "fleet", "clone_storm", "granularity", "fig12", "fig13",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -12,6 +12,7 @@
 //!   flexswap fleet --hosts 8 --seeds 6 --fault-plan random  # chaos soak
 //!   flexswap fleet --hosts 8 --granularity auto  # PR 8 swap-granularity mode
 //!   flexswap fleet --hosts 8 --seeds 4 --remote  # PR 9 remote-marketplace soak
+//!   flexswap fleet --hosts 8 --clone-storm  # PR 10 boot-storm tables (and soak arm)
 //!   flexswap fleet --seeds 2 --out-dir results/chaos  # per-arm CSV directory
 //!   flexswap all [--full]         # run every experiment (EXPERIMENTS.md input)
 //!   flexswap selfcheck            # artifacts + PJRT smoke test
@@ -129,14 +130,20 @@ fn main() {
 
     if cmd == "fleet" {
         let h = hosts.unwrap_or(4);
-        let opts = FleetRunOpts {
-            sequential: args.iter().any(|a| a == "--sequential"),
-            workers,
-            per_host: vms.map(|v| v.div_ceil(h)),
-            fault_plan: fault_plan.unwrap_or_default(),
-            granularity: granularity.unwrap_or_default(),
-            remote: args.iter().any(|a| a == "--remote"),
-        };
+        let mut opts = FleetRunOpts::default()
+            .with_sequential(args.iter().any(|a| a == "--sequential"))
+            .with_workers(workers)
+            .with_per_host(vms.map(|v| v.div_ceil(h)))
+            .with_fault_plan(fault_plan.unwrap_or_default())
+            .with_granularity(granularity.map(|g| vec![g]).unwrap_or_default())
+            .with_remote(args.iter().any(|a| a == "--remote"));
+        // `--clone-storm`: append the PR 10 boot-storm tables (and arm
+        // the storm in the soak). Storm size follows the scale knob —
+        // 256 clones + 64 cold boots at --full, admitted 4 per tick.
+        if args.iter().any(|a| a == "--clone-storm") {
+            opts.clone_storm = true;
+            opts = opts.with_storm(scale.u(48, 256) as usize, scale.u(16, 64) as usize);
+        }
         if let Some(k) = seeds {
             let dir = out_dir.as_deref().unwrap_or("results");
             println!("{}", run_fleet_soak(scale, h, k, opts, dir));

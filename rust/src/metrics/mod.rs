@@ -300,6 +300,12 @@ pub struct FleetStats {
     /// consumer re-faults them as cold misses.
     pub remote_dropped_units: u64,
     pub remote_dropped_bytes: u64,
+    /// Clone-from-image admission (PR 10): storm VMs staged at the
+    /// scheduler, image-backed clones admitted at fleet ticks, and
+    /// cold-boot comparison VMs admitted alongside them.
+    pub clones_staged: u64,
+    pub clones_admitted: u64,
+    pub clone_cold_boots: u64,
 }
 
 impl FleetStats {

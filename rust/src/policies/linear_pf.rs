@@ -28,6 +28,12 @@ pub struct LinearPf {
     /// (decompress, no device I/O), so prefetching it mostly burns
     /// Swapper-queue slots. Off by default (paper §6.6 behavior).
     pub nvme_only: bool,
+    /// How many successor units each fault streams while the recovery
+    /// boost window is open. The stock policy streams 2 (one successor
+    /// plus one deeper in-window, §6.8); clone-from-image admission
+    /// (PR 10) raises it so the boot working set pulls ahead of the
+    /// guest out of the shared golden image.
+    pub depth: u64,
     pub issued: u64,
     pub ctx_missing: u64,
     pub translation_failed: u64,
@@ -40,6 +46,7 @@ impl LinearPf {
         LinearPf {
             mode,
             nvme_only: false,
+            depth: 2,
             issued: 0,
             ctx_missing: 0,
             translation_failed: 0,
@@ -50,6 +57,13 @@ impl LinearPf {
     /// Tier-aware variant: see [`LinearPf::nvme_only`].
     pub fn tier_aware(mode: PfMode) -> Self {
         LinearPf { nvme_only: true, ..Self::new(mode) }
+    }
+
+    /// Boot-streaming variant (PR 10): while the clone's post-implant
+    /// recovery window is open, each fault streams `depth` successor
+    /// units ahead. `depth == 2` is exactly the stock policy.
+    pub fn boot_stream(mode: PfMode, depth: u64) -> Self {
+        LinearPf { depth: depth.max(1), ..Self::new(mode) }
     }
 
     /// Issue (or tier-skip) one prefetch.
@@ -81,11 +95,16 @@ impl Policy for LinearPf {
                 if next < api.units() {
                     self.emit(next, api);
                 }
-                // Recovery boost: prefetch one unit deeper while the
-                // post-release window is open (the working set is
-                // coming back wholesale — §6.8).
-                if api.recovery_mode() && unit + 2 < api.units() {
-                    self.emit(unit + 2, api);
+                // Recovery boost: stream deeper while the post-release
+                // window is open (the working set is coming back
+                // wholesale — §6.8; clone boot streaming raises
+                // `depth`, PR 10).
+                if api.recovery_mode() {
+                    for d in 2..=self.depth {
+                        if unit + d < api.units() {
+                            self.emit(unit + d, api);
+                        }
+                    }
                 }
             }
             PfMode::Gva => {
@@ -108,12 +127,16 @@ impl Policy for LinearPf {
                     }
                     None => self.translation_failed += 1,
                 }
-                // Recovery boost: one GVA-successor deeper in-window.
+                // Recovery boost: stream GVA-successors deeper
+                // in-window (`depth` of them for clone boot streaming).
                 if api.recovery_mode() {
-                    let second = next_gva_page + unit_frames;
-                    if let Some(hva_frame) = api.gva_to_hva(second, ctx.cr3) {
-                        let u2: UnitId = api.unit_of_frame(hva_frame);
-                        self.emit(u2, api);
+                    let mut gva_page = next_gva_page;
+                    for _ in 2..=self.depth {
+                        gva_page += unit_frames;
+                        if let Some(hva_frame) = api.gva_to_hva(gva_page, ctx.cr3) {
+                            let u2: UnitId = api.unit_of_frame(hva_frame);
+                            self.emit(u2, api);
+                        }
                     }
                 }
             }
@@ -242,6 +265,41 @@ mod tests {
         ev2.fault.gpa_frame = 30;
         mm.on_fault(&vm, &ev2, 1);
         assert!(mm.core.queue.contains(31));
+    }
+
+    #[test]
+    fn boot_stream_depth_streams_ahead_only_in_recovery_window() {
+        let (mut mm, vm, _) = setup(1.0);
+        mm.add_policy(Box::new(LinearPf::boot_stream(PfMode::Hva, 4)));
+        for u in 20..=24 {
+            mm.core.states[u] = UnitState::Swapped;
+        }
+        let ev = crate::uffd::UffdEvent {
+            fault: crate::vm::FaultInfo {
+                unit: 20,
+                gpa_frame: 20,
+                gva_page: 99,
+                cr3: 0,
+                ip: 0,
+                write: false,
+                vcpu: 0,
+                pre_cost: 0,
+            },
+            raised_at: 0,
+            delivered_at: 0,
+        };
+        // Outside the window: just the single successor.
+        mm.on_fault(&vm, &ev, 0);
+        assert!(mm.core.queue.contains(21));
+        assert_eq!(mm.core.counters.prefetch_issued, 1);
+        // Inside the window: depth successors stream ahead (21 is
+        // already queued, so 22..24 are the new issues).
+        mm.core.recovery_until = 1_000;
+        mm.on_fault(&vm, &ev, 10);
+        for u in 21..=24 {
+            assert!(mm.core.queue.contains(u), "unit {u} not streamed");
+        }
+        assert_eq!(mm.core.counters.prefetch_issued, 1 + 3);
     }
 
     #[test]

@@ -144,6 +144,23 @@ pub struct TierMetrics {
     /// gone and the next read of each re-faults as a cold NVMe miss.
     pub remote_dropped_units: u64,
     pub remote_dropped_bytes: u64,
+    /// Golden-image tier (PR 10): compressed bytes the host actually
+    /// holds for shared read-only clone images (dedup'd blobs, charged
+    /// once per host no matter how many clones attach).
+    pub image_stored_bytes: u64,
+    /// Σ raw image bytes across *attached clones* — what the same data
+    /// would cost if each clone carried a private copy. The dedup ratio
+    /// is `image_logical_bytes / image_stored_bytes`.
+    pub image_logical_bytes: u64,
+    /// Reads served by decompressing a shared image blob (no NVMe I/O,
+    /// no per-VM pool entry).
+    pub image_hits: u64,
+    pub image_hit_bytes: u64,
+    /// First writes to image-backed units that broke CoW into a private
+    /// shadow entry.
+    pub image_cow_breaks: u64,
+    /// Clones attached to a golden image on this host (lifetime count).
+    pub image_attaches: u64,
 }
 
 impl TierMetrics {
@@ -173,6 +190,17 @@ impl TierMetrics {
             0.0
         } else {
             self.pool_hits as f64 / total as f64
+        }
+    }
+
+    /// Golden-image dedup ratio: logical (per-clone) bytes over the
+    /// bytes the host actually stores. 1.0 when no image is held; > 1.0
+    /// as soon as two clones share one image.
+    pub fn image_dedup_ratio(&self) -> f64 {
+        if self.image_stored_bytes == 0 {
+            1.0
+        } else {
+            self.image_logical_bytes as f64 / self.image_stored_bytes as f64
         }
     }
 }
@@ -384,6 +412,45 @@ pub trait SwapBackend: Send {
 
     /// Stored bytes currently held in the remote tier.
     fn remote_bytes(&self) -> u64 {
+        0
+    }
+
+    // ---- Golden-image tier (PR 10, clone-from-image admission) ----
+    //
+    // Contract: a golden image is *host-shared read-only* state keyed
+    // by image id, not per-VM state — `list_units`, `export_unit`,
+    // `salvage_vm` and migration never see it, so a clone's crash or
+    // migration cannot damage the image other clones read from.
+    // `install_image_unit` stores one unit's content into the image,
+    // content-addressed: byte-identical compressed blobs across units
+    // (and across images) are stored once and refcounted, which is
+    // what makes the dedup ratio measurable. `attach_image` binds a VM
+    // to an image and bumps its refcount; detach happens inside
+    // `forget_vm` (migration, crash rebuild, or teardown), and the
+    // image's storage is released only when the last attached clone on
+    // the host is forgotten. Reads of an attached VM's units that have
+    // no private copy fall through to the image (decompress at pool
+    // cost); the first *write* to such a unit breaks CoW by creating
+    // an ordinary private entry that shadows the image from then on.
+    // Defaults are no-ops so accounting-only backends stay image-free.
+
+    /// Store one unit's content into golden image `image` (dedup'd,
+    /// content-addressed). Installing the same unit twice replaces the
+    /// mapping. No-op on backends without an image tier.
+    fn install_image_unit(&mut self, _image: u32, _unit: UnitId, _data: &[u8]) {}
+
+    /// Attach `vm` to `image`: reads of units the image covers fall
+    /// through to it until a private write shadows them. Bumps the
+    /// image refcount.
+    fn attach_image(&mut self, _vm: VmId, _image: u32) {}
+
+    /// Image the VM is attached to, if any.
+    fn image_of(&self, _vm: VmId) -> Option<u32> {
+        None
+    }
+
+    /// Units mapped by golden image `image` (0 = not installed here).
+    fn image_units(&self, _image: u32) -> u64 {
         0
     }
 }

@@ -26,7 +26,7 @@
 //! op reproduces the PR 1 cost structure — the paper-figure
 //! experiments run in that mode.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::{SwCost, TierConfig};
 use crate::hw::{IoKind, Nvme};
@@ -48,6 +48,53 @@ struct Entry {
     nvme_ready_at: Time,
     /// Pool-partition class the entry's bytes are accounted to.
     class: u8,
+}
+
+/// One shared read-only golden image (PR 10): content-addressed
+/// compressed blobs with a unit → blob mapping, refcounted across
+/// attached clones. Byte-identical compressed page images collapse to
+/// one stored blob — the dedup the clone-storm experiment measures.
+/// Image state is keyed by image id, not VM id, so per-VM salvage /
+/// export / migration never touches it.
+#[derive(Debug, Default)]
+struct GoldenImage {
+    blobs: Vec<Compressed>,
+    /// Content-address index: serialized blob bytes → blob slot.
+    dedup: BTreeMap<Vec<u8>, u32>,
+    /// Unit → blob slot.
+    map: BTreeMap<UnitId, u32>,
+    /// Σ raw bytes of the mapped units (what one clone's private copy
+    /// of the image would occupy uncompressed).
+    raw_bytes: u64,
+    /// Σ stored bytes of the dedup'd blobs (what the host actually
+    /// holds, once, for every attached clone).
+    stored_bytes: u64,
+    /// Attached clones on this host; the image is dropped at zero.
+    refs: u32,
+}
+
+/// Content-address key of a compressed blob (discriminant + raw length
+/// + payload): byte-identical page images — the common case across
+/// units synthesized from one deterministic content seed — collapse to
+/// a single stored blob.
+fn blob_key(img: &Compressed) -> Vec<u8> {
+    let mut k = Vec::with_capacity(5 + img.stored_bytes() as usize);
+    match img {
+        Compressed::Zero { len } => {
+            k.push(0);
+            k.extend_from_slice(&len.to_le_bytes());
+        }
+        Compressed::Rle { len, data } => {
+            k.push(1);
+            k.extend_from_slice(&len.to_le_bytes());
+            k.extend_from_slice(data);
+        }
+        Compressed::Raw(data) => {
+            k.push(2);
+            k.extend_from_slice(data);
+        }
+    }
+    k
 }
 
 /// Two-tier swap store: compressed pool + NVMe writeback.
@@ -80,6 +127,10 @@ pub struct TieredBackend {
     /// Pool reject threshold pushed by the dt-reclaimer's adaptive
     /// admission (overrides `cfg.reject_pct` when set).
     admission_override: Option<u8>,
+    /// Golden images held by this host (PR 10), and which image each
+    /// attached clone reads through.
+    images: BTreeMap<u32, GoldenImage>,
+    vm_image: BTreeMap<VmId, u32>,
     metrics: TierMetrics,
 }
 
@@ -100,6 +151,8 @@ impl TieredBackend {
             next_stamp: 1,
             next_token: 0,
             admission_override: None,
+            images: BTreeMap::new(),
+            vm_image: BTreeMap::new(),
             metrics: TierMetrics::default(),
         }
     }
@@ -174,6 +227,27 @@ impl TieredBackend {
                 true
             }
             None => false,
+        }
+    }
+
+    /// Shared-image blob covering `(vm, unit)`, if the VM is an
+    /// attached clone and no private copy shadows the image.
+    fn image_blob(&self, vm: VmId, unit: UnitId) -> Option<&Compressed> {
+        let gi = self.images.get(self.vm_image.get(&vm)?)?;
+        gi.map.get(&unit).map(|&b| &gi.blobs[b as usize])
+    }
+
+    /// Detach a clone from its golden image (refcount down; the image's
+    /// stored bytes are released only when the last clone detaches).
+    fn detach_image(&mut self, vm: VmId) {
+        let Some(img_id) = self.vm_image.remove(&vm) else { return };
+        let Some(gi) = self.images.get_mut(&img_id) else { return };
+        gi.refs -= 1;
+        self.metrics.image_logical_bytes -= gi.raw_bytes;
+        if gi.refs == 0 {
+            let stored = gi.stored_bytes;
+            self.images.remove(&img_id);
+            self.metrics.image_stored_bytes -= stored;
         }
     }
 
@@ -289,7 +363,14 @@ impl SwapBackend for TieredBackend {
         let raw = data.len() as u64;
         // Poll-loop pickup jitter (one draw, flat-backend compatible).
         let pickup = now + rng.below(self.poll_ns.max(1));
-        self.remove_entry(vm, unit);
+        let had_private = self.remove_entry(vm, unit);
+        // First write to an image-backed unit with no private copy yet:
+        // CoW break. The private entry stored below permanently shadows
+        // the read-only image for this unit; the image itself is
+        // untouched (other clones keep reading it).
+        if !had_private && self.image_blob(vm, unit).is_some() {
+            self.metrics.image_cow_breaks += 1;
+        }
 
         let mut cpu = 0;
         let mut writeback = Vec::new();
@@ -437,6 +518,23 @@ impl SwapBackend for TieredBackend {
                 IoReceipt { token, completes_at: done, tier: SwapTier::Nvme, writeback: vec![] }
             }
             None => {
+                // Attached clone, no private copy: serve the unit out
+                // of the shared golden image — decompress at pool cost,
+                // no NVMe I/O, no per-VM entry (the read-only CoW path,
+                // PR 10).
+                if let Some(blob) = self.image_blob(vm, unit) {
+                    let raw = blob.raw_len() as u64;
+                    codec::decompress(blob, out);
+                    let cpu = self.scaled(self.decompress_4k_ns, raw);
+                    self.metrics.image_hits += 1;
+                    self.metrics.image_hit_bytes += raw;
+                    return IoReceipt {
+                        token,
+                        completes_at: pickup + cpu,
+                        tier: SwapTier::Pool,
+                        writeback: vec![],
+                    };
+                }
                 // Never written: cold pre-existing swap-file content
                 // (zero-filled). Flat mode is accounting-only and leaves
                 // `out` untouched.
@@ -452,13 +550,21 @@ impl SwapBackend for TieredBackend {
     }
 
     fn discard(&mut self, vm: VmId, unit: UnitId) {
+        // Only a private copy can be discarded: the shared image is
+        // read-only and refcounted, so an image-backed unit with no
+        // private shadow is immune (other clones still read it).
         if self.remove_entry(vm, unit) {
             self.metrics.discards += 1;
         }
     }
 
     fn tier_of(&self, vm: VmId, unit: UnitId) -> Option<SwapTier> {
-        self.entry(vm, unit).map(|e| e.tier)
+        // Image-backed units with no private copy report Pool: a fault
+        // there decompresses out of the host-resident image, exactly
+        // like a pool hit and with the same cost model.
+        self.entry(vm, unit)
+            .map(|e| e.tier)
+            .or_else(|| self.image_blob(vm, unit).map(|_| SwapTier::Pool))
     }
 
     fn metrics(&self) -> &TierMetrics {
@@ -561,6 +667,10 @@ impl SwapBackend for TieredBackend {
     }
 
     fn forget_vm(&mut self, vm: VmId) -> usize {
+        // Detach from any golden image first: a clone may hold zero
+        // private entries (its store was never even grown), but the
+        // image refcount must still step down.
+        self.detach_image(vm);
         let Some(store) = self.stores.get(vm) else { return 0 };
         let units: Vec<UnitId> = (0..store.len() as UnitId)
             .filter(|&u| store[u as usize].is_some())
@@ -680,6 +790,57 @@ impl SwapBackend for TieredBackend {
 
     fn remote_bytes(&self) -> u64 {
         self.metrics.remote_bytes
+    }
+
+    // ---- Golden-image tier (PR 10) ----
+
+    /// Store one unit's content into a golden image, content-addressed:
+    /// byte-identical compressed blobs are stored once and shared by
+    /// every unit (and clone) that maps them. Gated on the pool being
+    /// enabled — the flat (paper) backend retains no content, so it
+    /// can hold no image either.
+    fn install_image_unit(&mut self, image: u32, unit: UnitId, data: &[u8]) {
+        if !self.cfg.pool_enabled() {
+            return;
+        }
+        let img = codec::compress(data);
+        let raw = data.len() as u64;
+        let stored = img.stored_bytes();
+        let key = blob_key(&img);
+        let gi = self.images.entry(image).or_default();
+        let blob = match gi.dedup.get(&key) {
+            Some(&b) => b,
+            None => {
+                let b = gi.blobs.len() as u32;
+                gi.dedup.insert(key, b);
+                gi.blobs.push(img);
+                gi.stored_bytes += stored;
+                self.metrics.image_stored_bytes += stored;
+                b
+            }
+        };
+        if gi.map.insert(unit, blob).is_none() {
+            gi.raw_bytes += raw;
+        }
+    }
+
+    /// Attach a clone to an installed image (refcount up). Attaching to
+    /// an image this host does not hold is a no-op: the clone simply
+    /// faults cold, it never reads through a phantom image.
+    fn attach_image(&mut self, vm: VmId, image: u32) {
+        let Some(gi) = self.images.get_mut(&image) else { return };
+        gi.refs += 1;
+        self.vm_image.insert(vm, image);
+        self.metrics.image_attaches += 1;
+        self.metrics.image_logical_bytes += gi.raw_bytes;
+    }
+
+    fn image_of(&self, vm: VmId) -> Option<u32> {
+        self.vm_image.get(&vm).copied()
+    }
+
+    fn image_units(&self, image: u32) -> u64 {
+        self.images.get(&image).map(|g| g.map.len() as u64).unwrap_or(0)
     }
 }
 
@@ -1315,6 +1476,162 @@ mod tests {
         assert_eq!(b.tier_of(0, 2), Some(SwapTier::Pool));
         assert_eq!(b.remote_recall(u64::MAX / 2, 200, &mut n), 0);
         assert_eq!(b.tier_of(0, 2), Some(SwapTier::Pool), "recall touched the fresh copy");
+    }
+
+    // ---- Golden-image tier (PR 10, clone-from-image) ----
+
+    /// Image content with deliberately few distinct pages, so the
+    /// content-addressed store collapses them.
+    fn image_page(u: u64) -> Vec<u8> {
+        pattern_page(4096, (u % 2) as u8 + 1)
+    }
+
+    fn install_image(b: &mut TieredBackend, image: u32, units: u64) {
+        for u in 0..units {
+            b.install_image_unit(image, u, &image_page(u));
+        }
+    }
+
+    #[test]
+    fn image_install_dedups_content_addressed_blobs() {
+        let (mut b, _, _) = setup(TierConfig::default());
+        install_image(&mut b, 1, 8);
+        assert_eq!(b.image_units(1), 8);
+        // 8 units, 2 distinct contents: exactly 2 blobs stored.
+        let one = codec::compress(&image_page(0)).stored_bytes();
+        let two = codec::compress(&image_page(1)).stored_bytes();
+        assert!(one > 0 && two > 0);
+        assert_eq!(b.metrics().image_stored_bytes, one + two);
+        // Re-installing a unit replaces the mapping, no double count.
+        b.install_image_unit(1, 3, &image_page(3));
+        assert_eq!(b.image_units(1), 8);
+        assert_eq!(b.metrics().image_stored_bytes, one + two);
+    }
+
+    #[test]
+    fn attached_clone_reads_units_out_of_image_at_pool_cost() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        install_image(&mut b, 1, 8);
+        b.attach_image(0, 1);
+        assert_eq!(b.image_of(0), Some(1));
+        assert_eq!(b.tier_of(0, 5), Some(SwapTier::Pool));
+        let mut out = Vec::new();
+        let r = b.read(0, 5, 4096, &mut out, 0, &mut n, &mut rng);
+        assert_eq!(r.tier, SwapTier::Pool);
+        assert_eq!(out, image_page(5));
+        assert_eq!(b.metrics().nvme_reads, 0, "image hit did NVMe I/O");
+        assert_eq!(b.metrics().image_hits, 1);
+        assert_eq!(b.metrics().image_hit_bytes, 4096);
+        // An unattached VM reading the same unit misses cold.
+        let r2 = b.read(7, 5, 4096, &mut out, 0, &mut n, &mut rng);
+        assert_eq!(r2.tier, SwapTier::Nvme);
+        assert_eq!(out, vec![0u8; 4096]);
+        assert_eq!(b.tier_of(7, 5), None);
+    }
+
+    #[test]
+    fn image_write_breaks_cow_into_private_shadow() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        install_image(&mut b, 1, 8);
+        b.attach_image(0, 1);
+        b.attach_image(1, 1);
+        // First write from clone 0 breaks CoW: a private entry shadows
+        // the image for (vm 0, unit 3) from now on.
+        let upd = pattern_page(4096, 0x77);
+        let w = b.write(0, 3, &upd, TierHint::Pool, 0, &mut n, &mut rng);
+        assert_eq!(w.tier, SwapTier::Pool);
+        assert_eq!(b.metrics().image_cow_breaks, 1);
+        let mut out = Vec::new();
+        b.read(0, 3, 4096, &mut out, w.completes_at, &mut n, &mut rng);
+        assert_eq!(out, upd, "private shadow not served");
+        // Clone 1 still reads the pristine image content.
+        b.read(1, 3, 4096, &mut out, w.completes_at, &mut n, &mut rng);
+        assert_eq!(out, image_page(3), "image damaged by clone 0's write");
+        // Rewrite of the already-broken unit is not another CoW break.
+        b.write(0, 3, &upd, TierHint::Pool, 100, &mut n, &mut rng);
+        assert_eq!(b.metrics().image_cow_breaks, 1);
+    }
+
+    #[test]
+    fn image_discard_is_noop_without_private_copy() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        install_image(&mut b, 1, 4);
+        b.attach_image(0, 1);
+        b.discard(0, 2);
+        assert_eq!(b.metrics().discards, 0, "discard touched the shared image");
+        assert_eq!(b.tier_of(0, 2), Some(SwapTier::Pool));
+        let mut out = Vec::new();
+        b.read(0, 2, 4096, &mut out, 0, &mut n, &mut rng);
+        assert_eq!(out, image_page(2));
+        // A private shadow IS discardable — and the unit falls back to
+        // the image afterwards, not to a cold miss.
+        b.write(0, 2, &pattern_page(4096, 9), TierHint::Pool, 10, &mut n, &mut rng);
+        b.discard(0, 2);
+        assert_eq!(b.metrics().discards, 1);
+        b.read(0, 2, 4096, &mut out, 20, &mut n, &mut rng);
+        assert_eq!(out, image_page(2));
+    }
+
+    #[test]
+    fn image_released_only_at_refcount_zero() {
+        let (mut b, _, _) = setup(TierConfig::default());
+        install_image(&mut b, 1, 8);
+        let stored = b.metrics().image_stored_bytes;
+        assert!(stored > 0);
+        b.attach_image(0, 1);
+        b.attach_image(1, 1);
+        assert_eq!(b.metrics().image_attaches, 2);
+        // Logical bytes count per clone; stored bytes are charged once
+        // — the dedup ratio the storm experiment reports.
+        assert_eq!(b.metrics().image_logical_bytes, 2 * 8 * 4096);
+        assert!(b.metrics().image_dedup_ratio() > 1.0);
+        b.forget_vm(0);
+        assert_eq!(b.image_of(0), None);
+        assert_eq!(b.image_units(1), 8, "image dropped while clone 1 still attached");
+        assert_eq!(b.metrics().image_stored_bytes, stored);
+        assert_eq!(b.metrics().image_logical_bytes, 8 * 4096);
+        b.forget_vm(1);
+        assert_eq!(b.image_units(1), 0, "image must drop at refcount zero");
+        assert_eq!(b.metrics().image_stored_bytes, 0);
+        assert_eq!(b.metrics().image_logical_bytes, 0);
+    }
+
+    #[test]
+    fn crash_salvage_of_clone_leaves_shared_image_intact() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::default());
+        install_image(&mut b, 1, 8);
+        b.attach_image(0, 1);
+        b.attach_image(1, 1);
+        // Clone 0 breaks CoW on two units: one stays pooled, one is
+        // routed to NVMe.
+        b.write(0, 1, &pattern_page(4096, 0x11), TierHint::Pool, 0, &mut n, &mut rng);
+        b.write(0, 2, &pattern_page(4096, 0x22), TierHint::Nvme, 0, &mut n, &mut rng);
+        let s = b.salvage_vm(0);
+        // Salvage saw only the private copies, never the image blobs.
+        assert_eq!(s.units.len(), 1, "exactly the NVMe shadow salvages");
+        assert_eq!(s.lost_units, 1, "exactly the pool shadow is lost");
+        assert_eq!(b.image_of(0), None, "salvage must detach the clone");
+        // The surviving clone keeps reading every image unit.
+        assert_eq!(b.image_units(1), 8);
+        let mut out = Vec::new();
+        for u in 0..8u64 {
+            b.read(1, u, 4096, &mut out, 1_000, &mut n, &mut rng);
+            assert_eq!(out, image_page(u), "survivor lost image unit {u}");
+        }
+    }
+
+    #[test]
+    fn flat_backend_holds_no_image() {
+        let (mut b, mut n, mut rng) = setup(TierConfig::flat());
+        install_image(&mut b, 1, 4);
+        assert_eq!(b.image_units(1), 0, "flat (paper) backend grew image state");
+        b.attach_image(0, 1);
+        assert_eq!(b.image_of(0), None);
+        let mut out = Vec::new();
+        let r = b.read(0, 2, 4096, &mut out, 0, &mut n, &mut rng);
+        assert_eq!(r.tier, SwapTier::Nvme);
+        assert!(out.is_empty(), "flat mode stayed accounting-only");
+        assert_eq!(b.metrics().image_stored_bytes, 0);
     }
 
     #[test]

@@ -21,7 +21,13 @@
 //! the pressured static-placement fleet, chaos seeds with leases armed
 //! (donor crashes drop staged entries, consumer crashes return the
 //! full escrow), and seq/par byte-identity with the marketplace and
-//! random fault plans armed together.
+//! random fault plans armed together. PR 10 adds the clone-storm
+//! gates: image-backed clones admitted at the fleet-tick barrier must
+//! all land and finish, beat the cold-boot arm on
+//! time-to-first-useful-work, dedup the golden image, survive chaos
+//! schedules (including the crash of an image-holding host), and stay
+//! byte-identical across engines and worker counts — every run through
+//! the ONE unified `run_sharded_fleet(…, &FleetRunOpts)` entry point.
 
 use std::sync::{Arc, Mutex};
 
@@ -32,8 +38,7 @@ use flexswap::config::{
 use flexswap::coordinator::{Machine, Mechanism, VmSetup};
 use flexswap::daemon::{Arbiter, FleetScheduler, FleetVmSpec, Sla, VmReport};
 use flexswap::harness::fleet::{
-    random_fault_plan, run_sharded_fleet, run_sharded_fleet_exec, run_sharded_fleet_faulted,
-    run_sharded_fleet_granular, run_sharded_fleet_market, FleetMode, ShardedSummary,
+    random_fault_plan, run_sharded_fleet, storm_vm_ops, FleetMode, FleetRunOpts, ShardedSummary,
 };
 use flexswap::mm::{Mm, Policy, PolicyApi, PolicyEvent};
 use flexswap::policies::{DtReclaimer, LruReclaimer, NativeAnalytics};
@@ -44,6 +49,12 @@ use flexswap::workloads::{PhasedWss, UniformRandom, Workload};
 // ---------------------------------------------------------------------
 // Shared invariant checks
 // ---------------------------------------------------------------------
+
+/// Engine-selection opts: the old `_exec` positional pair, spelled in
+/// the unified builder API.
+fn exec_opts(parallel: bool, workers: Option<usize>) -> FleetRunOpts {
+    FleetRunOpts::default().with_sequential(!parallel).with_workers(workers)
+}
 
 /// (a) Per-shard budget held at every tick, (b) no VM split across
 /// shards, (d) migration byte-conservation.
@@ -273,7 +284,14 @@ fn invariants_hold_across_forty_seeds() {
         if seed % 8 == 0 {
             // Full state migration at trigger scale: 4 hosts × 8 VMs,
             // host 0 pressure-starved.
-            let s = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, seed);
+            let s = run_sharded_fleet(
+                4,
+                8,
+                12_000,
+                FleetMode::StateMigration,
+                seed,
+                &FleetRunOpts::default(),
+            );
             assert_eq!(
                 s.total_ops,
                 s.vms as u64 * 12_000,
@@ -295,7 +313,7 @@ fn invariants_hold_across_forty_seeds() {
             } else {
                 FleetMode::StaticPlacement
             };
-            let s = run_sharded_fleet(4, 3, 6_000, mode, seed);
+            let s = run_sharded_fleet(4, 3, 6_000, mode, seed, &FleetRunOpts::default());
             assert_eq!(
                 s.total_ops,
                 s.vms as u64 * 6_000,
@@ -323,21 +341,22 @@ fn invariants_hold_across_forty_seeds() {
 /// CSV is a pure function of the summary, the CSV is identical too.
 #[test]
 fn same_seed_four_host_fleet_is_bit_identical() {
-    let a = run_sharded_fleet(4, 8, 10_000, FleetMode::LeaseOnly, 42);
-    let b = run_sharded_fleet(4, 8, 10_000, FleetMode::LeaseOnly, 42);
+    let opts = FleetRunOpts::default();
+    let a = run_sharded_fleet(4, 8, 10_000, FleetMode::LeaseOnly, 42, &opts);
+    let b = run_sharded_fleet(4, 8, 10_000, FleetMode::LeaseOnly, 42, &opts);
     assert_eq!(a, b, "same-seed sharded fleet runs diverged");
     assert_eq!(a.hosts, 4);
     assert_eq!(a.vms, 32);
     // And a second seed on the static arm, for the no-migration path.
-    let c = run_sharded_fleet(4, 4, 6_000, FleetMode::StaticPlacement, 9);
-    let d = run_sharded_fleet(4, 4, 6_000, FleetMode::StaticPlacement, 9);
+    let c = run_sharded_fleet(4, 4, 6_000, FleetMode::StaticPlacement, 9, &opts);
+    let d = run_sharded_fleet(4, 4, 6_000, FleetMode::StaticPlacement, 9, &opts);
     assert_eq!(c, d, "same-seed static-placement runs diverged");
     // The full state-migration path — pre-copy staging, stop-and-copy
     // flip, event hand-off — must be bit-identical too: the whole
     // summary (including the stop-time and byte ledgers) compares
     // equal, so the experiment CSV is identical.
-    let e = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, 42);
-    let g = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, 42);
+    let e = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, 42, &opts);
+    let g = run_sharded_fleet(4, 8, 12_000, FleetMode::StateMigration, 42, &opts);
     assert_eq!(e, g, "same-seed state-migration runs diverged");
     assert!(e.state_migrations_completed >= 1, "nothing migrated: {e:?}");
 }
@@ -349,8 +368,9 @@ fn same_seed_four_host_fleet_is_bit_identical() {
 /// limit-bound; 0.5% covers measurement noise).
 #[test]
 fn rebalancer_beats_static_placement() {
-    let st = run_sharded_fleet(4, 8, 16_000, FleetMode::StaticPlacement, 7);
-    let rb = run_sharded_fleet(4, 8, 16_000, FleetMode::LeaseOnly, 7);
+    let opts = FleetRunOpts::default();
+    let st = run_sharded_fleet(4, 8, 16_000, FleetMode::StaticPlacement, 7, &opts);
+    let rb = run_sharded_fleet(4, 8, 16_000, FleetMode::LeaseOnly, 7, &opts);
     assert_eq!(st.total_ops, rb.total_ops, "arms did different work");
     assert_eq!(st.migrated_bytes, 0);
     assert!(
@@ -386,8 +406,9 @@ fn rebalancer_beats_static_placement() {
 /// lease *fallback* fired (Σ is conserved either way).
 #[test]
 fn state_migration_beats_lease_only() {
-    let lease = run_sharded_fleet(4, 8, 16_000, FleetMode::LeaseOnly, 7);
-    let state = run_sharded_fleet(4, 8, 16_000, FleetMode::StateMigration, 7);
+    let opts = FleetRunOpts::default();
+    let lease = run_sharded_fleet(4, 8, 16_000, FleetMode::LeaseOnly, 7, &opts);
+    let state = run_sharded_fleet(4, 8, 16_000, FleetMode::StateMigration, 7, &opts);
     assert_eq!(lease.total_ops, state.total_ops, "arms did different work");
     assert_summary_invariants(&lease, "lease arm");
     assert_summary_invariants(&state, "state arm");
@@ -470,8 +491,13 @@ fn chaos_invariants_hold_across_forty_random_fault_seeds() {
             FleetMode::LeaseOnly
         };
         let label = format!("chaos seed {seed} ({mode:?})");
-        let s = run_sharded_fleet_faulted(
-            hosts, per_host, ops, mode, seed, true, None, &plan,
+        let s = run_sharded_fleet(
+            hosts,
+            per_host,
+            ops,
+            mode,
+            seed,
+            &FleetRunOpts::default().with_faults(plan.clone()),
         );
         assert_eq!(s.vms, hosts * per_host, "{label}: admission lost a VM");
         assert_eq!(
@@ -536,8 +562,13 @@ fn chaos_same_seed_bit_identical_across_worker_counts() {
         HostFault { at: 100 * MS, host: 2, kind: HostFaultKind::Crash },
         HostFault { at: 150 * MS, host: 3, kind: HostFaultKind::BudgetRevoke },
     ];
-    let base = run_sharded_fleet_faulted(
-        4, 8, 12_000, FleetMode::StateMigration, 0, false, None, &faults,
+    let base = run_sharded_fleet(
+        4,
+        8,
+        12_000,
+        FleetMode::StateMigration,
+        0,
+        &exec_opts(false, None).with_faults(faults.clone()),
     );
     assert_eq!(
         (base.crashes, base.degrades, base.revocations),
@@ -548,8 +579,13 @@ fn chaos_same_seed_bit_identical_across_worker_counts() {
     assert_eq!(base.total_ops, base.vms as u64 * 12_000, "fleet lost work");
     assert_chaos_summary_invariants(&base, "chaos oracle");
     for workers in [Some(1), Some(2), None] {
-        let par = run_sharded_fleet_faulted(
-            4, 8, 12_000, FleetMode::StateMigration, 0, true, workers, &faults,
+        let par = run_sharded_fleet(
+            4,
+            8,
+            12_000,
+            FleetMode::StateMigration,
+            0,
+            &exec_opts(true, workers).with_faults(faults.clone()),
         );
         assert_eq!(base, par, "workers {workers:?} changed the faulted output");
         assert_eq!(
@@ -563,11 +599,21 @@ fn chaos_same_seed_bit_identical_across_worker_counts() {
     let mut injected = 0u64;
     for seed in [3u64, 11, 27] {
         let plan = random_fault_plan(4, 6_000, seed);
-        let seq = run_sharded_fleet_faulted(
-            4, 4, 6_000, FleetMode::StateMigration, seed, false, None, &plan,
+        let seq = run_sharded_fleet(
+            4,
+            4,
+            6_000,
+            FleetMode::StateMigration,
+            seed,
+            &exec_opts(false, None).with_faults(plan.clone()),
         );
-        let par = run_sharded_fleet_faulted(
-            4, 4, 6_000, FleetMode::StateMigration, seed, true, Some(2), &plan,
+        let par = run_sharded_fleet(
+            4,
+            4,
+            6_000,
+            FleetMode::StateMigration,
+            seed,
+            &exec_opts(true, Some(2)).with_faults(plan.clone()),
         );
         assert_eq!(seq, par, "chaos seed {seed}: engines diverged under faults");
         assert_chaos_summary_invariants(&seq, &format!("chaos seed {seed}"));
@@ -594,8 +640,15 @@ fn chaos_mixed_granularity_seeds_hold_invariants() {
     for seed in [5u64, 13, 29] {
         let plan = random_fault_plan(hosts, ops, seed);
         let label = format!("chaos mixed-granularity seed {seed}");
-        let s = run_sharded_fleet_granular(
-            hosts, per_host, ops, FleetMode::StateMigration, seed, true, None, &mix, &plan,
+        let s = run_sharded_fleet(
+            hosts,
+            per_host,
+            ops,
+            FleetMode::StateMigration,
+            seed,
+            &FleetRunOpts::default()
+                .with_granularity(mix.to_vec())
+                .with_faults(plan.clone()),
         );
         assert_eq!(s.vms, hosts * per_host, "{label}: admission lost a VM");
         assert_eq!(
@@ -604,8 +657,15 @@ fn chaos_mixed_granularity_seeds_hold_invariants() {
             "{label}: a VM lost work to a fault"
         );
         assert_chaos_summary_invariants(&s, &label);
-        let seq = run_sharded_fleet_granular(
-            hosts, per_host, ops, FleetMode::StateMigration, seed, false, None, &mix, &plan,
+        let seq = run_sharded_fleet(
+            hosts,
+            per_host,
+            ops,
+            FleetMode::StateMigration,
+            seed,
+            &exec_opts(false, None)
+                .with_granularity(mix.to_vec())
+                .with_faults(plan.clone()),
         );
         assert_eq!(s, seq, "{label}: engines diverged");
     }
@@ -628,18 +688,13 @@ fn chaos_mixed_granularity_seeds_hold_invariants() {
 fn remote_marketplace_forms_leases_and_conserves_budgets() {
     let label = "remote marketplace";
     let run = || {
-        run_sharded_fleet_market(
+        run_sharded_fleet(
             4,
             8,
             16_000,
             FleetMode::StaticPlacement,
             7,
-            true,
-            None,
-            &[GranularityMode::Fixed],
-            &[],
-            true,
-            300,
+            &FleetRunOpts::default().with_remote(true).with_donor_pct(300),
         )
     };
     let s = run();
@@ -681,18 +736,16 @@ fn remote_marketplace_chaos_seeds_hold_invariants() {
             FleetMode::LeaseOnly
         };
         let label = format!("remote chaos seed {seed} ({mode:?})");
-        let s = run_sharded_fleet_market(
+        let s = run_sharded_fleet(
             hosts,
             per_host,
             ops,
             mode,
             seed,
-            true,
-            None,
-            &[GranularityMode::Fixed],
-            &plan,
-            true,
-            300,
+            &FleetRunOpts::default()
+                .with_remote(true)
+                .with_donor_pct(300)
+                .with_faults(plan.clone()),
         );
         assert_eq!(s.vms, hosts * per_host, "{label}: admission lost a VM");
         assert_eq!(
@@ -722,33 +775,29 @@ fn remote_marketplace_chaos_seeds_hold_invariants() {
 fn remote_marketplace_seq_par_byte_identical_across_worker_counts() {
     for seed in [2u64, 9] {
         let plan = random_fault_plan(4, 12_000, seed);
-        let base = run_sharded_fleet_market(
+        let base = run_sharded_fleet(
             4,
             4,
             12_000,
             FleetMode::StateMigration,
             seed,
-            false,
-            None,
-            &[GranularityMode::Fixed],
-            &plan,
-            true,
-            300,
+            &exec_opts(false, None)
+                .with_remote(true)
+                .with_donor_pct(300)
+                .with_faults(plan.clone()),
         );
         assert_chaos_summary_invariants(&base, &format!("remote seq seed {seed}"));
         for workers in [Some(1), Some(2), None] {
-            let par = run_sharded_fleet_market(
+            let par = run_sharded_fleet(
                 4,
                 4,
                 12_000,
                 FleetMode::StateMigration,
                 seed,
-                true,
-                workers,
-                &[GranularityMode::Fixed],
-                &plan,
-                true,
-                300,
+                &exec_opts(true, workers)
+                    .with_remote(true)
+                    .with_donor_pct(300)
+                    .with_faults(plan.clone()),
             );
             assert_eq!(
                 base, par,
@@ -762,6 +811,160 @@ fn remote_marketplace_seq_par_byte_identical_across_worker_counts() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Clone-from-image boot storms (PR 10 tentpole gates)
+// ---------------------------------------------------------------------
+
+/// A small storm: `clones` image-backed + `cold` cold-boot VMs staged
+/// on top of the base fleet, admitted at fleet ticks.
+fn storm_opts(clones: usize, cold: usize) -> FleetRunOpts {
+    FleetRunOpts::default().with_storm(clones, cold)
+}
+
+/// Tentpole acceptance: every staged storm VM is admitted and finishes
+/// its boot workload; image-backed clones strictly beat cold boots on
+/// time-to-first-useful-work p99 (their boot faults decompress shared
+/// pool entries where a cold boot pays full NVMe zero-fill); the
+/// golden image dedups across clones sharing a host; first guest
+/// writes break CoW; and Σ budgets are exactly conserved with the
+/// storm armed.
+#[test]
+fn clone_storm_admits_all_beats_cold_and_conserves_budgets() {
+    let opts = storm_opts(12, 4);
+    let s = run_sharded_fleet(4, 3, 6_000, FleetMode::StaticPlacement, 7, &opts);
+    assert_eq!(s.clones_staged, 16, "not every storm VM was staged");
+    assert_eq!(s.clones_admitted, 12, "not every clone was admitted");
+    assert_eq!(s.clone_cold_boots, 4, "not every cold boot was admitted");
+    let storm_ops = 16 * storm_vm_ops(&opts.clone);
+    assert_eq!(
+        s.total_ops,
+        s.vms as u64 * 6_000 + storm_ops,
+        "the storm (or the base fleet under it) lost work"
+    );
+    assert_summary_invariants(&s, "clone storm");
+    assert!(
+        s.clone_first_work_p99_ns < s.cold_first_work_p99_ns,
+        "image-backed clones did not beat cold boots on \
+         time-to-first-useful-work p99: {} vs {} ns",
+        s.clone_first_work_p99_ns,
+        s.cold_first_work_p99_ns
+    );
+    assert!(
+        s.image_dedup_ratio() > 1.0,
+        "golden image did not dedup: {:.2}",
+        s.image_dedup_ratio()
+    );
+    assert!(s.image_hits > 0, "no boot fault was served from the image");
+    assert!(
+        s.image_cow_breaks > 0,
+        "guest writes never broke image CoW"
+    );
+    // The storm landed somewhere, and spread placement lands it on
+    // more than one host at this scale.
+    let holding = s.clones_per_host.iter().filter(|&&c| c > 0).count();
+    assert!(holding > 1, "spread placement packed every clone: {:?}", s.clones_per_host);
+}
+
+/// Engine/worker byte-identity with a storm armed (the PR 6 gate
+/// extended to PR 10): clone admission happens only at the fleet-tick
+/// barrier, so the sequential merge oracle and the epoch engine at 1,
+/// 2, and `available_parallelism` workers must produce the same bytes.
+#[test]
+fn clone_storm_byte_identical_across_engines_and_worker_counts() {
+    let base = run_sharded_fleet(
+        4,
+        2,
+        4_000,
+        FleetMode::StaticPlacement,
+        3,
+        &storm_opts(8, 2).with_sequential(true),
+    );
+    assert_eq!(base.clones_admitted, 8, "oracle run admitted too few clones");
+    for workers in [Some(1), Some(2), None] {
+        let par = run_sharded_fleet(
+            4,
+            2,
+            4_000,
+            FleetMode::StaticPlacement,
+            3,
+            &storm_opts(8, 2).with_workers(workers),
+        );
+        assert_eq!(base, par, "workers {workers:?} changed the storm output");
+        assert_eq!(
+            format!("{base:?}"),
+            format!("{par:?}"),
+            "workers {workers:?}: debug render differs despite Eq — float bit drift"
+        );
+    }
+}
+
+/// Chaos seeds with storms armed: randomized host-fault schedules over
+/// a fleet mid-boot-storm. Crashed hosts' clones re-land on survivors
+/// (the golden image re-installs there and salvaged private CoW pages
+/// still win on reads), no VM — storm or base — loses work, and Σ
+/// budgets step down by exactly the retired amounts. Engines must
+/// still agree byte-for-byte.
+#[test]
+fn clone_storm_chaos_seeds_hold_invariants() {
+    for seed in [1u64, 6, 17] {
+        let plan = random_fault_plan(4, 6_000, seed);
+        let mode = if seed % 2 == 0 {
+            FleetMode::StateMigration
+        } else {
+            FleetMode::LeaseOnly
+        };
+        let label = format!("storm chaos seed {seed} ({mode:?})");
+        let opts = storm_opts(8, 2).with_faults(plan.clone());
+        let s = run_sharded_fleet(4, 3, 6_000, mode, seed, &opts);
+        assert_eq!(
+            s.clones_admitted + s.clone_cold_boots,
+            10,
+            "{label}: a storm VM was never admitted"
+        );
+        assert_eq!(
+            s.total_ops,
+            s.vms as u64 * 6_000 + 10 * storm_vm_ops(&opts.clone),
+            "{label}: a VM lost work to a fault"
+        );
+        assert_chaos_summary_invariants(&s, &label);
+        let seq = run_sharded_fleet(4, 3, 6_000, mode, seed, &opts.clone().with_sequential(true));
+        assert_eq!(s, seq, "{label}: engines diverged");
+    }
+}
+
+/// Targeted crash of the image-holding host: pack piles every clone
+/// (and the only golden-image copy) onto one host, then that host
+/// crashes mid-run. Every clone must re-land on a survivor — which
+/// re-installs the image and re-attaches before resuming — and finish
+/// its boot work, with the image present somewhere at the end.
+#[test]
+fn crash_of_image_holding_host_salvages_clones_on_survivors() {
+    let faults = vec![HostFault { at: 110 * MS, host: 0, kind: HostFaultKind::Crash }];
+    let opts = storm_opts(6, 0).with_pack(true).with_faults(faults);
+    let s = run_sharded_fleet(4, 3, 6_000, FleetMode::LeaseOnly, 5, &opts);
+    assert_eq!(s.crashes, 1, "the crash never fired");
+    assert!(s.vms_rebuilt >= 1, "the crash rebuilt nothing: {s:?}");
+    assert_eq!(s.clones_admitted, 6, "not every clone was admitted");
+    assert_eq!(
+        s.total_ops,
+        s.vms as u64 * 6_000 + 6 * storm_vm_ops(&opts.clone),
+        "a clone lost work to the crash"
+    );
+    assert_chaos_summary_invariants(&s, "image-host crash");
+    assert!(
+        s.image_stored_bytes > 0,
+        "no golden image survived the crash"
+    );
+    // Dead hosts hold nothing: every clone sits on a live survivor.
+    assert_eq!(s.clones_per_host[0], 0, "a clone still counts on the dead host");
+    assert_eq!(
+        s.clones_per_host.iter().sum::<usize>(),
+        6,
+        "clone placement ledger drift: {:?}",
+        s.clones_per_host
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -780,8 +983,8 @@ fn assert_engines_agree(
     seed: u64,
     workers: Option<usize>,
 ) -> ShardedSummary {
-    let seq = run_sharded_fleet_exec(hosts, per_host, ops, mode, seed, false, None);
-    let par = run_sharded_fleet_exec(hosts, per_host, ops, mode, seed, true, workers);
+    let seq = run_sharded_fleet(hosts, per_host, ops, mode, seed, &exec_opts(false, None));
+    let par = run_sharded_fleet(hosts, per_host, ops, mode, seed, &exec_opts(true, workers));
     assert_eq!(
         seq, par,
         "seed {seed} mode {:?} workers {workers:?}: epoch engine diverged from merge loop",
@@ -832,15 +1035,27 @@ fn parallel_epoch_engine_matches_merge_state_migration_ten_seeds() {
 /// (`chunks_mut`), so this also pins partitioning-independence.
 #[test]
 fn parallel_worker_count_does_not_change_output() {
-    let base =
-        run_sharded_fleet_exec(4, 8, 12_000, FleetMode::StateMigration, 0, false, None);
+    let base = run_sharded_fleet(
+        4,
+        8,
+        12_000,
+        FleetMode::StateMigration,
+        0,
+        &exec_opts(false, None),
+    );
     assert!(
         base.state_migrations_completed >= 1,
         "baseline completed no migration: {base:?}"
     );
     for workers in [Some(1), Some(2), None] {
-        let par =
-            run_sharded_fleet_exec(4, 8, 12_000, FleetMode::StateMigration, 0, true, workers);
+        let par = run_sharded_fleet(
+            4,
+            8,
+            12_000,
+            FleetMode::StateMigration,
+            0,
+            &exec_opts(true, workers),
+        );
         assert_eq!(base, par, "workers {workers:?} changed the output");
         assert_eq!(
             format!("{base:?}"),
